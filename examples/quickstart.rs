@@ -1,0 +1,49 @@
+//! Quickstart: train the tiny MLP with every algorithm and compare.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Runs in about a minute on one CPU core: sequential SGD, SSGD, ASGD and
+//! both DC-ASGD variants on the CIFAR-like synthetic task, M=4 workers,
+//! simulated cluster time — the whole paper in miniature.
+
+use dc_asgd::bench::Table;
+use dc_asgd::config::{Algorithm, ExperimentConfig};
+use dc_asgd::coordinator::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = dc_asgd::find_artifacts_dir()
+        .expect("artifacts/manifest.json not found — run `make artifacts` first");
+    // one engine, reused across runs (PJRT compilation is the slow part)
+    let engine = dc_asgd::runtime::start_engine(&artifacts, "mlp_tiny", false)?;
+
+    let algos = [
+        Algorithm::SequentialSgd,
+        Algorithm::SyncSgd,
+        Algorithm::Asgd,
+        Algorithm::DcAsgdConst,
+        Algorithm::DcAsgdAdaptive,
+    ];
+
+    let mut table = Table::new(&["algorithm", "workers", "test error(%)", "sim time(s)", "stale(mean)"]);
+    for algo in algos {
+        let mut cfg = ExperimentConfig::preset_quickstart();
+        cfg.algorithm = algo;
+        cfg.workers = if algo == Algorithm::SequentialSgd { 1 } else { 4 };
+        cfg.out_dir = "runs/quickstart".into();
+        eprintln!("== {algo} (M={}) ==", cfg.workers);
+        let report = Trainer::with_engine(cfg.clone(), engine.clone(), &artifacts)?.run()?;
+        table.row(&[
+            algo.name().into(),
+            cfg.workers.to_string(),
+            format!("{:.2}", report.final_test_error * 100.0),
+            format!("{:.1}", report.total_time),
+            format!("{:.2}", report.staleness_mean),
+        ]);
+    }
+    println!("\nCIFAR-like synthetic task, mlp_tiny, 6 epochs:");
+    table.print();
+    println!("\nExpect: DC-ASGD variants close the gap between ASGD and sequential SGD");
+    println!("while keeping ASGD-like simulated wallclock. Metrics in runs/quickstart/.");
+    engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,172 @@
+"""AOT compile path: lower every Layer-2/Layer-1 computation to HLO text.
+
+Run once via `make artifacts`:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Outputs, per model M in the registry:
+    artifacts/M.train.hlo.txt       train_step(params, x, y) -> (loss, grads)
+    artifacts/M.eval.hlo.txt        eval_step(params, x, y)  -> (loss, correct)
+    artifacts/M.init.npy-like       initial flat params (raw f32 little-endian)
+and, for models flagged `update_artifacts` (the XLA-update ablation path):
+    artifacts/M.dc.hlo.txt          dc_update(w,g,wbak,lr,lam) -> w'
+    artifacts/M.dca.hlo.txt         dc_update_adaptive(...)    -> (w', ms')
+    artifacts/M.sgd.hlo.txt         sgd_update(w,g,lr)         -> w'
+plus a single `artifacts/manifest.json` the rust runtime loads.
+
+Interchange format is HLO **text**: the image's xla_extension 0.5.1 rejects
+jax>=0.5 serialized protos (64-bit instruction ids); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import CnnConfig, LmConfig, MlpConfig, Model
+from .kernels import dc_update as upd
+
+MANIFEST_VERSION = 2
+
+# ---------------------------------------------------------------------------
+# Model registry. Sizes are chosen for a single-CPU-core testbed; the table
+# workloads (cifar_like / imagenet_like) stand in for ResNet-20/CIFAR-10 and
+# ResNet-50/ImageNet per DESIGN.md §5.
+# ---------------------------------------------------------------------------
+
+REGISTRY = {
+    # fast model for unit/integration tests (python and rust)
+    "mlp_tiny": MlpConfig("mlp_tiny", input_dim=64, hidden=(32, 32), classes=4, batch=16),
+    # CONVEX case (paper appendix D / Thm 4.1): no hidden layers ->
+    # multinomial logistic regression, strongly convex with L2-ish landscape
+    "logreg": MlpConfig("logreg", input_dim=256, hidden=(), classes=10, batch=32),
+    # Table 1 / Fig 2 / Fig 3 workload (CIFAR-like 32x32x3, 10 classes)
+    "mlp_cifar": MlpConfig("mlp_cifar", input_dim=3072, hidden=(256, 256), classes=10, batch=32),
+    # Table 2 / Fig 4 workload (ImageNet-like: wider, 100 classes)
+    "mlp_imagenet": MlpConfig(
+        "mlp_imagenet", input_dim=3072, hidden=(512, 512), classes=100, batch=32
+    ),
+    # residual conv net, CIFAR-like (kept small: conv on 1 CPU core)
+    "cnn_cifar": CnnConfig("cnn_cifar", image=(32, 32, 3), channels=(16, 16, 32), classes=10, batch=16),
+    # LM for tests
+    "lm_small": LmConfig(
+        "lm_small", vocab=512, d_model=128, n_heads=4, n_layers=2, seq_len=64, batch=8
+    ),
+    # end-to-end driver model (examples/train_lm.rs)
+    "lm_medium": LmConfig(
+        "lm_medium", vocab=1024, d_model=256, n_heads=8, n_layers=4, seq_len=64, batch=8
+    ),
+}
+
+# models that additionally get XLA-side update artifacts (ablation A)
+UPDATE_ARTIFACTS = ("mlp_tiny", "mlp_cifar")
+
+DEFAULT_MODELS = tuple(REGISTRY)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, example_args):
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def emit_model(name: str, out_dir: str) -> dict:
+    cfg = REGISTRY[name]
+    model = Model(cfg)
+    params, x, y = model.example_args()
+    n_padded = model.spec.n_padded
+
+    files = {}
+
+    train_txt = lower_fn(model.train_step, (params, x, y))
+    files["train"] = f"{name}.train.hlo.txt"
+    with open(os.path.join(out_dir, files["train"]), "w") as f:
+        f.write(train_txt)
+
+    eval_txt = lower_fn(model.eval_step, (params, x, y))
+    files["eval"] = f"{name}.eval.hlo.txt"
+    with open(os.path.join(out_dir, files["eval"]), "w") as f:
+        f.write(eval_txt)
+
+    # initial parameters: raw little-endian f32, length n_padded
+    init = model.spec.init_flat(seed=17)
+    files["init"] = f"{name}.init.f32"
+    init.astype("<f4").tofile(os.path.join(out_dir, files["init"]))
+
+    if name in UPDATE_ARTIFACTS:
+        vec = jax.ShapeDtypeStruct((n_padded,), jnp.float32)
+        s1 = jax.ShapeDtypeStruct((1,), jnp.float32)
+        files["dc"] = f"{name}.dc.hlo.txt"
+        with open(os.path.join(out_dir, files["dc"]), "w") as f:
+            f.write(lower_fn(lambda w, g, wb, lr, lam: (upd.dc_update(w, g, wb, lr, lam),),
+                             (vec, vec, vec, s1, s1)))
+        files["dca"] = f"{name}.dca.hlo.txt"
+        with open(os.path.join(out_dir, files["dca"]), "w") as f:
+            f.write(lower_fn(
+                lambda w, g, wb, ms, lr, lam0, m, eps: upd.dc_update_adaptive(
+                    w, g, wb, ms, lr, lam0, m, eps),
+                (vec, vec, vec, vec, s1, s1, s1, s1)))
+        files["sgd"] = f"{name}.sgd.hlo.txt"
+        with open(os.path.join(out_dir, files["sgd"]), "w") as f:
+            f.write(lower_fn(lambda w, g, lr: (upd.sgd_update(w, g, lr),),
+                             (vec, vec, s1)))
+
+    (xd, xs), (yd, ys) = model.input_shapes()
+    return {
+        "name": name,
+        "kind": cfg.kind,
+        "n_params": model.spec.n_params,
+        "n_padded": n_padded,
+        "x": {"dtype": xd, "shape": xs},
+        "y": {"dtype": yd, "shape": ys},
+        "batch": cfg.batch,
+        "classes": getattr(cfg, "classes", getattr(cfg, "vocab", 0)),
+        "tokens_per_batch": (cfg.batch * cfg.seq_len) if cfg.kind == "transformer" else cfg.batch,
+        "files": files,
+        "tensors": model.spec.describe(),
+        "meta": model.meta(),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=list(DEFAULT_MODELS))
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    entries = []
+    for name in args.models:
+        if name not in REGISTRY:
+            print(f"unknown model {name!r}; known: {sorted(REGISTRY)}", file=sys.stderr)
+            return 2
+        print(f"[aot] lowering {name} ...", flush=True)
+        entries.append(emit_model(name, args.out))
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "pad_multiple": upd.BLOCK,
+        "models": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {len(entries)} models -> {args.out}/manifest.json")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,174 @@
+"""Layer-1 Pallas kernels: the parameter-server update hot-spot.
+
+The DC-ASGD update (paper Eqn. 10) is pure elementwise math over the flat
+parameter vector. On a real TPU the kernel is bandwidth-bound: each grid
+step streams one `(BLOCK,)` tile of each operand HBM->VMEM, runs the fused
+multiply-adds on the VPU, and streams the result back — one pass, no
+temporaries, bytes moved = theoretical minimum (3 reads + 1 write for the
+constant-lambda rule; 4 reads + 2 writes for the adaptive rule).
+
+TPU adaptation note (paper targeted K40 GPUs): there is no warp/shared-mem
+structure to port — the HBM<->VMEM schedule expressed by the BlockSpec *is*
+the whole kernel. We pick BLOCK so that all resident tiles fit comfortably
+in VMEM (see `vmem_bytes`).
+
+All kernels are lowered with interpret=True: CPU PJRT cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO (a fori over the grid
+with dynamic-slice windows) that the rust runtime executes natively.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Padding quantum for the flat parameter vector (the PS vector length is a
+# multiple of this; see params.PAD_MULTIPLE).
+BLOCK = 8192
+
+# Target tile size for lowering: the largest multiple of BLOCK that divides
+# n and keeps the adaptive rule's 6 resident tiles (w, g, w_bak, ms, w_out,
+# ms_out) within a conservative VMEM budget. 128k f32 = 512 KiB per tile ->
+# ~3 MiB resident, comfortably under a TPU core's ~16 MiB VMEM.
+#
+# Perf note (EXPERIMENTS.md §Perf): block size is ALSO what dominates the
+# interpret-mode cost on CPU — each grid step pays a full-output
+# dynamic-update-slice, so cost scales with grid *count*, not just bytes.
+# Lowering mlp_cifar's 860160-long updates at block=8192 (105 grid steps)
+# measured 130-266 ms/update; at block=122880 (7 steps) it drops ~10x.
+BLOCK_TARGET = 128 * 1024
+
+
+def pick_block(n: int, target: int = BLOCK_TARGET) -> int:
+    """Largest multiple of BLOCK that divides n and is <= target.
+
+    Falls back to BLOCK (which always divides a padded n); if n itself is
+    below the target, uses n (single grid step).
+    """
+    assert n % BLOCK == 0, f"n={n} not padded to {BLOCK}"
+    if n <= target:
+        return n
+    best = BLOCK
+    k = n // BLOCK
+    for d in range(1, k + 1):
+        if k % d == 0 and d * BLOCK <= target:
+            best = max(best, d * BLOCK)
+    return best
+
+
+def vmem_bytes(block: int, n_arrays: int, itemsize: int = 4) -> int:
+    """Estimated VMEM residency for a given block size (perf model, §Perf)."""
+    return block * n_arrays * itemsize
+
+
+def _dc_kernel(w_ref, g_ref, wbak_ref, lr_ref, lam_ref, out_ref):
+    w = w_ref[...]
+    g = g_ref[...]
+    delta = w - wbak_ref[...]
+    lr = lr_ref[0]
+    lam = lam_ref[0]
+    # fused: w - lr*(g + lam*g*g*delta)
+    out_ref[...] = w - lr * (g + lam * g * g * delta)
+
+
+def dc_update(w, g, w_bak, lr, lam, *, block: int | None = None):
+    """DC-ASGD-c update over flat f32[N] vectors; N must be a multiple of block.
+
+    `lr`/`lam` are f32[1] so the same compiled artifact serves any
+    learning-rate schedule / lambda setting at runtime.
+    """
+    n = w.shape[0]
+    block = block or pick_block(n)
+    assert n % block == 0, f"n={n} must be padded to a multiple of {block}"
+    grid = n // block
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _dc_kernel,
+        grid=(grid,),
+        in_specs=[spec, spec, spec, scalar, scalar],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), w.dtype),
+        interpret=True,
+    )(w, g, w_bak, lr, lam)
+
+
+def _dc_adaptive_kernel(w_ref, g_ref, wbak_ref, ms_ref, lr_ref, lam0_ref,
+                        m_ref, eps_ref, w_out_ref, ms_out_ref):
+    w = w_ref[...]
+    g = g_ref[...]
+    g2 = g * g
+    ms_new = m_ref[0] * ms_ref[...] + (1.0 - m_ref[0]) * g2
+    lam_t = lam0_ref[0] / jnp.sqrt(ms_new + eps_ref[0])
+    out = w - lr_ref[0] * (g + lam_t * g2 * (w - wbak_ref[...]))
+    w_out_ref[...] = out
+    ms_out_ref[...] = ms_new
+
+
+def dc_update_adaptive(w, g, w_bak, ms, lr, lam0, m, eps, *, block: int | None = None):
+    """DC-ASGD-a update; returns (w_new, ms_new). All vectors f32[N]."""
+    n = w.shape[0]
+    block = block or pick_block(n)
+    assert n % block == 0, f"n={n} must be padded to a multiple of {block}"
+    grid = n // block
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _dc_adaptive_kernel,
+        grid=(grid,),
+        in_specs=[spec, spec, spec, spec, scalar, scalar, scalar, scalar],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), w.dtype),
+            jax.ShapeDtypeStruct((n,), w.dtype),
+        ],
+        interpret=True,
+    )(w, g, w_bak, ms, lr, lam0, m, eps)
+
+
+def _sgd_kernel(w_ref, g_ref, lr_ref, out_ref):
+    out_ref[...] = w_ref[...] - lr_ref[0] * g_ref[...]
+
+
+def sgd_update(w, g, lr, *, block: int | None = None):
+    """Plain SGD update over flat f32[N]; the lambda=0 end of DC-ASGD."""
+    n = w.shape[0]
+    block = block or pick_block(n)
+    assert n % block == 0
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _sgd_kernel,
+        grid=(n // block,),
+        in_specs=[spec, spec, scalar],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), w.dtype),
+        interpret=True,
+    )(w, g, lr)
+
+
+def _momentum_kernel(w_ref, v_ref, g_ref, lr_ref, mu_ref, w_out_ref, v_out_ref):
+    v_new = mu_ref[0] * v_ref[...] + g_ref[...]
+    v_out_ref[...] = v_new
+    w_out_ref[...] = w_ref[...] - lr_ref[0] * v_new
+
+
+def momentum_update(w, v, g, lr, mu, *, block: int | None = None):
+    """Heavy-ball momentum update; returns (w_new, v_new)."""
+    n = w.shape[0]
+    block = block or pick_block(n)
+    assert n % block == 0
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _momentum_kernel,
+        grid=(n // block,),
+        in_specs=[spec, spec, spec, scalar, scalar],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), w.dtype),
+            jax.ShapeDtypeStruct((n,), w.dtype),
+        ],
+        interpret=True,
+    )(w, v, g, lr, mu)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: pytest asserts each Pallas kernel
+(interpret=True) against the corresponding function here, and hypothesis
+sweeps shapes/dtypes. Keep these boring and obviously-correct.
+
+Notation follows the paper (ICML'17 DC-ASGD):
+
+    w_{t+tau+1} = w_{t+tau} - eta * ( g + lambda * g (.) g (.) (w - w_bak) )
+
+where `w` is the *current* global model, `w_bak` the snapshot the worker
+pulled (Algorithm 2), and (.) is the elementwise product.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sgd_update_ref(w, g, lr):
+    """Plain SGD: w' = w - lr * g."""
+    return w - lr * g
+
+
+def momentum_update_ref(w, v, g, lr, mu):
+    """Heavy-ball momentum: v' = mu*v + g ; w' = w - lr*v'."""
+    v_new = mu * v + g
+    return w - lr * v_new, v_new
+
+
+def dc_update_ref(w, g, w_bak, lr, lam):
+    """DC-ASGD-c (Eqn. 10): constant-lambda delay-compensated update.
+
+    The compensation term lambda * g*g * (w - w_bak) is the first-order
+    Taylor correction with Diag(lambda * G) as the Hessian approximator.
+    """
+    comp = g + lam * g * g * (w - w_bak)
+    return w - lr * comp
+
+
+def dc_update_adaptive_ref(w, g, w_bak, ms, lr, lam0, m, eps=1e-7):
+    """DC-ASGD-a (Eqn. 10 + Eqn. 14): lambda normalized by MeanSquare.
+
+    MeanSquare(t) = m * MeanSquare(t-1) + (1-m) * g^2
+    lambda_t      = lam0 / sqrt(MeanSquare(t) + eps)       (elementwise)
+    """
+    ms_new = m * ms + (1.0 - m) * g * g
+    lam_t = lam0 / jnp.sqrt(ms_new + eps)
+    comp = g + lam_t * g * g * (w - w_bak)
+    return w - lr * comp, ms_new
+
+
+def softmax_xent_ref(logits, labels):
+    """Per-row softmax cross-entropy. logits [B,K] f32, labels [B] i32."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    picked = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return lse - picked
+
+
+def softmax_xent_grad_ref(logits, labels, dloss):
+    """d/dlogits of softmax_xent_ref, contracted with dloss [B]."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    onehot = jnp.asarray(labels[:, None] == jnp.arange(logits.shape[-1])[None, :], logits.dtype)
+    return (probs - onehot) * dloss[:, None]

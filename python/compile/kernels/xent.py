@@ -1,0 +1,112 @@
+"""Layer-1 Pallas kernel: fused softmax cross-entropy (fwd + bwd).
+
+The model-side hot-spot. One grid step owns a `(BLOCK_B, K)` tile of logits
+resident in VMEM and performs max / exp / sum / log / pick in a single pass
+(row reductions on the VPU — the TPU analogue of the warp-reduction a GPU
+kernel would use). The backward kernel recomputes nothing: it consumes the
+softmax probabilities saved as residuals by the forward pass.
+
+Wrapped in `jax.custom_vjp` so the Layer-2 models can differentiate through
+it; both branches are Pallas kernels, so the whole loss lowers into the same
+HLO artifact the rust runtime executes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. A (128, K) f32 tile at K=2048 is 1 MiB — comfortably
+# VMEM-resident next to its probs output tile.
+BLOCK_B = 128
+
+
+def _xent_fwd_kernel(logits_ref, labels_ref, loss_ref, probs_ref):
+    logits = logits_ref[...]              # [Bb, K]
+    labels = labels_ref[...]              # [Bb]
+    k = logits.shape[-1]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    probs = e / s
+    probs_ref[...] = probs
+    lse = jnp.log(s[:, 0]) + m[:, 0]
+    # pick logits[i, labels[i]] without gather: iota + where-sum
+    cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    onehot = cols == labels[:, None]
+    picked = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    loss_ref[...] = lse - picked
+    del k
+
+
+def _xent_bwd_kernel(probs_ref, labels_ref, dloss_ref, dlogits_ref):
+    probs = probs_ref[...]
+    labels = labels_ref[...]
+    dloss = dloss_ref[...]
+    cols = jax.lax.broadcasted_iota(jnp.int32, probs.shape, 1)
+    onehot = jnp.where(cols == labels[:, None], 1.0, 0.0).astype(probs.dtype)
+    dlogits_ref[...] = (probs - onehot) * dloss[:, None]
+
+
+def _fwd_call(logits, labels, block_b):
+    b, k = logits.shape
+    assert b % block_b == 0, f"batch {b} must be a multiple of {block_b}"
+    grid = b // block_b
+    row = pl.BlockSpec((block_b, k), lambda i: (i, 0))
+    vec = pl.BlockSpec((block_b,), lambda i: (i,))
+    return pl.pallas_call(
+        _xent_fwd_kernel,
+        grid=(grid,),
+        in_specs=[row, vec],
+        out_specs=[vec, row],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), logits.dtype),
+            jax.ShapeDtypeStruct((b, k), logits.dtype),
+        ],
+        interpret=True,
+    )(logits, labels)
+
+
+def _bwd_call(probs, labels, dloss, block_b):
+    b, k = probs.shape
+    grid = b // block_b
+    row = pl.BlockSpec((block_b, k), lambda i: (i, 0))
+    vec = pl.BlockSpec((block_b,), lambda i: (i,))
+    return pl.pallas_call(
+        _xent_bwd_kernel,
+        grid=(grid,),
+        in_specs=[row, vec, vec],
+        out_specs=row,
+        out_shape=jax.ShapeDtypeStruct((b, k), probs.dtype),
+        interpret=True,
+    )(probs, labels, dloss)
+
+
+def _pick_block(b: int) -> int:
+    """Largest divisor of b not exceeding BLOCK_B (batch sizes are small)."""
+    blk = min(b, BLOCK_B)
+    while b % blk != 0:
+        blk -= 1
+    return blk
+
+
+@jax.custom_vjp
+def softmax_xent(logits, labels):
+    """Per-row softmax cross-entropy loss. logits [B,K] f32, labels [B] i32."""
+    loss, _ = _fwd_call(logits, labels, _pick_block(logits.shape[0]))
+    return loss
+
+
+def _softmax_xent_fwd(logits, labels):
+    loss, probs = _fwd_call(logits, labels, _pick_block(logits.shape[0]))
+    return loss, (probs, labels)
+
+
+def _softmax_xent_bwd(res, dloss):
+    probs, labels = res
+    dlogits = _bwd_call(probs, labels, dloss, _pick_block(probs.shape[0]))
+    return dlogits, None
+
+
+softmax_xent.defvjp(_softmax_xent_fwd, _softmax_xent_bwd)

@@ -1,0 +1,287 @@
+"""Layer-2: JAX model definitions (forward/backward) over flat parameters.
+
+Three model families, all ending in the fused Pallas softmax-CE kernel so
+the entire loss (and its custom VJP) lowers into the AOT HLO artifact:
+
+* ``mlp``        — residual MLP classifier (the CIFAR-like / ImageNet-like
+                   table workloads; stands in for ResNet-20/50 at 1-core
+                   scale — same softmax-CE loss, non-convex, residual).
+* ``cnn``        — small residual conv net ("resnet-lite") on 32x32x3.
+* ``transformer``— decoder-only LM for the end-to-end training driver.
+
+Every model exposes:
+
+    spec()                          -> ParamSpec
+    loss_fn(flat, x, y)             -> scalar mean loss
+    train_step(flat, x, y)          -> (loss, grads_flat)   [jax.value_and_grad]
+    eval_step(flat, x, y)           -> (loss, correct_count)
+
+Python here is build-time only: `aot.py` lowers these to HLO text once.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .params import ParamSpec
+from .kernels.xent import softmax_xent
+
+
+# --------------------------------------------------------------------------
+# MLP (residual)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MlpConfig:
+    name: str
+    input_dim: int
+    hidden: tuple
+    classes: int
+    batch: int
+    residual: bool = True
+
+    @property
+    def kind(self) -> str:
+        return "mlp"
+
+
+def mlp_spec(cfg: MlpConfig) -> ParamSpec:
+    spec = ParamSpec()
+    dims = [cfg.input_dim, *cfg.hidden]
+    for i in range(len(dims) - 1):
+        spec.add(f"w{i}", (dims[i], dims[i + 1]), "he", fan_in=dims[i])
+        spec.add(f"b{i}", (dims[i + 1],), "zeros")
+    spec.add("w_out", (dims[-1], cfg.classes), "glorot", fan_in=dims[-1])
+    spec.add("b_out", (cfg.classes,), "zeros")
+    return spec
+
+
+def mlp_logits(cfg: MlpConfig, p: dict, x):
+    h = x
+    dims = [cfg.input_dim, *cfg.hidden]
+    for i in range(len(dims) - 1):
+        z = h @ p[f"w{i}"] + p[f"b{i}"]
+        z = jax.nn.relu(z)
+        # residual connection when shapes line up (resnet-lite behaviour)
+        if cfg.residual and dims[i] == dims[i + 1]:
+            h = h + z
+        else:
+            h = z
+    return h @ p["w_out"] + p["b_out"]
+
+
+# --------------------------------------------------------------------------
+# CNN ("resnet-lite")
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CnnConfig:
+    name: str
+    image: tuple          # (H, W, C)
+    channels: tuple       # conv widths, e.g. (16, 16, 32)
+    classes: int
+    batch: int
+
+    @property
+    def kind(self) -> str:
+        return "cnn"
+
+    @property
+    def input_dim(self) -> int:
+        h, w, c = self.image
+        return h * w * c
+
+
+def cnn_spec(cfg: CnnConfig) -> ParamSpec:
+    spec = ParamSpec()
+    cin = cfg.image[2]
+    for i, cout in enumerate(cfg.channels):
+        spec.add(f"k{i}", (3, 3, cin, cout), "he", fan_in=9 * cin)
+        spec.add(f"kb{i}", (cout,), "zeros")
+        if cin == cout:  # residual block second conv
+            spec.add(f"r{i}", (3, 3, cout, cout), "he", fan_in=9 * cout)
+            spec.add(f"rb{i}", (cout,), "zeros")
+        cin = cout
+    h, w, _ = cfg.image
+    downs = sum(1 for i in range(1, len(cfg.channels)))  # stride-2 at each widening
+    # compute spatial dims after the stride schedule in cnn_logits
+    spec.add("w_out", (cfg.channels[-1], cfg.classes), "glorot", fan_in=cfg.channels[-1])
+    spec.add("b_out", (cfg.classes,), "zeros")
+    del h, w, downs
+    return spec
+
+
+def _conv(x, k, b, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, k, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def cnn_logits(cfg: CnnConfig, p: dict, x):
+    b = x.shape[0]
+    h = x.reshape(b, *cfg.image)
+    cin = cfg.image[2]
+    for i, cout in enumerate(cfg.channels):
+        stride = 2 if (i > 0 and cout != cin) else 1
+        z = jax.nn.relu(_conv(h, p[f"k{i}"], p[f"kb{i}"], stride))
+        if cin == cout:
+            z = jax.nn.relu(z + _conv(h, p[f"r{i}"], p[f"rb{i}"]))
+        h = z
+        cin = cout
+    pooled = jnp.mean(h, axis=(1, 2))          # global average pool
+    return pooled @ p["w_out"] + p["b_out"]
+
+
+# --------------------------------------------------------------------------
+# Transformer LM (decoder-only)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LmConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    seq_len: int
+    batch: int
+    d_ff: int = 0  # 0 -> 4*d_model
+
+    @property
+    def kind(self) -> str:
+        return "transformer"
+
+    @property
+    def ff(self) -> int:
+        return self.d_ff or 4 * self.d_model
+
+
+def lm_spec(cfg: LmConfig) -> ParamSpec:
+    spec = ParamSpec()
+    d = cfg.d_model
+    spec.add("tok_emb", (cfg.vocab, d), "embed")
+    spec.add("pos_emb", (cfg.seq_len, d), "embed")
+    for i in range(cfg.n_layers):
+        spec.add(f"l{i}.ln1_g", (d,), "ones")
+        spec.add(f"l{i}.ln1_b", (d,), "zeros")
+        spec.add(f"l{i}.wqkv", (d, 3 * d), "glorot", fan_in=d)
+        spec.add(f"l{i}.wo", (d, d), "glorot", fan_in=d)
+        spec.add(f"l{i}.ln2_g", (d,), "ones")
+        spec.add(f"l{i}.ln2_b", (d,), "zeros")
+        spec.add(f"l{i}.wff1", (d, cfg.ff), "he", fan_in=d)
+        spec.add(f"l{i}.bff1", (cfg.ff,), "zeros")
+        spec.add(f"l{i}.wff2", (cfg.ff, d), "glorot", fan_in=cfg.ff)
+        spec.add(f"l{i}.bff2", (d,), "zeros")
+    spec.add("lnf_g", (d,), "ones")
+    spec.add("lnf_b", (d,), "zeros")
+    spec.add("w_head", (d, cfg.vocab), "glorot", fan_in=d)
+    return spec
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attn(cfg: LmConfig, p: dict, i: int, h):
+    b, t, d = h.shape
+    nh, hd = cfg.n_heads, d // cfg.n_heads
+    qkv = h @ p[f"l{i}.wqkv"]                          # [b,t,3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)  # [b,nh,t,hd]
+    k = k.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(hd).astype(np.float32)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ p[f"l{i}.wo"]
+
+
+def lm_logits(cfg: LmConfig, p: dict, x):
+    """x int32 [B,T] -> logits [B*T, V] (flattened rows for the xent kernel)."""
+    h = p["tok_emb"][x] + p["pos_emb"][None, :, :]
+    for i in range(cfg.n_layers):
+        h = h + _attn(cfg, p, i, _layernorm(h, p[f"l{i}.ln1_g"], p[f"l{i}.ln1_b"]))
+        z = _layernorm(h, p[f"l{i}.ln2_g"], p[f"l{i}.ln2_b"])
+        z = jax.nn.relu(z @ p[f"l{i}.wff1"] + p[f"l{i}.bff1"]) @ p[f"l{i}.wff2"] + p[f"l{i}.bff2"]
+        h = h + z
+    h = _layernorm(h, p["lnf_g"], p["lnf_b"])
+    logits = h @ p["w_head"]
+    return logits.reshape(-1, cfg.vocab)
+
+
+# --------------------------------------------------------------------------
+# Uniform model facade
+# --------------------------------------------------------------------------
+
+
+class Model:
+    """Uniform wrapper: spec + loss/train/eval closures over flat params."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        if cfg.kind == "mlp":
+            self.spec = mlp_spec(cfg)
+            self._logits = lambda p, x: mlp_logits(cfg, p, x)
+        elif cfg.kind == "cnn":
+            self.spec = cnn_spec(cfg)
+            self._logits = lambda p, x: cnn_logits(cfg, p, x)
+        elif cfg.kind == "transformer":
+            self.spec = lm_spec(cfg)
+            self._logits = lambda p, x: lm_logits(cfg, p, x)
+        else:
+            raise ValueError(cfg.kind)
+
+    # -- shapes the artifact is specialized to -----------------------------
+    def input_shapes(self):
+        cfg = self.cfg
+        if cfg.kind == "transformer":
+            x = ("i32", [cfg.batch, cfg.seq_len])
+            y = ("i32", [cfg.batch, cfg.seq_len])
+        else:
+            x = ("f32", [cfg.batch, cfg.input_dim])
+            y = ("i32", [cfg.batch])
+        return x, y
+
+    def example_args(self):
+        (xd, xs), (yd, ys) = self.input_shapes()
+        params = jax.ShapeDtypeStruct((self.spec.n_padded,), jnp.float32)
+        x = jax.ShapeDtypeStruct(tuple(xs), jnp.float32 if xd == "f32" else jnp.int32)
+        y = jax.ShapeDtypeStruct(tuple(ys), jnp.int32)
+        return params, x, y
+
+    # -- loss / train / eval ------------------------------------------------
+    def loss_fn(self, flat, x, y):
+        p = self.spec.unpack(flat)
+        logits = self._logits(p, x)
+        labels = y.reshape(-1)
+        return jnp.mean(softmax_xent(logits, labels))
+
+    def train_step(self, flat, x, y):
+        loss, grads = jax.value_and_grad(self.loss_fn)(flat, x, y)
+        return loss, grads
+
+    def eval_step(self, flat, x, y):
+        p = self.spec.unpack(flat)
+        logits = self._logits(p, x)
+        labels = y.reshape(-1)
+        loss = jnp.mean(softmax_xent(logits, labels))
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        correct = jnp.sum((pred == labels).astype(jnp.float32))
+        return loss, correct
+
+    def meta(self) -> dict:
+        return {"kind": self.cfg.kind, **asdict(self.cfg)}

@@ -1,0 +1,118 @@
+"""Flat parameter-vector packing for Layer-2 models.
+
+The rust coordinator is model-agnostic: every model artifact has the same
+signature over a single flat f32[N_padded] parameter vector,
+
+    train_step(params, x, y) -> (loss, grads)      grads: f32[N_padded]
+    eval_step(params, x, y)  -> (loss, correct)
+
+so the parameter server stores/updates one contiguous buffer per model and
+the DC update kernels tile it uniformly. N is padded up to a multiple of the
+update-kernel block so the Pallas grid divides evenly; the tail is unused by
+the model (its gradient is exactly zero).
+
+Offsets are static python ints, so `flat[o:o+n].reshape(shape)` stays a
+static slice under jit — no dynamic-slice overhead in the lowered HLO.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+# Must match kernels.dc_update.BLOCK: the PS vector length is a multiple of
+# the update-kernel tile.
+PAD_MULTIPLE = 8192
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    name: str
+    shape: tuple
+    init: str = "he"      # he | glorot | zeros | embed | ones
+    fan_in: int | None = None
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+@dataclass
+class ParamSpec:
+    """Ordered collection of named tensors packed into one flat vector."""
+
+    tensors: list = field(default_factory=list)
+
+    def add(self, name: str, shape, init: str = "he", fan_in: int | None = None) -> None:
+        if any(t.name == name for t in self.tensors):
+            raise ValueError(f"duplicate tensor name {name!r}")
+        self.tensors.append(TensorSpec(name, tuple(int(s) for s in shape), init, fan_in))
+
+    @property
+    def n_params(self) -> int:
+        return sum(t.size for t in self.tensors)
+
+    @property
+    def n_padded(self) -> int:
+        return int(math.ceil(self.n_params / PAD_MULTIPLE) * PAD_MULTIPLE)
+
+    def offsets(self) -> dict:
+        out, o = {}, 0
+        for t in self.tensors:
+            out[t.name] = o
+            o += t.size
+        return out
+
+    def unpack(self, flat):
+        """flat f32[n_padded] -> dict name -> array(shape). Static slices."""
+        out, o = {}, 0
+        for t in self.tensors:
+            out[t.name] = flat[o : o + t.size].reshape(t.shape)
+            o += t.size
+        return out
+
+    def init_flat(self, seed: int = 0) -> np.ndarray:
+        """Numpy init of the padded flat vector (run once, host side)."""
+        rng = np.random.default_rng(seed)
+        flat = np.zeros(self.n_padded, dtype=np.float32)
+        o = 0
+        for t in self.tensors:
+            n = t.size
+            if t.init == "zeros":
+                vals = np.zeros(t.shape, dtype=np.float32)
+            elif t.init == "ones":
+                vals = np.ones(t.shape, dtype=np.float32)
+            elif t.init == "embed":
+                vals = rng.normal(0.0, 0.02, size=t.shape).astype(np.float32)
+            else:
+                fan_in = t.fan_in
+                if fan_in is None:
+                    fan_in = t.shape[0] if len(t.shape) >= 2 else max(1, n)
+                if t.init == "glorot":
+                    fan_out = t.shape[-1] if len(t.shape) >= 2 else n
+                    std = math.sqrt(2.0 / (fan_in + fan_out))
+                else:  # he
+                    std = math.sqrt(2.0 / fan_in)
+                vals = rng.normal(0.0, std, size=t.shape).astype(np.float32)
+            flat[o : o + n] = vals.reshape(-1)
+            o += n
+        return flat
+
+    def describe(self) -> list:
+        """Manifest-friendly listing: [{name, shape, offset, size}...]."""
+        offs = self.offsets()
+        return [
+            {"name": t.name, "shape": list(t.shape), "offset": offs[t.name], "size": t.size}
+            for t in self.tensors
+        ]
+
+
+def pad_to(flat, n_padded: int):
+    """Pad a flat jnp vector with zeros up to n_padded."""
+    n = flat.shape[0]
+    if n == n_padded:
+        return flat
+    return jnp.concatenate([flat, jnp.zeros(n_padded - n, flat.dtype)])

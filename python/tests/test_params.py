@@ -1,0 +1,79 @@
+"""ParamSpec packing invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.params import PAD_MULTIPLE, ParamSpec
+
+
+def make_spec(shapes):
+    spec = ParamSpec()
+    for i, s in enumerate(shapes):
+        spec.add(f"t{i}", s)
+    return spec
+
+
+class TestParamSpec:
+    def test_sizes_and_padding(self):
+        spec = make_spec([(3, 4), (7,), ()])
+        assert spec.n_params == 12 + 7 + 1
+        assert spec.n_padded == PAD_MULTIPLE
+        assert spec.n_padded % PAD_MULTIPLE == 0
+
+    def test_offsets_are_contiguous(self):
+        spec = make_spec([(2, 2), (5,), (3, 1)])
+        offs = spec.offsets()
+        assert offs == {"t0": 0, "t1": 4, "t2": 9}
+
+    def test_unpack_roundtrip(self):
+        spec = make_spec([(4, 3), (6,)])
+        flat = jnp.arange(spec.n_padded, dtype=jnp.float32)
+        p = spec.unpack(flat)
+        np.testing.assert_array_equal(p["t0"], jnp.arange(12.0).reshape(4, 3))
+        np.testing.assert_array_equal(p["t1"], jnp.arange(12.0, 18.0))
+
+    def test_duplicate_name_rejected(self):
+        spec = ParamSpec()
+        spec.add("w", (2,))
+        with pytest.raises(ValueError):
+            spec.add("w", (3,))
+
+    def test_init_flat_padding_is_zero(self):
+        spec = make_spec([(10, 10)])
+        flat = spec.init_flat(seed=3)
+        assert flat.shape == (spec.n_padded,)
+        assert np.all(flat[spec.n_params:] == 0.0)
+        assert flat[: spec.n_params].std() > 0
+
+    def test_init_deterministic(self):
+        spec = make_spec([(32, 16)])
+        np.testing.assert_array_equal(spec.init_flat(seed=9), spec.init_flat(seed=9))
+        assert not np.array_equal(spec.init_flat(seed=9), spec.init_flat(seed=10))
+
+    def test_zeros_ones_init(self):
+        spec = ParamSpec()
+        spec.add("b", (5,), "zeros")
+        spec.add("g", (5,), "ones")
+        flat = spec.init_flat()
+        np.testing.assert_array_equal(flat[:5], np.zeros(5))
+        np.testing.assert_array_equal(flat[5:10], np.ones(5))
+
+    def test_describe_matches_offsets(self):
+        spec = make_spec([(2, 3), (4,)])
+        desc = spec.describe()
+        assert desc[0] == {"name": "t0", "shape": [2, 3], "offset": 0, "size": 6}
+        assert desc[1] == {"name": "t1", "shape": [4], "offset": 6, "size": 4}
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.integers(1, 8), st.integers(1, 8)), min_size=1, max_size=6))
+    def test_property_total_size(self, shapes):
+        spec = make_spec(shapes)
+        assert spec.n_params == sum(a * b for a, b in shapes)
+        assert 0 <= spec.n_padded - spec.n_params < PAD_MULTIPLE
+        flat = jnp.arange(spec.n_padded, dtype=jnp.float32)
+        p = spec.unpack(flat)
+        # unpacked tensors tile the prefix exactly
+        total = np.concatenate([np.asarray(v).reshape(-1) for v in p.values()])
+        np.testing.assert_array_equal(total, np.arange(spec.n_params, dtype=np.float32))

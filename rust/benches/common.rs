@@ -1,0 +1,70 @@
+//! Shared harness for the paper-reproduction benches.
+//!
+//! Every bench is a `harness = false` binary that regenerates one table or
+//! figure from the paper (DESIGN.md §6 experiment index). Scale knobs:
+//!
+//! * `DCASGD_BENCH_SCALE` (float, default 1.0) multiplies epochs/sizes —
+//!   set 2-4 for closer-to-paper training budgets, 0.25 for smoke runs.
+//! * CSV output lands in `runs/bench/`.
+
+#![allow(dead_code)]
+
+use dc_asgd::config::{Algorithm, ExperimentConfig};
+use dc_asgd::coordinator::Trainer;
+use dc_asgd::metrics::TrainReport;
+use dc_asgd::runtime::EngineHandle;
+use std::path::PathBuf;
+
+pub fn scale() -> f64 {
+    std::env::var("DCASGD_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1.0)
+}
+
+pub fn scaled(n: usize) -> usize {
+    ((n as f64 * scale()).round() as usize).max(1)
+}
+
+pub fn artifacts_dir() -> PathBuf {
+    dc_asgd::find_artifacts_dir().expect("artifacts/manifest.json not found — run `make artifacts`")
+}
+
+pub fn engine_for(model: &str, with_updates: bool) -> EngineHandle {
+    dc_asgd::runtime::start_engine(&artifacts_dir(), model, with_updates)
+        .expect("engine startup failed")
+}
+
+/// Run one experiment against a shared engine, logging progress to stderr.
+pub fn run_case(cfg: ExperimentConfig, engine: &EngineHandle) -> TrainReport {
+    let t0 = std::time::Instant::now();
+    let label = format!("{} M={} {}", cfg.model, cfg.workers, cfg.algorithm);
+    let report = Trainer::with_engine(cfg, engine.clone(), &artifacts_dir())
+        .and_then(|t| t.run())
+        .unwrap_or_else(|e| panic!("case {label} failed: {e:#}"));
+    eprintln!(
+        "[case] {label}: err={:.2}% time(sim)={:.1} wall={:.1}s",
+        report.final_test_error * 100.0,
+        report.total_time,
+        t0.elapsed().as_secs_f64()
+    );
+    report
+}
+
+/// Sequential-SGD variant of a base config (the M=1 reference row).
+pub fn as_sequential(mut cfg: ExperimentConfig) -> ExperimentConfig {
+    cfg.algorithm = Algorithm::SequentialSgd;
+    cfg.workers = 1;
+    cfg
+}
+
+/// Format an error-rate cell.
+pub fn pct(x: f32) -> String {
+    format!("{:.2}", x * 100.0)
+}
+
+/// Standard banner tying a bench to its paper artifact.
+pub fn banner(what: &str, expectation: &str) {
+    println!("==============================================================================");
+    println!("Reproducing {what}");
+    println!("Paper expectation (shape, not absolute numbers): {expectation}");
+    println!("Scale: DCASGD_BENCH_SCALE={} (see runs/bench/ for CSVs)", scale());
+    println!("==============================================================================");
+}

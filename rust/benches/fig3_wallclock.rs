@@ -1,0 +1,101 @@
+//! Figure 3: test error vs wallclock time (simulated cluster seconds).
+//!
+//! Paper: ASGD achieves near-linear speedup over sequential SGD in
+//! throughput; SSGD is dragged by its barrier (stragglers); DC-ASGD matches
+//! ASGD's speed with sequential-SGD-level accuracy. We run all algorithms
+//! under a heterogeneous worker-speed model (some workers 40% slower, the
+//! regime where the barrier hurts) and report both the error-vs-time curves
+//! and the time needed to first reach a target test error.
+//!
+//! Output: runs/bench/fig3_wallclock.csv (series,time,test_error)
+
+mod common;
+
+use common::*;
+use dc_asgd::bench::Table;
+use dc_asgd::config::{Algorithm, DelayModel, ExperimentConfig};
+use dc_asgd::coordinator::Trainer;
+
+fn base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset_cifar();
+    cfg.train_size = scaled(8_192);
+    cfg.test_size = 2_048;
+    cfg.epochs = scaled(10);
+    cfg.lr.decay_epochs = vec![scaled(10) * 2 / 3];
+    cfg.eval_every = 1;
+    // heterogeneous fleet: half the workers 1.4x slower + jitter; this is
+    // what separates ASGD (no barrier) from SSGD (barrier) in wallclock
+    cfg.delay =
+        DelayModel::Heterogeneous { mean: 1.0, speeds: vec![1.0, 1.4], jitter: 0.25 };
+    cfg.out_dir = "runs/bench/fig3".into();
+    cfg
+}
+
+fn main() {
+    banner(
+        "Figure 3 (error vs wallclock, M=4/8, heterogeneous worker speeds)",
+        "ASGD & DC-ASGD fastest (≈linear speedup); SSGD slower (barrier); seq slowest",
+    );
+    let engine = engine_for("mlp_cifar", false);
+    let mut csv = Table::new(&["series", "time", "test_error"]);
+    let mut summary = Table::new(&[
+        "series",
+        "final err(%)",
+        "total sim time(s)",
+        "time to 25% err(s)",
+        "speedup vs seq",
+    ]);
+
+    let mut seq_total = 0.0f64;
+    let mut run_series = |label: String, cfg: ExperimentConfig, seq_total: &mut f64| {
+        let report =
+            Trainer::with_engine(cfg.clone(), engine.clone(), &artifacts_dir()).unwrap().run().unwrap();
+        let tag = format!("{}_{}_m{}", cfg.model, cfg.algorithm.name(), cfg.workers);
+        let path = std::path::Path::new(&cfg.out_dir).join(format!("{tag}.evals.csv"));
+        let body = std::fs::read_to_string(&path).unwrap_or_default();
+        let mut first_hit: Option<f64> = None;
+        for line in body.lines().skip(1) {
+            let cols: Vec<&str> = line.split(',').collect();
+            if cols.len() == 5 {
+                csv.row(&[label.clone(), cols[2].into(), cols[4].into()]);
+                let (t, e): (f64, f64) =
+                    (cols[2].parse().unwrap_or(0.0), cols[4].parse().unwrap_or(1.0));
+                if e <= 0.25 && first_hit.is_none() {
+                    first_hit = Some(t);
+                }
+            }
+        }
+        if cfg.algorithm == Algorithm::SequentialSgd {
+            *seq_total = report.total_time;
+        }
+        let speedup = if report.total_time > 0.0 && *seq_total > 0.0 {
+            format!("{:.2}x", *seq_total / report.total_time)
+        } else {
+            "-".into()
+        };
+        summary.row(&[
+            label,
+            pct(report.final_test_error),
+            format!("{:.0}", report.total_time),
+            first_hit.map(|t| format!("{t:.0}")).unwrap_or_else(|| "-".into()),
+            speedup,
+        ]);
+    };
+
+    run_series("seq".into(), as_sequential(base()), &mut seq_total);
+    for m in [4usize, 8] {
+        for algo in [Algorithm::SyncSgd, Algorithm::Asgd, Algorithm::DcAsgdAdaptive] {
+            let mut cfg = base();
+            cfg.algorithm = algo;
+            cfg.workers = m;
+            cfg.lambda0 = 4.0;
+            run_series(format!("{}_m{}", algo.name(), m), cfg, &mut seq_total);
+        }
+    }
+
+    csv.write_csv(&dc_asgd::bench::bench_out_dir().join("fig3_wallclock.csv")).unwrap();
+    println!();
+    summary.print();
+    println!("curves: runs/bench/fig3_wallclock.csv (plot test_error vs time per series)");
+    engine.shutdown();
+}

@@ -1,0 +1,71 @@
+//! Figure 4: ImageNet-like curves, M=16 — error vs effective passes AND vs
+//! wallclock in one bench (the paper shows both panels).
+//!
+//! Paper: DC-ASGD-a below SSGD/ASGD per pass; in wallclock SSGD is slowed
+//! by its barrier while ASGD and DC-ASGD overlap.
+//!
+//! Output: runs/bench/fig4_imagenet.csv (series,passes,time,test_error)
+
+mod common;
+
+use common::*;
+use dc_asgd::bench::Table;
+use dc_asgd::config::{Algorithm, DelayModel, ExperimentConfig};
+use dc_asgd::coordinator::Trainer;
+
+fn base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset_imagenet();
+    cfg.train_size = scaled(16_384);
+    cfg.test_size = 4_096;
+    cfg.epochs = scaled(8);
+    cfg.lr.decay_epochs = vec![scaled(8) * 3 / 4];
+    cfg.eval_every = 1;
+    cfg.workers = 16;
+    cfg.delay = DelayModel::Heterogeneous { mean: 1.0, speeds: vec![1.0, 1.3], jitter: 0.25 };
+    cfg.out_dir = "runs/bench/fig4".into();
+    cfg
+}
+
+fn main() {
+    banner(
+        "Figure 4 (ImageNet-like, M=16: error vs passes and vs wallclock)",
+        "per pass: DC-a < SSGD < ASGD; per wallclock: SSGD dragged by barrier",
+    );
+    let engine = engine_for("mlp_imagenet", false);
+    let mut csv = Table::new(&["series", "passes", "time", "test_error"]);
+    let mut summary =
+        Table::new(&["series", "final err(%)", "paper(%)", "sim time(s)"]);
+
+    for (algo, paper) in [
+        (Algorithm::Asgd, "25.64"),
+        (Algorithm::SyncSgd, "25.30"),
+        (Algorithm::DcAsgdAdaptive, "25.18"),
+    ] {
+        let mut cfg = base();
+        cfg.algorithm = algo;
+        cfg.lambda0 = 4.0;
+        cfg.ms_momentum = 0.0; // paper's ImageNet setting
+        let report =
+            Trainer::with_engine(cfg.clone(), engine.clone(), &artifacts_dir()).unwrap().run().unwrap();
+        let tag = format!("{}_{}_m{}", cfg.model, algo.name(), cfg.workers);
+        let path = std::path::Path::new(&cfg.out_dir).join(format!("{tag}.evals.csv"));
+        for line in std::fs::read_to_string(&path).unwrap_or_default().lines().skip(1) {
+            let cols: Vec<&str> = line.split(',').collect();
+            if cols.len() == 5 {
+                csv.row(&[algo.name().into(), cols[1].into(), cols[2].into(), cols[4].into()]);
+            }
+        }
+        summary.row(&[
+            algo.name().into(),
+            pct(report.final_test_error),
+            paper.into(),
+            format!("{:.0}", report.total_time),
+        ]);
+    }
+
+    csv.write_csv(&dc_asgd::bench::bench_out_dir().join("fig4_imagenet.csv")).unwrap();
+    println!();
+    summary.print();
+    println!("curves: runs/bench/fig4_imagenet.csv");
+    engine.shutdown();
+}

@@ -1,0 +1,74 @@
+//! Figure 5 (appendix G): sensitivity to the compensation strength lambda_0.
+//!
+//! Paper: lambda too large introduces variance and misdirects the update
+//! (worse than ASGD, can diverge); lambda -> 0 degrades to plain ASGD; a
+//! middle value is best. The resulting error-vs-lambda curve is U-shaped.
+
+mod common;
+
+use common::*;
+use dc_asgd::bench::Table;
+use dc_asgd::config::{Algorithm, ExperimentConfig};
+
+fn base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset_cifar();
+    cfg.train_size = scaled(8_192);
+    cfg.test_size = 2_048;
+    cfg.epochs = scaled(10);
+    cfg.lr.decay_epochs = vec![scaled(10) * 2 / 3];
+    cfg.eval_every = (cfg.epochs / 2).max(1);
+    cfg.workers = 8;
+    cfg.out_dir = "runs/bench/fig5".into();
+    cfg
+}
+
+fn main() {
+    banner(
+        "Figure 5 / appendix G (lambda_0 sweep, DC-ASGD-a and DC-ASGD-c, M=8)",
+        "U-shape: lambda→0 degrades to ASGD; too-large lambda hurts or diverges",
+    );
+    let engine = engine_for("mlp_cifar", false);
+    let mut table = Table::new(&["algorithm", "lambda0", "error(%)", "note"]);
+    let mut csv = Table::new(&["algorithm", "lambda0", "error"]);
+
+    // lambda0 = 0 is exactly ASGD — the reference row
+    let mut asgd = base();
+    asgd.algorithm = Algorithm::Asgd;
+    let r0 = run_case(asgd, &engine);
+    for name in ["dc-asgd-c", "dc-asgd-a"] {
+        table.row(&[name.into(), "0 (=asgd)".into(), pct(r0.final_test_error), "reference".into()]);
+        csv.row(&[name.into(), "0".into(), format!("{}", r0.final_test_error)]);
+    }
+
+    for (algo, lambdas) in [
+        (Algorithm::DcAsgdConst, vec![0.25, 1.0, 4.0, 16.0, 64.0]),
+        (Algorithm::DcAsgdAdaptive, vec![0.25, 1.0, 4.0, 16.0, 64.0]),
+    ] {
+        let mut errs = vec![];
+        for &lam in &lambdas {
+            let mut cfg = base();
+            cfg.algorithm = algo;
+            cfg.lambda0 = lam;
+            cfg.tag = format!("lam{lam}");
+            let r = run_case(cfg, &engine);
+            errs.push(r.final_test_error);
+            table.row(&[algo.name().into(), lam.to_string(), pct(r.final_test_error), String::new()]);
+            csv.row(&[algo.name().into(), lam.to_string(), format!("{}", r.final_test_error)]);
+        }
+        // report the U-shape: is some middle lambda better than both ends?
+        let best = errs.iter().cloned().fold(f32::INFINITY, f32::min);
+        let ends = errs[0].min(*errs.last().unwrap());
+        println!(
+            "shape {}: best mid-sweep err {:.2}% vs best endpoint {:.2}% (U-shape: {})",
+            algo.name(),
+            best * 100.0,
+            ends * 100.0,
+            best < ends
+        );
+    }
+
+    println!();
+    table.print();
+    csv.write_csv(&dc_asgd::bench::bench_out_dir().join("fig5_lambda.csv")).unwrap();
+    engine.shutdown();
+}

@@ -1,0 +1,57 @@
+//! Table 2: top-1 error on the ImageNet-like task, M=16.
+//!
+//! Paper (ResNet-50 on ImageNet, M=16): ASGD 25.64 | SSGD 25.30 | DC-a 25.18.
+//! Reproduced shape: DC-a <= SSGD <= ASGD, gaps modest (the paper notes
+//! ImageNet is less sensitive to effective batch size, so SSGD is strong).
+
+mod common;
+
+use common::*;
+use dc_asgd::bench::Table;
+use dc_asgd::config::{Algorithm, ExperimentConfig};
+
+fn base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset_imagenet();
+    cfg.train_size = scaled(16_384);
+    cfg.test_size = 4_096;
+    cfg.epochs = scaled(9);
+    cfg.lr.decay_epochs = vec![scaled(9) * 2 / 3];
+    cfg.eval_every = (cfg.epochs / 3).max(1);
+    cfg.workers = 16;
+    cfg.out_dir = "runs/bench/table2".into();
+    cfg
+}
+
+fn main() {
+    banner(
+        "Table 2 (ImageNet top-1 error, M=16)",
+        "DC-ASGD-a < SSGD < ASGD, with modest gaps",
+    );
+    let engine = engine_for("mlp_imagenet", false);
+    let cases = [
+        (Algorithm::Asgd, "25.64"),
+        (Algorithm::SyncSgd, "25.30"),
+        (Algorithm::DcAsgdAdaptive, "25.18"),
+    ];
+    let mut table = Table::new(&["# workers", "algorithm", "error(%)", "paper(%)"]);
+    let mut errs = vec![];
+    for (algo, paper) in cases {
+        let mut cfg = base();
+        cfg.algorithm = algo;
+        // paper ImageNet setting: lambda0 = 2, m = 0 (instant normalization)
+        cfg.lambda0 = 4.0;
+        cfg.ms_momentum = 0.0;
+        let r = run_case(cfg, &engine);
+        table.row(&["16".into(), algo.name().into(), pct(r.final_test_error), paper.into()]);
+        errs.push((algo, r.final_test_error));
+    }
+    println!();
+    table.print();
+    table.write_csv(&dc_asgd::bench::bench_out_dir().join("table2_imagenet.csv")).unwrap();
+    println!(
+        "shape: dc-a<asgd: {} | ssgd<asgd: {}",
+        errs[2].1 < errs[0].1,
+        errs[1].1 < errs[0].1
+    );
+    engine.shutdown();
+}

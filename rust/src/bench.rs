@@ -1,0 +1,224 @@
+//! Micro/meso benchmark harness (criterion is not in the offline crate
+//! set): warmup + timed iterations + robust summary stats, plus an aligned
+//! table printer the paper-reproduction benches share.
+
+use crate::util::stats::{percentile, Running};
+use std::time::Instant;
+
+/// Timing summary of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl Summary {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{:<40} {:>10} {:>12} {:>12} {:>12} {:>14}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p99_s),
+            format!("{:.1}/s", self.per_sec()),
+        );
+    }
+}
+
+pub fn header() {
+    println!(
+        "{:<40} {:>10} {:>12} {:>12} {:>12} {:>14}",
+        "benchmark", "iters", "mean", "p50", "p99", "throughput"
+    );
+    println!("{}", "-".repeat(104));
+}
+
+fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup calls.
+pub fn time_fn<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Summary {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    let mut run = Running::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        samples.push(dt);
+        run.push(dt);
+    }
+    Summary {
+        name: name.to_string(),
+        iters,
+        mean_s: run.mean(),
+        std_s: run.std(),
+        p50_s: percentile(&samples, 50.0),
+        p99_s: percentile(&samples, 99.0),
+        min_s: run.min(),
+    }
+}
+
+/// Time `f` adaptively: run batches until `target_secs` of samples exist
+/// (good for sub-microsecond bodies where per-call Instant overhead bites).
+pub fn time_batched<F: FnMut()>(name: &str, target_secs: f64, mut f: F) -> Summary {
+    // calibrate batch size to ~1ms per batch
+    let mut batch = 1usize;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt > 1e-3 || batch >= 1 << 20 {
+            break;
+        }
+        batch *= 4;
+    }
+    let mut samples = Vec::new();
+    let mut run = Running::new();
+    let t_total = Instant::now();
+    while t_total.elapsed().as_secs_f64() < target_secs {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let per = t0.elapsed().as_secs_f64() / batch as f64;
+        samples.push(per);
+        run.push(per);
+    }
+    Summary {
+        name: name.to_string(),
+        iters: samples.len() * batch,
+        mean_s: run.mean(),
+        std_s: run.std(),
+        p50_s: percentile(&samples, 50.0),
+        p99_s: percentile(&samples, 99.0),
+        min_s: run.min(),
+    }
+}
+
+/// Aligned table printer for paper-style result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let parts: Vec<String> =
+                cells.iter().enumerate().map(|(i, c)| format!("{:>w$}", c, w = widths[i])).collect();
+            println!("| {} |", parts.join(" | "));
+        };
+        line(&self.headers);
+        println!(
+            "|{}|",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Also emit CSV (benches drop these next to the binary for plotting).
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+/// Standard output directory for bench CSVs.
+pub fn bench_out_dir() -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from("runs/bench");
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_measures_something() {
+        let s = time_fn("spin", 2, 20, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.iters, 20);
+        assert!(s.mean_s > 0.0);
+        assert!(s.p50_s <= s.p99_s);
+        assert!(s.min_s <= s.mean_s * 2.0);
+    }
+
+    #[test]
+    fn batched_timer_runs() {
+        let s = time_batched("tiny", 0.05, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.iters > 100);
+        assert!(s.mean_s < 1e-3);
+    }
+
+    #[test]
+    fn table_prints_and_saves() {
+        let mut t = Table::new(&["# workers", "algorithm", "error(%)"]);
+        t.row(&["4".into(), "asgd".into(), "9.27".into()]);
+        t.row(&["4".into(), "dc-asgd-a".into(), "8.19".into()]);
+        t.print();
+        let path = std::env::temp_dir().join(format!("dcasgd_tbl_{}.csv", std::process::id()));
+        t.write_csv(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("# workers,algorithm,error(%)"));
+        assert_eq!(body.lines().count(), 3);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,681 @@
+//! Typed experiment configuration + validation + presets.
+//!
+//! Config files are TOML-subset (see [`toml`]); every knob also has a CLI
+//! override in `main.rs`. Presets encode the paper's experimental setups
+//! scaled to this testbed (DESIGN.md §5/§6).
+
+pub mod toml;
+
+use crate::util::json::Json;
+use anyhow::{bail, Context};
+use std::fmt;
+use std::path::Path;
+
+/// Which update rule the parameter server applies (paper §4/§6 + appendix H).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// Single-worker sequential SGD (the paper's accuracy reference).
+    SequentialSgd,
+    /// Synchronous SGD: barrier, average of M gradients (Dean et al.).
+    SyncSgd,
+    /// Delay-compensated synchronous SGD (appendix H).
+    DcSyncSgd,
+    /// Plain asynchronous SGD (delayed gradients applied as-is).
+    Asgd,
+    /// DC-ASGD-c: constant lambda (Eqn. 10).
+    DcAsgdConst,
+    /// DC-ASGD-a: adaptive lambda via MeanSquare (Eqn. 14).
+    DcAsgdAdaptive,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "sgd" | "sequential" | "seq" => Algorithm::SequentialSgd,
+            "ssgd" | "sync" => Algorithm::SyncSgd,
+            "dc-ssgd" | "dcssgd" | "dc-sync" => Algorithm::DcSyncSgd,
+            "asgd" | "async" => Algorithm::Asgd,
+            "dc-asgd-c" | "dcasgd-c" | "dc-c" => Algorithm::DcAsgdConst,
+            "dc-asgd-a" | "dcasgd-a" | "dc-a" => Algorithm::DcAsgdAdaptive,
+            other => bail!("unknown algorithm {other:?} (sgd|ssgd|dc-ssgd|asgd|dc-asgd-c|dc-asgd-a)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::SequentialSgd => "sgd",
+            Algorithm::SyncSgd => "ssgd",
+            Algorithm::DcSyncSgd => "dc-ssgd",
+            Algorithm::Asgd => "asgd",
+            Algorithm::DcAsgdConst => "dc-asgd-c",
+            Algorithm::DcAsgdAdaptive => "dc-asgd-a",
+        }
+    }
+
+    /// Does the rule use delay compensation?
+    pub fn is_delay_compensated(&self) -> bool {
+        matches!(self, Algorithm::DcAsgdConst | Algorithm::DcAsgdAdaptive | Algorithm::DcSyncSgd)
+    }
+
+    /// Is the parallelization asynchronous (no barrier)?
+    pub fn is_async(&self) -> bool {
+        matches!(self, Algorithm::Asgd | Algorithm::DcAsgdConst | Algorithm::DcAsgdAdaptive)
+    }
+}
+
+impl fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Worker compute-time model for the discrete-event simulator (sim/delay.rs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum DelayModel {
+    /// Every gradient takes exactly `mean` simulated seconds.
+    Constant { mean: f64 },
+    /// Uniform in [mean*(1-jitter), mean*(1+jitter)].
+    Uniform { mean: f64, jitter: f64 },
+    /// Exponential with the given mean (memoryless workers).
+    Exponential { mean: f64 },
+    /// Pareto-tailed: mostly ~scale, occasional heavy stragglers.
+    Pareto { scale: f64, alpha: f64 },
+    /// Heterogeneous fleet: worker m's mean is `mean * speed[m % speeds.len()]`.
+    Heterogeneous { mean: f64, speeds: Vec<f64>, jitter: f64 },
+}
+
+impl DelayModel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DelayModel::Constant { .. } => "constant",
+            DelayModel::Uniform { .. } => "uniform",
+            DelayModel::Exponential { .. } => "exponential",
+            DelayModel::Pareto { .. } => "pareto",
+            DelayModel::Heterogeneous { .. } => "heterogeneous",
+        }
+    }
+}
+
+/// Step-decay learning-rate schedule (paper: /10 at epochs 80 and 120).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LrSchedule {
+    pub base: f64,
+    /// (epoch, multiplier) breakpoints, applied cumulatively in order.
+    pub decay_epochs: Vec<usize>,
+    pub decay_factor: f64,
+}
+
+impl LrSchedule {
+    pub fn constant(base: f64) -> Self {
+        Self { base, decay_epochs: vec![], decay_factor: 1.0 }
+    }
+
+    /// Learning rate for a (0-based) epoch index.
+    pub fn lr_at_epoch(&self, epoch: usize) -> f64 {
+        let drops = self.decay_epochs.iter().filter(|&&e| epoch >= e).count();
+        self.base * self.decay_factor.powi(drops as i32)
+    }
+}
+
+/// How the server applies updates: pure-rust loops (fast path) or the
+/// AOT-compiled XLA/Pallas update artifact (ablation A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateBackend {
+    Native,
+    Xla,
+}
+
+/// Execution mode for parallel algorithms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Real OS threads racing on the parameter server.
+    Threads,
+    /// Discrete-event simulation with a virtual clock (deterministic; used
+    /// for the wallclock figures).
+    SimulatedTime,
+}
+
+/// Synthetic dataset selection (DESIGN.md §5).
+#[derive(Clone, Debug, PartialEq)]
+pub enum DatasetKind {
+    CifarLike,
+    ImagenetLike,
+    LmCorpus,
+}
+
+impl DatasetKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "cifar" | "cifar-like" | "cifar_like" => DatasetKind::CifarLike,
+            "imagenet" | "imagenet-like" | "imagenet_like" => DatasetKind::ImagenetLike,
+            "lm" | "lm-corpus" | "lm_corpus" => DatasetKind::LmCorpus,
+            other => bail!("unknown dataset {other:?}"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::CifarLike => "cifar-like",
+            DatasetKind::ImagenetLike => "imagenet-like",
+            DatasetKind::LmCorpus => "lm-corpus",
+        }
+    }
+}
+
+/// Full experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Artifact/model name from the AOT manifest (e.g. "mlp_cifar").
+    pub model: String,
+    pub dataset: DatasetKind,
+    pub algorithm: Algorithm,
+    /// Number of local workers M (paper: 1, 4, 8, 16).
+    pub workers: usize,
+    pub epochs: usize,
+    /// Optional hard cap on global update steps (0 = no cap).
+    pub max_steps: usize,
+    pub train_size: usize,
+    pub test_size: usize,
+    pub lr: LrSchedule,
+    /// lambda_0: DC compensation strength.
+    pub lambda0: f64,
+    /// MeanSquare moving-average constant m (DC-ASGD-a).
+    pub ms_momentum: f64,
+    /// Classical momentum mu (0 = plain SGD; the paper's momentum variants).
+    pub momentum: f64,
+    pub seed: u64,
+    pub exec_mode: ExecMode,
+    pub delay: DelayModel,
+    pub update_backend: UpdateBackend,
+    /// Parameter-store lock shards.
+    pub shards: usize,
+    /// Evaluate on the test set every `eval_every` effective epochs.
+    pub eval_every: usize,
+    /// Also evaluate every N global steps (0 = disabled); used by
+    /// step-capped runs like the LM driver.
+    pub eval_every_steps: usize,
+    /// Cap on evaluation batches per eval (0 = full test set).
+    pub eval_batches: usize,
+    /// Where to write metrics CSV/JSON (empty = don't write).
+    pub out_dir: String,
+    /// Save a final parameter-server checkpoint here (empty = don't).
+    pub checkpoint_out: String,
+    /// Resume from a checkpoint file before training (empty = fresh init).
+    pub resume_from: String,
+    /// Extra label for metrics files.
+    pub tag: String,
+    pub verbose: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            model: "mlp_cifar".into(),
+            dataset: DatasetKind::CifarLike,
+            algorithm: Algorithm::Asgd,
+            workers: 4,
+            epochs: 10,
+            max_steps: 0,
+            train_size: 4096,
+            test_size: 1024,
+            lr: LrSchedule { base: 0.1, decay_epochs: vec![], decay_factor: 0.1 },
+            lambda0: 0.04,
+            ms_momentum: 0.95,
+            momentum: 0.0,
+            seed: 17,
+            exec_mode: ExecMode::SimulatedTime,
+            delay: DelayModel::Uniform { mean: 1.0, jitter: 0.3 },
+            update_backend: UpdateBackend::Native,
+            shards: 1,
+            eval_every: 1,
+            eval_every_steps: 0,
+            eval_batches: 0,
+            out_dir: String::new(),
+            checkpoint_out: String::new(),
+            resume_from: String::new(),
+            tag: String::new(),
+            verbose: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    // ---------------------------------------------------------------- presets
+
+    /// Tiny fast preset used by examples/quickstart and integration tests.
+    pub fn preset_quickstart() -> Self {
+        Self {
+            model: "mlp_tiny".into(),
+            dataset: DatasetKind::CifarLike,
+            workers: 4,
+            epochs: 6,
+            train_size: 1024,
+            test_size: 512,
+            lr: LrSchedule::constant(0.5),
+            lambda0: 2.0,
+            ..Self::default()
+        }
+    }
+
+    /// Table 1 / Fig 2 / Fig 3 setup (CIFAR-like; paper: ResNet-20, 160
+    /// epochs, batch 128, lr 0.5 decayed at 80/120, lambda0 0.04 / 2.0).
+    pub fn preset_cifar() -> Self {
+        Self {
+            model: "mlp_cifar".into(),
+            dataset: DatasetKind::CifarLike,
+            workers: 4,
+            epochs: 40,
+            train_size: 16_384,
+            test_size: 4_096,
+            // lr/lambda calibrated on the synthetic task (EXPERIMENTS.md):
+            // the high-lr regime is where delayed gradients bite, as in the
+            // paper's eta=0.5 CIFAR setting.
+            lr: LrSchedule { base: 0.5, decay_epochs: vec![20, 30], decay_factor: 0.1 },
+            lambda0: 4.0,
+            ms_momentum: 0.95,
+            ..Self::default()
+        }
+    }
+
+    /// Table 2 / Fig 4 setup (ImageNet-like; paper: ResNet-50, M=16,
+    /// lr 0.1 decayed every 30 epochs, lambda0 2, m=0).
+    pub fn preset_imagenet() -> Self {
+        Self {
+            model: "mlp_imagenet".into(),
+            dataset: DatasetKind::ImagenetLike,
+            workers: 16,
+            epochs: 24,
+            train_size: 32_768,
+            test_size: 8_192,
+            lr: LrSchedule { base: 0.4, decay_epochs: vec![12, 18], decay_factor: 0.1 },
+            lambda0: 4.0,
+            ms_momentum: 0.0,
+            ..Self::default()
+        }
+    }
+
+    /// End-to-end LM training (examples/train_lm.rs).
+    pub fn preset_lm(model: &str) -> Self {
+        Self {
+            model: model.into(),
+            dataset: DatasetKind::LmCorpus,
+            workers: 4,
+            epochs: 1,
+            max_steps: 300,
+            train_size: 8_192, // sequences
+            test_size: 512,
+            // transformer-scale lr: larger models diverge above ~0.1 on
+            // this corpus (see EXPERIMENTS.md e2e notes)
+            lr: LrSchedule::constant(0.05),
+            lambda0: 2.0,
+            ms_momentum: 0.95,
+            eval_every: 1,
+            eval_every_steps: 50,
+            eval_batches: 8,
+            ..Self::default()
+        }
+    }
+
+    // ------------------------------------------------------------ validation
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.algorithm == Algorithm::SequentialSgd && self.workers != 1 {
+            bail!("sequential SGD requires workers = 1 (got {})", self.workers);
+        }
+        if self.epochs == 0 && self.max_steps == 0 {
+            bail!("one of epochs / max_steps must be positive");
+        }
+        if self.lr.base <= 0.0 {
+            bail!("lr must be positive");
+        }
+        if self.lambda0 < 0.0 {
+            bail!("lambda0 must be >= 0");
+        }
+        if !(0.0..1.0).contains(&self.ms_momentum) && self.ms_momentum != 0.0 {
+            bail!("ms_momentum must be in [0, 1)");
+        }
+        if !(0.0..1.0).contains(&self.momentum) && self.momentum != 0.0 {
+            bail!("momentum must be in [0, 1)");
+        }
+        if self.train_size == 0 || self.test_size == 0 {
+            bail!("train/test sizes must be positive");
+        }
+        if self.shards == 0 {
+            bail!("shards must be >= 1");
+        }
+        match &self.delay {
+            DelayModel::Constant { mean }
+            | DelayModel::Uniform { mean, .. }
+            | DelayModel::Exponential { mean }
+            | DelayModel::Heterogeneous { mean, .. } => {
+                if *mean <= 0.0 {
+                    bail!("delay mean must be positive");
+                }
+            }
+            DelayModel::Pareto { scale, alpha } => {
+                if *scale <= 0.0 || *alpha <= 0.0 {
+                    bail!("pareto scale/alpha must be positive");
+                }
+            }
+        }
+        if let DelayModel::Uniform { jitter, .. } | DelayModel::Heterogeneous { jitter, .. } =
+            &self.delay
+        {
+            if !(0.0..1.0).contains(jitter) {
+                bail!("jitter must be in [0, 1)");
+            }
+        }
+        Ok(())
+    }
+
+    // --------------------------------------------------------- file loading
+
+    pub fn from_file(path: &Path) -> anyhow::Result<Self> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&src)
+    }
+
+    pub fn from_toml(src: &str) -> anyhow::Result<Self> {
+        let doc = toml::Doc::parse(src)?;
+        let mut cfg = match doc.get("preset").and_then(|v| v.as_str()) {
+            Some("quickstart") => Self::preset_quickstart(),
+            Some("cifar") => Self::preset_cifar(),
+            Some("imagenet") => Self::preset_imagenet(),
+            Some("lm") => Self::preset_lm("lm_medium"),
+            Some(other) => bail!("unknown preset {other:?}"),
+            None => Self::default(),
+        };
+
+        let get_f64 = |k: &str| -> anyhow::Result<Option<f64>> {
+            match doc.get(k) {
+                None => Ok(None),
+                Some(v) => v.as_f64().map(Some).ok_or_else(|| anyhow::anyhow!("{k} must be a number")),
+            }
+        };
+        let get_usize = |k: &str| -> anyhow::Result<Option<usize>> {
+            match doc.get(k) {
+                None => Ok(None),
+                Some(v) => v.as_usize().map(Some).ok_or_else(|| anyhow::anyhow!("{k} must be a non-negative integer")),
+            }
+        };
+
+        if let Some(v) = doc.get("model").and_then(|v| v.as_str()) {
+            cfg.model = v.to_string();
+        }
+        if let Some(v) = doc.get("dataset").and_then(|v| v.as_str()) {
+            cfg.dataset = DatasetKind::parse(v)?;
+        }
+        if let Some(v) = doc.get("algorithm").and_then(|v| v.as_str()) {
+            cfg.algorithm = Algorithm::parse(v)?;
+        }
+        if let Some(v) = get_usize("workers")? {
+            cfg.workers = v;
+        }
+        if let Some(v) = get_usize("epochs")? {
+            cfg.epochs = v;
+        }
+        if let Some(v) = get_usize("max_steps")? {
+            cfg.max_steps = v;
+        }
+        if let Some(v) = get_usize("data.train_size")? {
+            cfg.train_size = v;
+        }
+        if let Some(v) = get_usize("data.test_size")? {
+            cfg.test_size = v;
+        }
+        if let Some(v) = get_f64("train.lr")? {
+            cfg.lr.base = v;
+        }
+        if let Some(arr) = doc.get("train.decay_epochs") {
+            let items = match arr {
+                toml::Value::Array(a) => a,
+                _ => bail!("train.decay_epochs must be an array"),
+            };
+            cfg.lr.decay_epochs = items
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("decay_epochs entries must be integers")))
+                .collect::<anyhow::Result<_>>()?;
+        }
+        if let Some(v) = get_f64("train.decay_factor")? {
+            cfg.lr.decay_factor = v;
+        }
+        if let Some(v) = get_f64("train.lambda0")? {
+            cfg.lambda0 = v;
+        }
+        if let Some(v) = get_f64("train.ms_momentum")? {
+            cfg.ms_momentum = v;
+        }
+        if let Some(v) = get_f64("train.momentum")? {
+            cfg.momentum = v;
+        }
+        if let Some(v) = doc.get("seed").and_then(|v| v.as_i64()) {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = doc.get("exec_mode").and_then(|v| v.as_str()) {
+            cfg.exec_mode = match v {
+                "threads" => ExecMode::Threads,
+                "sim" | "simulated" => ExecMode::SimulatedTime,
+                other => bail!("unknown exec_mode {other:?}"),
+            };
+        }
+        if let Some(v) = doc.get("update_backend").and_then(|v| v.as_str()) {
+            cfg.update_backend = match v {
+                "native" => UpdateBackend::Native,
+                "xla" => UpdateBackend::Xla,
+                other => bail!("unknown update_backend {other:?}"),
+            };
+        }
+        if let Some(v) = get_usize("shards")? {
+            cfg.shards = v;
+        }
+        if let Some(v) = get_usize("eval.every")? {
+            cfg.eval_every = v;
+        }
+        if let Some(v) = get_usize("eval.every_steps")? {
+            cfg.eval_every_steps = v;
+        }
+        if let Some(v) = get_usize("eval.batches")? {
+            cfg.eval_batches = v;
+        }
+        if let Some(v) = doc.get("out_dir").and_then(|v| v.as_str()) {
+            cfg.out_dir = v.to_string();
+        }
+        if let Some(v) = doc.get("checkpoint_out").and_then(|v| v.as_str()) {
+            cfg.checkpoint_out = v.to_string();
+        }
+        if let Some(v) = doc.get("resume_from").and_then(|v| v.as_str()) {
+            cfg.resume_from = v.to_string();
+        }
+        if let Some(v) = doc.get("tag").and_then(|v| v.as_str()) {
+            cfg.tag = v.to_string();
+        }
+        if let Some(v) = doc.get("verbose").and_then(|v| v.as_bool()) {
+            cfg.verbose = v;
+        }
+
+        // delay model
+        if let Some(kind) = doc.get("sim.delay.model").and_then(|v| v.as_str()) {
+            let mean = get_f64("sim.delay.mean")?.unwrap_or(1.0);
+            let jitter = get_f64("sim.delay.jitter")?.unwrap_or(0.3);
+            cfg.delay = match kind {
+                "constant" => DelayModel::Constant { mean },
+                "uniform" => DelayModel::Uniform { mean, jitter },
+                "exponential" => DelayModel::Exponential { mean },
+                "pareto" => DelayModel::Pareto {
+                    scale: get_f64("sim.delay.scale")?.unwrap_or(mean),
+                    alpha: get_f64("sim.delay.alpha")?.unwrap_or(2.5),
+                },
+                "heterogeneous" => {
+                    let speeds = match doc.get("sim.delay.speeds") {
+                        Some(toml::Value::Array(a)) => a
+                            .iter()
+                            .map(|v| v.as_f64().ok_or_else(|| anyhow::anyhow!("speeds must be numbers")))
+                            .collect::<anyhow::Result<Vec<_>>>()?,
+                        _ => vec![1.0],
+                    };
+                    DelayModel::Heterogeneous { mean, speeds, jitter }
+                }
+                other => bail!("unknown delay model {other:?}"),
+            };
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// JSON summary for metrics files.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", self.model.as_str().into()),
+            ("dataset", self.dataset.name().into()),
+            ("algorithm", self.algorithm.name().into()),
+            ("workers", self.workers.into()),
+            ("epochs", self.epochs.into()),
+            ("max_steps", self.max_steps.into()),
+            ("train_size", self.train_size.into()),
+            ("test_size", self.test_size.into()),
+            ("lr", self.lr.base.into()),
+            ("lambda0", self.lambda0.into()),
+            ("ms_momentum", self.ms_momentum.into()),
+            ("momentum", self.momentum.into()),
+            ("seed", (self.seed as i64).into()),
+            ("delay_model", self.delay.name().into()),
+            ("shards", self.shards.into()),
+            ("tag", self.tag.as_str().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for a in [
+            Algorithm::SequentialSgd,
+            Algorithm::SyncSgd,
+            Algorithm::DcSyncSgd,
+            Algorithm::Asgd,
+            Algorithm::DcAsgdConst,
+            Algorithm::DcAsgdAdaptive,
+        ] {
+            assert_eq!(Algorithm::parse(a.name()).unwrap(), a);
+        }
+        assert!(Algorithm::parse("nope").is_err());
+    }
+
+    #[test]
+    fn algorithm_classification() {
+        assert!(Algorithm::DcAsgdConst.is_delay_compensated());
+        assert!(Algorithm::DcSyncSgd.is_delay_compensated());
+        assert!(!Algorithm::Asgd.is_delay_compensated());
+        assert!(Algorithm::Asgd.is_async());
+        assert!(!Algorithm::SyncSgd.is_async());
+        assert!(!Algorithm::SequentialSgd.is_async());
+    }
+
+    #[test]
+    fn lr_schedule_step_decay() {
+        let lr = LrSchedule { base: 0.5, decay_epochs: vec![80, 120], decay_factor: 0.1 };
+        assert_eq!(lr.lr_at_epoch(0), 0.5);
+        assert_eq!(lr.lr_at_epoch(79), 0.5);
+        assert!((lr.lr_at_epoch(80) - 0.05).abs() < 1e-12);
+        assert!((lr.lr_at_epoch(119) - 0.05).abs() < 1e-12);
+        assert!((lr.lr_at_epoch(120) - 0.005).abs() < 1e-12);
+        assert!((lr.lr_at_epoch(1000) - 0.005).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = ExperimentConfig::default();
+        cfg.algorithm = Algorithm::SequentialSgd;
+        cfg.workers = 4;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = ExperimentConfig::default();
+        cfg.lr.base = -1.0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = ExperimentConfig::default();
+        cfg.delay = DelayModel::Uniform { mean: 1.0, jitter: 1.5 };
+        assert!(cfg.validate().is_err());
+
+        assert!(ExperimentConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn from_toml_full() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            model = "mlp_cifar"
+            dataset = "cifar-like"
+            algorithm = "dc-asgd-a"
+            workers = 8
+            epochs = 3
+            seed = 99
+            [train]
+            lr = 0.5
+            decay_epochs = [2]
+            decay_factor = 0.1
+            lambda0 = 2.0
+            ms_momentum = 0.95
+            [data]
+            train_size = 2048
+            test_size = 256
+            [sim.delay]
+            model = "pareto"
+            scale = 0.8
+            alpha = 2.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.algorithm, Algorithm::DcAsgdAdaptive);
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.seed, 99);
+        assert_eq!(cfg.lr.decay_epochs, vec![2]);
+        assert_eq!(cfg.delay, DelayModel::Pareto { scale: 0.8, alpha: 2.0 });
+        assert_eq!(cfg.train_size, 2048);
+    }
+
+    #[test]
+    fn from_toml_preset_plus_override() {
+        let cfg = ExperimentConfig::from_toml(
+            "preset = \"cifar\"\nworkers = 8\n[train]\nlambda0 = 2.0",
+        )
+        .unwrap();
+        assert_eq!(cfg.model, "mlp_cifar");
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.lambda0, 2.0);
+    }
+
+    #[test]
+    fn from_toml_rejects_invalid() {
+        assert!(ExperimentConfig::from_toml("workers = 0").is_err());
+        assert!(ExperimentConfig::from_toml("algorithm = \"bogus\"").is_err());
+        assert!(ExperimentConfig::from_toml("preset = \"bogus\"").is_err());
+        assert!(ExperimentConfig::from_toml("[sim.delay]\nmodel = \"warp\"").is_err());
+    }
+
+    #[test]
+    fn presets_validate() {
+        ExperimentConfig::preset_quickstart().validate().unwrap();
+        ExperimentConfig::preset_cifar().validate().unwrap();
+        ExperimentConfig::preset_imagenet().validate().unwrap();
+        ExperimentConfig::preset_lm("lm_small").validate().unwrap();
+    }
+
+    #[test]
+    fn json_summary_contains_key_fields() {
+        let j = ExperimentConfig::preset_cifar().to_json().to_string();
+        assert!(j.contains("\"algorithm\""));
+        assert!(j.contains("mlp_cifar"));
+    }
+}

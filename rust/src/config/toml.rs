@@ -1,0 +1,248 @@
+//! TOML-subset parser for experiment config files.
+//!
+//! Supported grammar (everything the framework's configs use):
+//!   * `[section]` and `[section.sub]` headers
+//!   * `key = value` with string / integer / float / bool / array values
+//!   * `#` comments, blank lines
+//!
+//! Values land in a flat `section.key -> Value` map; [`super::ExperimentConfig`]
+//! performs the typed extraction + validation.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error on line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for TomlError {}
+
+/// Parsed document: flat `"section.key"` (or bare `"key"`) → value map.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(src: &str) -> Result<Doc, TomlError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section"))?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| err("expected key = value"))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(val.trim()).map_err(|m| err(&m))?;
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            if entries.insert(full.clone(), value).is_some() {
+                return Err(err(&format!("duplicate key {full}")));
+            }
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a `#` inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(items));
+    }
+    // number: int if it parses as i64 and has no float syntax
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    s.parse::<f64>().map(Value::Float).map_err(|_| format!("bad value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(
+            r#"
+            # experiment
+            seed = 42
+            [train]
+            lr = 0.5            # initial
+            algo = "dc-asgd-a"
+            verbose = true
+            decay_epochs = [80, 120]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("seed").unwrap().as_i64(), Some(42));
+        assert_eq!(doc.get("train.lr").unwrap().as_f64(), Some(0.5));
+        assert_eq!(doc.get("train.algo").unwrap().as_str(), Some("dc-asgd-a"));
+        assert_eq!(doc.get("train.verbose").unwrap().as_bool(), Some(true));
+        let arr = match doc.get("train.decay_epochs").unwrap() {
+            Value::Array(a) => a,
+            _ => panic!(),
+        };
+        assert_eq!(arr[0].as_i64(), Some(80));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = Doc::parse("a = 3\nb = 3.0\nc = 1e-3").unwrap();
+        assert_eq!(doc.get("a").unwrap(), &Value::Int(3));
+        assert_eq!(doc.get("b").unwrap(), &Value::Float(3.0));
+        assert_eq!(doc.get("c").unwrap().as_f64(), Some(1e-3));
+        // ints coerce to f64 on demand
+        assert_eq!(doc.get("a").unwrap().as_f64(), Some(3.0));
+        assert_eq!(doc.get("b").unwrap().as_i64(), None);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = Doc::parse(r##"tag = "exp#7" # trailing"##).unwrap();
+        assert_eq!(doc.get("tag").unwrap().as_str(), Some("exp#7"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Doc::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = Doc::parse("[unterminated\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = Doc::parse("a = 1\na = 2").unwrap_err();
+        assert!(err.msg.contains("duplicate"));
+    }
+
+    #[test]
+    fn nested_section_names() {
+        let doc = Doc::parse("[sim.delay]\nmodel = \"pareto\"").unwrap();
+        assert_eq!(doc.get("sim.delay.model").unwrap().as_str(), Some("pareto"));
+    }
+
+    #[test]
+    fn negative_numbers() {
+        let doc = Doc::parse("a = -7\nb = -0.25").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_i64(), Some(-7));
+        assert_eq!(doc.get("b").unwrap().as_f64(), Some(-0.25));
+        assert_eq!(doc.get("a").unwrap().as_usize(), None);
+    }
+
+    #[test]
+    fn empty_and_mixed_arrays() {
+        let doc = Doc::parse("a = []\nb = [1, 2.5, \"x\"]").unwrap();
+        assert_eq!(doc.get("a").unwrap(), &Value::Array(vec![]));
+        match doc.get("b").unwrap() {
+            Value::Array(items) => {
+                assert_eq!(items.len(), 3);
+                assert_eq!(items[2].as_str(), Some("x"));
+            }
+            _ => panic!(),
+        }
+    }
+}

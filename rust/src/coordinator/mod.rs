@@ -1,0 +1,206 @@
+//! Training coordinator: wires the engine, datasets, parameter server, and
+//! delay models into the paper's training protocols.
+//!
+//! * [`sequential`] — single-worker SGD (the paper's accuracy reference),
+//! * [`sync`] — SSGD / DC-SSGD barrier rounds,
+//! * [`async_`] — ASGD / DC-ASGD, as a discrete-event simulation
+//!   (deterministic virtual wallclock; default) or as real racing threads.
+
+pub mod async_;
+pub mod sequential;
+pub mod sync;
+
+use crate::config::{Algorithm, ExecMode, ExperimentConfig, UpdateBackend};
+use crate::data::{build_dataset, Dataset};
+use crate::eval::evaluate;
+use crate::metrics::{EvalRecord, MetricsLog, TrainReport};
+use crate::ps::{NativeKernel, ParamServer, UpdateKernel};
+use crate::runtime::{start_engine, EngineHandle, XlaUpdateKernel};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Everything a training loop needs.
+pub struct RunCtx {
+    pub cfg: ExperimentConfig,
+    pub engine: EngineHandle,
+    pub ps: Arc<ParamServer>,
+    pub train_set: Arc<dyn Dataset>,
+    pub test_set: Arc<dyn Dataset>,
+    pub metrics: MetricsLog,
+    /// Examples per gradient (the artifact's batch size).
+    pub batch_size: usize,
+}
+
+impl RunCtx {
+    /// Learning rate at the given effective-pass count (epoch-indexed
+    /// step-decay schedule, paper §6).
+    pub fn lr_at(&self, passes: f64) -> f32 {
+        self.cfg.lr.lr_at_epoch(passes.floor().max(0.0) as usize) as f32
+    }
+
+    /// Evaluate the current global model and record it.
+    pub fn run_eval(&mut self, step: u64, passes: f64, time: f64) -> Result<()> {
+        let mut params = vec![0.0f32; self.ps.n()];
+        self.ps.snapshot(&mut params);
+        let (loss, err) =
+            evaluate(&self.engine, &params, self.test_set.as_ref(), self.cfg.eval_batches)?;
+        if self.cfg.verbose {
+            eprintln!(
+                "[eval] step={step} passes={passes:.2} time={time:.1} loss={loss:.4} err={:.2}%",
+                err * 100.0
+            );
+        }
+        self.metrics.record_eval(EvalRecord {
+            step,
+            passes,
+            time,
+            test_loss: loss,
+            test_error: err,
+        });
+        Ok(())
+    }
+
+    /// Should we stop? (passes-based epochs or step cap)
+    pub fn done(&self, steps: u64, passes: f64) -> bool {
+        if self.cfg.max_steps > 0 && steps >= self.cfg.max_steps as u64 {
+            return true;
+        }
+        self.cfg.epochs > 0 && passes >= self.cfg.epochs as f64 && self.cfg.max_steps == 0
+    }
+
+    /// Eval-boundary helper: true when `passes` crossed an eval_every
+    /// boundary between prev and now, or a step boundary was hit.
+    pub fn should_eval(&self, prev_passes: f64, passes: f64, step: u64) -> bool {
+        if self.cfg.eval_every_steps > 0 && step % self.cfg.eval_every_steps as u64 == 0 {
+            return true;
+        }
+        if self.cfg.eval_every == 0 {
+            return false;
+        }
+        let e = self.cfg.eval_every as f64;
+        (prev_passes / e).floor() < (passes / e).floor()
+    }
+}
+
+/// The public entry point: build a [`Trainer`] from a config and `run()` it.
+pub struct Trainer {
+    ctx: RunCtx,
+}
+
+impl Trainer {
+    pub fn new(cfg: ExperimentConfig) -> Result<Self> {
+        cfg.validate()?;
+        let artifacts = crate::find_artifacts_dir()
+            .context("artifacts/manifest.json not found — run `make artifacts`")?;
+        let with_updates = cfg.update_backend == UpdateBackend::Xla;
+        let engine = start_engine(&artifacts, &cfg.model, with_updates)?;
+        Self::with_engine(cfg, engine, &artifacts)
+    }
+
+    /// Build against an already-started engine (benches reuse one engine
+    /// across many runs to amortize PJRT compilation).
+    pub fn with_engine(
+        cfg: ExperimentConfig,
+        engine: EngineHandle,
+        artifacts: &std::path::Path,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let entry = engine.entry().clone();
+        let init = entry.load_init(artifacts)?;
+        let kernel: Box<dyn UpdateKernel> = match cfg.update_backend {
+            UpdateBackend::Native => Box::new(NativeKernel),
+            UpdateBackend::Xla => Box::new(XlaUpdateKernel::new(engine.clone())),
+        };
+        let ps = Arc::new(ParamServer::from_config(&cfg, &init, kernel)?);
+        if !cfg.resume_from.is_empty() {
+            let ck = crate::ps::Checkpoint::load(std::path::Path::new(&cfg.resume_from))?;
+            anyhow::ensure!(
+                ck.model == cfg.model,
+                "checkpoint is for model {:?}, config wants {:?}",
+                ck.model,
+                cfg.model
+            );
+            ck.restore_into(&ps)?;
+            log::info!("resumed from {} at version {}", cfg.resume_from, ck.version);
+        }
+        let train_set: Arc<dyn Dataset> = Arc::from(build_dataset(
+            &cfg.dataset,
+            entry.feature_kind(),
+            entry.classes,
+            true,
+            cfg.train_size,
+            cfg.seed,
+        ));
+        let test_set: Arc<dyn Dataset> = Arc::from(build_dataset(
+            &cfg.dataset,
+            entry.feature_kind(),
+            entry.classes,
+            false,
+            cfg.test_size,
+            cfg.seed,
+        ));
+        let metrics = MetricsLog::new(if cfg.train_size > 100_000 { 8 } else { 1 });
+        Ok(Self {
+            ctx: RunCtx {
+                batch_size: entry.batch,
+                cfg,
+                engine,
+                ps,
+                train_set,
+                test_set,
+                metrics,
+            },
+        })
+    }
+
+    pub fn ctx(&self) -> &RunCtx {
+        &self.ctx
+    }
+
+    /// Run to completion; returns the summary report and (optionally)
+    /// writes the metrics bundle to `cfg.out_dir`.
+    pub fn run(mut self) -> Result<TrainReport> {
+        let algo = self.ctx.cfg.algorithm;
+        match (algo, self.ctx.cfg.exec_mode) {
+            (Algorithm::SequentialSgd, _) => sequential::run(&mut self.ctx)?,
+            (Algorithm::SyncSgd | Algorithm::DcSyncSgd, mode) => {
+                sync::run(&mut self.ctx, mode)?
+            }
+            (_, ExecMode::SimulatedTime) => async_::run_sim(&mut self.ctx)?,
+            (_, ExecMode::Threads) => async_::run_threads(&mut self.ctx)?,
+        }
+        // final eval if none recorded at the very end
+        let last_step = self.ctx.metrics.steps.last().map(|r| (r.step, r.passes, r.time));
+        if let Some((step, passes, time)) = last_step {
+            let need = self.ctx.metrics.evals.last().map(|e| e.step < step).unwrap_or(true);
+            if need {
+                self.ctx.run_eval(step, passes, time)?;
+            }
+        }
+        let report = self.ctx.metrics.report();
+        if !self.ctx.cfg.checkpoint_out.is_empty() {
+            let samples = (report.passes * self.ctx.cfg.train_size as f64) as u64;
+            let ck = crate::ps::Checkpoint::capture(
+                &self.ctx.ps,
+                &self.ctx.cfg.model,
+                self.ctx.cfg.algorithm.name(),
+                samples,
+            );
+            ck.save(std::path::Path::new(&self.ctx.cfg.checkpoint_out))?;
+        }
+        if !self.ctx.cfg.out_dir.is_empty() {
+            let name = if self.ctx.cfg.tag.is_empty() {
+                format!("{}_{}_m{}", self.ctx.cfg.model, algo.name(), self.ctx.cfg.workers)
+            } else {
+                self.ctx.cfg.tag.clone()
+            };
+            crate::metrics::write_run(
+                std::path::Path::new(&self.ctx.cfg.out_dir),
+                &name,
+                &self.ctx.metrics,
+                &self.ctx.cfg.to_json(),
+            )?;
+        }
+        Ok(report)
+    }
+}

@@ -1,0 +1,275 @@
+//! Synthetic workloads (DESIGN.md §5 substitutions).
+//!
+//! Every dataset is *procedural*: example `i` is a pure function of
+//! `(dataset seed, i)`, so datasets need no storage, shard trivially, and
+//! training runs are bit-reproducible. The paper repartitions the data
+//! randomly onto workers every epoch; [`EpochPartition`] reproduces that
+//! protocol deterministically from `(seed, epoch)` so workers never need to
+//! coordinate.
+
+pub mod cifar_like;
+pub mod imagenet_like;
+pub mod lm_corpus;
+
+use crate::util::rng::Pcg64;
+
+/// XOR mask distinguishing the test split's example stream from the train
+/// split's. Datasets recover the shared *distribution* seed (anchors,
+/// grammar, ...) via `seed.min(seed ^ SPLIT_MASK)` — identical for both
+/// splits because XOR is an involution.
+pub const SPLIT_MASK: u64 = 0x7E57_7E57_7E57_7E57;
+
+/// The split-invariant distribution seed for a given split seed.
+pub fn dist_seed(seed: u64) -> u64 {
+    seed.min(seed ^ SPLIT_MASK)
+}
+
+pub use cifar_like::CifarLike;
+pub use imagenet_like::ImagenetLike;
+pub use lm_corpus::LmCorpus;
+
+/// Feature layout of a dataset, matched against the model artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeatureKind {
+    /// Dense f32 features of the given dimension (classification models).
+    Dense { dim: usize },
+    /// Token sequences of the given length (LM models); labels are the
+    /// next-token sequence of the same length.
+    Tokens { seq_len: usize },
+}
+
+/// A materialized mini-batch in the layout the runtime feeds to PJRT.
+#[derive(Clone, Debug, Default)]
+pub struct Batch {
+    pub x_f32: Vec<f32>,
+    pub x_i32: Vec<i32>,
+    pub y_i32: Vec<i32>,
+    pub rows: usize,
+}
+
+/// A synthetic dataset: pure function from index to example.
+pub trait Dataset: Send + Sync {
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn feature_kind(&self) -> FeatureKind;
+    /// Number of label values per example (1 for classification, seq_len
+    /// for LM next-token targets).
+    fn label_width(&self) -> usize;
+    /// Number of distinct classes / vocabulary size.
+    fn classes(&self) -> usize;
+    /// Write example `idx` into the destination slices. Exactly one of
+    /// `x_f32` / `x_i32` is non-empty depending on [`FeatureKind`].
+    fn write_example(&self, idx: usize, x_f32: &mut [f32], x_i32: &mut [i32], y: &mut [i32]);
+
+    /// Materialize a batch for the given example indices.
+    fn make_batch(&self, indices: &[usize]) -> Batch {
+        let mut batch = Batch { rows: indices.len(), ..Batch::default() };
+        let lw = self.label_width();
+        batch.y_i32.resize(indices.len() * lw, 0);
+        match self.feature_kind() {
+            FeatureKind::Dense { dim } => {
+                batch.x_f32.resize(indices.len() * dim, 0.0);
+                for (r, &idx) in indices.iter().enumerate() {
+                    let (xs, ys) = (
+                        &mut batch.x_f32[r * dim..(r + 1) * dim],
+                        &mut batch.y_i32[r * lw..(r + 1) * lw],
+                    );
+                    self.write_example(idx, xs, &mut [], ys);
+                }
+            }
+            FeatureKind::Tokens { seq_len } => {
+                batch.x_i32.resize(indices.len() * seq_len, 0);
+                for (r, &idx) in indices.iter().enumerate() {
+                    let (xs, ys) = (
+                        &mut batch.x_i32[r * seq_len..(r + 1) * seq_len],
+                        &mut batch.y_i32[r * lw..(r + 1) * lw],
+                    );
+                    self.write_example(idx, &mut [], xs, ys);
+                }
+            }
+        }
+        batch
+    }
+}
+
+/// Per-epoch random repartition of example indices onto `workers` shards
+/// (paper §6: "the data were repartitioned randomly onto the local workers
+/// every epoch"). Deterministic in `(seed, epoch)`.
+#[derive(Clone, Debug)]
+pub struct EpochPartition {
+    seed: u64,
+    len: usize,
+    workers: usize,
+}
+
+impl EpochPartition {
+    pub fn new(seed: u64, len: usize, workers: usize) -> Self {
+        assert!(workers >= 1 && len >= workers, "need at least one example per worker");
+        Self { seed, len, workers }
+    }
+
+    /// The permuted index order for an epoch.
+    fn epoch_order(&self, epoch: usize) -> Vec<u32> {
+        let mut order: Vec<u32> = (0..self.len as u32).collect();
+        let mut rng = Pcg64::new(self.seed ^ (epoch as u64).wrapping_mul(0xA24B_AED4_963E_E407));
+        rng.shuffle(&mut order);
+        order
+    }
+
+    /// Worker `m`'s shard of indices for `epoch` (contiguous slice of the
+    /// epoch permutation; equal sizes up to remainder).
+    pub fn shard(&self, epoch: usize, worker: usize) -> Vec<usize> {
+        assert!(worker < self.workers);
+        let order = self.epoch_order(epoch);
+        let base = self.len / self.workers;
+        let rem = self.len % self.workers;
+        let start = worker * base + worker.min(rem);
+        let size = base + usize::from(worker < rem);
+        order[start..start + size].iter().map(|&i| i as usize).collect()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+    pub fn len(&self) -> usize {
+        self.len
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Infinite per-worker batch cursor over epoch shards. Tracks the worker's
+/// local epoch; `next_batch` never returns an empty batch (it rolls into
+/// the next epoch's shard, dropping a final ragged remainder < batch_size).
+#[derive(Clone, Debug)]
+pub struct ShardCursor {
+    partition: EpochPartition,
+    worker: usize,
+    batch_size: usize,
+    epoch: usize,
+    shard: Vec<usize>,
+    pos: usize,
+}
+
+impl ShardCursor {
+    pub fn new(partition: EpochPartition, worker: usize, batch_size: usize) -> Self {
+        assert!(batch_size >= 1);
+        let shard = partition.shard(0, worker);
+        Self { partition, worker, batch_size, epoch: 0, shard, pos: 0 }
+    }
+
+    /// Epochs this worker has started (0-based current epoch).
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Next `batch_size` example indices.
+    pub fn next_indices(&mut self) -> Vec<usize> {
+        if self.pos + self.batch_size > self.shard.len() {
+            self.epoch += 1;
+            self.shard = self.partition.shard(self.epoch, self.worker);
+            self.pos = 0;
+        }
+        let out = self.shard[self.pos..self.pos + self.batch_size].to_vec();
+        self.pos += self.batch_size;
+        out
+    }
+}
+
+/// Build the dataset selected by an experiment config, sized to match a
+/// model artifact's input shape.
+pub fn build_dataset(
+    kind: &crate::config::DatasetKind,
+    feature: FeatureKind,
+    classes: usize,
+    train: bool,
+    size: usize,
+    seed: u64,
+) -> Box<dyn Dataset> {
+    use crate::config::DatasetKind;
+    // train/test draw from the same distribution but disjoint index spaces
+    let split_seed = if train { seed } else { seed ^ SPLIT_MASK };
+    match kind {
+        DatasetKind::CifarLike => {
+            let dim = match feature {
+                FeatureKind::Dense { dim } => dim,
+                _ => panic!("cifar-like needs a dense-feature model"),
+            };
+            Box::new(CifarLike::new(size, dim, classes, split_seed))
+        }
+        DatasetKind::ImagenetLike => {
+            let dim = match feature {
+                FeatureKind::Dense { dim } => dim,
+                _ => panic!("imagenet-like needs a dense-feature model"),
+            };
+            Box::new(ImagenetLike::new(size, dim, classes, split_seed))
+        }
+        DatasetKind::LmCorpus => {
+            let seq = match feature {
+                FeatureKind::Tokens { seq_len } => seq_len,
+                _ => panic!("lm-corpus needs a token model"),
+            };
+            Box::new(LmCorpus::new(size, seq, classes, split_seed))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_all_indices_once() {
+        let p = EpochPartition::new(3, 103, 4);
+        for epoch in [0, 1, 7] {
+            let mut all: Vec<usize> = (0..4).flat_map(|m| p.shard(epoch, m)).collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..103).collect::<Vec<_>>(), "epoch {epoch}");
+        }
+    }
+
+    #[test]
+    fn partition_changes_between_epochs_not_between_calls() {
+        let p = EpochPartition::new(3, 64, 2);
+        assert_eq!(p.shard(0, 0), p.shard(0, 0));
+        assert_ne!(p.shard(0, 0), p.shard(1, 0));
+    }
+
+    #[test]
+    fn partition_sizes_balanced() {
+        let p = EpochPartition::new(9, 10, 3);
+        let sizes: Vec<usize> = (0..3).map(|m| p.shard(0, m).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().all(|&s| s == 3 || s == 4));
+    }
+
+    #[test]
+    fn cursor_rolls_epochs_and_keeps_batch_size() {
+        let p = EpochPartition::new(5, 100, 4); // shard size 25
+        let mut c = ShardCursor::new(p, 1, 8);
+        let mut seen = 0;
+        for _ in 0..10 {
+            let idx = c.next_indices();
+            assert_eq!(idx.len(), 8);
+            seen += idx.len();
+        }
+        // 25/8 = 3 batches per epoch (24 examples), so 10 batches span 4 epochs
+        assert_eq!(seen, 80);
+        assert!(c.epoch() >= 3);
+    }
+
+    #[test]
+    fn cursor_batches_use_only_own_shard() {
+        let p = EpochPartition::new(5, 96, 3);
+        let mut c = ShardCursor::new(p.clone(), 2, 4);
+        let shard0: std::collections::HashSet<usize> = p.shard(0, 2).into_iter().collect();
+        for _ in 0..(32 / 4) {
+            for i in c.next_indices() {
+                assert!(shard0.contains(&i));
+            }
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! Test-set evaluation: classification error + mean loss over the test set.
+
+use crate::data::Dataset;
+use crate::runtime::EngineHandle;
+use anyhow::Result;
+
+/// Evaluate `params` on (a prefix of) the test set.
+///
+/// Uses the artifact's fixed batch size; evaluates `max_batches` batches
+/// (0 = as many full batches as the test set holds). Returns
+/// `(mean_loss, error_rate)` where error is over label *rows* (tokens for
+/// LMs, examples for classifiers).
+pub fn evaluate(
+    engine: &EngineHandle,
+    params: &[f32],
+    test: &dyn Dataset,
+    max_batches: usize,
+) -> Result<(f32, f32)> {
+    let b = engine.entry().batch;
+    let rows_per_batch = engine.entry().tokens_per_batch;
+    let avail = test.len() / b;
+    let n_batches = if max_batches == 0 { avail } else { max_batches.min(avail) };
+    anyhow::ensure!(n_batches > 0, "test set smaller than one batch ({} < {})", test.len(), b);
+    let mut total_loss = 0.0f64;
+    let mut total_correct = 0.0f64;
+    for bi in 0..n_batches {
+        let indices: Vec<usize> = (bi * b..(bi + 1) * b).collect();
+        let batch = test.make_batch(&indices);
+        let (loss, correct) = engine.eval(params, &batch)?;
+        total_loss += loss as f64;
+        total_correct += correct as f64;
+    }
+    let mean_loss = (total_loss / n_batches as f64) as f32;
+    let total_rows = (n_batches * rows_per_batch) as f64;
+    let error = 1.0 - (total_correct / total_rows);
+    Ok((mean_loss, error as f32))
+}

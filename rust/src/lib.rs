@@ -1,0 +1,74 @@
+//! # dc-asgd
+//!
+//! A rust + JAX + Pallas reproduction of **"Asynchronous Stochastic Gradient
+//! Descent with Delay Compensation"** (Zheng et al., ICML 2017).
+//!
+//! The crate is a parameter-server training framework:
+//!
+//! * [`runtime`] loads AOT-compiled JAX/Pallas artifacts (HLO text) and
+//!   executes them through the PJRT C API (the `xla` crate). Python never
+//!   runs on the training path.
+//! * [`ps`] implements the paper's parameter server (Algorithm 2): the
+//!   global model `w`, per-worker backup models `w_bak(m)`, and the
+//!   delay-compensated update rule.
+//! * [`optim`] implements the update rules: sequential SGD, momentum,
+//!   ASGD, DC-ASGD-c, DC-ASGD-a, and the appendix-H DC-SSGD.
+//! * [`coordinator`] wires workers and server together in three modes:
+//!   sequential, synchronous (barrier), and asynchronous (threads), plus a
+//!   discrete-event simulated-time mode in [`sim`] that reproduces the
+//!   paper's wallclock figures deterministically.
+//! * [`data`] synthesizes the workloads (CIFAR-like, ImageNet-like,
+//!   LM corpus) — see DESIGN.md §5 for the substitution rationale.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dc_asgd::config::ExperimentConfig;
+//! use dc_asgd::coordinator::Trainer;
+//!
+//! let mut cfg = ExperimentConfig::preset_quickstart();
+//! cfg.algorithm = dc_asgd::config::Algorithm::DcAsgdAdaptive;
+//! let report = Trainer::new(cfg).unwrap().run().unwrap();
+//! println!("final test error {:.2}%", report.final_test_error * 100.0);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod metrics;
+pub mod optim;
+pub mod ps;
+pub mod runtime;
+pub mod sim;
+pub mod theory;
+pub mod util;
+
+pub mod bench;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Default location of the AOT artifact directory (relative to repo root).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$DCASGD_ARTIFACTS`, else walk up from the
+/// current directory looking for `artifacts/manifest.json`.
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("DCASGD_ARTIFACTS") {
+        let p = std::path::PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join(DEFAULT_ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

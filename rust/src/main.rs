@@ -1,0 +1,330 @@
+//! `dcasgd` — launcher CLI for the DC-ASGD training framework.
+//!
+//! Subcommands:
+//!   train   run one experiment (preset/config file + flag overrides)
+//!   sweep   run an algorithm x workers grid and print a paper-style table
+//!   info    list AOT artifacts and their shapes
+//!
+//! Examples:
+//!   dcasgd train --preset quickstart --algo dc-asgd-a --workers 8
+//!   dcasgd train --config configs/cifar.toml --algo asgd
+//!   dcasgd sweep --preset cifar --algos asgd,dc-asgd-a --workers 4,8
+//!   dcasgd info
+
+use dc_asgd::bench::Table;
+use dc_asgd::config::{Algorithm, ExecMode, ExperimentConfig, UpdateBackend};
+use dc_asgd::coordinator::Trainer;
+use dc_asgd::runtime::Manifest;
+use dc_asgd::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand() {
+        Some("train") => cmd_train(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}");
+            usage();
+            2
+        }
+        None => {
+            usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    eprintln!(
+        "usage: dcasgd <train|sweep|eval|info> [options]\n\
+         common options:\n\
+           --preset quickstart|cifar|imagenet|lm   base config\n\
+           --config PATH                           TOML config file\n\
+           --algo sgd|ssgd|dc-ssgd|asgd|dc-asgd-c|dc-asgd-a\n\
+           --workers N          --epochs N         --max-steps N\n\
+           --lr F               --lambda0 F        --ms-momentum F\n\
+           --momentum F         --seed N           --shards N\n\
+           --mode sim|threads   --backend native|xla\n\
+           --train-size N       --test-size N      --out DIR\n\
+           --tag NAME           --verbose\n\
+         sweep options:\n\
+           --algos a,b,c        --workers-list 1,4,8"
+    );
+}
+
+fn build_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = args.str_opt("config") {
+        ExperimentConfig::from_file(std::path::Path::new(&path))?
+    } else {
+        match args.str_or("preset", "quickstart").as_str() {
+            "quickstart" => ExperimentConfig::preset_quickstart(),
+            "cifar" => ExperimentConfig::preset_cifar(),
+            "imagenet" => ExperimentConfig::preset_imagenet(),
+            "lm" => ExperimentConfig::preset_lm("lm_medium"),
+            other => anyhow::bail!("unknown preset {other:?}"),
+        }
+    };
+    if let Some(a) = args.str_opt("algo") {
+        cfg.algorithm = Algorithm::parse(&a)?;
+    }
+    if let Some(m) = args.str_opt("model") {
+        cfg.model = m;
+    }
+    if let Some(w) = args.usize_opt("workers")? {
+        cfg.workers = w;
+        if cfg.algorithm == Algorithm::SequentialSgd && w > 1 {
+            cfg.algorithm = Algorithm::Asgd;
+        }
+    }
+    if cfg.algorithm == Algorithm::SequentialSgd {
+        cfg.workers = 1;
+    }
+    if let Some(e) = args.usize_opt("epochs")? {
+        cfg.epochs = e;
+    }
+    if let Some(s) = args.usize_opt("max-steps")? {
+        cfg.max_steps = s;
+    }
+    if let Some(v) = args.f64_opt("lr")? {
+        cfg.lr.base = v;
+    }
+    if let Some(v) = args.f64_opt("lambda0")? {
+        cfg.lambda0 = v;
+    }
+    if let Some(v) = args.f64_opt("ms-momentum")? {
+        cfg.ms_momentum = v;
+    }
+    if let Some(v) = args.f64_opt("momentum")? {
+        cfg.momentum = v;
+    }
+    if let Some(v) = args.usize_opt("seed")? {
+        cfg.seed = v as u64;
+    }
+    if let Some(v) = args.usize_opt("shards")? {
+        cfg.shards = v;
+    }
+    if let Some(v) = args.usize_opt("train-size")? {
+        cfg.train_size = v;
+    }
+    if let Some(v) = args.usize_opt("test-size")? {
+        cfg.test_size = v;
+    }
+    if let Some(v) = args.str_opt("mode") {
+        cfg.exec_mode = match v.as_str() {
+            "sim" => ExecMode::SimulatedTime,
+            "threads" => ExecMode::Threads,
+            other => anyhow::bail!("unknown mode {other:?}"),
+        };
+    }
+    if let Some(v) = args.str_opt("backend") {
+        cfg.update_backend = match v.as_str() {
+            "native" => UpdateBackend::Native,
+            "xla" => UpdateBackend::Xla,
+            other => anyhow::bail!("unknown backend {other:?}"),
+        };
+    }
+    if let Some(v) = args.str_opt("out") {
+        cfg.out_dir = v;
+    }
+    if let Some(v) = args.str_opt("save-checkpoint") {
+        cfg.checkpoint_out = v;
+    }
+    if let Some(v) = args.str_opt("resume") {
+        cfg.resume_from = v;
+    }
+    if let Some(v) = args.str_opt("tag") {
+        cfg.tag = v;
+    }
+    cfg.verbose = cfg.verbose || args.flag("verbose");
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let cfg = match build_config(args).and_then(|c| {
+        args.finish()?;
+        Ok(c)
+    }) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    eprintln!(
+        "training {} with {} (M={}, {} mode, backend {:?})",
+        cfg.model,
+        cfg.algorithm,
+        cfg.workers,
+        match cfg.exec_mode {
+            ExecMode::SimulatedTime => "simulated-time",
+            ExecMode::Threads => "threaded",
+        },
+        cfg.update_backend,
+    );
+    match Trainer::new(cfg).and_then(|t| t.run()) {
+        Ok(report) => {
+            println!(
+                "steps={} passes={:.2} time={:.1}s wall={:.1}s\n\
+                 final train loss {:.4} | test loss {:.4} | test error {:.2}% (best {:.2}%)\n\
+                 staleness mean {:.2} p99 {:.0} max {}",
+                report.total_steps,
+                report.passes,
+                report.total_time,
+                report.wall_secs,
+                report.final_train_loss,
+                report.final_test_loss,
+                report.final_test_error * 100.0,
+                report.best_test_error * 100.0,
+                report.staleness_mean,
+                report.staleness_p99,
+                report.staleness_max,
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("training failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let base = match build_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let algos = args.str_or("algos", "asgd,ssgd,dc-asgd-c,dc-asgd-a");
+    let workers = match args.usize_list_or("workers-list", &[base.workers]) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    if let Err(e) = args.finish() {
+        eprintln!("error: {e}");
+        return 2;
+    }
+    let mut table = Table::new(&["# workers", "algorithm", "error(%)", "time(s)", "stale(mean)"]);
+    for &m in &workers {
+        for algo_name in algos.split(',') {
+            let algo = match Algorithm::parse(algo_name.trim()) {
+                Ok(a) => a,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            let mut cfg = base.clone();
+            cfg.algorithm = algo;
+            cfg.workers = if algo == Algorithm::SequentialSgd { 1 } else { m };
+            eprintln!("[sweep] {} M={} ...", algo, cfg.workers);
+            match Trainer::new(cfg).and_then(|t| t.run()) {
+                Ok(r) => table.row(&[
+                    m.to_string(),
+                    algo.name().into(),
+                    format!("{:.2}", r.final_test_error * 100.0),
+                    format!("{:.1}", r.total_time),
+                    format!("{:.2}", r.staleness_mean),
+                ]),
+                Err(e) => {
+                    eprintln!("sweep case failed: {e:#}");
+                    return 1;
+                }
+            }
+        }
+    }
+    table.print();
+    0
+}
+
+fn cmd_eval(args: &Args) -> i32 {
+    // evaluate a checkpointed model on the test split of its dataset
+    let run = || -> anyhow::Result<()> {
+        let path = args.str_req("checkpoint")?;
+        let cfg = build_config(args)?;
+        args.finish()?;
+        let ck = dc_asgd::ps::Checkpoint::load(std::path::Path::new(&path))?;
+        let artifacts = dc_asgd::find_artifacts_dir()
+            .ok_or_else(|| anyhow::anyhow!("artifacts/manifest.json not found"))?;
+        let engine = dc_asgd::runtime::start_engine(&artifacts, &ck.model, false)?;
+        let entry = engine.entry().clone();
+        anyhow::ensure!(
+            ck.w.len() == entry.n_padded,
+            "checkpoint n={} != artifact n_padded={}",
+            ck.w.len(),
+            entry.n_padded
+        );
+        let test = dc_asgd::data::build_dataset(
+            &cfg.dataset,
+            entry.feature_kind(),
+            entry.classes,
+            false,
+            cfg.test_size,
+            cfg.seed,
+        );
+        let (loss, err) = dc_asgd::eval::evaluate(&engine, &ck.w, test.as_ref(), cfg.eval_batches)?;
+        println!(
+            "checkpoint {path}: model={} algo={} version={} samples={}\n\
+             test loss {loss:.4} | test error {:.2}%",
+            ck.model,
+            ck.algorithm,
+            ck.version,
+            ck.samples,
+            err * 100.0
+        );
+        engine.shutdown();
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    if let Err(e) = args.finish() {
+        eprintln!("error: {e}");
+        return 2;
+    }
+    let dir = match dc_asgd::find_artifacts_dir() {
+        Some(d) => d,
+        None => {
+            eprintln!("artifacts/manifest.json not found — run `make artifacts`");
+            return 1;
+        }
+    };
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {} (manifest v{})", dir.display(), m.version);
+            let mut t = Table::new(&["model", "kind", "params", "padded", "batch", "x shape", "updates"]);
+            for e in &m.models {
+                t.row(&[
+                    e.name.clone(),
+                    e.kind.clone(),
+                    e.n_params.to_string(),
+                    e.n_padded.to_string(),
+                    e.batch.to_string(),
+                    format!("{:?}", e.x_shape),
+                    if e.files.contains_key("dc") { "yes".into() } else { "-".into() },
+                ]);
+            }
+            t.print();
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Training metrics: per-step records, eval records, CSV/JSON output, and
+//! the summary report returned by the trainer.
+
+use crate::util::json::Json;
+use crate::util::stats::{percentile, Running};
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+/// One global model update.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: u64,
+    pub worker: usize,
+    /// Effective passes over the training set at this point.
+    pub passes: f64,
+    /// Simulated seconds (DES mode) or wall seconds (thread mode).
+    pub time: f64,
+    pub loss: f32,
+    pub lr: f32,
+    /// Delay tau observed by this update (global steps since the worker's
+    /// pull).
+    pub staleness: u64,
+}
+
+/// One test-set evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalRecord {
+    pub step: u64,
+    pub passes: f64,
+    pub time: f64,
+    pub test_loss: f32,
+    /// Classification error in [0,1].
+    pub test_error: f32,
+}
+
+/// Collected metrics of one training run.
+#[derive(Debug)]
+pub struct MetricsLog {
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+    started: Instant,
+    /// Downsample step records: keep one in `keep_every` (loss curves don't
+    /// need every update at scale). Eval records are always kept.
+    keep_every: u64,
+}
+
+impl Default for MetricsLog {
+    fn default() -> Self {
+        Self::new(1)
+    }
+}
+
+impl MetricsLog {
+    pub fn new(keep_every: u64) -> Self {
+        Self {
+            steps: Vec::new(),
+            evals: Vec::new(),
+            started: Instant::now(),
+            keep_every: keep_every.max(1),
+        }
+    }
+
+    pub fn record_step(&mut self, r: StepRecord) {
+        if r.step % self.keep_every == 0 {
+            self.steps.push(r);
+        }
+    }
+
+    pub fn record_eval(&mut self, r: EvalRecord) {
+        self.evals.push(r);
+    }
+
+    pub fn wall_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Mean training loss over the last `k` recorded steps.
+    pub fn recent_loss(&self, k: usize) -> Option<f32> {
+        if self.steps.is_empty() {
+            return None;
+        }
+        let tail = &self.steps[self.steps.len().saturating_sub(k)..];
+        Some(tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32)
+    }
+
+    pub fn staleness_summary(&self) -> (f64, f64, u64) {
+        let mut run = Running::new();
+        let mut max = 0u64;
+        for r in &self.steps {
+            run.push(r.staleness as f64);
+            max = max.max(r.staleness);
+        }
+        let samples: Vec<f64> = self.steps.iter().map(|r| r.staleness as f64).collect();
+        let p99 = if samples.is_empty() { 0.0 } else { percentile(&samples, 99.0) };
+        (run.mean(), p99, max)
+    }
+
+    // ------------------------------------------------------------- output
+
+    pub fn write_steps_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "step,worker,passes,time,loss,lr,staleness")?;
+        for r in &self.steps {
+            writeln!(
+                f,
+                "{},{},{:.6},{:.6},{:.6},{:.6},{}",
+                r.step, r.worker, r.passes, r.time, r.loss, r.lr, r.staleness
+            )?;
+        }
+        Ok(())
+    }
+
+    pub fn write_evals_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "step,passes,time,test_loss,test_error")?;
+        for r in &self.evals {
+            writeln!(
+                f,
+                "{},{:.6},{:.6},{:.6},{:.6}",
+                r.step, r.passes, r.time, r.test_loss, r.test_error
+            )?;
+        }
+        Ok(())
+    }
+
+    pub fn report(&self) -> TrainReport {
+        let (stale_mean, stale_p99, stale_max) = self.staleness_summary();
+        let last = self.evals.last();
+        let best = self
+            .evals
+            .iter()
+            .map(|e| e.test_error)
+            .fold(f32::INFINITY, f32::min);
+        TrainReport {
+            total_steps: self.steps.last().map(|r| r.step + 1).unwrap_or(0),
+            final_test_error: last.map(|e| e.test_error).unwrap_or(f32::NAN),
+            final_test_loss: last.map(|e| e.test_loss).unwrap_or(f32::NAN),
+            best_test_error: if best.is_finite() { best } else { f32::NAN },
+            final_train_loss: self.recent_loss(50).unwrap_or(f32::NAN),
+            total_time: self
+                .evals
+                .last()
+                .map(|e| e.time)
+                .or_else(|| self.steps.last().map(|r| r.time))
+                .unwrap_or(0.0),
+            wall_secs: self.wall_secs(),
+            passes: self.steps.last().map(|r| r.passes).unwrap_or(0.0),
+            staleness_mean: stale_mean,
+            staleness_p99: stale_p99,
+            staleness_max: stale_max,
+        }
+    }
+}
+
+/// Summary of a completed run (what benches tabulate).
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub total_steps: u64,
+    pub final_test_error: f32,
+    pub final_test_loss: f32,
+    pub best_test_error: f32,
+    pub final_train_loss: f32,
+    /// Simulated (or wall) seconds at the end of training.
+    pub total_time: f64,
+    /// Host wall-clock seconds the run actually took.
+    pub wall_secs: f64,
+    pub passes: f64,
+    pub staleness_mean: f64,
+    pub staleness_p99: f64,
+    pub staleness_max: u64,
+}
+
+impl TrainReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total_steps", (self.total_steps as i64).into()),
+            ("final_test_error", (self.final_test_error as f64).into()),
+            ("final_test_loss", (self.final_test_loss as f64).into()),
+            ("best_test_error", (self.best_test_error as f64).into()),
+            ("final_train_loss", (self.final_train_loss as f64).into()),
+            ("total_time", self.total_time.into()),
+            ("wall_secs", self.wall_secs.into()),
+            ("passes", self.passes.into()),
+            ("staleness_mean", self.staleness_mean.into()),
+            ("staleness_p99", self.staleness_p99.into()),
+            ("staleness_max", (self.staleness_max as i64).into()),
+        ])
+    }
+}
+
+/// Write a metrics bundle (steps CSV, evals CSV, summary JSON) under
+/// `dir` with the given run name.
+pub fn write_run(
+    dir: &Path,
+    name: &str,
+    log: &MetricsLog,
+    config_json: &Json,
+) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    log.write_steps_csv(&dir.join(format!("{name}.steps.csv")))?;
+    log.write_evals_csv(&dir.join(format!("{name}.evals.csv")))?;
+    let summary = Json::obj(vec![
+        ("config", config_json.clone()),
+        ("report", log.report().to_json()),
+    ]);
+    std::fs::write(dir.join(format!("{name}.summary.json")), summary.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_log() -> MetricsLog {
+        let mut log = MetricsLog::new(1);
+        for i in 0..10u64 {
+            log.record_step(StepRecord {
+                step: i,
+                worker: (i % 3) as usize,
+                passes: i as f64 * 0.1,
+                time: i as f64,
+                loss: 2.0 - i as f32 * 0.1,
+                lr: 0.1,
+                staleness: i % 4,
+            });
+        }
+        log.record_eval(EvalRecord { step: 5, passes: 0.5, time: 5.0, test_loss: 1.5, test_error: 0.30 });
+        log.record_eval(EvalRecord { step: 9, passes: 0.9, time: 9.0, test_loss: 1.2, test_error: 0.25 });
+        log
+    }
+
+    #[test]
+    fn report_fields() {
+        let log = sample_log();
+        let r = log.report();
+        assert_eq!(r.total_steps, 10);
+        assert_eq!(r.final_test_error, 0.25);
+        assert_eq!(r.best_test_error, 0.25);
+        assert_eq!(r.passes, 0.9);
+        assert!(r.staleness_mean > 0.0);
+        assert!(r.staleness_max <= 3);
+    }
+
+    #[test]
+    fn recent_loss_averages_tail() {
+        let log = sample_log();
+        let l = log.recent_loss(2).unwrap();
+        assert!((l - (1.2 + 1.1) / 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn keep_every_downsamples() {
+        let mut log = MetricsLog::new(4);
+        for i in 0..20u64 {
+            log.record_step(StepRecord {
+                step: i,
+                worker: 0,
+                passes: 0.0,
+                time: 0.0,
+                loss: 0.0,
+                lr: 0.0,
+                staleness: 0,
+            });
+        }
+        assert_eq!(log.steps.len(), 5); // steps 0,4,8,12,16
+    }
+
+    #[test]
+    fn csv_and_summary_written() {
+        let log = sample_log();
+        let dir = std::env::temp_dir().join(format!("dcasgd_metrics_{}", std::process::id()));
+        write_run(&dir, "t", &log, &Json::obj(vec![("algo", "asgd".into())])).unwrap();
+        let steps = std::fs::read_to_string(dir.join("t.steps.csv")).unwrap();
+        assert!(steps.starts_with("step,worker,"));
+        assert_eq!(steps.lines().count(), 11);
+        let summary = std::fs::read_to_string(dir.join("t.summary.json")).unwrap();
+        let json = Json::parse(&summary).unwrap();
+        assert_eq!(json.get("report").get("total_steps").as_i64(), Some(10));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_log_report_is_sane() {
+        let log = MetricsLog::new(1);
+        let r = log.report();
+        assert_eq!(r.total_steps, 0);
+        assert!(r.final_test_error.is_nan());
+    }
+}

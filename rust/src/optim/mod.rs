@@ -1,0 +1,278 @@
+//! Update rules (paper §4 + appendix H), implemented twice:
+//!
+//! * **native**: fused slice loops in this module — the parameter server's
+//!   hot path (bench `ps_throughput` ablates against the XLA path),
+//! * **xla**: the AOT-compiled Pallas kernels, dispatched via
+//!   [`crate::runtime`] when `UpdateBackend::Xla` is selected.
+//!
+//! All functions operate on sub-slices so the sharded store can apply them
+//! per-shard in parallel. They are written as single fused passes: each
+//! element of every operand is touched exactly once (bytes moved =
+//! theoretical minimum), mirroring the Pallas kernels' structure.
+
+pub mod dcssgd;
+
+pub use dcssgd::DcSsgdAccumulator;
+
+/// Plain SGD: `w -= lr * g`.
+pub fn sgd_step(w: &mut [f32], g: &[f32], lr: f32) {
+    debug_assert_eq!(w.len(), g.len());
+    for (wi, gi) in w.iter_mut().zip(g) {
+        *wi -= lr * gi;
+    }
+}
+
+/// Heavy-ball momentum: `v = mu*v + g; w -= lr*v`.
+pub fn momentum_step(w: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, mu: f32) {
+    debug_assert_eq!(w.len(), g.len());
+    debug_assert_eq!(w.len(), v.len());
+    for ((wi, vi), gi) in w.iter_mut().zip(v.iter_mut()).zip(g) {
+        *vi = mu * *vi + gi;
+        *wi -= lr * *vi;
+    }
+}
+
+/// DC-ASGD-c (Eqn. 10): `w -= lr * (g + lam * g⊙g⊙(w - w_bak))`.
+///
+/// `w` is the *current* global model; `w_bak` is the snapshot the worker
+/// pulled. Single fused pass.
+pub fn dc_step(w: &mut [f32], g: &[f32], w_bak: &[f32], lr: f32, lam: f32) {
+    debug_assert_eq!(w.len(), g.len());
+    debug_assert_eq!(w.len(), w_bak.len());
+    for ((wi, gi), bi) in w.iter_mut().zip(g).zip(w_bak) {
+        let delta = *wi - bi;
+        *wi -= lr * (gi + lam * gi * gi * delta);
+    }
+}
+
+/// DC-ASGD-a (Eqn. 10 + Eqn. 14): MeanSquare-normalized lambda.
+///
+/// `ms = m*ms + (1-m)*g⊙g; lam_t = lam0/sqrt(ms + eps)` elementwise.
+pub fn dc_adaptive_step(
+    w: &mut [f32],
+    g: &[f32],
+    w_bak: &[f32],
+    ms: &mut [f32],
+    lr: f32,
+    lam0: f32,
+    m: f32,
+    eps: f32,
+) {
+    debug_assert_eq!(w.len(), g.len());
+    debug_assert_eq!(w.len(), w_bak.len());
+    debug_assert_eq!(w.len(), ms.len());
+    let one_minus_m = 1.0 - m;
+    for (((wi, gi), bi), msi) in w.iter_mut().zip(g).zip(w_bak).zip(ms.iter_mut()) {
+        let g2 = gi * gi;
+        let ms_new = m * *msi + one_minus_m * g2;
+        *msi = ms_new;
+        let lam_t = lam0 / (ms_new + eps).sqrt();
+        let delta = *wi - bi;
+        *wi -= lr * (gi + lam_t * g2 * delta);
+    }
+}
+
+/// Delay-compensated gradient *without* applying it (used by DC-SSGD and by
+/// momentum composition): `out = g + lam * g⊙g⊙(w - w_bak)`.
+pub fn compensate_into(out: &mut [f32], g: &[f32], w: &[f32], w_bak: &[f32], lam: f32) {
+    debug_assert_eq!(out.len(), g.len());
+    for (((oi, gi), wi), bi) in out.iter_mut().zip(g).zip(w).zip(w_bak) {
+        *oi = gi + lam * gi * gi * (wi - bi);
+    }
+}
+
+/// Adaptive-lambda compensation into a buffer (updates `ms`).
+pub fn compensate_adaptive_into(
+    out: &mut [f32],
+    g: &[f32],
+    w: &[f32],
+    w_bak: &[f32],
+    ms: &mut [f32],
+    lam0: f32,
+    m: f32,
+    eps: f32,
+) {
+    let one_minus_m = 1.0 - m;
+    for ((((oi, gi), wi), bi), msi) in
+        out.iter_mut().zip(g).zip(w).zip(w_bak).zip(ms.iter_mut())
+    {
+        let g2 = gi * gi;
+        let ms_new = m * *msi + one_minus_m * g2;
+        *msi = ms_new;
+        let lam_t = lam0 / (ms_new + eps).sqrt();
+        *oi = gi + lam_t * g2 * (wi - bi);
+    }
+}
+
+/// Average `count` gradient buffers of equal length into `out` (SSGD).
+pub fn average_into(out: &mut [f32], grads: &[&[f32]]) {
+    assert!(!grads.is_empty());
+    let inv = 1.0 / grads.len() as f32;
+    out.copy_from_slice(grads[0]);
+    for g in &grads[1..] {
+        debug_assert_eq!(g.len(), out.len());
+        for (oi, gi) in out.iter_mut().zip(g.iter()) {
+            *oi += gi;
+        }
+    }
+    for oi in out.iter_mut() {
+        *oi *= inv;
+    }
+}
+
+/// Default epsilon inside the MeanSquare sqrt (paper: 1e-7).
+pub const MS_EPS: f32 = 1e-7;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn vecs(seed: u64, n: usize, k: usize) -> Vec<Vec<f32>> {
+        let mut rng = Pcg64::new(seed);
+        (0..k).map(|_| (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect()).collect()
+    }
+
+    #[test]
+    fn sgd_matches_scalar_math() {
+        let mut w = vec![1.0, -2.0, 0.5];
+        sgd_step(&mut w, &[0.5, 0.5, -1.0], 0.1);
+        assert_eq!(w, vec![0.95, -2.05, 0.6]);
+    }
+
+    #[test]
+    fn dc_step_matches_formula_elementwise() {
+        let v = vecs(1, 257, 3);
+        let (g, wb) = (&v[1], &v[2]);
+        let mut w = v[0].clone();
+        let (lr, lam) = (0.1f32, 0.7f32);
+        let expect: Vec<f32> = v[0]
+            .iter()
+            .zip(g)
+            .zip(wb)
+            .map(|((wi, gi), bi)| wi - lr * (gi + lam * gi * gi * (wi - bi)))
+            .collect();
+        dc_step(&mut w, g, wb, lr, lam);
+        for (a, b) in w.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dc_with_lambda_zero_is_sgd() {
+        let v = vecs(2, 128, 3);
+        let mut w1 = v[0].clone();
+        let mut w2 = v[0].clone();
+        dc_step(&mut w1, &v[1], &v[2], 0.3, 0.0);
+        sgd_step(&mut w2, &v[1], 0.3);
+        assert_eq!(w1, w2);
+    }
+
+    #[test]
+    fn dc_with_zero_delay_is_sgd() {
+        let v = vecs(3, 64, 2);
+        let mut w1 = v[0].clone();
+        let mut w2 = v[0].clone();
+        let bak = v[0].clone();
+        dc_step(&mut w1, &v[1], &bak, 0.2, 5.0);
+        sgd_step(&mut w2, &v[1], 0.2);
+        assert_eq!(w1, w2);
+    }
+
+    #[test]
+    fn adaptive_meansquare_recursion() {
+        let v = vecs(4, 96, 4);
+        let mut w = v[0].clone();
+        let mut ms = vec![0.0; 96];
+        let m = 0.9f32;
+        for step in 0..3 {
+            let g = &vecs(100 + step, 96, 1)[0];
+            dc_adaptive_step(&mut w, g, &v[2], &mut ms, 0.05, 1.0, m, MS_EPS);
+        }
+        let mut expect = vec![0.0f32; 96];
+        for step in 0..3 {
+            let g = &vecs(100 + step, 96, 1)[0];
+            for (e, gi) in expect.iter_mut().zip(g) {
+                *e = m * *e + (1.0 - m) * gi * gi;
+            }
+        }
+        for (a, b) in ms.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn adaptive_matches_staged_compensation() {
+        // fused dc_adaptive_step == compensate_adaptive_into + sgd_step
+        let v = vecs(5, 200, 4);
+        let (g, wb) = (&v[1], &v[2]);
+        let ms0: Vec<f32> = v[3].iter().map(|x| x.abs()).collect();
+
+        let mut w_fused = v[0].clone();
+        let mut ms_fused = ms0.clone();
+        dc_adaptive_step(&mut w_fused, g, wb, &mut ms_fused, 0.1, 2.0, 0.95, MS_EPS);
+
+        let mut w_staged = v[0].clone();
+        let mut ms_staged = ms0;
+        let mut comp = vec![0.0; 200];
+        compensate_adaptive_into(&mut comp, g, &w_staged, wb, &mut ms_staged, 2.0, 0.95, MS_EPS);
+        sgd_step(&mut w_staged, &comp, 0.1);
+
+        for (a, b) in w_fused.iter().zip(&w_staged) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert_eq!(ms_fused, ms_staged);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut w = vec![0.0f32; 4];
+        let mut v = vec![0.0f32; 4];
+        let g = vec![1.0f32; 4];
+        momentum_step(&mut w, &mut v, &g, 1.0, 0.5);
+        assert_eq!(v, vec![1.0; 4]);
+        assert_eq!(w, vec![-1.0; 4]);
+        momentum_step(&mut w, &mut v, &g, 1.0, 0.5);
+        assert_eq!(v, vec![1.5; 4]);
+        assert_eq!(w, vec![-2.5; 4]);
+    }
+
+    #[test]
+    fn average_into_means() {
+        let g1 = vec![1.0f32, 2.0, 3.0];
+        let g2 = vec![3.0f32, 2.0, 1.0];
+        let g3 = vec![2.0f32, 2.0, 2.0];
+        let mut out = vec![0.0; 3];
+        average_into(&mut out, &[&g1, &g2, &g3]);
+        assert_eq!(out, vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn compensate_into_matches_dc_step() {
+        let v = vecs(6, 150, 3);
+        let (g, wb) = (&v[1], &v[2]);
+        let mut w1 = v[0].clone();
+        dc_step(&mut w1, g, wb, 0.1, 0.7);
+        let mut comp = vec![0.0; 150];
+        compensate_into(&mut comp, g, &v[0], wb, 0.7);
+        let mut w2 = v[0].clone();
+        sgd_step(&mut w2, &comp, 0.1);
+        for (a, b) in w1.iter().zip(&w2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sharded_application_equals_whole() {
+        // applying dc_step shard-by-shard must equal one whole-vector pass
+        let v = vecs(7, 1000, 3);
+        let (g, wb) = (&v[1], &v[2]);
+        let mut whole = v[0].clone();
+        dc_step(&mut whole, g, wb, 0.05, 1.3);
+        let mut sharded = v[0].clone();
+        for (lo, hi) in [(0, 300), (300, 301), (301, 1000)] {
+            dc_step(&mut sharded[lo..hi], &g[lo..hi], &wb[lo..hi], 0.05, 1.3);
+        }
+        assert_eq!(whole, sharded);
+    }
+}

@@ -1,0 +1,325 @@
+//! Parameter-server checkpointing: serialize/restore the full training
+//! state (model, per-worker backups, MeanSquare, velocity, version) so a
+//! run can stop and resume — table-stakes for a production trainer, and
+//! required for the paper's long ImageNet runs on a preemptible cluster.
+//!
+//! Format: a small JSON header followed by raw little-endian f32 sections,
+//! each 16-byte aligned. Integrity is guarded by a FNV-1a checksum over
+//! the payload. Written atomically (temp file + rename).
+
+use super::ParamServer;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &str = "dcasgd-ckpt";
+const VERSION: i64 = 1;
+
+/// Everything needed to resume a run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub model: String,
+    pub algorithm: String,
+    /// Global update counter t at save time.
+    pub version: u64,
+    /// Samples processed (drives the lr schedule on resume).
+    pub samples: u64,
+    pub w: Vec<f32>,
+    pub ms: Vec<f32>,
+    pub vel: Vec<f32>,
+    /// Per-worker backup models w_bak(m), concatenated.
+    pub baks: Vec<Vec<f32>>,
+}
+
+fn fnv1a(data: &[u8], mut hash: u64) -> u64 {
+    for &b in data {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x100_0000_01b3);
+    }
+    hash
+}
+
+fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        bail!("section length {} not a multiple of 4", b.len());
+    }
+    Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+impl Checkpoint {
+    /// Capture the current state of a parameter server.
+    pub fn capture(
+        ps: &ParamServer,
+        model: &str,
+        algorithm: &str,
+        samples: u64,
+    ) -> Checkpoint {
+        let n = ps.n();
+        let workers = ps.workers();
+        let mut w = vec![0.0f32; n];
+        let mut ms = vec![0.0f32; n];
+        let mut vel = vec![0.0f32; n];
+        let mut baks = vec![vec![0.0f32; n]; workers];
+        ps.store().for_each_shard(|s, range| {
+            w[range.clone()].copy_from_slice(&s.w);
+            ms[range.clone()].copy_from_slice(&s.ms);
+            vel[range.clone()].copy_from_slice(&s.vel);
+            for (m, bak) in baks.iter_mut().enumerate() {
+                bak[range.clone()].copy_from_slice(&s.bak[m]);
+            }
+        });
+        Checkpoint {
+            model: model.to_string(),
+            algorithm: algorithm.to_string(),
+            version: ps.version(),
+            samples,
+            w,
+            ms,
+            vel,
+            baks,
+        }
+    }
+
+    /// Restore this checkpoint into a parameter server (shapes must match).
+    pub fn restore_into(&self, ps: &ParamServer) -> Result<()> {
+        if ps.n() != self.w.len() {
+            bail!("checkpoint n={} but server n={}", self.w.len(), ps.n());
+        }
+        if ps.workers() != self.baks.len() {
+            bail!("checkpoint has {} workers, server has {}", self.baks.len(), ps.workers());
+        }
+        ps.store().for_each_shard(|s, range| {
+            s.w.copy_from_slice(&self.w[range.clone()]);
+            s.ms.copy_from_slice(&self.ms[range.clone()]);
+            s.vel.copy_from_slice(&self.vel[range.clone()]);
+            for (m, bak) in self.baks.iter().enumerate() {
+                s.bak[m].copy_from_slice(&bak[range.clone()]);
+            }
+        });
+        ps.set_version(self.version);
+        Ok(())
+    }
+
+    // -------------------------------------------------------------- file io
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&f32s_to_bytes(&self.w));
+        payload.extend_from_slice(&f32s_to_bytes(&self.ms));
+        payload.extend_from_slice(&f32s_to_bytes(&self.vel));
+        for bak in &self.baks {
+            payload.extend_from_slice(&f32s_to_bytes(bak));
+        }
+        let checksum = fnv1a(&payload, 0xcbf2_9ce4_8422_2325);
+        let header = Json::obj(vec![
+            ("magic", MAGIC.into()),
+            ("version", VERSION.into()),
+            ("model", self.model.as_str().into()),
+            ("algorithm", self.algorithm.as_str().into()),
+            ("ps_version", (self.version as i64).into()),
+            ("samples", (self.samples as i64).into()),
+            ("n", self.w.len().into()),
+            ("workers", self.baks.len().into()),
+            ("checksum", format!("{checksum:016x}").into()),
+        ])
+        .to_string();
+
+        let tmp = path.with_extension("tmp");
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        {
+            let mut f = std::io::BufWriter::new(
+                std::fs::File::create(&tmp)
+                    .with_context(|| format!("creating {}", tmp.display()))?,
+            );
+            let hbytes = header.as_bytes();
+            f.write_all(&(hbytes.len() as u64).to_le_bytes())?;
+            f.write_all(hbytes)?;
+            // pad header to 16-byte alignment for the payload
+            let off = 8 + hbytes.len();
+            let pad = (16 - off % 16) % 16;
+            f.write_all(&vec![0u8; pad])?;
+            f.write_all(&payload)?;
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        if hlen > 1 << 20 {
+            bail!("implausible header length {hlen}");
+        }
+        let mut hbytes = vec![0u8; hlen];
+        f.read_exact(&mut hbytes)?;
+        let header = Json::parse(std::str::from_utf8(&hbytes).map_err(|e| anyhow!("header: {e}"))?)
+            .map_err(|e| anyhow!("header json: {e}"))?;
+        if header.get("magic").as_str() != Some(MAGIC) {
+            bail!("not a dcasgd checkpoint");
+        }
+        if header.get("version").as_i64() != Some(VERSION) {
+            bail!("unsupported checkpoint version");
+        }
+        let n = header.get("n").as_usize().ok_or_else(|| anyhow!("header missing n"))?;
+        let workers =
+            header.get("workers").as_usize().ok_or_else(|| anyhow!("header missing workers"))?;
+        let off = 8 + hlen;
+        let pad = (16 - off % 16) % 16;
+        let mut skip = vec![0u8; pad];
+        f.read_exact(&mut skip)?;
+        let mut payload = Vec::new();
+        f.read_to_end(&mut payload)?;
+        let expect = (3 + workers) * n * 4;
+        if payload.len() != expect {
+            bail!("payload {} bytes, expected {expect}", payload.len());
+        }
+        let checksum = fnv1a(&payload, 0xcbf2_9ce4_8422_2325);
+        let declared = header.get("checksum").as_str().unwrap_or("");
+        if format!("{checksum:016x}") != declared {
+            bail!("checksum mismatch: corrupt checkpoint");
+        }
+        let sec = |i: usize| -> Result<Vec<f32>> { bytes_to_f32s(&payload[i * n * 4..(i + 1) * n * 4]) };
+        let baks = (0..workers).map(|m| sec(3 + m)).collect::<Result<Vec<_>>>()?;
+        Ok(Checkpoint {
+            model: header.get("model").as_str().unwrap_or("?").to_string(),
+            algorithm: header.get("algorithm").as_str().unwrap_or("?").to_string(),
+            version: header.get("ps_version").as_i64().unwrap_or(0) as u64,
+            samples: header.get("samples").as_i64().unwrap_or(0) as u64,
+            w: sec(0)?,
+            ms: sec(1)?,
+            vel: sec(2)?,
+            baks,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algorithm;
+    use crate::ps::{Hyper, NativeKernel};
+    use crate::util::rng::Pcg64;
+
+    fn server(n: usize, workers: usize) -> ParamServer {
+        let mut rng = Pcg64::new(5);
+        let init: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        ParamServer::new(
+            &init,
+            workers,
+            3,
+            Algorithm::DcAsgdAdaptive,
+            Hyper { lambda0: 1.0, ms_momentum: 0.9, momentum: 0.0, eps: 1e-7 },
+            Box::new(NativeKernel),
+        )
+        .unwrap()
+    }
+
+    fn tmppath(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("dcasgd_ckpt_{}_{tag}.bin", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_preserves_all_state() {
+        let ps = server(200, 3);
+        let mut buf = vec![0.0f32; 200];
+        let mut rng = Pcg64::new(6);
+        // advance the server so every state section is nontrivial
+        for step in 0..10 {
+            let m = step % 3;
+            ps.pull(m, &mut buf);
+            let g: Vec<f32> = (0..200).map(|_| rng.normal(0.0, 0.1) as f32).collect();
+            ps.push(m, &g, 0.05);
+        }
+        let ck = Checkpoint::capture(&ps, "mlp_tiny", "dc-asgd-a", 160);
+        let path = tmppath("rt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn restore_resumes_identically() {
+        // train A for 6 steps, checkpoint at 3: restoring into B and
+        // replaying steps 4-6 must produce bit-identical state
+        let ps_a = server(128, 2);
+        let mut buf = vec![0.0f32; 128];
+        let grads: Vec<Vec<f32>> = {
+            let mut rng = Pcg64::new(7);
+            (0..6).map(|_| (0..128).map(|_| rng.normal(0.0, 0.1) as f32).collect()).collect()
+        };
+        let mut ck3 = None;
+        for (step, g) in grads.iter().enumerate() {
+            let m = step % 2;
+            ps_a.pull(m, &mut buf);
+            ps_a.push(m, g, 0.1);
+            if step == 2 {
+                ck3 = Some(Checkpoint::capture(&ps_a, "m", "dc-asgd-a", 3));
+            }
+        }
+        let ps_b = server(128, 2);
+        ck3.unwrap().restore_into(&ps_b).unwrap();
+        assert_eq!(ps_b.version(), 3);
+        for (step, g) in grads.iter().enumerate().skip(3) {
+            let m = step % 2;
+            ps_b.pull(m, &mut buf);
+            ps_b.push(m, g, 0.1);
+        }
+        let mut wa = vec![0.0f32; 128];
+        let mut wb = vec![0.0f32; 128];
+        ps_a.snapshot(&mut wa);
+        ps_b.snapshot(&mut wb);
+        assert_eq!(wa, wb);
+        assert_eq!(ps_a.version(), ps_b.version());
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let ps = server(64, 1);
+        let ck = Checkpoint::capture(&ps, "m", "asgd", 0);
+        let path = tmppath("corrupt");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 5;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&path, bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let ps = server(64, 2);
+        let ck = Checkpoint::capture(&ps, "m", "asgd", 0);
+        let other_n = server(96, 2);
+        assert!(ck.restore_into(&other_n).is_err());
+        let other_workers = server(64, 3);
+        assert!(ck.restore_into(&other_workers).is_err());
+    }
+
+    #[test]
+    fn garbage_file_rejected() {
+        let path = tmppath("garbage");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,242 @@
+//! Lock-sharded parameter store.
+//!
+//! The flat parameter vector (plus its per-worker backup copies and the
+//! MeanSquare / velocity state) is split into `S` contiguous shards, each
+//! behind its own mutex, so concurrent pushes from different workers
+//! contend per-shard instead of per-model — the same trick real parameter
+//! servers use. Pulls are shard-atomic (not globally atomic), which is
+//! exactly the consistency a distributed PS provides; bench `ps_throughput`
+//! ablates S (DESIGN.md §6, Ablation B).
+
+use std::ops::Range;
+use std::sync::Mutex;
+
+/// State of one shard: the parameter slice plus all per-slice optimizer
+/// state. `bak[m]` is worker m's backup model w_bak(m) (paper Algorithm 2).
+#[derive(Debug)]
+pub struct ShardData {
+    pub w: Vec<f32>,
+    pub ms: Vec<f32>,
+    pub vel: Vec<f32>,
+    pub bak: Vec<Vec<f32>>,
+}
+
+/// Contiguously sharded store over the flat parameter vector.
+#[derive(Debug)]
+pub struct ShardedStore {
+    ranges: Vec<Range<usize>>,
+    shards: Vec<Mutex<ShardData>>,
+    n: usize,
+    workers: usize,
+}
+
+impl ShardedStore {
+    pub fn new(init: &[f32], workers: usize, shards: usize) -> Self {
+        assert!(shards >= 1 && workers >= 1);
+        let n = init.len();
+        let shards_n = shards.min(n.max(1));
+        let base = n / shards_n;
+        let rem = n % shards_n;
+        let mut ranges = Vec::with_capacity(shards_n);
+        let mut start = 0;
+        for s in 0..shards_n {
+            let size = base + usize::from(s < rem);
+            ranges.push(start..start + size);
+            start += size;
+        }
+        let shards = ranges
+            .iter()
+            .map(|r| {
+                let w = init[r.clone()].to_vec();
+                Mutex::new(ShardData {
+                    ms: vec![0.0; w.len()],
+                    vel: vec![0.0; w.len()],
+                    bak: vec![w.clone(); workers],
+                    w,
+                })
+            })
+            .collect();
+        Self { ranges, shards, n, workers }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+    pub fn ranges(&self) -> &[Range<usize>] {
+        &self.ranges
+    }
+
+    /// Copy the current model into `out` and record it as worker `m`'s
+    /// backup (the pull side of Algorithm 2: `w_bak(m) <- w_t`).
+    pub fn pull_into(&self, worker: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.n);
+        for (range, shard) in self.ranges.iter().zip(&self.shards) {
+            let mut s = shard.lock().unwrap();
+            out[range.clone()].copy_from_slice(&s.w);
+            let w = std::mem::take(&mut s.w); // appease the borrow checker
+            s.bak[worker].copy_from_slice(&w);
+            s.w = w;
+        }
+    }
+
+    /// Copy the current model into `out` without touching backups (eval).
+    pub fn snapshot_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.n);
+        for (range, shard) in self.ranges.iter().zip(&self.shards) {
+            let s = shard.lock().unwrap();
+            out[range.clone()].copy_from_slice(&s.w);
+        }
+    }
+
+    /// Apply `f` to every shard in order. `f` gets the shard state and the
+    /// global index range it owns.
+    pub fn for_each_shard<F: FnMut(&mut ShardData, Range<usize>)>(&self, mut f: F) {
+        for (range, shard) in self.ranges.iter().zip(&self.shards) {
+            let mut s = shard.lock().unwrap();
+            f(&mut s, range.clone());
+        }
+    }
+
+    /// Overwrite the model (used by the XLA update backend, which computes
+    /// the new full vector out-of-place).
+    pub fn store_w(&self, new_w: &[f32]) {
+        assert_eq!(new_w.len(), self.n);
+        for (range, shard) in self.ranges.iter().zip(&self.shards) {
+            let mut s = shard.lock().unwrap();
+            s.w.copy_from_slice(&new_w[range.clone()]);
+        }
+    }
+
+    /// Overwrite the MeanSquare state (XLA adaptive backend).
+    pub fn store_ms(&self, new_ms: &[f32]) {
+        assert_eq!(new_ms.len(), self.n);
+        for (range, shard) in self.ranges.iter().zip(&self.shards) {
+            let mut s = shard.lock().unwrap();
+            s.ms.copy_from_slice(&new_ms[range.clone()]);
+        }
+    }
+
+    /// Read out backup + ms (XLA backend needs contiguous operands).
+    pub fn read_bak_ms(&self, worker: usize, bak: &mut [f32], ms: &mut [f32]) {
+        for (range, shard) in self.ranges.iter().zip(&self.shards) {
+            let s = shard.lock().unwrap();
+            bak[range.clone()].copy_from_slice(&s.bak[worker]);
+            ms[range.clone()].copy_from_slice(&s.ms);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_cover_exactly() {
+        for (n, s) in [(10, 3), (8192, 4), (7, 7), (5, 16)] {
+            let init = vec![1.0f32; n];
+            let store = ShardedStore::new(&init, 2, s);
+            let mut covered = vec![false; n];
+            for r in store.ranges() {
+                for i in r.clone() {
+                    assert!(!covered[i], "overlap at {i}");
+                    covered[i] = true;
+                }
+            }
+            assert!(covered.iter().all(|&c| c), "n={n} s={s}");
+            assert!(store.num_shards() <= s);
+        }
+    }
+
+    #[test]
+    fn pull_records_backup() {
+        let init: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let store = ShardedStore::new(&init, 2, 4);
+        let mut buf = vec![0.0; 100];
+        store.pull_into(1, &mut buf);
+        assert_eq!(buf, init);
+        // mutate w, then check worker 1's backup still holds the pull-time copy
+        store.for_each_shard(|s, _| {
+            for w in s.w.iter_mut() {
+                *w += 1.0;
+            }
+        });
+        let mut bak = vec![0.0; 100];
+        let mut ms = vec![0.0; 100];
+        store.read_bak_ms(1, &mut bak, &mut ms);
+        assert_eq!(bak, init);
+        // worker 0 never pulled; its backup is the init copy too
+        store.read_bak_ms(0, &mut bak, &mut ms);
+        assert_eq!(bak, init);
+        let mut snap = vec![0.0; 100];
+        store.snapshot_into(&mut snap);
+        assert!(snap.iter().zip(&init).all(|(a, b)| a == &(b + 1.0)));
+    }
+
+    #[test]
+    fn sharded_equals_single_shard_for_sequential_ops() {
+        let init: Vec<f32> = (0..517).map(|i| (i as f32).sin()).collect();
+        let g: Vec<f32> = (0..517).map(|i| (i as f32).cos() * 0.1).collect();
+        let one = ShardedStore::new(&init, 1, 1);
+        let many = ShardedStore::new(&init, 1, 8);
+        for store in [&one, &many] {
+            store.for_each_shard(|s, range| {
+                crate::optim::sgd_step(&mut s.w, &g[range], 0.5);
+            });
+        }
+        let mut a = vec![0.0; 517];
+        let mut b = vec![0.0; 517];
+        one.snapshot_into(&mut a);
+        many.snapshot_into(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn store_w_roundtrip() {
+        let store = ShardedStore::new(&vec![0.0; 64], 1, 3);
+        let new: Vec<f32> = (0..64).map(|i| i as f32 * 0.5).collect();
+        store.store_w(&new);
+        let mut out = vec![0.0; 64];
+        store.snapshot_into(&mut out);
+        assert_eq!(out, new);
+    }
+
+    #[test]
+    fn concurrent_pushes_preserve_sum_invariant() {
+        // adding deterministic per-worker deltas concurrently must commute:
+        // final w == init + sum of all deltas regardless of interleaving
+        use std::sync::Arc;
+        let n = 4096;
+        let store = Arc::new(ShardedStore::new(&vec![0.0f32; n], 4, 8));
+        let mut handles = vec![];
+        for m in 0..4 {
+            let store = Arc::clone(&store);
+            handles.push(std::thread::spawn(move || {
+                for step in 0..50 {
+                    let delta = (m as f32 + 1.0) * 0.001 + step as f32 * 1e-6;
+                    store.for_each_shard(|s, _| {
+                        for w in s.w.iter_mut() {
+                            *w += delta;
+                        }
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let expect: f32 = (0..4)
+            .flat_map(|m| (0..50).map(move |s| (m as f32 + 1.0) * 0.001 + s as f32 * 1e-6))
+            .sum();
+        let mut out = vec![0.0; n];
+        store.snapshot_into(&mut out);
+        for w in out {
+            assert!((w - expect).abs() < 1e-4, "{w} vs {expect}");
+        }
+    }
+}

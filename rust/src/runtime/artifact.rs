@@ -1,0 +1,275 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. See MANIFEST_VERSION there; bump in lockstep.
+
+use crate::data::FeatureKind;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Manifest version this runtime understands.
+pub const SUPPORTED_VERSION: i64 = 2;
+
+/// One named tensor inside the flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct TensorInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// One AOT-compiled model.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub kind: String,
+    pub n_params: usize,
+    pub n_padded: usize,
+    pub x_dtype: String,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+    pub batch: usize,
+    pub classes: usize,
+    /// Label rows per batch (batch for classifiers, batch*seq for LMs).
+    pub tokens_per_batch: usize,
+    pub files: BTreeMap<String, String>,
+    pub tensors: Vec<TensorInfo>,
+}
+
+impl ModelEntry {
+    /// Feature layout expected by the dataset builder.
+    pub fn feature_kind(&self) -> FeatureKind {
+        if self.x_dtype == "i32" {
+            FeatureKind::Tokens { seq_len: self.x_shape[1] }
+        } else {
+            FeatureKind::Dense { dim: self.x_shape[1] }
+        }
+    }
+
+    pub fn label_width(&self) -> usize {
+        self.tokens_per_batch / self.batch
+    }
+
+    /// Load the initial flat parameter vector emitted by aot.py.
+    pub fn load_init(&self, dir: &Path) -> Result<Vec<f32>> {
+        let file = self
+            .files
+            .get("init")
+            .ok_or_else(|| anyhow!("model {} has no init file", self.name))?;
+        let bytes = std::fs::read(dir.join(file))
+            .with_context(|| format!("reading {}", dir.join(file).display()))?;
+        if bytes.len() != self.n_padded * 4 {
+            bail!(
+                "init file {} has {} bytes, expected {} (n_padded={})",
+                file,
+                bytes.len(),
+                self.n_padded * 4,
+                self.n_padded
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// The parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: i64,
+    pub pad_multiple: usize,
+    pub models: Vec<ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&src)
+    }
+
+    pub fn parse(src: &str) -> Result<Self> {
+        let root = Json::parse(src).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let version = root.get("version").as_i64().unwrap_or(0);
+        if version != SUPPORTED_VERSION {
+            bail!("manifest version {version} unsupported (runtime expects {SUPPORTED_VERSION}); re-run `make artifacts`");
+        }
+        let pad_multiple = root
+            .get("pad_multiple")
+            .as_usize()
+            .ok_or_else(|| anyhow!("manifest missing pad_multiple"))?;
+        let mut models = Vec::new();
+        for m in root.get("models").as_arr().unwrap_or(&[]) {
+            models.push(parse_model(m)?);
+        }
+        if models.is_empty() {
+            bail!("manifest lists no models");
+        }
+        Ok(Self { version, pad_multiple, models })
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelEntry> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.models.iter().map(|m| m.name.clone()).collect()
+    }
+}
+
+fn shape_of(v: &Json, key: &str) -> Result<Vec<usize>> {
+    v.get(key)
+        .get("shape")
+        .as_arr()
+        .ok_or_else(|| anyhow!("model missing {key}.shape"))?
+        .iter()
+        .map(|s| s.as_usize().ok_or_else(|| anyhow!("bad {key}.shape entry")))
+        .collect()
+}
+
+fn parse_model(m: &Json) -> Result<ModelEntry> {
+    let name = m
+        .get("name")
+        .as_str()
+        .ok_or_else(|| anyhow!("model entry missing name"))?
+        .to_string();
+    let files = m
+        .get("files")
+        .as_obj()
+        .ok_or_else(|| anyhow!("model {name} missing files"))?
+        .iter()
+        .map(|(k, v)| {
+            v.as_str()
+                .map(|s| (k.clone(), s.to_string()))
+                .ok_or_else(|| anyhow!("model {name}: file entry {k} not a string"))
+        })
+        .collect::<Result<BTreeMap<_, _>>>()?;
+    for required in ["train", "eval", "init"] {
+        if !files.contains_key(required) {
+            bail!("model {name} missing required artifact {required:?}");
+        }
+    }
+    let tensors = m
+        .get("tensors")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|t| -> Result<TensorInfo> {
+            Ok(TensorInfo {
+                name: t.get("name").as_str().unwrap_or("?").to_string(),
+                shape: t
+                    .get("shape")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|s| s.as_usize())
+                    .collect(),
+                offset: t.get("offset").as_usize().unwrap_or(0),
+                size: t.get("size").as_usize().unwrap_or(0),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let n_params = m.get("n_params").as_usize().ok_or_else(|| anyhow!("{name}: n_params"))?;
+    let n_padded = m.get("n_padded").as_usize().ok_or_else(|| anyhow!("{name}: n_padded"))?;
+    if n_padded < n_params {
+        bail!("model {name}: n_padded < n_params");
+    }
+    let batch = m.get("batch").as_usize().ok_or_else(|| anyhow!("{name}: batch"))?;
+    let entry = ModelEntry {
+        kind: m.get("kind").as_str().unwrap_or("?").to_string(),
+        n_params,
+        n_padded,
+        x_dtype: m.get("x").get("dtype").as_str().unwrap_or("f32").to_string(),
+        x_shape: shape_of(m, "x")?,
+        y_shape: shape_of(m, "y")?,
+        batch,
+        classes: m.get("classes").as_usize().unwrap_or(0),
+        tokens_per_batch: m.get("tokens_per_batch").as_usize().unwrap_or(batch),
+        files,
+        tensors,
+        name,
+    };
+    if entry.x_shape.len() != 2 || entry.x_shape[0] != entry.batch {
+        bail!("model {}: unexpected x shape {:?}", entry.name, entry.x_shape);
+    }
+    Ok(entry)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 2, "pad_multiple": 8192,
+        "models": [{
+            "name": "mlp_tiny", "kind": "mlp",
+            "n_params": 3268, "n_padded": 8192,
+            "x": {"dtype": "f32", "shape": [16, 64]},
+            "y": {"dtype": "i32", "shape": [16]},
+            "batch": 16, "classes": 4, "tokens_per_batch": 16,
+            "files": {"train": "t.hlo.txt", "eval": "e.hlo.txt", "init": "i.f32"},
+            "tensors": [{"name": "w0", "shape": [64, 32], "offset": 0, "size": 2048}]
+        }, {
+            "name": "lm", "kind": "transformer",
+            "n_params": 100, "n_padded": 8192,
+            "x": {"dtype": "i32", "shape": [8, 64]},
+            "y": {"dtype": "i32", "shape": [8, 64]},
+            "batch": 8, "classes": 512, "tokens_per_batch": 512,
+            "files": {"train": "t", "eval": "e", "init": "i"},
+            "tensors": []
+        }]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 2);
+        assert_eq!(m.models.len(), 2);
+        let e = m.model("mlp_tiny").unwrap();
+        assert_eq!(e.n_padded, 8192);
+        assert_eq!(e.feature_kind(), FeatureKind::Dense { dim: 64 });
+        assert_eq!(e.label_width(), 1);
+        assert_eq!(e.tensors[0].size, 2048);
+        let lm = m.model("lm").unwrap();
+        assert_eq!(lm.feature_kind(), FeatureKind::Tokens { seq_len: 64 });
+        assert_eq!(lm.label_width(), 64);
+        assert!(m.model("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = SAMPLE.replacen("\"version\": 2", "\"version\": 1", 1);
+        let err = Manifest::parse(&bad).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn rejects_missing_required_file() {
+        let bad = SAMPLE.replacen("\"train\": \"t.hlo.txt\", ", "", 1);
+        let err = Manifest::parse(&bad).unwrap_err().to_string();
+        assert!(err.contains("train"), "{err}");
+    }
+
+    #[test]
+    fn rejects_inconsistent_padding() {
+        let bad = SAMPLE.replacen("\"n_padded\": 8192", "\"n_padded\": 100", 1);
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn load_init_checks_length() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let e = m.model("mlp_tiny").unwrap();
+        let dir = std::env::temp_dir().join(format!("dcasgd_art_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("i.f32"), vec![0u8; 8192 * 4]).unwrap();
+        let init = e.load_init(&dir).unwrap();
+        assert_eq!(init.len(), 8192);
+        std::fs::write(dir.join("i.f32"), vec![0u8; 16]).unwrap();
+        assert!(e.load_init(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

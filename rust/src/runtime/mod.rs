@@ -1,0 +1,402 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so a dedicated
+//! **engine thread** owns the client and every compiled executable, serving
+//! requests over channels. Worker threads (and the DES) hold a cloneable
+//! [`EngineHandle`]. On this 1-core testbed serializing XLA execution costs
+//! nothing; the coordinator's concurrency is about *ordering*, which the
+//! delay models control.
+
+pub mod artifact;
+pub mod literal;
+
+pub use artifact::{Manifest, ModelEntry};
+
+use crate::data::Batch;
+use anyhow::{anyhow, Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+
+/// Request protocol for the engine thread.
+enum Req {
+    /// train_step(params, x, y) -> (loss, grads)
+    Train { params: Vec<f32>, batch: Batch, resp: Sender<Result<(f32, Vec<f32>)>> },
+    /// eval_step(params, x, y) -> (loss, correct_count)
+    Eval { params: Vec<f32>, batch: Batch, resp: Sender<Result<(f32, f32)>> },
+    /// dc update artifact: returns new w
+    UpdateDc {
+        w: Vec<f32>,
+        g: Vec<f32>,
+        bak: Vec<f32>,
+        lr: f32,
+        lam: f32,
+        resp: Sender<Result<Vec<f32>>>,
+    },
+    /// adaptive dc update artifact: returns (new w, new ms)
+    UpdateDca {
+        w: Vec<f32>,
+        g: Vec<f32>,
+        bak: Vec<f32>,
+        ms: Vec<f32>,
+        lr: f32,
+        lam0: f32,
+        m: f32,
+        eps: f32,
+        resp: Sender<Result<(Vec<f32>, Vec<f32>)>>,
+    },
+    /// sgd update artifact: returns new w
+    UpdateSgd { w: Vec<f32>, g: Vec<f32>, lr: f32, resp: Sender<Result<Vec<f32>>> },
+    Shutdown,
+}
+
+/// Cloneable handle to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Sender<Req>,
+    entry: ModelEntry,
+}
+
+/// Spawn the engine thread for one model and block until its executables
+/// are compiled. `with_updates` additionally compiles the update artifacts
+/// (only emitted for some models — see python/compile/aot.py).
+pub fn start_engine(
+    artifacts_dir: &std::path::Path,
+    model: &str,
+    with_updates: bool,
+) -> Result<EngineHandle> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    let entry = manifest
+        .model(model)
+        .ok_or_else(|| anyhow!("model {model:?} not in manifest ({})", manifest.names().join(", ")))?
+        .clone();
+    if with_updates && !entry.files.contains_key("dc") {
+        anyhow::bail!(
+            "model {model:?} has no update artifacts; regenerate with UPDATE_ARTIFACTS or use the native backend"
+        );
+    }
+    let dir: PathBuf = artifacts_dir.to_path_buf();
+    let (tx, rx) = channel::<Req>();
+    let (ready_tx, ready_rx) = channel::<Result<()>>();
+    let thread_entry = entry.clone();
+    std::thread::Builder::new()
+        .name(format!("pjrt-engine-{model}"))
+        .spawn(move || engine_main(dir, thread_entry, with_updates, rx, ready_tx))
+        .context("spawning engine thread")?;
+    ready_rx.recv().context("engine thread died during startup")??;
+    Ok(EngineHandle { tx, entry })
+}
+
+impl EngineHandle {
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    pub fn n_padded(&self) -> usize {
+        self.entry.n_padded
+    }
+
+    /// Compute (loss, grads) for a batch at the given parameters.
+    pub fn train(&self, params: &[f32], batch: &Batch) -> Result<(f32, Vec<f32>)> {
+        let (resp, rx) = channel();
+        self.tx
+            .send(Req::Train { params: params.to_vec(), batch: batch.clone(), resp })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread dropped response"))?
+    }
+
+    /// Compute (loss, correct_count) for a batch.
+    pub fn eval(&self, params: &[f32], batch: &Batch) -> Result<(f32, f32)> {
+        let (resp, rx) = channel();
+        self.tx
+            .send(Req::Eval { params: params.to_vec(), batch: batch.clone(), resp })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread dropped response"))?
+    }
+
+    pub fn update_dc(&self, w: &[f32], g: &[f32], bak: &[f32], lr: f32, lam: f32) -> Result<Vec<f32>> {
+        let (resp, rx) = channel();
+        self.tx
+            .send(Req::UpdateDc {
+                w: w.to_vec(),
+                g: g.to_vec(),
+                bak: bak.to_vec(),
+                lr,
+                lam,
+                resp,
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread dropped response"))?
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn update_dca(
+        &self,
+        w: &[f32],
+        g: &[f32],
+        bak: &[f32],
+        ms: &[f32],
+        lr: f32,
+        lam0: f32,
+        m: f32,
+        eps: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (resp, rx) = channel();
+        self.tx
+            .send(Req::UpdateDca {
+                w: w.to_vec(),
+                g: g.to_vec(),
+                bak: bak.to_vec(),
+                ms: ms.to_vec(),
+                lr,
+                lam0,
+                m,
+                eps,
+                resp,
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread dropped response"))?
+    }
+
+    pub fn update_sgd(&self, w: &[f32], g: &[f32], lr: f32) -> Result<Vec<f32>> {
+        let (resp, rx) = channel();
+        self.tx
+            .send(Req::UpdateSgd { w: w.to_vec(), g: g.to_vec(), lr, resp })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread dropped response"))?
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Req::Shutdown);
+    }
+}
+
+/// [`crate::ps::UpdateKernel`] backed by the XLA/Pallas update artifacts
+/// (ablation A: XLA vs native server hot path).
+pub struct XlaUpdateKernel {
+    handle: EngineHandle,
+}
+
+impl XlaUpdateKernel {
+    pub fn new(handle: EngineHandle) -> Self {
+        Self { handle }
+    }
+}
+
+impl crate::ps::UpdateKernel for XlaUpdateKernel {
+    fn sgd(&self, w: &mut [f32], g: &[f32], lr: f32) {
+        let new = self.handle.update_sgd(w, g, lr).expect("xla sgd update");
+        w.copy_from_slice(&new);
+    }
+    fn dc(&self, w: &mut [f32], g: &[f32], w_bak: &[f32], lr: f32, lam: f32) {
+        let new = self.handle.update_dc(w, g, w_bak, lr, lam).expect("xla dc update");
+        w.copy_from_slice(&new);
+    }
+    fn dca(
+        &self,
+        w: &mut [f32],
+        g: &[f32],
+        w_bak: &[f32],
+        ms: &mut [f32],
+        lr: f32,
+        lam0: f32,
+        m: f32,
+        eps: f32,
+    ) {
+        let (new_w, new_ms) =
+            self.handle.update_dca(w, g, w_bak, ms, lr, lam0, m, eps).expect("xla dca update");
+        w.copy_from_slice(&new_w);
+        ms.copy_from_slice(&new_ms);
+    }
+    fn requires_whole_vector(&self) -> bool {
+        true
+    }
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// engine thread body
+// ---------------------------------------------------------------------------
+
+struct Executables {
+    train: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    dc: Option<xla::PjRtLoadedExecutable>,
+    dca: Option<xla::PjRtLoadedExecutable>,
+    sgd: Option<xla::PjRtLoadedExecutable>,
+}
+
+fn compile(
+    client: &xla::PjRtClient,
+    dir: &std::path::Path,
+    file: &str,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path = dir.join(file);
+    let proto = xla::HloModuleProto::from_text_file(&path)
+        .map_err(|e| anyhow!("parsing HLO {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e}", path.display()))
+}
+
+fn engine_main(
+    dir: PathBuf,
+    entry: ModelEntry,
+    with_updates: bool,
+    rx: std::sync::mpsc::Receiver<Req>,
+    ready: Sender<Result<()>>,
+) {
+    let setup = (|| -> Result<(xla::PjRtClient, Executables)> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        let train = compile(&client, &dir, &entry.files["train"])?;
+        let eval = compile(&client, &dir, &entry.files["eval"])?;
+        let (dc, dca, sgd) = if with_updates {
+            (
+                Some(compile(&client, &dir, &entry.files["dc"])?),
+                Some(compile(&client, &dir, &entry.files["dca"])?),
+                Some(compile(&client, &dir, &entry.files["sgd"])?),
+            )
+        } else {
+            (None, None, None)
+        };
+        Ok((client, Executables { train, eval, dc, dca, sgd }))
+    })();
+
+    let exes = match setup {
+        Ok((_client, exes)) => {
+            let _ = ready.send(Ok(()));
+            exes
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Shutdown => break,
+            Req::Train { params, batch, resp } => {
+                let _ = resp.send(run_train(&exes.train, &entry, &params, &batch));
+            }
+            Req::Eval { params, batch, resp } => {
+                let _ = resp.send(run_eval(&exes.eval, &entry, &params, &batch));
+            }
+            Req::UpdateDc { w, g, bak, lr, lam, resp } => {
+                let _ = resp.send(run_update_dc(exes.dc.as_ref(), &w, &g, &bak, lr, lam));
+            }
+            Req::UpdateDca { w, g, bak, ms, lr, lam0, m, eps, resp } => {
+                let _ = resp.send(run_update_dca(
+                    exes.dca.as_ref(),
+                    &w,
+                    &g,
+                    &bak,
+                    &ms,
+                    lr,
+                    lam0,
+                    m,
+                    eps,
+                ));
+            }
+            Req::UpdateSgd { w, g, lr, resp } => {
+                let _ = resp.send(run_update_sgd(exes.sgd.as_ref(), &w, &g, lr));
+            }
+        }
+    }
+}
+
+fn run_train(
+    exe: &xla::PjRtLoadedExecutable,
+    entry: &ModelEntry,
+    params: &[f32],
+    batch: &Batch,
+) -> Result<(f32, Vec<f32>)> {
+    let args = literal::model_args(entry, params, batch)?;
+    let mut out = literal::execute_tuple(exe, &args)?;
+    if out.len() != 2 {
+        anyhow::bail!("train artifact returned {} outputs, expected 2", out.len());
+    }
+    let grads = out.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("grads: {e}"))?;
+    let loss = out.pop().unwrap().get_first_element::<f32>().map_err(|e| anyhow!("loss: {e}"))?;
+    Ok((loss, grads))
+}
+
+fn run_eval(
+    exe: &xla::PjRtLoadedExecutable,
+    entry: &ModelEntry,
+    params: &[f32],
+    batch: &Batch,
+) -> Result<(f32, f32)> {
+    let args = literal::model_args(entry, params, batch)?;
+    let mut out = literal::execute_tuple(exe, &args)?;
+    if out.len() != 2 {
+        anyhow::bail!("eval artifact returned {} outputs, expected 2", out.len());
+    }
+    let correct = out.pop().unwrap().get_first_element::<f32>().map_err(|e| anyhow!("correct: {e}"))?;
+    let loss = out.pop().unwrap().get_first_element::<f32>().map_err(|e| anyhow!("loss: {e}"))?;
+    Ok((loss, correct))
+}
+
+fn run_update_dc(
+    exe: Option<&xla::PjRtLoadedExecutable>,
+    w: &[f32],
+    g: &[f32],
+    bak: &[f32],
+    lr: f32,
+    lam: f32,
+) -> Result<Vec<f32>> {
+    let exe = exe.ok_or_else(|| anyhow!("dc update artifact not loaded"))?;
+    let args = vec![
+        literal::f32_vec(w),
+        literal::f32_vec(g),
+        literal::f32_vec(bak),
+        literal::f32_vec(&[lr]),
+        literal::f32_vec(&[lam]),
+    ];
+    let mut out = literal::execute_tuple(exe, &args)?;
+    out.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("dc out: {e}"))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_update_dca(
+    exe: Option<&xla::PjRtLoadedExecutable>,
+    w: &[f32],
+    g: &[f32],
+    bak: &[f32],
+    ms: &[f32],
+    lr: f32,
+    lam0: f32,
+    m: f32,
+    eps: f32,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let exe = exe.ok_or_else(|| anyhow!("dca update artifact not loaded"))?;
+    let args = vec![
+        literal::f32_vec(w),
+        literal::f32_vec(g),
+        literal::f32_vec(bak),
+        literal::f32_vec(ms),
+        literal::f32_vec(&[lr]),
+        literal::f32_vec(&[lam0]),
+        literal::f32_vec(&[m]),
+        literal::f32_vec(&[eps]),
+    ];
+    let mut out = literal::execute_tuple(exe, &args)?;
+    if out.len() != 2 {
+        anyhow::bail!("dca artifact returned {} outputs, expected 2", out.len());
+    }
+    let new_ms = out.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("ms out: {e}"))?;
+    let new_w = out.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("w out: {e}"))?;
+    Ok((new_w, new_ms))
+}
+
+fn run_update_sgd(
+    exe: Option<&xla::PjRtLoadedExecutable>,
+    w: &[f32],
+    g: &[f32],
+    lr: f32,
+) -> Result<Vec<f32>> {
+    let exe = exe.ok_or_else(|| anyhow!("sgd update artifact not loaded"))?;
+    let args = vec![literal::f32_vec(w), literal::f32_vec(g), literal::f32_vec(&[lr])];
+    let mut out = literal::execute_tuple(exe, &args)?;
+    out.pop().unwrap().to_vec::<f32>().map_err(|e| anyhow!("sgd out: {e}"))
+}

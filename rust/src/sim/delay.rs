@@ -1,0 +1,134 @@
+//! Worker compute-time models for the cluster simulator.
+//!
+//! The paper ran on a 4×K40-per-node InfiniBand cluster; we don't have one
+//! (DESIGN.md §5), so simulated wallclock comes from these distributions.
+//! The *shape* of the wallclock figures depends on the schedule they induce
+//! (who finishes when, how stragglers stall the SSGD barrier), not absolute
+//! GPU speed.
+
+use crate::config::DelayModel;
+use crate::util::rng::Pcg64;
+
+/// Samples per-gradient compute durations (simulated seconds) per worker.
+#[derive(Clone, Debug)]
+pub struct DelaySampler {
+    model: DelayModel,
+    rngs: Vec<Pcg64>,
+}
+
+impl DelaySampler {
+    pub fn new(model: DelayModel, workers: usize, seed: u64) -> Self {
+        let mut root = Pcg64::new(seed ^ 0xDE1A_1234);
+        let rngs = (0..workers).map(|m| root.fork(m as u64)).collect();
+        Self { model, rngs }
+    }
+
+    /// Duration of worker `m`'s next gradient computation.
+    pub fn sample(&mut self, worker: usize) -> f64 {
+        let rng = &mut self.rngs[worker];
+        match &self.model {
+            DelayModel::Constant { mean } => *mean,
+            DelayModel::Uniform { mean, jitter } => {
+                rng.uniform(mean * (1.0 - jitter), mean * (1.0 + jitter))
+            }
+            DelayModel::Exponential { mean } => rng.exponential(*mean),
+            DelayModel::Pareto { scale, alpha } => rng.pareto(*scale, *alpha),
+            DelayModel::Heterogeneous { mean, speeds, jitter } => {
+                let s = speeds[worker % speeds.len()];
+                let base = mean * s;
+                rng.uniform(base * (1.0 - jitter), base * (1.0 + jitter))
+            }
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.rngs.len()
+    }
+}
+
+/// Communication overhead model: fixed per-push cost plus per-byte cost.
+/// The paper reports DC-ASGD has *no extra communication* vs ASGD; the
+/// server-side compensation compute is modelled separately in the DES.
+#[derive(Clone, Copy, Debug)]
+pub struct CommModel {
+    pub per_push: f64,
+    pub per_mb: f64,
+}
+
+impl CommModel {
+    pub fn infiniband_like() -> Self {
+        // ~50us latency, ~5 GB/s effective
+        Self { per_push: 50e-6, per_mb: 1.0 / 5000.0 }
+    }
+
+    pub fn cost(&self, bytes: usize) -> f64 {
+        self.per_push + self.per_mb * bytes as f64 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let mut s = DelaySampler::new(DelayModel::Constant { mean: 2.5 }, 3, 1);
+        for m in 0..3 {
+            for _ in 0..5 {
+                assert_eq!(s.sample(m), 2.5);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_respects_jitter_bounds() {
+        let mut s = DelaySampler::new(DelayModel::Uniform { mean: 1.0, jitter: 0.2 }, 2, 2);
+        for _ in 0..500 {
+            let d = s.sample(0);
+            assert!((0.8..=1.2).contains(&d), "{d}");
+        }
+    }
+
+    #[test]
+    fn heterogeneous_speeds_separate_workers() {
+        let model = DelayModel::Heterogeneous {
+            mean: 1.0,
+            speeds: vec![1.0, 3.0],
+            jitter: 0.0,
+        };
+        let mut s = DelaySampler::new(model, 4, 3);
+        assert_eq!(s.sample(0), 1.0);
+        assert_eq!(s.sample(1), 3.0);
+        assert_eq!(s.sample(2), 1.0); // wraps around speeds
+        assert_eq!(s.sample(3), 3.0);
+    }
+
+    #[test]
+    fn per_worker_streams_deterministic_and_distinct() {
+        let model = DelayModel::Exponential { mean: 1.0 };
+        let mut a = DelaySampler::new(model.clone(), 2, 9);
+        let mut b = DelaySampler::new(model, 2, 9);
+        let xs: Vec<f64> = (0..10).map(|_| a.sample(0)).collect();
+        let ys: Vec<f64> = (0..10).map(|_| b.sample(0)).collect();
+        assert_eq!(xs, ys);
+        let zs: Vec<f64> = (0..10).map(|_| b.sample(1)).collect();
+        assert_ne!(ys, zs);
+    }
+
+    #[test]
+    fn pareto_stragglers_exist() {
+        let mut s = DelaySampler::new(DelayModel::Pareto { scale: 1.0, alpha: 1.5 }, 1, 5);
+        let samples: Vec<f64> = (0..5000).map(|_| s.sample(0)).collect();
+        let max = samples.iter().cloned().fold(0.0, f64::max);
+        let med = crate::util::stats::percentile(&samples, 50.0);
+        assert!(max > 5.0 * med, "expected heavy tail: max={max} med={med}");
+        assert!(samples.iter().all(|&d| d >= 1.0));
+    }
+
+    #[test]
+    fn comm_model_monotone_in_bytes() {
+        let c = CommModel::infiniband_like();
+        assert!(c.cost(1_000_000) > c.cost(1_000));
+        assert!(c.cost(0) > 0.0);
+    }
+}

@@ -1,0 +1,155 @@
+//! Discrete-event simulation substrate: a virtual clock + event queue.
+//!
+//! The wallclock figures (Fig. 3/4) are produced by replaying the cluster
+//! *schedule* — who computes when, who waits at which barrier — under the
+//! delay models in [`delay`]. Gradient values are computed for real (via the
+//! PJRT engine); only *time* is simulated, so runs are deterministic and
+//! hardware-independent.
+
+pub mod delay;
+
+pub use delay::{CommModel, DelaySampler};
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event scheduled at a virtual time. Ties break by insertion sequence,
+/// making the simulation fully deterministic.
+#[derive(Debug)]
+struct Scheduled<T> {
+    time: f64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Scheduled<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<T> Eq for Scheduled<T> {}
+
+impl<T> Ord for Scheduled<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl<T> PartialOrd for Scheduled<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Earliest-first event queue with a monotonically advancing clock.
+#[derive(Debug)]
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Scheduled<T>>,
+    now: f64,
+    seq: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), now: 0.0, seq: 0 }
+    }
+
+    /// Current virtual time (time of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `payload` at absolute time `at` (must be >= now).
+    pub fn schedule_at(&mut self, at: f64, payload: T) {
+        debug_assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
+        self.heap.push(Scheduled { time: at.max(self.now), seq: self.seq, payload });
+        self.seq += 1;
+    }
+
+    /// Schedule `payload` `delay` seconds from now.
+    pub fn schedule_in(&mut self, delay: f64, payload: T) {
+        debug_assert!(delay >= 0.0);
+        self.schedule_at(self.now + delay, payload);
+    }
+
+    /// Pop the earliest event, advancing the clock to it.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        let ev = self.heap.pop()?;
+        self.now = ev.time;
+        Some((ev.time, ev.payload))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(3.0, "c");
+        q.schedule_at(1.0, "a");
+        q.schedule_at(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(q.now(), 3.0);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(1.0, 1);
+        q.schedule_at(1.0, 2);
+        q.schedule_at(1.0, 3);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule_in(5.0, ());
+        q.schedule_in(1.0, ());
+        let (t1, _) = q.pop().unwrap();
+        let (t2, _) = q.pop().unwrap();
+        assert!(t1 <= t2);
+        assert_eq!(q.now(), 5.0);
+        // scheduling relative to the advanced clock
+        q.schedule_in(0.5, ());
+        let (t3, _) = q.pop().unwrap();
+        assert_eq!(t3, 5.5);
+    }
+
+    #[test]
+    fn interleaved_schedule_pop() {
+        // a worker loop: each pop schedules the next event
+        let mut q = EventQueue::new();
+        q.schedule_at(0.5, 0usize);
+        let mut count = 0;
+        while let Some((_, worker)) = q.pop() {
+            count += 1;
+            if count < 10 {
+                q.schedule_in(0.5 + worker as f64, worker);
+            }
+        }
+        assert_eq!(count, 10);
+        assert!((q.now() - 5.0).abs() < 1e-9);
+    }
+}

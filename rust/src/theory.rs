@@ -1,0 +1,233 @@
+//! The paper's theory, made executable.
+//!
+//! Theorem 5.1 / Corollary 5.2 bound the delay DC-ASGD tolerates and the
+//! feasible range of lambda in terms of smoothness constants of the loss:
+//!
+//! * `L1` — gradient bound (Lipschitz constant of f),
+//! * `L2` — smoothness (Lipschitz constant of the gradient),
+//! * `L3` — Hessian Lipschitz constant,
+//! * `pi` — search-diameter bound `||w - w'|| <= pi`,
+//! * `eps_D` — Hessian diagonalization error (Lemma C.1),
+//!
+//! This module (a) estimates `L1..L3` empirically from gradient probes
+//! along the training trajectory (finite differences of the gradient
+//! oracle), and (b) evaluates the paper's feasibility formulas:
+//!
+//! * discussion (2) of Thm 5.1: DC-ASGD beats ASGD when `C_lambda < L2`,
+//!   where `C_lambda^2 = L3^2 pi^2/2 + 2((1-lambda)L1^2 + eps_D)^2 + 2 eps_nc^2`;
+//! * the simplified feasible lambda range
+//!   `lambda in [1 - (L2 - L3 pi)/(2 L1^2), 1]` (paper discussion (2)),
+//! * Corollary 5.2's speedup factor `T / C0`.
+//!
+//! Estimated constants are *local* (along the visited trajectory), which is
+//! the regime the theorem actually speaks about; see the `theory_bounds`
+//! integration test for the measured values on the CIFAR-like task.
+
+use crate::util::stats::Running;
+
+/// Empirical smoothness constants measured from gradient probes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SmoothnessEstimate {
+    /// max ||g|| observed (estimates L1)
+    pub l1: f64,
+    /// max ||g(w+d) - g(w)|| / ||d||  (estimates L2)
+    pub l2: f64,
+    /// max ||g(w+d) - 2 g(w) + g(w-d)|| / ||d||^2  (estimates L3)
+    pub l3: f64,
+    /// max ||w - w'|| over probed snapshots (estimates pi)
+    pub pi: f64,
+    pub probes: usize,
+}
+
+/// Accumulates gradient probes. The caller supplies a gradient oracle
+/// (usually a closure over the PJRT engine with a fixed batch).
+pub struct SmoothnessProbe {
+    l1: Running,
+    l2: Running,
+    l3: Running,
+    l1_max: f64,
+    l2_max: f64,
+    l3_max: f64,
+    pi_max: f64,
+    probes: usize,
+}
+
+impl Default for SmoothnessProbe {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn norm(v: &[f32]) -> f64 {
+    v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+}
+
+impl SmoothnessProbe {
+    pub fn new() -> Self {
+        Self {
+            l1: Running::new(),
+            l2: Running::new(),
+            l3: Running::new(),
+            l1_max: 0.0,
+            l2_max: 0.0,
+            l3_max: 0.0,
+            pi_max: 0.0,
+            probes: 0,
+        }
+    }
+
+    /// Probe at `w` along direction `d` (same batch for all three gradient
+    /// evaluations). `g_at` is the gradient oracle.
+    pub fn probe<F>(&mut self, w: &[f32], d: &[f32], mut g_at: F) -> anyhow::Result<()>
+    where
+        F: FnMut(&[f32]) -> anyhow::Result<Vec<f32>>,
+    {
+        let dn = norm(d);
+        anyhow::ensure!(dn > 0.0, "zero probe direction");
+        let wp: Vec<f32> = w.iter().zip(d).map(|(a, b)| a + b).collect();
+        let wm: Vec<f32> = w.iter().zip(d).map(|(a, b)| a - b).collect();
+        let g0 = g_at(w)?;
+        let gp = g_at(&wp)?;
+        let gm = g_at(&wm)?;
+
+        let l1 = norm(&g0);
+        let diff: Vec<f32> = gp.iter().zip(&g0).map(|(a, b)| a - b).collect();
+        let l2 = norm(&diff) / dn;
+        let second: Vec<f32> =
+            gp.iter().zip(&g0).zip(&gm).map(|((p, z), m)| p - 2.0 * z + m).collect();
+        let l3 = norm(&second) / (dn * dn);
+
+        self.l1.push(l1);
+        self.l2.push(l2);
+        self.l3.push(l3);
+        self.l1_max = self.l1_max.max(l1);
+        self.l2_max = self.l2_max.max(l2);
+        self.l3_max = self.l3_max.max(l3);
+        self.probes += 1;
+        Ok(())
+    }
+
+    /// Record a trajectory displacement (updates the pi estimate).
+    pub fn observe_displacement(&mut self, w_a: &[f32], w_b: &[f32]) {
+        let d: Vec<f32> = w_a.iter().zip(w_b).map(|(a, b)| a - b).collect();
+        self.pi_max = self.pi_max.max(norm(&d));
+    }
+
+    pub fn estimate(&self) -> SmoothnessEstimate {
+        SmoothnessEstimate {
+            l1: self.l1_max,
+            l2: self.l2_max,
+            l3: self.l3_max,
+            pi: self.pi_max,
+            probes: self.probes,
+        }
+    }
+}
+
+/// The paper's feasibility quantities for a given lambda.
+#[derive(Clone, Copy, Debug)]
+pub struct DelayToleranceReport {
+    pub lambda: f64,
+    /// C_lambda (discussion (2), with eps_nc treated as negligible).
+    pub c_lambda: f64,
+    /// DC-ASGD strictly dominates ASGD's tolerance when C_lambda < L2.
+    pub dc_beats_asgd: bool,
+    /// Simplified feasible lambda interval [lo, 1] (empty if lo > 1).
+    pub lambda_lo: f64,
+    pub lambda_feasible: bool,
+}
+
+/// Evaluate the Theorem 5.1 discussion-(2) conditions.
+pub fn delay_tolerance(est: &SmoothnessEstimate, lambda: f64, eps_d: f64) -> DelayToleranceReport {
+    let c2 = est.l3.powi(2) * est.pi.powi(2) / 2.0
+        + 2.0 * ((1.0 - lambda) * est.l1.powi(2) + eps_d).powi(2);
+    let c_lambda = c2.sqrt();
+    // lambda in [1 - (L2 - L3*pi)/(2 L1^2), 1], requiring L2 > L3*pi
+    let headroom = est.l2 - est.l3 * est.pi;
+    let lo = if est.l1 > 0.0 { 1.0 - headroom / (2.0 * est.l1.powi(2)) } else { 0.0 };
+    DelayToleranceReport {
+        lambda,
+        c_lambda,
+        dc_beats_asgd: c_lambda < est.l2,
+        lambda_lo: lo,
+        lambda_feasible: headroom > 0.0 && lambda >= lo.max(0.0) && lambda <= 1.0,
+    }
+}
+
+/// Corollary 5.2: with T total iterations and constant C0, DC-ASGD
+/// outperforms ASGD by a factor T / C0 (when the lambda interval above is
+/// non-empty and T >= C0).
+pub fn speedup_factor(total_iters: u64, c0: f64) -> f64 {
+    if c0 <= 0.0 {
+        return f64::INFINITY;
+    }
+    total_iters as f64 / c0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Quadratic loss f(w) = 0.5 w' A w with known constants: L1 on a ball
+    /// of radius r is ||A|| r, L2 = ||A||, L3 = 0.
+    fn quad_grad(a_diag: &[f64], w: &[f32]) -> Vec<f32> {
+        w.iter().zip(a_diag).map(|(wi, ai)| (*wi as f64 * ai) as f32).collect()
+    }
+
+    #[test]
+    fn recovers_quadratic_constants() {
+        let a = vec![2.0f64, 0.5, 1.0, 3.0];
+        let mut probe = SmoothnessProbe::new();
+        let w = vec![1.0f32, -1.0, 0.5, 0.25];
+        let d = vec![0.01f32, 0.02, -0.01, 0.005];
+        probe
+            .probe(&w, &d, |wq| Ok(quad_grad(&a, wq)))
+            .unwrap();
+        let est = probe.estimate();
+        // L2 estimate = ||A d||/||d|| <= ||A||_2 = 3, >= lambda_min = 0.5
+        assert!(est.l2 > 0.5 && est.l2 <= 3.0 + 1e-6, "L2={}", est.l2);
+        // quadratic: Hessian constant => L3 ~ 0 (up to f32 noise amplified by 1/||d||^2)
+        assert!(est.l3 < 1.0, "L3={}", est.l3);
+        assert_eq!(est.probes, 1);
+    }
+
+    #[test]
+    fn pi_tracks_max_displacement() {
+        let mut probe = SmoothnessProbe::new();
+        probe.observe_displacement(&[0.0, 0.0], &[3.0, 4.0]);
+        probe.observe_displacement(&[0.0, 0.0], &[1.0, 1.0]);
+        assert!((probe.estimate().pi - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lambda_one_minimizes_c_lambda_without_curvature() {
+        // with L3=0 and eps_D=0: C_lambda = sqrt(2) (1-lambda) L1^2,
+        // minimized (=0) at lambda = 1 — the paper's "lambda=1 extreme"
+        let est = SmoothnessEstimate { l1: 2.0, l2: 1.0, l3: 0.0, pi: 0.5, probes: 1 };
+        let r0 = delay_tolerance(&est, 0.0, 0.0);
+        let r1 = delay_tolerance(&est, 1.0, 0.0);
+        assert!(r1.c_lambda < r0.c_lambda);
+        assert!((r1.c_lambda - 0.0).abs() < 1e-12);
+        assert!(r1.dc_beats_asgd);
+        assert!(!r0.dc_beats_asgd); // C_0 = sqrt(2)*4 > L2=1
+    }
+
+    #[test]
+    fn feasible_interval_requires_smoothness_headroom() {
+        // L2 < L3*pi: the simplified interval is empty
+        let est = SmoothnessEstimate { l1: 1.0, l2: 0.1, l3: 10.0, pi: 1.0, probes: 1 };
+        let r = delay_tolerance(&est, 1.0, 0.0);
+        assert!(!r.lambda_feasible);
+        // generous headroom: lo < 1 and lambda=1 is feasible
+        let est2 = SmoothnessEstimate { l1: 1.0, l2: 5.0, l3: 0.1, pi: 1.0, probes: 1 };
+        let r2 = delay_tolerance(&est2, 1.0, 0.0);
+        assert!(r2.lambda_feasible);
+        assert!(r2.lambda_lo < 1.0);
+    }
+
+    #[test]
+    fn speedup_factor_matches_corollary() {
+        assert!((speedup_factor(1000, 100.0) - 10.0).abs() < 1e-12);
+        assert!(speedup_factor(1000, 0.0).is_infinite());
+    }
+}

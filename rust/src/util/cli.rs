@@ -1,0 +1,257 @@
+//! Tiny CLI argument parser (no clap in the offline crate set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, repeated keys,
+//! and positional arguments. Typed accessors record which keys were touched
+//! so `finish()` can reject typos.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, Vec<String>>,
+    positional: Vec<String>,
+    used: std::cell::RefCell<Vec<String>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing required option --{0}")]
+    Missing(String),
+    #[error("invalid value for --{key}: {value:?} ({expect})")]
+    Invalid { key: String, value: String, expect: &'static str },
+    #[error("unknown option(s): {0}")]
+    Unknown(String),
+}
+
+impl Args {
+    /// Parse a raw argv (without the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut opts: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` terminates option parsing
+                    positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    opts.entry(k.to_string()).or_default().push(v.to_string());
+                } else {
+                    // value-style if next token is not an option, else boolean
+                    let take_value = matches!(it.peek(), Some(n) if !n.starts_with("--"));
+                    if take_value {
+                        let v = it.next().unwrap();
+                        opts.entry(rest.to_string()).or_default().push(v);
+                    } else {
+                        opts.entry(rest.to_string()).or_default().push("true".into());
+                    }
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Self { opts, positional, used: std::cell::RefCell::new(Vec::new()) }
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.used.borrow_mut().push(key.to_string());
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional argument (subcommand convention).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.mark(key);
+        self.opts.contains_key(key)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.opts.get(key).and_then(|v| v.last().cloned())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn str_req(&self, key: &str) -> Result<String, CliError> {
+        self.str_opt(key).ok_or_else(|| CliError::Missing(key.into()))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        match self.opts.get(key).and_then(|v| v.last()) {
+            Some(v) => v != "false" && v != "0",
+            None => false,
+        }
+    }
+
+    pub fn usize_opt(&self, key: &str) -> Result<Option<usize>, CliError> {
+        match self.str_opt(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| CliError::Invalid { key: key.into(), value: v, expect: "usize" }),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        Ok(self.usize_opt(key)?.unwrap_or(default))
+    }
+
+    pub fn f64_opt(&self, key: &str) -> Result<Option<f64>, CliError> {
+        match self.str_opt(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| CliError::Invalid { key: key.into(), value: v, expect: "float" }),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        Ok(self.f64_opt(key)?.unwrap_or(default))
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::Invalid { key: key.into(), value: v, expect: "u64" }),
+        }
+    }
+
+    /// Comma-separated list (`--workers 1,4,8`).
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, CliError> {
+        match self.str_opt(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|_| CliError::Invalid {
+                        key: key.into(),
+                        value: v.clone(),
+                        expect: "comma-separated usize list",
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Result<Vec<f64>, CliError> {
+        match self.str_opt(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|_| CliError::Invalid {
+                        key: key.into(),
+                        value: v.clone(),
+                        expect: "comma-separated float list",
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Reject options that were provided but never queried (typo guard).
+    pub fn finish(&self) -> Result<(), CliError> {
+        let used = self.used.borrow();
+        let unknown: Vec<&String> =
+            self.opts.keys().filter(|k| !used.contains(k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError::Unknown(
+                unknown.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(", "),
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_key_value_styles() {
+        let a = parse("train --lr 0.5 --lambda=0.04 --verbose --workers 8");
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.5);
+        assert_eq!(a.f64_or("lambda", 0.0).unwrap(), 0.04);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("workers", 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let a = parse("run");
+        assert_eq!(a.usize_or("steps", 100).unwrap(), 100);
+        assert_eq!(a.str_or("algo", "asgd"), "asgd");
+        assert!(!a.flag("quiet"));
+        assert!(a.str_req("config").is_err());
+    }
+
+    #[test]
+    fn repeated_keys_take_last() {
+        let a = parse("--lr 0.1 --lr 0.2");
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.2);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--workers 1,4,8 --lambdas 0.1,2.0");
+        assert_eq!(a.usize_list_or("workers", &[]).unwrap(), vec![1, 4, 8]);
+        assert_eq!(a.f64_list_or("lambdas", &[]).unwrap(), vec![0.1, 2.0]);
+        let b = parse("");
+        assert_eq!(b.usize_list_or("workers", &[2]).unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn invalid_values_error() {
+        let a = parse("--lr abc");
+        assert!(matches!(a.f64_or("lr", 0.0), Err(CliError::Invalid { .. })));
+        let b = parse("--n -3");
+        // `-3` is treated as the value of --n and fails usize parse
+        assert!(b.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_option_guard() {
+        let a = parse("--known 1 --typo 2");
+        let _ = a.usize_or("known", 0).unwrap();
+        let err = a.finish().unwrap_err();
+        assert!(format!("{err}").contains("--typo"));
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse("cmd -- --not-an-option");
+        assert_eq!(a.positional(), &["cmd", "--not-an-option"]);
+    }
+
+    #[test]
+    fn bool_flag_followed_by_option() {
+        let a = parse("--verbose --lr 0.1");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.1);
+    }
+}

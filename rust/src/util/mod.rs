@@ -1,0 +1,8 @@
+//! Support substrates built from scratch (the build environment is offline
+//! with a minimal crate set — see DESIGN.md §2).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

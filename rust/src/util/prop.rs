@@ -1,0 +1,144 @@
+//! Miniature property-based testing harness (proptest is not in the offline
+//! crate set). Used by the coordinator/PS invariant tests.
+//!
+//! A property is a closure over a [`Gen`] (seeded RNG wrapper with value
+//! generators). `check` runs it over many seeds; on failure it retries the
+//! same seed with smaller size parameters (a lightweight stand-in for
+//! shrinking) and reports the seed so the case can be replayed.
+
+use super::rng::Pcg64;
+
+/// Value generators bound to a seeded RNG and a size budget.
+pub struct Gen {
+    pub rng: Pcg64,
+    /// Size hint in [0,1]; properties should scale their structures by it.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Self {
+        Self { rng: Pcg64::new(seed), size }
+    }
+
+    /// usize in [lo, hi], scaled so small `size` generates small cases.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        lo + self.rng.below(span as u64 + 1) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn f32_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal(0.0, scale as f64) as f32).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Outcome of a property: Ok(()) or a failure description.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` seeds. Panics (test-failure style) on the first
+/// failing seed, after retrying it at smaller sizes to find a more minimal
+/// reproduction.
+pub fn check<F: Fn(&mut Gen) -> PropResult>(name: &str, cases: u64, prop: F) {
+    check_seeded(name, 0xDC_A5_6D, cases, prop)
+}
+
+pub fn check_seeded<F: Fn(&mut Gen) -> PropResult>(name: &str, base_seed: u64, cases: u64, prop: F) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            // "shrink": retry the same seed with progressively smaller sizes
+            // and report the smallest size that still fails.
+            let mut smallest = (1.0, msg.clone());
+            for &size in &[0.5, 0.25, 0.1, 0.05] {
+                let mut g2 = Gen::new(seed, size);
+                if let Err(m2) = prop(&mut g2) {
+                    smallest = (size, m2);
+                }
+            }
+            panic!(
+                "property {name:?} failed (seed={seed:#x}, case={case}, size={}): {}",
+                smallest.0, smallest.1,
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::cell::Cell::new(0u64);
+        check("sum-commutes", 50, |g| {
+            counter.set(counter.get() + 1);
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            if (a + b - (b + a)).abs() < 1e-12 {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+        assert_eq!(counter.get(), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, |g| {
+            let n = g.usize_in(0, 100);
+            if n < 1000 {
+                Err(format!("n={n} is always < 1000"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut g = Gen::new(9, 1.0);
+        for _ in 0..100 {
+            let v = g.usize_in(3, 17);
+            assert!((3..=17).contains(&v));
+        }
+        let xs = g.f32_vec(32, 2.0);
+        assert_eq!(xs.len(), 32);
+        let choices = [1, 2, 3];
+        for _ in 0..10 {
+            assert!(choices.contains(g.pick(&choices)));
+        }
+    }
+
+    #[test]
+    fn small_size_shrinks_ranges() {
+        let mut g = Gen::new(10, 0.05);
+        for _ in 0..50 {
+            assert!(g.usize_in(0, 1000) <= 50);
+        }
+    }
+}

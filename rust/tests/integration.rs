@@ -1,0 +1,506 @@
+//! Integration tests over the full stack: AOT artifacts -> PJRT engine ->
+//! parameter server -> coordinator. Requires `make artifacts`; each test
+//! skips (with a loud message) if the artifact directory is missing so
+//! `cargo test` stays runnable on a fresh checkout.
+
+use dc_asgd::config::{Algorithm, DelayModel, ExecMode, ExperimentConfig, UpdateBackend};
+use dc_asgd::coordinator::Trainer;
+use dc_asgd::data::{build_dataset, Dataset};
+use dc_asgd::runtime::{start_engine, Manifest};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = dc_asgd::find_artifacts_dir();
+    if dir.is_none() {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+    }
+    dir
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => return,
+        }
+    };
+}
+
+fn tiny_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset_quickstart();
+    cfg.epochs = 2;
+    cfg.train_size = 512;
+    cfg.test_size = 256;
+    cfg.eval_every = 1;
+    cfg
+}
+
+#[test]
+fn manifest_loads_and_covers_registry() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    for name in ["mlp_tiny", "mlp_cifar", "mlp_imagenet", "cnn_cifar", "lm_small", "lm_medium"] {
+        assert!(m.model(name).is_some(), "registry model {name} missing from manifest");
+    }
+    let tiny = m.model("mlp_tiny").unwrap();
+    assert_eq!(tiny.n_padded % m.pad_multiple, 0);
+    let init = tiny.load_init(&dir).unwrap();
+    assert_eq!(init.len(), tiny.n_padded);
+    // padding tail must be zero so update rules never perturb it
+    assert!(init[tiny.n_params..].iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn engine_train_step_returns_finite_grads() {
+    let dir = require_artifacts!();
+    let engine = start_engine(&dir, "mlp_tiny", false).unwrap();
+    let entry = engine.entry().clone();
+    let init = entry.load_init(&dir).unwrap();
+    let ds = build_dataset(
+        &dc_asgd::config::DatasetKind::CifarLike,
+        entry.feature_kind(),
+        entry.classes,
+        true,
+        256,
+        7,
+    );
+    let batch = ds.make_batch(&(0..entry.batch).collect::<Vec<_>>());
+    let (loss, grads) = engine.train(&init, &batch).unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+    assert_eq!(grads.len(), entry.n_padded);
+    assert!(grads.iter().all(|g| g.is_finite()));
+    // fresh init, 4 classes: loss near ln(4)
+    assert!((loss - (4.0f32).ln()).abs() < 0.5, "init loss {loss} far from ln(4)");
+    // gradient tail (padding) must be exactly zero
+    assert!(grads[entry.n_params..].iter().all(|&g| g == 0.0));
+    // same inputs -> same outputs (deterministic engine)
+    let (loss2, grads2) = engine.train(&init, &batch).unwrap();
+    assert_eq!(loss, loss2);
+    assert_eq!(grads, grads2);
+    engine.shutdown();
+}
+
+#[test]
+fn engine_eval_counts_correct_predictions() {
+    let dir = require_artifacts!();
+    let engine = start_engine(&dir, "mlp_tiny", false).unwrap();
+    let entry = engine.entry().clone();
+    let init = entry.load_init(&dir).unwrap();
+    let ds = build_dataset(
+        &dc_asgd::config::DatasetKind::CifarLike,
+        entry.feature_kind(),
+        entry.classes,
+        false,
+        256,
+        7,
+    );
+    let batch = ds.make_batch(&(0..entry.batch).collect::<Vec<_>>());
+    let (loss, correct) = engine.eval(&init, &batch).unwrap();
+    assert!(loss.is_finite());
+    assert!(correct >= 0.0 && correct <= entry.batch as f32);
+    assert_eq!(correct.fract(), 0.0, "correct must be a count, got {correct}");
+    engine.shutdown();
+}
+
+#[test]
+fn xla_update_artifacts_match_native_rules() {
+    let dir = require_artifacts!();
+    let engine = start_engine(&dir, "mlp_tiny", true).unwrap();
+    let n = engine.n_padded();
+    let mut rng = dc_asgd::util::rng::Pcg64::new(42);
+    let w: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 0.1) as f32).collect();
+    let bak: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+    let ms: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 0.1).abs() as f32).collect();
+
+    // dc: XLA (Pallas kernel) vs native fused loop
+    let xla = engine.update_dc(&w, &g, &bak, 0.1, 0.04).unwrap();
+    let mut native = w.clone();
+    dc_asgd::optim::dc_step(&mut native, &g, &bak, 0.1, 0.04);
+    let max_err = xla.iter().zip(&native).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_err < 1e-5, "dc mismatch {max_err}");
+
+    // dca
+    let (xw, xms) = engine.update_dca(&w, &g, &bak, &ms, 0.1, 2.0, 0.95, 1e-7).unwrap();
+    let mut nw = w.clone();
+    let mut nms = ms.clone();
+    dc_asgd::optim::dc_adaptive_step(&mut nw, &g, &bak, &mut nms, 0.1, 2.0, 0.95, 1e-7);
+    let e1 = xw.iter().zip(&nw).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    let e2 = xms.iter().zip(&nms).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(e1 < 1e-4 && e2 < 1e-5, "dca mismatch {e1} {e2}");
+
+    // sgd
+    let xs = engine.update_sgd(&w, &g, 0.3).unwrap();
+    let mut ns = w.clone();
+    dc_asgd::optim::sgd_step(&mut ns, &g, 0.3);
+    let e3 = xs.iter().zip(&ns).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(e3 < 1e-6, "sgd mismatch {e3}");
+    engine.shutdown();
+}
+
+#[test]
+fn sequential_training_reduces_loss() {
+    let _dir = require_artifacts!();
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::SequentialSgd;
+    cfg.workers = 1;
+    cfg.epochs = 3;
+    let trainer = Trainer::new(cfg).unwrap();
+    let report = trainer.run().unwrap();
+    assert!(report.total_steps > 50);
+    assert!(report.final_train_loss.is_finite());
+    // 4-class task from ln(4)=1.386: must have learned something
+    assert!(report.final_train_loss < 1.0, "loss {}", report.final_train_loss);
+    assert!(report.final_test_error < 0.55, "err {}", report.final_test_error);
+    assert_eq!(report.staleness_max, 0);
+}
+
+#[test]
+fn all_algorithms_run_in_sim_mode() {
+    let _dir = require_artifacts!();
+    for algo in [
+        Algorithm::SyncSgd,
+        Algorithm::DcSyncSgd,
+        Algorithm::Asgd,
+        Algorithm::DcAsgdConst,
+        Algorithm::DcAsgdAdaptive,
+    ] {
+        let mut cfg = tiny_cfg();
+        cfg.algorithm = algo;
+        cfg.workers = 4;
+        let report = Trainer::new(cfg).unwrap().run().unwrap();
+        assert!(report.final_test_error.is_finite(), "{algo:?}");
+        assert!(report.final_train_loss < 1.3, "{algo:?} loss {}", report.final_train_loss);
+        if algo.is_async() {
+            assert!(report.staleness_mean > 0.5, "{algo:?} staleness {}", report.staleness_mean);
+        } else {
+            assert_eq!(report.staleness_max, 0, "{algo:?}");
+        }
+    }
+}
+
+#[test]
+fn sim_mode_is_deterministic() {
+    let _dir = require_artifacts!();
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::DcAsgdAdaptive;
+    cfg.workers = 4;
+    let r1 = Trainer::new(cfg.clone()).unwrap().run().unwrap();
+    let r2 = Trainer::new(cfg).unwrap().run().unwrap();
+    assert_eq!(r1.total_steps, r2.total_steps);
+    assert_eq!(r1.final_test_error, r2.final_test_error);
+    assert_eq!(r1.final_train_loss, r2.final_train_loss);
+    assert_eq!(r1.total_time, r2.total_time);
+}
+
+#[test]
+fn threads_mode_trains() {
+    let _dir = require_artifacts!();
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::DcAsgdConst;
+    cfg.workers = 4;
+    cfg.exec_mode = ExecMode::Threads;
+    cfg.shards = 4;
+    let report = Trainer::new(cfg).unwrap().run().unwrap();
+    assert!(report.total_steps > 20);
+    assert!(report.final_train_loss < 1.3, "loss {}", report.final_train_loss);
+}
+
+#[test]
+fn xla_update_backend_trains() {
+    let _dir = require_artifacts!();
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::DcAsgdAdaptive;
+    cfg.workers = 2;
+    cfg.epochs = 1;
+    cfg.update_backend = UpdateBackend::Xla;
+    cfg.shards = 1; // whole-vector artifacts require a single shard
+    let report = Trainer::new(cfg).unwrap().run().unwrap();
+    assert!(report.final_train_loss.is_finite());
+    assert!(report.total_steps > 10);
+}
+
+#[test]
+fn asgd_with_delay_shows_staleness_scaling() {
+    let _dir = require_artifacts!();
+    let mut stale = vec![];
+    for m in [2usize, 8] {
+        let mut cfg = tiny_cfg();
+        cfg.algorithm = Algorithm::Asgd;
+        cfg.workers = m;
+        cfg.delay = DelayModel::Uniform { mean: 1.0, jitter: 0.3 };
+        let report = Trainer::new(cfg).unwrap().run().unwrap();
+        stale.push(report.staleness_mean);
+    }
+    // staleness ~ M-1: M=8 must be substantially larger than M=2
+    assert!(
+        stale[1] > stale[0] * 2.0,
+        "staleness didn't scale with M: {stale:?}"
+    );
+}
+
+#[test]
+fn dcssgd_differs_from_ssgd_trajectory() {
+    let _dir = require_artifacts!();
+    let mk = |algo| {
+        let mut cfg = tiny_cfg();
+        cfg.algorithm = algo;
+        cfg.workers = 4;
+        cfg.lambda0 = 2.0;
+        Trainer::new(cfg).unwrap().run().unwrap()
+    };
+    let ssgd = mk(Algorithm::SyncSgd);
+    let dc = mk(Algorithm::DcSyncSgd);
+    // same schedule, different update rule: losses must differ
+    assert_ne!(ssgd.final_train_loss, dc.final_train_loss);
+}
+
+#[test]
+fn lm_model_trains_one_epoch() {
+    let _dir = require_artifacts!();
+    let mut cfg = ExperimentConfig::preset_lm("lm_small");
+    cfg.max_steps = 30;
+    cfg.train_size = 512;
+    cfg.test_size = 64;
+    cfg.workers = 2;
+    cfg.eval_every_steps = 0;
+    let report = Trainer::new(cfg).unwrap().run().unwrap();
+    assert_eq!(report.total_steps, 30);
+    // vocab 512: uniform-prediction loss = ln(512) = 6.24; the test loss
+    // must drop measurably below it within 30 steps. (final_train_loss
+    // averages the whole 30-step window including the early high-loss
+    // steps, so assert on the end-of-run test loss instead.)
+    assert!(report.final_test_loss < 6.15, "LM test loss {}", report.final_test_loss);
+    assert!(report.final_test_error < 0.99);
+}
+
+#[test]
+fn metrics_files_are_written() {
+    let _dir = require_artifacts!();
+    let out = std::env::temp_dir().join(format!("dcasgd_it_{}", std::process::id()));
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::Asgd;
+    cfg.workers = 2;
+    cfg.out_dir = out.to_string_lossy().into_owned();
+    cfg.tag = "itest".into();
+    Trainer::new(cfg).unwrap().run().unwrap();
+    for suffix in ["steps.csv", "evals.csv", "summary.json"] {
+        let p = out.join(format!("itest.{suffix}"));
+        assert!(p.exists(), "{} missing", p.display());
+    }
+    let summary = std::fs::read_to_string(out.join("itest.summary.json")).unwrap();
+    let json = dc_asgd::util::json::Json::parse(&summary).unwrap();
+    assert_eq!(json.get("config").get("algorithm").as_str(), Some("asgd"));
+    assert!(json.get("report").get("total_steps").as_i64().unwrap() > 0);
+    std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn theory_bounds_on_real_model() {
+    // Estimate the paper's smoothness constants L1..L3 on the actual
+    // mlp_tiny loss via the engine's gradient oracle, then evaluate the
+    // Thm-5.1 discussion-(2) feasibility quantities.
+    let dir = require_artifacts!();
+    let engine = start_engine(&dir, "mlp_tiny", false).unwrap();
+    let entry = engine.entry().clone();
+    let init = entry.load_init(&dir).unwrap();
+    let ds = build_dataset(
+        &dc_asgd::config::DatasetKind::CifarLike,
+        entry.feature_kind(),
+        entry.classes,
+        true,
+        256,
+        7,
+    );
+    let batch = ds.make_batch(&(0..entry.batch).collect::<Vec<_>>());
+    let mut probe = dc_asgd::theory::SmoothnessProbe::new();
+    let mut rng = dc_asgd::util::rng::Pcg64::new(3);
+    let mut w = init.clone();
+    for trial in 0..3 {
+        let d: Vec<f32> = (0..w.len()).map(|_| rng.normal(0.0, 1e-3) as f32).collect();
+        probe
+            .probe(&w, &d, |wq| engine.train(wq, &batch).map(|(_, g)| g))
+            .unwrap();
+        // walk a few SGD steps so probes sample the trajectory
+        let (_, g) = engine.train(&w, &batch).unwrap();
+        dc_asgd::optim::sgd_step(&mut w, &g, 0.1);
+        probe.observe_displacement(&init, &w);
+        let _ = trial;
+    }
+    let est = probe.estimate();
+    assert!(est.l1 > 0.0 && est.l1.is_finite());
+    assert!(est.l2 > 0.0 && est.l2.is_finite());
+    assert!(est.l3.is_finite());
+    assert!(est.pi > 0.0);
+    // lambda = 1 must never have a larger C_lambda than lambda = 0
+    let r1 = dc_asgd::theory::delay_tolerance(&est, 1.0, 0.0);
+    let r0 = dc_asgd::theory::delay_tolerance(&est, 0.0, 0.0);
+    assert!(r1.c_lambda <= r0.c_lambda + 1e-9);
+    eprintln!(
+        "measured constants: L1={:.3} L2={:.3} L3={:.3} pi={:.4} | C_1={:.4} C_0={:.4} beats_asgd(l=1)={}",
+        est.l1, est.l2, est.l3, est.pi, r1.c_lambda, r0.c_lambda, r1.dc_beats_asgd
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn checkpoint_roundtrip_through_training() {
+    let _dir = require_artifacts!();
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::DcAsgdAdaptive;
+    cfg.workers = 2;
+    let trainer = Trainer::new(cfg).unwrap();
+    // capture/restore through the public PS handle before running
+    let ps = trainer.ctx().ps.clone();
+    let ck = dc_asgd::ps::Checkpoint::capture(&ps, "mlp_tiny", "dc-asgd-a", 0);
+    let path = std::env::temp_dir().join(format!("dcasgd_train_ckpt_{}.bin", std::process::id()));
+    ck.save(&path).unwrap();
+    let loaded = dc_asgd::ps::Checkpoint::load(&path).unwrap();
+    loaded.restore_into(&ps).unwrap();
+    let report = trainer.run().unwrap();
+    assert!(report.total_steps > 0);
+    std::fs::remove_file(&path).ok();
+}
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap_or_default();
+    for line in s.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            return rest.trim().trim_end_matches(" kB").trim().parse::<f64>().unwrap_or(0.0)
+                / 1024.0;
+        }
+    }
+    0.0
+}
+
+#[test]
+fn engine_calls_do_not_leak_memory() {
+    // Regression test for the upstream xla-crate `execute` shim leak (it
+    // release()d input device buffers without freeing them — one parameter
+    // vector per training step). runtime::literal::execute_tuple routes
+    // through execute_b with rust-owned buffers; RSS must stay flat.
+    let dir = require_artifacts!();
+    let engine = start_engine(&dir, "mlp_cifar", false).unwrap();
+    let entry = engine.entry().clone();
+    let init = entry.load_init(&dir).unwrap();
+    let ds = build_dataset(
+        &dc_asgd::config::DatasetKind::CifarLike,
+        entry.feature_kind(),
+        entry.classes,
+        true,
+        256,
+        7,
+    );
+    let batch = ds.make_batch(&(0..entry.batch).collect::<Vec<_>>());
+    // warmup (allocator arenas, compiled-code pools)
+    for _ in 0..10 {
+        let _ = engine.train(&init, &batch).unwrap();
+    }
+    let before = rss_mb();
+    for _ in 0..60 {
+        let _ = engine.train(&init, &batch).unwrap();
+    }
+    let grown = rss_mb() - before;
+    // the old bug leaked ~3.8 MB/call = ~230 MB over 60 calls
+    assert!(grown < 80.0, "RSS grew {grown:.1} MB over 60 train calls");
+    engine.shutdown();
+}
+
+#[test]
+fn worker_churn_failure_injection() {
+    // Kill-and-rejoin semantics: mid-run, "crash" a worker (its snapshot is
+    // abandoned), reset it on the server, and continue. Training must stay
+    // finite and the rejoined worker's first push must see zero staleness.
+    let dir = require_artifacts!();
+    let engine = start_engine(&dir, "mlp_tiny", false).unwrap();
+    let entry = engine.entry().clone();
+    let init = entry.load_init(&dir).unwrap();
+    let ds = build_dataset(
+        &dc_asgd::config::DatasetKind::CifarLike,
+        entry.feature_kind(),
+        entry.classes,
+        true,
+        512,
+        7,
+    );
+    let hyper = dc_asgd::ps::Hyper { lambda0: 2.0, ms_momentum: 0.95, momentum: 0.0, eps: 1e-7 };
+    let ps = dc_asgd::ps::ParamServer::new(
+        &init,
+        3,
+        2,
+        Algorithm::DcAsgdAdaptive,
+        hyper,
+        Box::new(dc_asgd::ps::NativeKernel),
+    )
+    .unwrap();
+    let mut snaps = vec![init.clone(); 3];
+    for w in 0..3 {
+        ps.pull(w, &mut snaps[w]);
+    }
+    let mut losses = vec![];
+    for step in 0..30 {
+        // worker 2 crashes at step 10 and rejoins at step 20
+        let w = if (10..20).contains(&step) { step % 2 } else { step % 3 };
+        if step == 20 {
+            ps.reset_worker(2);
+            ps.pull(2, &mut snaps[2]);
+        }
+        let batch = ds.make_batch(&((step * 16 % 256)..(step * 16 % 256) + entry.batch).collect::<Vec<_>>());
+        let (loss, g) = engine.train(&snaps[w], &batch).unwrap();
+        losses.push(loss);
+        let out = ps.push(w, &g, 0.1);
+        if step == 20 {
+            assert_eq!(out.staleness, 0, "rejoined worker must start fresh");
+        }
+        ps.pull(w, &mut snaps[w]);
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    // learning continued through the churn
+    let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let tail: f32 = losses[25..].iter().sum::<f32>() / 5.0;
+    assert!(tail < head, "no progress through churn: {head} -> {tail}");
+    engine.shutdown();
+}
+
+#[test]
+fn momentum_variants_train_comparably() {
+    // Paper footnote 10: "we also implemented the momentum variants of
+    // these algorithms; the corresponding comparisons are very similar".
+    // Check the momentum path end-to-end for each algorithm family.
+    let _dir = require_artifacts!();
+    for algo in [Algorithm::Asgd, Algorithm::DcAsgdConst, Algorithm::DcAsgdAdaptive] {
+        let mut cfg = tiny_cfg();
+        cfg.algorithm = algo;
+        cfg.workers = 4;
+        cfg.momentum = 0.9;
+        cfg.lr.base = 0.1; // momentum effectively scales lr by 1/(1-mu)
+        let report = Trainer::new(cfg).unwrap().run().unwrap();
+        assert!(
+            report.final_train_loss.is_finite() && report.final_train_loss < 1.3,
+            "{algo:?} momentum loss {}",
+            report.final_train_loss
+        );
+    }
+}
+
+#[test]
+fn resume_from_checkpoint_config_path() {
+    let _dir = require_artifacts!();
+    let path = std::env::temp_dir().join(format!("dcasgd_resume_{}.ckpt", std::process::id()));
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::DcAsgdAdaptive;
+    cfg.workers = 2;
+    cfg.checkpoint_out = path.to_string_lossy().into_owned();
+    let r1 = Trainer::new(cfg.clone()).unwrap().run().unwrap();
+    // resume and continue
+    let mut cfg2 = cfg.clone();
+    cfg2.checkpoint_out = String::new();
+    cfg2.resume_from = path.to_string_lossy().into_owned();
+    let r2 = Trainer::new(cfg2).unwrap().run().unwrap();
+    assert!(r2.final_test_error <= r1.final_test_error + 0.08, "resume regressed badly");
+    // model-name mismatch must be rejected
+    let mut bad = ExperimentConfig::preset_lm("lm_small");
+    bad.resume_from = path.to_string_lossy().into_owned();
+    bad.max_steps = 5;
+    assert!(Trainer::new(bad).is_err());
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,238 @@
+//! Property-based invariant tests over the coordinator substrates (no
+//! artifacts needed — these run pure-rust with the in-repo prop harness).
+
+use dc_asgd::config::Algorithm;
+use dc_asgd::data::EpochPartition;
+use dc_asgd::optim;
+use dc_asgd::prop_assert;
+use dc_asgd::ps::{Hyper, NativeKernel, ParamServer};
+use dc_asgd::sim::EventQueue;
+use dc_asgd::util::prop::{check, Gen};
+
+fn hyper(g: &mut Gen) -> Hyper {
+    Hyper {
+        lambda0: g.f64_in(0.0, 3.0) as f32,
+        ms_momentum: g.f64_in(0.0, 0.99) as f32,
+        momentum: 0.0,
+        eps: 1e-7,
+    }
+}
+
+#[test]
+fn prop_partition_is_exact_cover() {
+    check("epoch partition covers indices exactly once", 40, |g| {
+        let workers = g.usize_in(1, 12).max(1);
+        let len = workers + g.usize_in(0, 4000);
+        let seed = g.rng.next_u64();
+        let epoch = g.usize_in(0, 50);
+        let p = EpochPartition::new(seed, len, workers);
+        let mut seen = vec![0u8; len];
+        for m in 0..workers {
+            for i in p.shard(epoch, m) {
+                prop_assert!(i < len, "index {i} out of range {len}");
+                seen[i] += 1;
+            }
+        }
+        prop_assert!(
+            seen.iter().all(|&c| c == 1),
+            "cover violated for len={len} workers={workers}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_staleness_equals_intervening_pushes() {
+    check("staleness tau == pushes between pull and push", 30, |g| {
+        let workers = g.usize_in(2, 6).max(2);
+        let n = 64;
+        let init = g.f32_vec(n, 1.0);
+        let ps = ParamServer::new(
+            &init,
+            workers,
+            g.usize_in(1, 4).max(1),
+            Algorithm::DcAsgdConst,
+            hyper(g),
+            Box::new(NativeKernel),
+        )
+        .unwrap();
+        let mut buf = vec![0.0f32; n];
+        let mut pull_at = vec![0u64; workers];
+        for m in 0..workers {
+            ps.pull(m, &mut buf);
+        }
+        for _ in 0..60 {
+            let m = g.usize_in(0, workers - 1);
+            let grad = g.f32_vec(n, 0.1);
+            let before = ps.version();
+            let out = ps.push(m, &grad, 0.01);
+            prop_assert!(
+                out.staleness == before - pull_at[m],
+                "staleness {} != {} - {}",
+                out.staleness,
+                before,
+                pull_at[m]
+            );
+            ps.pull(m, &mut buf);
+            pull_at[m] = ps.version();
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharding_invariant_under_any_push_sequence() {
+    check("sharded PS == single-shard PS for identical push sequences", 20, |g| {
+        let n = 128 + g.usize_in(0, 512);
+        let workers = g.usize_in(1, 4).max(1);
+        let init = g.f32_vec(n, 1.0);
+        let h = hyper(g);
+        let algo = *g.pick(&[
+            Algorithm::Asgd,
+            Algorithm::DcAsgdConst,
+            Algorithm::DcAsgdAdaptive,
+        ]);
+        let shards = g.usize_in(2, 9).max(2);
+        let a = ParamServer::new(&init, workers, 1, algo, h, Box::new(NativeKernel)).unwrap();
+        let b = ParamServer::new(&init, workers, shards, algo, h, Box::new(NativeKernel)).unwrap();
+        let mut buf = vec![0.0f32; n];
+        for _ in 0..25 {
+            let m = g.usize_in(0, workers - 1);
+            if g.bool() {
+                a.pull(m, &mut buf);
+                b.pull(m, &mut buf);
+            } else {
+                let grad = g.f32_vec(n, 0.2);
+                let lr = g.f64_in(0.001, 0.2) as f32;
+                a.push(m, &grad, lr);
+                b.push(m, &grad, lr);
+            }
+        }
+        let mut wa = vec![0.0f32; n];
+        let mut wb = vec![0.0f32; n];
+        a.snapshot(&mut wa);
+        b.snapshot(&mut wb);
+        let max = wa.iter().zip(&wb).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        prop_assert!(max < 1e-5, "sharded deviates by {max} (shards={shards}, algo={algo:?})");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dc_update_direction_and_magnitude() {
+    check("dc update: bounded by lr*(|g| + lam*g^2*|delta|) elementwise", 30, |g| {
+        let n = 64;
+        let w0 = g.f32_vec(n, 1.0);
+        let grad = g.f32_vec(n, 0.5);
+        let bak = g.f32_vec(n, 1.0);
+        let lr = g.f64_in(0.001, 0.5) as f32;
+        let lam = g.f64_in(0.0, 3.0) as f32;
+        let mut w = w0.clone();
+        optim::dc_step(&mut w, &grad, &bak, lr, lam);
+        for i in 0..n {
+            let bound = lr * (grad[i].abs() + lam * grad[i] * grad[i] * (w0[i] - bak[i]).abs());
+            let moved = (w[i] - w0[i]).abs();
+            prop_assert!(
+                moved <= bound + 1e-5,
+                "elem {i} moved {moved} > bound {bound}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_meansquare_stays_nonnegative_and_bounded() {
+    check("MeanSquare is nonneg and <= max(ms0, max g^2) under iteration", 25, |g| {
+        let n = 32;
+        let mut w = g.f32_vec(n, 1.0);
+        let bak = w.clone();
+        let mut ms = g.f32_vec(n, 0.1).iter().map(|x| x.abs()).collect::<Vec<_>>();
+        let m = g.f64_in(0.0, 0.999) as f32;
+        let mut gmax2 = ms.iter().cloned().fold(0.0f32, f32::max);
+        for _ in 0..10 {
+            let grad = g.f32_vec(n, 0.5);
+            gmax2 = gmax2.max(grad.iter().map(|x| x * x).fold(0.0f32, f32::max));
+            optim::dc_adaptive_step(&mut w, &grad, &bak, &mut ms, 0.01, 1.0, m, 1e-7);
+            for &v in &ms {
+                prop_assert!(v >= 0.0, "negative meansquare {v}");
+                prop_assert!(v <= gmax2 + 1e-5, "meansquare {v} exceeds bound {gmax2}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_queue_never_goes_backwards() {
+    check("event queue pops monotonically, clock never regresses", 30, |g| {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        let mut last = 0.0f64;
+        for i in 0..g.usize_in(1, 200) {
+            q.schedule_in(g.f64_in(0.0, 10.0), i as u32);
+        }
+        let mut pops = 0;
+        while let Some((t, _)) = q.pop() {
+            prop_assert!(t >= last, "time regressed {t} < {last}");
+            last = t;
+            pops += 1;
+            // sometimes schedule a follow-up (like a worker rescheduling)
+            if g.bool() && pops < 400 {
+                q.schedule_in(g.f64_in(0.0, 2.0), pops);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dcssgd_fold_is_norm_ordered() {
+    check("dcssgd accumulator result independent of push order", 20, |g| {
+        // the fold sorts by gradient norm, so pushing in any order must
+        // produce identical results
+        let n = 48;
+        let k = g.usize_in(2, 6).max(2);
+        let grads: Vec<Vec<f32>> = (0..k).map(|_| g.f32_vec(n, 0.3)).collect();
+        let w0 = g.f32_vec(n, 1.0);
+        let lam = g.f64_in(0.0, 2.0) as f32;
+
+        let mut acc1 = optim::DcSsgdAccumulator::new(n, lam);
+        for grad in &grads {
+            acc1.push(grad.clone());
+        }
+        let mut w1 = w0.clone();
+        acc1.apply(&mut w1, 0.05);
+
+        let mut acc2 = optim::DcSsgdAccumulator::new(n, lam);
+        for grad in grads.iter().rev() {
+            acc2.push(grad.clone());
+        }
+        let mut w2 = w0.clone();
+        acc2.apply(&mut w2, 0.05);
+
+        let max = w1.iter().zip(&w2).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        prop_assert!(max < 1e-6, "order-dependent fold: {max}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lr_schedule_monotone_nonincreasing() {
+    check("step-decay lr never increases with epoch", 30, |g| {
+        let mut decays: Vec<usize> = (0..g.usize_in(0, 5)).map(|_| g.usize_in(1, 100)).collect();
+        decays.sort_unstable();
+        let lr = dc_asgd::config::LrSchedule {
+            base: g.f64_in(0.01, 1.0),
+            decay_epochs: decays,
+            decay_factor: g.f64_in(0.05, 0.9),
+        };
+        let mut prev = f64::INFINITY;
+        for e in 0..120 {
+            let v = lr.lr_at_epoch(e);
+            prop_assert!(v <= prev + 1e-15, "lr increased at epoch {e}");
+            prop_assert!(v > 0.0, "lr non-positive at epoch {e}");
+            prev = v;
+        }
+        Ok(())
+    });
+}
