@@ -26,6 +26,13 @@ pub enum Algorithm {
     DcAsgdConst,
     /// DC-ASGD-a: adaptive lambda via MeanSquare (Eqn. 14).
     DcAsgdAdaptive,
+    /// Stale-synchronous parallel SGD: workers may drift at most
+    /// `staleness_bound` local steps apart (s=0 degenerates to the SSGD
+    /// round structure, s large to ASGD).
+    Ssp,
+    /// Delay-compensated SSP (DC-S3GD, Rigazzi et al. 2019): the SSP
+    /// schedule with the constant-lambda DC update against w_bak.
+    DcS3gd,
 }
 
 impl Algorithm {
@@ -37,7 +44,11 @@ impl Algorithm {
             "asgd" | "async" => Algorithm::Asgd,
             "dc-asgd-c" | "dcasgd-c" | "dc-c" => Algorithm::DcAsgdConst,
             "dc-asgd-a" | "dcasgd-a" | "dc-a" => Algorithm::DcAsgdAdaptive,
-            other => bail!("unknown algorithm {other:?} (sgd|ssgd|dc-ssgd|asgd|dc-asgd-c|dc-asgd-a)"),
+            "ssp" | "s3gd" => Algorithm::Ssp,
+            "dc-s3gd" | "dcs3gd" | "dc-ssp" => Algorithm::DcS3gd,
+            other => bail!(
+                "unknown algorithm {other:?} (sgd|ssgd|dc-ssgd|asgd|dc-asgd-c|dc-asgd-a|ssp|dc-s3gd)"
+            ),
         })
     }
 
@@ -49,17 +60,38 @@ impl Algorithm {
             Algorithm::Asgd => "asgd",
             Algorithm::DcAsgdConst => "dc-asgd-c",
             Algorithm::DcAsgdAdaptive => "dc-asgd-a",
+            Algorithm::Ssp => "ssp",
+            Algorithm::DcS3gd => "dc-s3gd",
         }
     }
 
     /// Does the rule use delay compensation?
     pub fn is_delay_compensated(&self) -> bool {
-        matches!(self, Algorithm::DcAsgdConst | Algorithm::DcAsgdAdaptive | Algorithm::DcSyncSgd)
+        matches!(
+            self,
+            Algorithm::DcAsgdConst
+                | Algorithm::DcAsgdAdaptive
+                | Algorithm::DcSyncSgd
+                | Algorithm::DcS3gd
+        )
     }
 
-    /// Is the parallelization asynchronous (no barrier)?
+    /// Is the parallelization asynchronous (no global barrier)? SSP counts:
+    /// workers proceed independently inside the staleness window.
     pub fn is_async(&self) -> bool {
-        matches!(self, Algorithm::Asgd | Algorithm::DcAsgdConst | Algorithm::DcAsgdAdaptive)
+        matches!(
+            self,
+            Algorithm::Asgd
+                | Algorithm::DcAsgdConst
+                | Algorithm::DcAsgdAdaptive
+                | Algorithm::Ssp
+                | Algorithm::DcS3gd
+        )
+    }
+
+    /// Is the schedule gated by the staleness bound (SSP family)?
+    pub fn is_staleness_bounded(&self) -> bool {
+        matches!(self, Algorithm::Ssp | Algorithm::DcS3gd)
     }
 }
 
@@ -85,6 +117,25 @@ pub enum DelayModel {
 }
 
 impl DelayModel {
+    /// Mean compute duration of the model (simulated seconds). The Pareto
+    /// mean is `scale * alpha / (alpha - 1)` for `alpha > 1` and is clamped
+    /// to `scale` for heavy tails without a finite mean.
+    pub fn mean(&self) -> f64 {
+        match self {
+            DelayModel::Constant { mean }
+            | DelayModel::Uniform { mean, .. }
+            | DelayModel::Exponential { mean }
+            | DelayModel::Heterogeneous { mean, .. } => *mean,
+            DelayModel::Pareto { scale, alpha } => {
+                if *alpha > 1.0 {
+                    scale * alpha / (alpha - 1.0)
+                } else {
+                    *scale
+                }
+            }
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             DelayModel::Constant { .. } => "constant",
@@ -178,6 +229,10 @@ pub struct ExperimentConfig {
     pub lr: LrSchedule,
     /// lambda_0: DC compensation strength.
     pub lambda0: f64,
+    /// SSP staleness bound s (SSP / DC-S3GD only): maximum number of local
+    /// steps the fastest worker may run ahead of the slowest. s=0 gives the
+    /// SSGD round structure; a large s reproduces ASGD.
+    pub staleness_bound: usize,
     /// MeanSquare moving-average constant m (DC-ASGD-a).
     pub ms_momentum: f64,
     /// Classical momentum mu (0 = plain SGD; the paper's momentum variants).
@@ -219,6 +274,7 @@ impl Default for ExperimentConfig {
             test_size: 1024,
             lr: LrSchedule { base: 0.1, decay_epochs: vec![], decay_factor: 0.1 },
             lambda0: 0.04,
+            staleness_bound: 4,
             ms_momentum: 0.95,
             momentum: 0.0,
             seed: 17,
@@ -345,6 +401,12 @@ impl ExperimentConfig {
         if self.shards == 0 {
             bail!("shards must be >= 1");
         }
+        if self.algorithm.is_staleness_bounded() && self.exec_mode == ExecMode::Threads {
+            bail!(
+                "{} runs under the event-driven scheduler: set exec_mode = sim",
+                self.algorithm.name()
+            );
+        }
         match &self.delay {
             DelayModel::Constant { mean }
             | DelayModel::Uniform { mean, .. }
@@ -445,6 +507,9 @@ impl ExperimentConfig {
         if let Some(v) = get_f64("train.lambda0")? {
             cfg.lambda0 = v;
         }
+        if let Some(v) = get_usize("staleness_bound")? {
+            cfg.staleness_bound = v;
+        }
         if let Some(v) = get_f64("train.ms_momentum")? {
             cfg.ms_momentum = v;
         }
@@ -539,6 +604,7 @@ impl ExperimentConfig {
             ("test_size", self.test_size.into()),
             ("lr", self.lr.base.into()),
             ("lambda0", self.lambda0.into()),
+            ("staleness_bound", self.staleness_bound.into()),
             ("ms_momentum", self.ms_momentum.into()),
             ("momentum", self.momentum.into()),
             ("seed", (self.seed as i64).into()),
@@ -562,6 +628,8 @@ mod tests {
             Algorithm::Asgd,
             Algorithm::DcAsgdConst,
             Algorithm::DcAsgdAdaptive,
+            Algorithm::Ssp,
+            Algorithm::DcS3gd,
         ] {
             assert_eq!(Algorithm::parse(a.name()).unwrap(), a);
         }
@@ -572,10 +640,28 @@ mod tests {
     fn algorithm_classification() {
         assert!(Algorithm::DcAsgdConst.is_delay_compensated());
         assert!(Algorithm::DcSyncSgd.is_delay_compensated());
+        assert!(Algorithm::DcS3gd.is_delay_compensated());
         assert!(!Algorithm::Asgd.is_delay_compensated());
+        assert!(!Algorithm::Ssp.is_delay_compensated());
         assert!(Algorithm::Asgd.is_async());
+        assert!(Algorithm::Ssp.is_async());
+        assert!(Algorithm::DcS3gd.is_async());
         assert!(!Algorithm::SyncSgd.is_async());
         assert!(!Algorithm::SequentialSgd.is_async());
+        assert!(Algorithm::Ssp.is_staleness_bounded());
+        assert!(Algorithm::DcS3gd.is_staleness_bounded());
+        assert!(!Algorithm::Asgd.is_staleness_bounded());
+    }
+
+    #[test]
+    fn delay_model_means() {
+        assert_eq!(DelayModel::Constant { mean: 2.0 }.mean(), 2.0);
+        assert_eq!(DelayModel::Uniform { mean: 1.5, jitter: 0.3 }.mean(), 1.5);
+        assert_eq!(DelayModel::Exponential { mean: 0.7 }.mean(), 0.7);
+        let p = DelayModel::Pareto { scale: 1.0, alpha: 2.0 };
+        assert!((p.mean() - 2.0).abs() < 1e-12);
+        // heavy tail without a finite mean clamps to scale
+        assert_eq!(DelayModel::Pareto { scale: 1.0, alpha: 0.9 }.mean(), 1.0);
     }
 
     #[test]
@@ -662,6 +748,20 @@ mod tests {
         assert!(ExperimentConfig::from_toml("algorithm = \"bogus\"").is_err());
         assert!(ExperimentConfig::from_toml("preset = \"bogus\"").is_err());
         assert!(ExperimentConfig::from_toml("[sim.delay]\nmodel = \"warp\"").is_err());
+        // SSP protocols run only under the event-driven scheduler
+        assert!(ExperimentConfig::from_toml("algorithm = \"ssp\"\nexec_mode = \"threads\"").is_err());
+    }
+
+    #[test]
+    fn from_toml_ssp_knobs() {
+        let cfg = ExperimentConfig::from_toml(
+            "algorithm = \"dc-s3gd\"\nstaleness_bound = 2\nworkers = 8",
+        )
+        .unwrap();
+        assert_eq!(cfg.algorithm, Algorithm::DcS3gd);
+        assert_eq!(cfg.staleness_bound, 2);
+        let json = cfg.to_json().to_string();
+        assert!(json.contains("\"staleness_bound\""));
     }
 
     #[test]

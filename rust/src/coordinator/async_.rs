@@ -1,101 +1,31 @@
-//! ASGD / DC-ASGD: the asynchronous loop, in two executions:
+//! ASGD / DC-ASGD / SSP / DC-S3GD: the no-global-barrier protocols, in two
+//! executions:
 //!
-//! * [`run_sim`] — discrete-event simulation. Worker finish events pop in
-//!   virtual-time order; gradients are computed for real on the snapshot
-//!   each worker pulled, so delayed-gradient staleness arises exactly as it
-//!   would on a cluster, but deterministically. This is the mode behind the
-//!   wallclock figures.
+//! * [`run_sim`] — the unified event-driven loop ([`super::driver`]) with
+//!   the [`crate::sim::FullyAsync`] protocol (ASGD family) or
+//!   [`crate::sim::StalenessBounded`] (SSP family). Worker finish events
+//!   pop in virtual-time order; gradients are computed for real on the
+//!   snapshot each worker pulled, so delayed-gradient staleness arises
+//!   exactly as it would on a cluster, but deterministically. This is the
+//!   mode behind the wallclock figures.
 //! * [`run_threads`] — real OS threads racing on the sharded parameter
 //!   server (lock contention and interleavings are physical; staleness is
 //!   nondeterministic). Used by ablation benches and as a sanity check that
-//!   the simulator matches reality in distribution.
+//!   the simulator matches reality in distribution. ASGD family only: the
+//!   SSP gate needs the scheduler's clock bookkeeping.
 //!
 //! In both, a worker's cycle is Algorithm 1 verbatim: pull -> compute
 //! gradient -> push; the server applies Algorithm 2's update rule.
 
-use super::RunCtx;
+use super::{FirstError, Progress, RunCtx};
 use crate::data::{EpochPartition, ShardCursor};
 use crate::metrics::StepRecord;
-use crate::sim::{DelaySampler, EventQueue};
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
-/// Server-side cost per update in simulated seconds, as a fraction of the
-/// mean worker compute time. The paper reports the DC compensation is a
-/// "lightweight overhead" on the server; we charge it explicitly (and
-/// double it for DC rules) so the wallclock comparison is honest.
-const SERVER_COST_FRAC: f64 = 0.01;
-
-fn mean_delay(cfg: &crate::config::ExperimentConfig) -> f64 {
-    match &cfg.delay {
-        crate::config::DelayModel::Constant { mean }
-        | crate::config::DelayModel::Uniform { mean, .. }
-        | crate::config::DelayModel::Exponential { mean }
-        | crate::config::DelayModel::Heterogeneous { mean, .. } => *mean,
-        crate::config::DelayModel::Pareto { scale, alpha } => {
-            if *alpha > 1.0 {
-                scale * alpha / (alpha - 1.0)
-            } else {
-                *scale
-            }
-        }
-    }
-}
-
 pub fn run_sim(ctx: &mut RunCtx) -> Result<()> {
-    let m = ctx.cfg.workers;
-    let n = ctx.ps.n();
-    let partition = EpochPartition::new(ctx.cfg.seed ^ 0x5EED, ctx.train_set.len(), m);
-    let mut cursors: Vec<ShardCursor> =
-        (0..m).map(|w| ShardCursor::new(partition.clone(), w, ctx.batch_size)).collect();
-    let mut delays = DelaySampler::new(ctx.cfg.delay.clone(), m, ctx.cfg.seed);
-    let server_cost = SERVER_COST_FRAC
-        * mean_delay(&ctx.cfg)
-        * if ctx.cfg.algorithm.is_delay_compensated() { 2.0 } else { 1.0 };
-
-    let mut snapshots: Vec<Vec<f32>> = vec![vec![0.0f32; n]; m];
-    let mut queue: EventQueue<usize> = EventQueue::new();
-    for w in 0..m {
-        ctx.ps.pull(w, &mut snapshots[w]);
-        queue.schedule_in(delays.sample(w), w);
-    }
-
-    let mut step = 0u64;
-    let mut samples = 0u64;
-    let mut prev_passes = 0.0f64;
-
-    while let Some((t, w)) = queue.pop() {
-        let passes = samples as f64 / ctx.train_set.len() as f64;
-        if ctx.done(step, passes) {
-            break;
-        }
-        let lr = ctx.lr_at(passes);
-        let batch = ctx.train_set.make_batch(&cursors[w].next_indices());
-        // the gradient is computed on the (stale) snapshot worker w pulled
-        let (loss, grads) = ctx.engine.train(&snapshots[w], &batch)?;
-        let outcome = ctx.ps.push(w, &grads, lr);
-        samples += ctx.batch_size as u64;
-        step += 1;
-        let passes_now = samples as f64 / ctx.train_set.len() as f64;
-        ctx.metrics.record_step(StepRecord {
-            step: step - 1,
-            worker: w,
-            passes: passes_now,
-            time: t,
-            loss,
-            lr,
-            staleness: outcome.staleness,
-        });
-        if ctx.should_eval(prev_passes, passes_now, step) {
-            ctx.run_eval(step, passes_now, t)?;
-        }
-        prev_passes = passes_now;
-        // pull the fresh model and start the next gradient
-        ctx.ps.pull(w, &mut snapshots[w]);
-        queue.schedule_in(server_cost + delays.sample(w), w);
-    }
-    Ok(())
+    super::driver::run(ctx, false)
 }
 
 pub fn run_threads(ctx: &mut RunCtx) -> Result<()> {
@@ -108,7 +38,8 @@ pub fn run_threads(ctx: &mut RunCtx) -> Result<()> {
     let records: Mutex<Vec<StepRecord>> = Mutex::new(Vec::new());
     let wall_start = std::time::Instant::now();
     let train_len = ctx.train_set.len() as f64;
-    let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let first_err = FirstError::new();
+    let progress = Progress::new();
 
     // clone what workers need so `ctx` stays exclusively borrowable for the
     // in-flight evals below
@@ -122,8 +53,8 @@ pub fn run_threads(ctx: &mut RunCtx) -> Result<()> {
             let train_set = ctx.train_set.clone();
             let cfg = cfg.clone();
             let partition = partition.clone();
-            let (stop, samples, steps, records, first_err) =
-                (&stop, &samples, &steps, &records, &first_err);
+            let (stop, samples, steps, records, first_err, progress) =
+                (&stop, &samples, &steps, &records, &first_err, &progress);
             scope.spawn(move || {
                 let mut cursor = ShardCursor::new(partition, w, batch_size);
                 let mut params = vec![0.0f32; n];
@@ -147,6 +78,7 @@ pub fn run_threads(ctx: &mut RunCtx) -> Result<()> {
                                 loss,
                                 lr,
                                 staleness: outcome.staleness,
+                                wait: 0.0, // threads race freely: no gate
                             });
                             let done_steps =
                                 cfg.max_steps > 0 && step + 1 >= cfg.max_steps as u64;
@@ -156,41 +88,46 @@ pub fn run_threads(ctx: &mut RunCtx) -> Result<()> {
                             if done_steps || done_passes {
                                 stop.store(true, Ordering::Relaxed);
                             }
+                            // wake the monitor after every push (and after
+                            // the stop transition) so it never busy-waits
+                            progress.bump();
                         }
                         Err(e) => {
-                            let mut slot = first_err.lock().unwrap();
-                            if slot.is_none() {
-                                *slot = Some(e);
-                            }
+                            first_err.set(e);
                             stop.store(true, Ordering::Relaxed);
+                            progress.bump();
                         }
                     }
                 }
+                // a worker observing stop set by a peer still wakes the
+                // monitor so shutdown never waits on a missed signal
+                progress.bump();
             });
         }
 
-        // monitor: run inline evals at epoch boundaries while workers race.
-        // The engine serializes execution, so evals interleave safely.
+        // monitor: park on the progress condvar and run inline evals at
+        // epoch boundaries while workers race. The engine serializes
+        // execution, so evals interleave safely.
         let mut next_eval_passes = cfg.eval_every.max(1) as f64;
+        let mut seen = 0u64;
         while !stop.load(Ordering::Relaxed) {
-            std::thread::sleep(std::time::Duration::from_millis(20));
+            seen = progress.wait_past(seen, &stop);
             let passes = samples.load(Ordering::Relaxed) as f64 / train_len;
-            if cfg.eval_every > 0 && passes >= next_eval_passes {
+            if cfg.eval_every > 0 && passes >= next_eval_passes && !stop.load(Ordering::Relaxed)
+            {
                 let step = steps.load(Ordering::Relaxed);
                 let time = wall_start.elapsed().as_secs_f64();
                 if let Err(e) = ctx.run_eval(step, passes, time) {
-                    let mut slot = first_err.lock().unwrap();
-                    if slot.is_none() {
-                        *slot = Some(e);
-                    }
+                    first_err.set(e);
                     stop.store(true, Ordering::Relaxed);
+                    progress.bump();
                 }
                 next_eval_passes += cfg.eval_every.max(1) as f64;
             }
         }
     });
 
-    if let Some(e) = first_err.into_inner().unwrap() {
+    if let Some(e) = first_err.take() {
         return Err(e);
     }
 

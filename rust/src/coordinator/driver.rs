@@ -1,0 +1,192 @@
+//! The unified event-driven training loop.
+//!
+//! Every simulated-time protocol — sequential, SSGD/DC-SSGD barriers,
+//! SSP/DC-S3GD staleness windows, fully-async ASGD/DC-ASGD — runs through
+//! this single loop: the [`Scheduler`] decides *who computes when* (and who
+//! waits), this driver turns finish events into real gradient computations
+//! and parameter-server commits, and the shared [`RunCtx`] helpers handle
+//! learning-rate schedules, stopping, evals, and metrics. The per-protocol
+//! modules ([`super::sequential`], [`super::sync`], [`super::async_`]) are
+//! thin adapters over this loop.
+
+use super::RunCtx;
+use crate::config::Algorithm;
+use crate::data::{EpochPartition, ShardCursor};
+use crate::metrics::StepRecord;
+use crate::optim::{average_into, DcSsgdAccumulator};
+use crate::sim::{
+    BarrierSync, CommitMode, DelaySampler, FullyAsync, Protocol, Scheduler, StalenessBounded,
+};
+use anyhow::Result;
+
+/// Server-side cost per update in simulated seconds, as a fraction of the
+/// mean worker compute time. The paper reports the DC compensation is a
+/// "lightweight overhead" on the server; we charge it explicitly (and
+/// double it for DC rules) so the wallclock comparison is honest. Barrier
+/// protocols fold once per round on the critical path of the slowest
+/// worker, so (as before this refactor) they carry no per-push charge.
+const SERVER_COST_FRAC: f64 = 0.01;
+
+/// Map an algorithm to its synchronization [`Protocol`].
+pub fn protocol_for(algo: Algorithm, staleness_bound: u64) -> Box<dyn Protocol> {
+    match algo {
+        Algorithm::SyncSgd | Algorithm::DcSyncSgd => Box::new(BarrierSync),
+        Algorithm::Ssp | Algorithm::DcS3gd => {
+            Box::new(StalenessBounded { bound: staleness_bound })
+        }
+        Algorithm::SequentialSgd
+        | Algorithm::Asgd
+        | Algorithm::DcAsgdConst
+        | Algorithm::DcAsgdAdaptive => Box::new(FullyAsync),
+    }
+}
+
+/// Run one experiment under the event-driven scheduler. `wall` records
+/// host wallclock instead of virtual time (sync threads mode); the
+/// schedule itself is always driven by the virtual clock.
+pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
+    let m = ctx.cfg.workers;
+    let n = ctx.ps.n();
+    let algo = ctx.cfg.algorithm;
+    let train_len = ctx.train_set.len() as f64;
+    let partition = EpochPartition::new(ctx.cfg.seed ^ 0x5EED, ctx.train_set.len(), m);
+    let mut cursors: Vec<ShardCursor> =
+        (0..m).map(|w| ShardCursor::new(partition.clone(), w, ctx.batch_size)).collect();
+    let delays = DelaySampler::new(ctx.cfg.delay.clone(), m, ctx.cfg.seed);
+    let server_cost = if algo.is_async() {
+        SERVER_COST_FRAC
+            * ctx.cfg.delay.mean()
+            * if algo.is_delay_compensated() { 2.0 } else { 1.0 }
+    } else {
+        0.0
+    };
+    let mut sched =
+        Scheduler::new(protocol_for(algo, ctx.cfg.staleness_bound as u64), delays, server_cost);
+    let barrier = sched.commit_mode() == CommitMode::Barrier;
+    let dcssgd = algo == Algorithm::DcSyncSgd;
+    let mut acc = DcSsgdAccumulator::new(n, ctx.cfg.lambda0 as f32);
+    let mut avg = vec![0.0f32; n];
+
+    // snapshot buffers: barrier rounds share ONE (all workers compute on
+    // the same model, and the fold paths never read w_bak), immediate
+    // protocols keep one per worker — so SSGD at M=16 still costs a single
+    // parameter copy per round, as before this refactor
+    let snap = |w: usize| if barrier { 0 } else { w };
+    let mut snapshots: Vec<Vec<f32>> = vec![vec![0.0f32; n]; if barrier { 1 } else { m }];
+    for w in sched.start() {
+        if !barrier || w == 0 {
+            ctx.ps.pull(w, &mut snapshots[snap(w)]);
+        }
+    }
+
+    let wall_start = std::time::Instant::now();
+    // barrier round buffer, indexed by worker so the fold order is
+    // worker-deterministic regardless of arrival order
+    let mut round: Vec<Option<(f32, Vec<f32>)>> = vec![None; m];
+    let mut round_n = 0usize;
+    let mut round_wait = 0.0f64;
+    let mut step = 0u64;
+    let mut samples = 0u64;
+    let mut prev_passes = 0.0f64;
+
+    while let Some((t, w)) = sched.next() {
+        let passes = samples as f64 / train_len;
+        if ctx.done(step, passes) {
+            break;
+        }
+        let lr = ctx.lr_at(passes);
+        let batch = ctx.train_set.make_batch(&cursors[w].next_indices());
+        // the gradient is computed on the (possibly stale) snapshot worker
+        // w pulled when the protocol last admitted it
+        let (loss, grads) = ctx.engine.train(&snapshots[snap(w)], &batch)?;
+        let rec_time = if wall { wall_start.elapsed().as_secs_f64() } else { t };
+
+        if barrier {
+            // the round's wait is every worker's barrier stall summed, so
+            // wait totals stay comparable with per-push protocols
+            round_wait += sched.step_wait(w);
+            debug_assert!(round[w].is_none(), "worker {w} pushed twice in one round");
+            round[w] = Some((loss, grads));
+            round_n += 1;
+            let restarted = sched.complete(w);
+            if round_n == m {
+                // the round completes when the slowest worker arrives; fold
+                // the M gradients into ONE global step (paper §1 / appx H)
+                let mut loss_sum = 0.0f32;
+                if dcssgd {
+                    for slot in round.iter_mut() {
+                        let (l, g) = slot.take().expect("incomplete barrier round");
+                        loss_sum += l;
+                        acc.push(g);
+                    }
+                    ctx.ps.apply_with(|wv| acc.apply(wv, lr));
+                } else {
+                    // Paper §1: each worker *adds* its gradient; the barrier
+                    // only synchronizes, so one round applies the SUM of the
+                    // M gradients — the "enlarged mini-batch" effect Table 1
+                    // attributes SSGD's degradation to.
+                    let refs: Vec<&[f32]> = round
+                        .iter()
+                        .map(|s| {
+                            let (l, g) = s.as_ref().expect("incomplete barrier round");
+                            loss_sum += l;
+                            g.as_slice()
+                        })
+                        .collect();
+                    average_into(&mut avg, &refs);
+                    ctx.ps.apply_aggregated(&avg, lr * m as f32);
+                    round.iter_mut().for_each(|s| *s = None);
+                }
+                round_n = 0;
+                samples += (m * ctx.batch_size) as u64;
+                let passes_now = samples as f64 / train_len;
+                ctx.metrics.record_step(StepRecord {
+                    step,
+                    worker: 0,
+                    passes: passes_now,
+                    time: rec_time,
+                    loss: loss_sum / m as f32,
+                    lr,
+                    staleness: 0, // barrier: no delayed gradients
+                    wait: round_wait,
+                });
+                step += 1;
+                round_wait = 0.0;
+                if ctx.should_eval(prev_passes, passes_now, step) {
+                    ctx.run_eval(step, passes_now, rec_time)?;
+                }
+                prev_passes = passes_now;
+            }
+            // one shared pull for the whole round (restarted is either
+            // empty mid-round or all M workers at the round boundary)
+            if !restarted.is_empty() {
+                ctx.ps.pull(0, &mut snapshots[0]);
+            }
+        } else {
+            let outcome = ctx.ps.push(w, &grads, lr);
+            samples += ctx.batch_size as u64;
+            step += 1;
+            let passes_now = samples as f64 / train_len;
+            ctx.metrics.record_step(StepRecord {
+                step: step - 1,
+                worker: w,
+                passes: passes_now,
+                time: rec_time,
+                loss,
+                lr,
+                staleness: outcome.staleness,
+                wait: sched.step_wait(w),
+            });
+            if ctx.should_eval(prev_passes, passes_now, step) {
+                ctx.run_eval(step, passes_now, rec_time)?;
+            }
+            prev_passes = passes_now;
+            // the protocol decides who re-pulls: always `w` itself when
+            // ungated, plus any peers its completion just released
+            for v in sched.complete(w) {
+                ctx.ps.pull(v, &mut snapshots[v]);
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,12 +1,18 @@
 //! Training coordinator: wires the engine, datasets, parameter server, and
 //! delay models into the paper's training protocols.
 //!
+//! All simulated-time protocols run through one event-driven loop
+//! ([`driver`]) parameterized by a [`crate::sim::Protocol`]; the modules
+//! below are thin adapters that pick the protocol:
+//!
 //! * [`sequential`] — single-worker SGD (the paper's accuracy reference),
 //! * [`sync`] — SSGD / DC-SSGD barrier rounds,
-//! * [`async_`] — ASGD / DC-ASGD, as a discrete-event simulation
-//!   (deterministic virtual wallclock; default) or as real racing threads.
+//! * [`async_`] — ASGD / DC-ASGD / SSP / DC-S3GD, as a discrete-event
+//!   simulation (deterministic virtual wallclock; default) or — ASGD
+//!   family only — as real racing threads.
 
 pub mod async_;
+pub mod driver;
 pub mod sequential;
 pub mod sync;
 
@@ -17,7 +23,62 @@ use crate::metrics::{EvalRecord, MetricsLog, TrainReport};
 use crate::ps::{NativeKernel, ParamServer, UpdateKernel};
 use crate::runtime::{start_engine, EngineHandle, XlaUpdateKernel};
 use anyhow::{Context, Result};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// First-error slot shared by racing worker threads and the monitor: the
+/// earliest failure wins and is returned from the training run.
+pub(crate) struct FirstError(Mutex<Option<anyhow::Error>>);
+
+impl FirstError {
+    pub fn new() -> Self {
+        Self(Mutex::new(None))
+    }
+
+    /// Record `e` unless an earlier error already claimed the slot.
+    pub fn set(&self, e: anyhow::Error) {
+        let mut slot = self.0.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(e);
+        }
+    }
+
+    pub fn take(self) -> Option<anyhow::Error> {
+        self.0.into_inner().unwrap()
+    }
+}
+
+/// Push-progress signal for the threads-mode monitor: workers bump a
+/// counter under a lock and notify; the monitor parks on the condvar
+/// instead of busy-sleeping. Notification happens while holding the same
+/// mutex the waiter uses, so wakeups cannot be missed.
+pub(crate) struct Progress {
+    pushes: Mutex<u64>,
+    cvar: Condvar,
+}
+
+impl Progress {
+    pub fn new() -> Self {
+        Self { pushes: Mutex::new(0), cvar: Condvar::new() }
+    }
+
+    /// Bump the counter and wake the monitor.
+    pub fn bump(&self) {
+        let mut g = self.pushes.lock().unwrap();
+        *g += 1;
+        self.cvar.notify_all();
+    }
+
+    /// Park until the counter moves past `seen` or `stop` is set; returns
+    /// the counter value observed on wakeup.
+    pub fn wait_past(&self, seen: u64, stop: &AtomicBool) -> u64 {
+        let mut g = self.pushes.lock().unwrap();
+        while *g <= seen && !stop.load(Ordering::Relaxed) {
+            g = self.cvar.wait(g).unwrap();
+        }
+        *g
+    }
+}
 
 /// Everything a training loop needs.
 pub struct RunCtx {
@@ -159,7 +220,14 @@ impl Trainer {
 
     /// Run to completion; returns the summary report and (optionally)
     /// writes the metrics bundle to `cfg.out_dir`.
-    pub fn run(mut self) -> Result<TrainReport> {
+    pub fn run(self) -> Result<TrainReport> {
+        Ok(self.run_logged()?.0)
+    }
+
+    /// Like [`Self::run`], but also hands back the full metrics log so
+    /// callers (trajectory tests, the SSP-spectrum bench) can compare step
+    /// and eval curves directly instead of re-parsing CSV output.
+    pub fn run_logged(mut self) -> Result<(TrainReport, MetricsLog)> {
         let algo = self.ctx.cfg.algorithm;
         match (algo, self.ctx.cfg.exec_mode) {
             (Algorithm::SequentialSgd, _) => sequential::run(&mut self.ctx)?,
@@ -201,6 +269,6 @@ impl Trainer {
                 &self.ctx.cfg.to_json(),
             )?;
         }
-        Ok(report)
+        Ok((report, self.ctx.metrics))
     }
 }

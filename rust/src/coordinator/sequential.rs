@@ -1,55 +1,14 @@
 //! Sequential SGD: the paper's single-worker accuracy reference.
 //!
-//! Runs under the virtual clock too (one worker, no overlap), so its
-//! wallclock curve lands on the same simulated-seconds axis as the parallel
-//! algorithms in Fig. 3.
+//! A thin adapter over the unified event-driven loop ([`super::driver`]):
+//! one worker, never gated, immediate commits. It runs under the virtual
+//! clock too (no overlap to simulate), so its wallclock curve lands on the
+//! same simulated-seconds axis as the parallel algorithms in Fig. 3.
 
 use super::RunCtx;
-use crate::data::{EpochPartition, ShardCursor};
-use crate::metrics::StepRecord;
-use crate::sim::DelaySampler;
 use anyhow::Result;
 
 pub fn run(ctx: &mut RunCtx) -> Result<()> {
-    let n = ctx.ps.n();
-    let mut params = vec![0.0f32; n];
-    let partition = EpochPartition::new(ctx.cfg.seed ^ 0x5EED, ctx.train_set.len(), 1);
-    let mut cursor = ShardCursor::new(partition, 0, ctx.batch_size);
-    let mut delays = DelaySampler::new(ctx.cfg.delay.clone(), 1, ctx.cfg.seed);
-
-    let mut step = 0u64;
-    let mut samples = 0u64;
-    let mut time = 0.0f64;
-    let mut prev_passes = 0.0f64;
-
-    loop {
-        let passes = samples as f64 / ctx.train_set.len() as f64;
-        if ctx.done(step, passes) {
-            break;
-        }
-        let lr = ctx.lr_at(passes);
-        ctx.ps.pull(0, &mut params);
-        let batch = ctx.train_set.make_batch(&cursor.next_indices());
-        let (loss, grads) = ctx.engine.train(&params, &batch)?;
-        let outcome = ctx.ps.push(0, &grads, lr);
-        debug_assert_eq!(outcome.staleness, 0);
-        time += delays.sample(0);
-        samples += ctx.batch_size as u64;
-        let passes_now = samples as f64 / ctx.train_set.len() as f64;
-        ctx.metrics.record_step(StepRecord {
-            step,
-            worker: 0,
-            passes: passes_now,
-            time,
-            loss,
-            lr,
-            staleness: 0,
-        });
-        step += 1;
-        if ctx.should_eval(prev_passes, passes_now, step) {
-            ctx.run_eval(step, passes_now, time)?;
-        }
-        prev_passes = passes_now;
-    }
-    Ok(())
+    debug_assert_eq!(ctx.cfg.workers, 1, "sequential SGD is the M=1 protocol");
+    super::driver::run(ctx, false)
 }

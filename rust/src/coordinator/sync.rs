@@ -1,11 +1,12 @@
 //! Synchronous SGD (barrier) and DC-SSGD (appendix H).
 //!
-//! Each round: all M workers compute gradients on the *same* model
-//! snapshot; the barrier completes when the slowest finishes; the server
-//! folds the M gradients into one step:
+//! A thin adapter over the unified event-driven loop ([`super::driver`])
+//! with the [`crate::sim::BarrierSync`] protocol: all M workers compute on
+//! the same snapshot, the round completes when the slowest finishes, and
+//! the server folds the M gradients into one step —
 //!
-//! * **SSGD**: average, one SGD step with the per-worker learning rate
-//!   (the effective large batch is M×B),
+//! * **SSGD**: average, one SGD step at `M * lr` (the effective large
+//!   batch is M×B),
 //! * **DC-SSGD**: sequential delay-compensated fold (Eqn. 110/111),
 //!   ordered by ascending gradient norm.
 //!
@@ -15,84 +16,9 @@
 //! engine (1-core testbed); wall time is measured, not simulated.
 
 use super::RunCtx;
-use crate::config::{Algorithm, ExecMode};
-use crate::data::{EpochPartition, ShardCursor};
-use crate::metrics::StepRecord;
-use crate::optim::{average_into, DcSsgdAccumulator};
-use crate::sim::DelaySampler;
+use crate::config::ExecMode;
 use anyhow::Result;
 
 pub fn run(ctx: &mut RunCtx, mode: ExecMode) -> Result<()> {
-    let m = ctx.cfg.workers;
-    let n = ctx.ps.n();
-    let partition = EpochPartition::new(ctx.cfg.seed ^ 0x5EED, ctx.train_set.len(), m);
-    let mut cursors: Vec<ShardCursor> =
-        (0..m).map(|w| ShardCursor::new(partition.clone(), w, ctx.batch_size)).collect();
-    let mut delays = DelaySampler::new(ctx.cfg.delay.clone(), m, ctx.cfg.seed);
-    let use_wall = mode == ExecMode::Threads;
-    let wall_start = std::time::Instant::now();
-
-    let dcssgd = ctx.cfg.algorithm == Algorithm::DcSyncSgd;
-    let mut acc = DcSsgdAccumulator::new(n, ctx.cfg.lambda0 as f32);
-    let mut params = vec![0.0f32; n];
-    let mut avg = vec![0.0f32; n];
-
-    let mut step = 0u64; // global rounds
-    let mut samples = 0u64;
-    let mut time = 0.0f64;
-    let mut prev_passes = 0.0f64;
-
-    loop {
-        let passes = samples as f64 / ctx.train_set.len() as f64;
-        if ctx.done(step, passes) {
-            break;
-        }
-        let lr = ctx.lr_at(passes);
-        // all workers share the same snapshot at the barrier
-        ctx.ps.pull(0, &mut params);
-        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(m);
-        let mut loss_sum = 0.0f32;
-        let mut round_time = 0.0f64;
-        for w in 0..m {
-            let batch = ctx.train_set.make_batch(&cursors[w].next_indices());
-            let (loss, g) = ctx.engine.train(&params, &batch)?;
-            loss_sum += loss;
-            round_time = round_time.max(delays.sample(w)); // barrier: slowest wins
-            grads.push(g);
-        }
-        if dcssgd {
-            for g in grads {
-                acc.push(g);
-            }
-            ctx.ps.apply_with(|w| acc.apply(w, lr));
-        } else {
-            // Paper §1: each worker *adds* its gradient to the global model;
-            // the barrier only synchronizes. One round therefore applies the
-            // SUM of the M gradients (= average at M*lr), making the
-            // effective step M x larger — the "enlarged mini-batch" effect
-            // Table 1 attributes SSGD's degradation to.
-            let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
-            average_into(&mut avg, &refs);
-            ctx.ps.apply_aggregated(&avg, lr * m as f32);
-        }
-        time += round_time;
-        samples += (m * ctx.batch_size) as u64;
-        let passes_now = samples as f64 / ctx.train_set.len() as f64;
-        let rec_time = if use_wall { wall_start.elapsed().as_secs_f64() } else { time };
-        ctx.metrics.record_step(StepRecord {
-            step,
-            worker: 0,
-            passes: passes_now,
-            time: rec_time,
-            loss: loss_sum / m as f32,
-            lr,
-            staleness: 0, // barrier: no delayed gradients
-        });
-        step += 1;
-        if ctx.should_eval(prev_passes, passes_now, step) {
-            ctx.run_eval(step, passes_now, rec_time)?;
-        }
-        prev_passes = passes_now;
-    }
-    Ok(())
+    super::driver::run(ctx, mode == ExecMode::Threads)
 }

@@ -13,12 +13,38 @@
 //!   delay-compensated update rule.
 //! * [`optim`] implements the update rules: sequential SGD, momentum,
 //!   ASGD, DC-ASGD-c, DC-ASGD-a, and the appendix-H DC-SSGD.
-//! * [`coordinator`] wires workers and server together in three modes:
-//!   sequential, synchronous (barrier), and asynchronous (threads), plus a
-//!   discrete-event simulated-time mode in [`sim`] that reproduces the
-//!   paper's wallclock figures deterministically.
+//! * [`sim`] is the discrete-event substrate: a virtual clock, worker
+//!   compute-time models, and the event-driven [`sim::Scheduler`] that
+//!   runs the per-worker pull → compute → push lifecycle under a
+//!   pluggable synchronization [`sim::Protocol`].
+//! * [`coordinator`] drives every protocol through one unified loop
+//!   ([`coordinator::driver`]); `exec_mode = threads` additionally offers a
+//!   real-OS-threads path for the ASGD family.
 //! * [`data`] synthesizes the workloads (CIFAR-like, ImageNet-like,
 //!   LM corpus) — see DESIGN.md §5 for the substitution rationale.
+//!
+//! ## Protocol matrix
+//!
+//! The paper's comparison is a spectrum of synchronization protocols; each
+//! maps to a [`sim::Protocol`] plus an update rule on the server:
+//!
+//! | algorithm        | protocol                        | update rule on push      |
+//! |------------------|---------------------------------|--------------------------|
+//! | `sgd` (M=1)      | [`sim::FullyAsync`], one worker | plain SGD                |
+//! | `ssgd`           | [`sim::BarrierSync`]            | sum of M gradients/round |
+//! | `dc-ssgd`        | [`sim::BarrierSync`]            | appendix-H DC fold/round |
+//! | `ssp` (bound s)  | [`sim::StalenessBounded`]       | plain SGD                |
+//! | `dc-s3gd` (s)    | [`sim::StalenessBounded`]       | DC vs `w_bak` (Eqn. 10)  |
+//! | `asgd`           | [`sim::FullyAsync`]             | plain SGD                |
+//! | `dc-asgd-c`      | [`sim::FullyAsync`]             | DC, constant lambda      |
+//! | `dc-asgd-a`      | [`sim::FullyAsync`]             | DC, adaptive lambda      |
+//!
+//! SSP's `staleness_bound` sweeps the whole axis: `s = 0` reproduces the
+//! SSGD round structure, `s -> inf` reproduces ASGD bit-for-bit (bench
+//! `ssp_spectrum` sweeps it). The clock gate admits a worker only while it
+//! is at most `s` steps ahead of the slowest (observed drift <= s + 1 with
+//! the in-flight step), capping observable version staleness at
+//! `(M-1)(2s+1)`.
 //!
 //! ## Quickstart
 //!

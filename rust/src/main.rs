@@ -43,10 +43,11 @@ fn usage() {
          common options:\n\
            --preset quickstart|cifar|imagenet|lm   base config\n\
            --config PATH                           TOML config file\n\
-           --algo sgd|ssgd|dc-ssgd|asgd|dc-asgd-c|dc-asgd-a\n\
+           --algo sgd|ssgd|dc-ssgd|asgd|dc-asgd-c|dc-asgd-a|ssp|dc-s3gd\n\
            --workers N          --epochs N         --max-steps N\n\
            --lr F               --lambda0 F        --ms-momentum F\n\
            --momentum F         --seed N           --shards N\n\
+           --staleness-bound N  (SSP/DC-S3GD: max local-step drift)\n\
            --mode sim|threads   --backend native|xla\n\
            --train-size N       --test-size N      --out DIR\n\
            --tag NAME           --verbose\n\
@@ -93,6 +94,9 @@ fn build_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
     }
     if let Some(v) = args.f64_opt("lambda0")? {
         cfg.lambda0 = v;
+    }
+    if let Some(v) = args.usize_opt("staleness-bound")? {
+        cfg.staleness_bound = v;
     }
     if let Some(v) = args.f64_opt("ms-momentum")? {
         cfg.ms_momentum = v;

@@ -2,7 +2,6 @@
 //! the summary report returned by the trainer.
 
 use crate::util::json::Json;
-use crate::util::stats::{percentile, Running};
 use std::io::Write;
 use std::path::Path;
 use std::time::Instant;
@@ -21,6 +20,10 @@ pub struct StepRecord {
     /// Delay tau observed by this update (global steps since the worker's
     /// pull).
     pub staleness: u64,
+    /// Gate/barrier wait charged to this step (simulated seconds; 0 for
+    /// ungated protocols and in threads mode). Barrier rounds record the
+    /// SUM of all workers' stalls so totals compare across protocols.
+    pub wait: f64,
 }
 
 /// One test-set evaluation.
@@ -34,6 +37,10 @@ pub struct EvalRecord {
     pub test_error: f32,
 }
 
+/// Internal cap on tracked staleness values; anything above folds into the
+/// last bucket (query-time caps fold further down from here).
+const STALE_TRACK_CAP: usize = 1024;
+
 /// Collected metrics of one training run.
 #[derive(Debug)]
 pub struct MetricsLog {
@@ -43,6 +50,15 @@ pub struct MetricsLog {
     /// Downsample step records: keep one in `keep_every` (loss curves don't
     /// need every update at scale). Eval records are always kept.
     keep_every: u64,
+    /// Gate-wait total over ALL steps, accumulated before downsampling so
+    /// `keep_every` never skews it.
+    wait_accum: f64,
+    /// Staleness counts over ALL steps (index = tau, tail folded at
+    /// [`STALE_TRACK_CAP`]), likewise downsampling-proof.
+    stale_counts: Vec<u64>,
+    /// Exact running maximum staleness (the folded tail would otherwise
+    /// clamp heavy-tail outliers to the cap).
+    stale_max: u64,
 }
 
 impl Default for MetricsLog {
@@ -58,10 +74,22 @@ impl MetricsLog {
             evals: Vec::new(),
             started: Instant::now(),
             keep_every: keep_every.max(1),
+            wait_accum: 0.0,
+            stale_counts: Vec::new(),
+            stale_max: 0,
         }
     }
 
     pub fn record_step(&mut self, r: StepRecord) {
+        // wait/staleness aggregates must cover every step, not the
+        // downsampled curve, or keep_every silently shrinks them
+        self.wait_accum += r.wait;
+        self.stale_max = self.stale_max.max(r.staleness);
+        let tau = (r.staleness as usize).min(STALE_TRACK_CAP);
+        if tau >= self.stale_counts.len() {
+            self.stale_counts.resize(tau + 1, 0);
+        }
+        self.stale_counts[tau] += 1;
         if r.step % self.keep_every == 0 {
             self.steps.push(r);
         }
@@ -84,28 +112,67 @@ impl MetricsLog {
         Some(tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32)
     }
 
+    /// (mean, p99, max) of observed staleness over EVERY step, computed
+    /// from the downsampling-proof counts so `keep_every` cannot drop a
+    /// spike (p99 is nearest-rank over the folded counts; max is exact).
     pub fn staleness_summary(&self) -> (f64, f64, u64) {
-        let mut run = Running::new();
-        let mut max = 0u64;
-        for r in &self.steps {
-            run.push(r.staleness as f64);
-            max = max.max(r.staleness);
+        let n: u64 = self.stale_counts.iter().sum();
+        if n == 0 {
+            return (0.0, 0.0, 0);
         }
-        let samples: Vec<f64> = self.steps.iter().map(|r| r.staleness as f64).collect();
-        let p99 = if samples.is_empty() { 0.0 } else { percentile(&samples, 99.0) };
-        (run.mean(), p99, max)
+        let mut sum = 0.0f64;
+        for (tau, &c) in self.stale_counts.iter().enumerate() {
+            if c > 0 {
+                sum += tau as f64 * c as f64;
+            }
+        }
+        let rank = ((n as f64) * 0.99).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        let mut p99 = 0.0f64;
+        for (tau, &c) in self.stale_counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                p99 = tau as f64;
+                break;
+            }
+        }
+        (sum / n as f64, p99, self.stale_max)
+    }
+
+    /// Histogram of observed staleness over EVERY step (not just the
+    /// downsampled curve): `hist[tau]` counts steps that observed delay
+    /// `tau`. Values above `cap` fold into the last bucket so a single
+    /// outlier cannot blow up the vector.
+    pub fn staleness_histogram(&self, cap: usize) -> Vec<u64> {
+        let top = self
+            .stale_counts
+            .iter()
+            .rposition(|&c| c > 0)
+            .map(|t| t.min(cap))
+            .unwrap_or(0);
+        let mut hist = vec![0u64; top + 1];
+        for (tau, &c) in self.stale_counts.iter().enumerate() {
+            hist[tau.min(cap).min(top)] += c;
+        }
+        hist
+    }
+
+    /// Total simulated seconds workers spent gated (barrier or staleness
+    /// bound) across EVERY step, immune to `keep_every` downsampling.
+    pub fn wait_total(&self) -> f64 {
+        self.wait_accum
     }
 
     // ------------------------------------------------------------- output
 
     pub fn write_steps_csv(&self, path: &Path) -> std::io::Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        writeln!(f, "step,worker,passes,time,loss,lr,staleness")?;
+        writeln!(f, "step,worker,passes,time,loss,lr,staleness,wait")?;
         for r in &self.steps {
             writeln!(
                 f,
-                "{},{},{:.6},{:.6},{:.6},{:.6},{}",
-                r.step, r.worker, r.passes, r.time, r.loss, r.lr, r.staleness
+                "{},{},{:.6},{:.6},{:.6},{:.6},{},{:.6}",
+                r.step, r.worker, r.passes, r.time, r.loss, r.lr, r.staleness, r.wait
             )?;
         }
         Ok(())
@@ -126,6 +193,7 @@ impl MetricsLog {
 
     pub fn report(&self) -> TrainReport {
         let (stale_mean, stale_p99, stale_max) = self.staleness_summary();
+        let wait_total = self.wait_total();
         let last = self.evals.last();
         let best = self
             .evals
@@ -149,6 +217,8 @@ impl MetricsLog {
             staleness_mean: stale_mean,
             staleness_p99: stale_p99,
             staleness_max: stale_max,
+            wait_total,
+            staleness_hist: self.staleness_histogram(64),
         }
     }
 }
@@ -169,6 +239,11 @@ pub struct TrainReport {
     pub staleness_mean: f64,
     pub staleness_p99: f64,
     pub staleness_max: u64,
+    /// Total simulated seconds lost to protocol gates (barrier / SSP).
+    pub wait_total: f64,
+    /// `staleness_hist[tau]` = steps that observed delay tau (tail folded
+    /// into the last bucket).
+    pub staleness_hist: Vec<u64>,
 }
 
 impl TrainReport {
@@ -185,6 +260,11 @@ impl TrainReport {
             ("staleness_mean", self.staleness_mean.into()),
             ("staleness_p99", self.staleness_p99.into()),
             ("staleness_max", (self.staleness_max as i64).into()),
+            ("wait_total", self.wait_total.into()),
+            (
+                "staleness_hist",
+                Json::arr(self.staleness_hist.iter().map(|&c| Json::from(c as i64))),
+            ),
         ])
     }
 }
@@ -222,6 +302,7 @@ mod tests {
                 loss: 2.0 - i as f32 * 0.1,
                 lr: 0.1,
                 staleness: i % 4,
+                wait: 0.25,
             });
         }
         log.record_eval(EvalRecord { step: 5, passes: 0.5, time: 5.0, test_loss: 1.5, test_error: 0.30 });
@@ -239,6 +320,31 @@ mod tests {
         assert_eq!(r.passes, 0.9);
         assert!(r.staleness_mean > 0.0);
         assert!(r.staleness_max <= 3);
+        assert!((r.wait_total - 10.0 * 0.25).abs() < 1e-9);
+        // staleness pattern i % 4 over 10 steps: tau 0,1 appear 3x; 2,3 2x
+        assert_eq!(r.staleness_hist, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn staleness_histogram_folds_tail() {
+        let mut log = MetricsLog::new(1);
+        for &tau in &[0u64, 1, 1, 500] {
+            log.record_step(StepRecord {
+                step: tau,
+                worker: 0,
+                passes: 0.0,
+                time: 0.0,
+                loss: 0.0,
+                lr: 0.0,
+                staleness: tau,
+                wait: 0.0,
+            });
+        }
+        let hist = log.staleness_histogram(8);
+        assert_eq!(hist.len(), 9);
+        assert_eq!(hist[0], 1);
+        assert_eq!(hist[1], 2);
+        assert_eq!(hist[8], 1, "tau=500 folds into the cap bucket");
     }
 
     #[test]
@@ -259,10 +365,14 @@ mod tests {
                 time: 0.0,
                 loss: 0.0,
                 lr: 0.0,
-                staleness: 0,
+                staleness: 1,
+                wait: 0.5,
             });
         }
         assert_eq!(log.steps.len(), 5); // steps 0,4,8,12,16
+        // aggregates must cover all 20 steps, not the kept 5
+        assert!((log.wait_total() - 20.0 * 0.5).abs() < 1e-9);
+        assert_eq!(log.staleness_histogram(8), vec![0, 20]);
     }
 
     #[test]

@@ -107,6 +107,8 @@ pub struct ParamServer {
     version: AtomicU64,
     /// Version at each worker's last pull.
     pull_version: Vec<AtomicU64>,
+    /// Pulls served per worker (diagnostic gate/churn accounting).
+    pull_count: Vec<AtomicU64>,
     /// Scratch buffers for the whole-vector (XLA) path.
     whole_scratch: std::sync::Mutex<WholeScratch>,
 }
@@ -143,6 +145,7 @@ impl ParamServer {
             kernel,
             version: AtomicU64::new(0),
             pull_version: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            pull_count: (0..workers).map(|_| AtomicU64::new(0)).collect(),
             whole_scratch: std::sync::Mutex::new(WholeScratch::default()),
         })
     }
@@ -183,6 +186,23 @@ impl ParamServer {
         // observe here; staleness stays an upper-bound-accurate counter.
         let v = self.version.load(Ordering::SeqCst);
         self.pull_version[worker].store(v, Ordering::SeqCst);
+        self.pull_count[worker].fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Staleness worker `m` would observe if it pushed right now: global
+    /// updates applied since its last pull. Diagnostic accessor (the SSP
+    /// gate itself runs on the scheduler's logical clocks, not PS state):
+    /// lets tests and external monitors inspect in-flight delay without
+    /// perturbing anything.
+    pub fn pending_staleness(&self, worker: usize) -> u64 {
+        let v = self.version.load(Ordering::SeqCst);
+        v.saturating_sub(self.pull_version[worker].load(Ordering::SeqCst))
+    }
+
+    /// Pulls served to worker `m` so far (diagnostic counter for gate/churn
+    /// monitoring alongside [`Self::pending_staleness`]).
+    pub fn pull_count(&self, worker: usize) -> u64 {
+        self.pull_count[worker].load(Ordering::SeqCst)
     }
 
     /// Model snapshot without backup side-effects (evaluation).
@@ -196,7 +216,7 @@ impl ParamServer {
         assert_eq!(g.len(), self.n());
         let h = self.hyper;
         match self.algo {
-            Algorithm::Asgd | Algorithm::SequentialSgd | Algorithm::SyncSgd => {
+            Algorithm::Asgd | Algorithm::SequentialSgd | Algorithm::SyncSgd | Algorithm::Ssp => {
                 if h.momentum > 0.0 {
                     self.store.for_each_shard(|s, range| {
                         optim::momentum_step(&mut s.w, &mut s.vel, &g[range], lr, h.momentum);
@@ -209,7 +229,7 @@ impl ParamServer {
                     });
                 }
             }
-            Algorithm::DcAsgdConst => {
+            Algorithm::DcAsgdConst | Algorithm::DcS3gd => {
                 if h.momentum > 0.0 {
                     self.store.for_each_shard(|s, range| {
                         let (w, vel, bak) = (&mut s.w, &mut s.vel, &s.bak[worker]);
@@ -408,6 +428,55 @@ mod tests {
         let out = ps.push(0, &g, 0.1);
         assert_eq!(out.staleness, 2);
         assert_eq!(out.version, 3);
+    }
+
+    #[test]
+    fn pending_staleness_and_pull_counts_track_activity() {
+        let ps = server(Algorithm::Asgd, 32, 2, 1);
+        let mut w = vec![0.0; 32];
+        ps.pull(0, &mut w);
+        ps.pull(1, &mut w);
+        assert_eq!(ps.pull_count(0), 1);
+        assert_eq!(ps.pending_staleness(0), 0);
+        let g = grad(8, 32);
+        ps.push(1, &g, 0.1);
+        ps.pull(1, &mut w);
+        ps.push(1, &g, 0.1);
+        assert_eq!(ps.pending_staleness(0), 2, "two pushes since worker 0's pull");
+        assert_eq!(ps.pull_count(1), 2);
+    }
+
+    #[test]
+    fn ssp_push_is_plain_sgd_and_dcs3gd_is_dc() {
+        let n = 64;
+        let g = grad(9, n);
+        // SSP applies the plain SGD rule
+        let ps = server(Algorithm::Ssp, n, 2, 2);
+        let mut w = vec![0.0; n];
+        ps.pull(0, &mut w);
+        ps.push(0, &g, 0.2);
+        let mut expect = w.clone();
+        optim::sgd_step(&mut expect, &g, 0.2);
+        let mut got = vec![0.0; n];
+        ps.snapshot(&mut got);
+        assert_eq!(got, expect);
+
+        // DC-S3GD compensates against the worker's own backup
+        let ps = server(Algorithm::DcS3gd, n, 2, 2);
+        let mut w0 = vec![0.0; n];
+        ps.pull(0, &mut w0);
+        ps.pull(1, &mut w);
+        ps.push(1, &grad(10, n), 0.2); // move the model under worker 0
+        let mut now = vec![0.0; n];
+        ps.snapshot(&mut now);
+        ps.push(0, &g, 0.2);
+        let mut expect = now.clone();
+        optim::dc_step(&mut expect, &g, &w0, 0.2, 0.5);
+        let mut got = vec![0.0; n];
+        ps.snapshot(&mut got);
+        for (a, b) in got.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-6);
+        }
     }
 
     #[test]

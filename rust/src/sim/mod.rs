@@ -4,11 +4,17 @@
 //! *schedule* — who computes when, who waits at which barrier — under the
 //! delay models in [`delay`]. Gradient values are computed for real (via the
 //! PJRT engine); only *time* is simulated, so runs are deterministic and
-//! hardware-independent.
+//! hardware-independent. The schedule itself is produced by the
+//! event-driven [`scheduler`]: a per-worker pull → compute → push lifecycle
+//! gated by a pluggable synchronization [`Protocol`].
 
 pub mod delay;
+pub mod scheduler;
 
 pub use delay::{CommModel, DelaySampler};
+pub use scheduler::{
+    BarrierSync, CommitMode, FullyAsync, Protocol, Scheduler, StalenessBounded,
+};
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;

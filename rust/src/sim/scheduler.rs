@@ -1,0 +1,376 @@
+//! Event-driven scheduler: the per-worker lifecycle (pull → compute → push)
+//! under a pluggable synchronization [`Protocol`].
+//!
+//! The scheduler owns *time* (the [`EventQueue`] virtual clock), the
+//! per-worker compute-duration streams ([`DelaySampler`]), the per-worker
+//! logical clocks (completed local steps), and the wait/gate accounting.
+//! It deliberately knows nothing about gradients, models, or the parameter
+//! server: the coordinator drives it event-at-a-time —
+//!
+//! ```text
+//! for w in sched.start()          { pull snapshot for w }
+//! while let Some((t, w)) = sched.next() {
+//!     compute gradient on w's snapshot; commit it (push or barrier fold);
+//!     for v in sched.complete(w)  { pull fresh snapshot for v }
+//! }
+//! ```
+//!
+//! — which keeps the core testable without any compiled artifacts (see the
+//! property tests in `tests/properties.rs`).
+//!
+//! A [`Protocol`] decides, each time a worker could begin a new compute,
+//! whether it may proceed or must wait, and whether finished gradients
+//! commit immediately (one global step per push) or fold at a barrier
+//! (one global step per round). The paper's sync↔async spectrum becomes a
+//! one-parameter family:
+//!
+//! | protocol                  | gate (clock drift)     | commit    |
+//! |---------------------------|------------------------|-----------|
+//! | [`FullyAsync`]            | never waits            | immediate |
+//! | [`StalenessBounded`] (s)  | `clock - min <= s`     | immediate |
+//! | [`BarrierSync`]           | all clocks equal       | barrier   |
+//!
+//! `StalenessBounded` is stale-synchronous parallel (SSP): with `s = 0`
+//! every worker computes exactly once per round on the same snapshot (the
+//! SSGD schedule); with `s` at least the largest drift the delay model can
+//! produce it never gates and the schedule is bit-identical to ASGD. The
+//! clock gate admits a worker only while it is at most `s` steps ahead of
+//! the slowest; since an admitted step completes before re-checking, the
+//! observed fastest-slowest drift is at most `s + 1`, which in turn bounds
+//! the version staleness any push can observe by
+//! `(workers - 1) * (2s + 1)` (see [`StalenessBounded::version_bound`]).
+
+use super::delay::DelaySampler;
+use super::EventQueue;
+
+/// How finished gradients become global steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommitMode {
+    /// Every finished compute is pushed as its own global step.
+    Immediate,
+    /// Finished computes are buffered; the round commits as one step when
+    /// the last worker arrives.
+    Barrier,
+}
+
+/// A synchronization protocol: the policy half of the scheduler.
+///
+/// `clocks[w]` is the number of computes worker `w` has *completed*.
+/// `may_start` is consulted every time worker `worker` is idle and could
+/// begin another compute; returning `false` leaves it gated until another
+/// worker's completion changes the clock vector.
+pub trait Protocol: Send {
+    fn name(&self) -> &'static str;
+    fn commit_mode(&self) -> CommitMode {
+        CommitMode::Immediate
+    }
+    fn may_start(&self, worker: usize, clocks: &[u64]) -> bool;
+}
+
+/// ASGD-family schedule: nobody ever waits.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FullyAsync;
+
+impl Protocol for FullyAsync {
+    fn name(&self) -> &'static str {
+        "async"
+    }
+    fn may_start(&self, _worker: usize, _clocks: &[u64]) -> bool {
+        true
+    }
+}
+
+/// SSGD-family schedule: a full barrier every round; gradients fold into a
+/// single aggregated step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BarrierSync;
+
+impl Protocol for BarrierSync {
+    fn name(&self) -> &'static str {
+        "barrier"
+    }
+    fn commit_mode(&self) -> CommitMode {
+        CommitMode::Barrier
+    }
+    fn may_start(&self, worker: usize, clocks: &[u64]) -> bool {
+        let c = clocks[worker];
+        clocks.iter().all(|&k| k == c)
+    }
+}
+
+/// Stale-synchronous parallel: a worker may run at most `bound` local steps
+/// ahead of the slowest worker.
+#[derive(Clone, Copy, Debug)]
+pub struct StalenessBounded {
+    pub bound: u64,
+}
+
+impl StalenessBounded {
+    /// Upper bound on the version staleness (intervening pushes between a
+    /// worker's pull and its push) this gate permits: while a worker is in
+    /// flight at clock `c`, every peer's clock lives in `[c - s, c + s + 1]`,
+    /// so each peer contributes at most `2s + 1` pushes.
+    pub fn version_bound(&self, workers: usize) -> u64 {
+        (workers.saturating_sub(1) as u64)
+            .saturating_mul(self.bound.saturating_mul(2).saturating_add(1))
+    }
+}
+
+impl Protocol for StalenessBounded {
+    fn name(&self) -> &'static str {
+        "ssp"
+    }
+    fn may_start(&self, worker: usize, clocks: &[u64]) -> bool {
+        let min = clocks.iter().copied().min().unwrap_or(0);
+        clocks[worker] - min <= self.bound
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum WorkerState {
+    Computing,
+    /// Finished its last compute; gated by the protocol since the stored
+    /// virtual time.
+    Blocked,
+}
+
+/// The event-driven scheduler core. See the module docs for the driving
+/// contract.
+pub struct Scheduler {
+    protocol: Box<dyn Protocol>,
+    queue: EventQueue<usize>,
+    delays: DelaySampler,
+    clocks: Vec<u64>,
+    state: Vec<WorkerState>,
+    blocked_since: Vec<f64>,
+    /// Gate wait charged to each worker's *current/most recent* compute.
+    step_wait: Vec<f64>,
+    wait_total: Vec<f64>,
+    /// Simulated server-side cost charged before each compute after the
+    /// first (the paper's "lightweight overhead" of the update rule).
+    server_cost: f64,
+    workers: usize,
+    started: bool,
+}
+
+impl Scheduler {
+    pub fn new(protocol: Box<dyn Protocol>, delays: DelaySampler, server_cost: f64) -> Self {
+        let workers = delays.workers();
+        assert!(workers >= 1);
+        Self {
+            protocol,
+            queue: EventQueue::new(),
+            delays,
+            clocks: vec![0; workers],
+            state: vec![WorkerState::Blocked; workers],
+            blocked_since: vec![0.0; workers],
+            step_wait: vec![0.0; workers],
+            wait_total: vec![0.0; workers],
+            server_cost,
+            workers,
+            started: false,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+    pub fn commit_mode(&self) -> CommitMode {
+        self.protocol.commit_mode()
+    }
+    pub fn protocol_name(&self) -> &'static str {
+        self.protocol.name()
+    }
+    /// Current virtual time (time of the last popped finish event).
+    pub fn now(&self) -> f64 {
+        self.queue.now()
+    }
+    /// Completed local steps per worker.
+    pub fn clocks(&self) -> &[u64] {
+        &self.clocks
+    }
+    /// Total gate-wait accumulated per worker (simulated seconds).
+    pub fn wait_totals(&self) -> &[f64] {
+        &self.wait_total
+    }
+    /// Gate wait that preceded `worker`'s current/most recent compute.
+    pub fn step_wait(&self, worker: usize) -> f64 {
+        self.step_wait[worker]
+    }
+
+    /// Launch every worker at t = 0 (no protocol can gate clock-0 starts).
+    /// Returns the workers that must pull a snapshot, in worker order. The
+    /// first compute carries no server cost, matching a cold cluster start.
+    pub fn start(&mut self) -> Vec<usize> {
+        assert!(!self.started, "scheduler already started");
+        self.started = true;
+        for w in 0..self.workers {
+            self.state[w] = WorkerState::Computing;
+            let d = self.delays.sample(w);
+            self.queue.schedule_in(d, w);
+        }
+        (0..self.workers).collect()
+    }
+
+    /// Pop the next finish event: `(time, worker)` whose compute is done.
+    pub fn next(&mut self) -> Option<(f64, usize)> {
+        self.queue.pop()
+    }
+
+    /// Mark `worker`'s compute complete (after the caller committed or
+    /// buffered its gradient) and restart every worker the protocol now
+    /// admits. Returns the restarted workers in worker order; the caller
+    /// must pull a fresh snapshot for each before its next finish event.
+    pub fn complete(&mut self, worker: usize) -> Vec<usize> {
+        debug_assert_eq!(self.state[worker], WorkerState::Computing);
+        let now = self.queue.now();
+        self.clocks[worker] += 1;
+        self.state[worker] = WorkerState::Blocked;
+        self.blocked_since[worker] = now;
+        let mut restarted = Vec::new();
+        for v in 0..self.workers {
+            if self.state[v] == WorkerState::Blocked && self.protocol.may_start(v, &self.clocks) {
+                let waited = now - self.blocked_since[v];
+                self.step_wait[v] = waited;
+                self.wait_total[v] += waited;
+                self.state[v] = WorkerState::Computing;
+                let d = self.delays.sample(v);
+                self.queue.schedule_in(self.server_cost + d, v);
+                restarted.push(v);
+            }
+        }
+        restarted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DelayModel;
+
+    fn sampler(workers: usize, seed: u64) -> DelaySampler {
+        DelaySampler::new(DelayModel::Uniform { mean: 1.0, jitter: 0.4 }, workers, seed)
+    }
+
+    /// Drive the scheduler with a synthetic push counter, returning the
+    /// observed per-push version staleness and the max clock drift.
+    fn drive(protocol: Box<dyn Protocol>, workers: usize, steps: usize, seed: u64) -> (Vec<u64>, u64) {
+        let mut sched = Scheduler::new(protocol, sampler(workers, seed), 0.01);
+        let mut version = 0u64;
+        let mut pulled_at = vec![0u64; workers];
+        for w in sched.start() {
+            pulled_at[w] = version;
+        }
+        let mut staleness = Vec::new();
+        let mut max_drift = 0u64;
+        for _ in 0..steps {
+            let (_, w) = sched.next().expect("scheduler ran dry");
+            staleness.push(version - pulled_at[w]);
+            version += 1;
+            for v in sched.complete(w) {
+                pulled_at[v] = version;
+            }
+            let min = sched.clocks().iter().min().unwrap();
+            let max = sched.clocks().iter().max().unwrap();
+            max_drift = max_drift.max(max - min);
+        }
+        (staleness, max_drift)
+    }
+
+    #[test]
+    fn fully_async_never_waits() {
+        let mut sched = Scheduler::new(Box::new(FullyAsync), sampler(4, 7), 0.0);
+        sched.start();
+        for _ in 0..100 {
+            let (_, w) = sched.next().unwrap();
+            let restarted = sched.complete(w);
+            assert_eq!(restarted, vec![w], "only the finishing worker restarts");
+            assert_eq!(sched.step_wait(w), 0.0);
+        }
+        assert!(sched.wait_totals().iter().all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn barrier_restarts_everyone_at_round_end() {
+        let m = 3;
+        let mut sched = Scheduler::new(Box::new(BarrierSync), sampler(m, 9), 0.0);
+        sched.start();
+        for round in 0..10u64 {
+            let mut restarted_total = 0;
+            for arrival in 0..m {
+                let (_, w) = sched.next().unwrap();
+                let restarted = sched.complete(w);
+                if arrival + 1 < m {
+                    assert!(restarted.is_empty(), "round {round}: early arrival restarted");
+                } else {
+                    restarted_total = restarted.len();
+                }
+            }
+            assert_eq!(restarted_total, m, "round {round}: barrier must release all");
+            assert!(sched.clocks().iter().all(|&c| c == round + 1));
+        }
+    }
+
+    #[test]
+    fn ssp_bound_zero_is_round_structured() {
+        // s = 0: every worker computes exactly once per round.
+        let (_, drift) = drive(Box::new(StalenessBounded { bound: 0 }), 4, 60, 11);
+        assert!(drift <= 1, "drift {drift} > 1 under s=0");
+    }
+
+    #[test]
+    fn ssp_clock_drift_never_exceeds_bound_plus_inflight() {
+        for s in [0u64, 1, 3] {
+            let (_, drift) = drive(Box::new(StalenessBounded { bound: s }), 5, 200, 13 + s);
+            assert!(drift <= s + 1, "drift {drift} > s+1 for s={s}");
+        }
+    }
+
+    #[test]
+    fn ssp_version_staleness_respects_derived_bound() {
+        for s in [0u64, 1, 2, 4] {
+            let m = 4;
+            let proto = StalenessBounded { bound: s };
+            let cap = proto.version_bound(m);
+            let (stale, _) = drive(Box::new(proto), m, 300, 17 + s);
+            let max = stale.iter().copied().max().unwrap();
+            assert!(max <= cap, "staleness {max} > bound {cap} for s={s}");
+        }
+    }
+
+    #[test]
+    fn ssp_large_bound_matches_fully_async_schedule() {
+        let (a, _) = drive(Box::new(FullyAsync), 4, 150, 21);
+        let (b, _) = drive(Box::new(StalenessBounded { bound: 1 << 40 }), 4, 150, 21);
+        assert_eq!(a, b, "ungated SSP must reproduce the async schedule");
+    }
+
+    #[test]
+    fn wait_accounting_accumulates_under_barrier() {
+        let mut sched = Scheduler::new(Box::new(BarrierSync), sampler(4, 23), 0.0);
+        sched.start();
+        for _ in 0..40 {
+            let (_, w) = sched.next().unwrap();
+            sched.complete(w);
+        }
+        // with jittered delays somebody must have waited at the barrier
+        let total: f64 = sched.wait_totals().iter().sum();
+        assert!(total > 0.0, "no barrier wait recorded");
+    }
+
+    #[test]
+    fn single_worker_degenerates_to_sequential() {
+        let mut sched =
+            Scheduler::new(Box::new(StalenessBounded { bound: 0 }), sampler(1, 29), 0.0);
+        assert_eq!(sched.start(), vec![0]);
+        let mut last = 0.0;
+        for _ in 0..20 {
+            let (t, w) = sched.next().unwrap();
+            assert_eq!(w, 0);
+            assert!(t >= last);
+            last = t;
+            assert_eq!(sched.complete(0), vec![0]);
+        }
+        assert_eq!(sched.clocks(), &[20]);
+    }
+}

@@ -163,10 +163,13 @@ fn all_algorithms_run_in_sim_mode() {
         Algorithm::Asgd,
         Algorithm::DcAsgdConst,
         Algorithm::DcAsgdAdaptive,
+        Algorithm::Ssp,
+        Algorithm::DcS3gd,
     ] {
         let mut cfg = tiny_cfg();
         cfg.algorithm = algo;
         cfg.workers = 4;
+        cfg.staleness_bound = 4; // SSP family: loose enough to stay async-ish
         let report = Trainer::new(cfg).unwrap().run().unwrap();
         assert!(report.final_test_error.is_finite(), "{algo:?}");
         assert!(report.final_train_loss < 1.3, "{algo:?} loss {}", report.final_train_loss);
@@ -175,7 +178,87 @@ fn all_algorithms_run_in_sim_mode() {
         } else {
             assert_eq!(report.staleness_max, 0, "{algo:?}");
         }
+        if algo.is_staleness_bounded() {
+            // recorded staleness must respect the gate's derived cap
+            let cap = 3 * (2 * 4 + 1); // (M-1) * (2s+1)
+            assert!(report.staleness_max <= cap, "{algo:?} staleness_max {}", report.staleness_max);
+        }
     }
+}
+
+#[test]
+fn ssp_spans_the_sync_async_spectrum() {
+    // SSP's staleness bound sweeps SSGD (s=0) to ASGD (s unbounded): the
+    // two endpoints must reproduce the dedicated protocols on a fixed seed.
+    let _dir = require_artifacts!();
+    let base = |algo: Algorithm, bound: usize| {
+        let mut cfg = tiny_cfg();
+        cfg.algorithm = algo;
+        cfg.workers = 4;
+        cfg.staleness_bound = bound;
+        cfg.train_size = 1024;
+        cfg.test_size = 256;
+        cfg.epochs = 2;
+        cfg
+    };
+    // eval boundaries must align with round boundaries for the s=0
+    // comparison: require train_size % (workers * batch) == 0
+    let probe = Trainer::new(base(Algorithm::Asgd, 0)).unwrap();
+    assert_eq!(
+        1024 % (4 * probe.ctx().batch_size),
+        0,
+        "test config must align epochs with barrier rounds"
+    );
+    let (asgd_r, asgd_log) = probe.run_logged().unwrap();
+
+    // s large: the gate never fires — bit-for-bit the ASGD schedule
+    let (ssp_r, ssp_log) =
+        Trainer::new(base(Algorithm::Ssp, 1_000_000)).unwrap().run_logged().unwrap();
+    assert_eq!(asgd_r.total_steps, ssp_r.total_steps);
+    assert_eq!(asgd_r.final_train_loss, ssp_r.final_train_loss);
+    assert_eq!(asgd_r.total_time, ssp_r.total_time);
+    assert_eq!(asgd_r.staleness_mean, ssp_r.staleness_mean);
+    assert_eq!(asgd_log.steps.len(), ssp_log.steps.len());
+    for (a, b) in asgd_log.steps.iter().zip(&ssp_log.steps) {
+        assert_eq!((a.step, a.worker, a.staleness), (b.step, b.worker, b.staleness));
+        assert_eq!(a.time.to_bits(), b.time.to_bits(), "schedule diverged at step {}", a.step);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "trajectory diverged at step {}", a.step);
+    }
+    assert!(asgd_log.steps.iter().all(|r| r.wait == 0.0), "ASGD must never gate");
+
+    // s = 0: the SSGD round structure — all workers compute on the same
+    // snapshot, the model coincides at every round boundary, so the eval
+    // trajectory matches (up to f32 fold order: SSGD applies avg at M*lr in
+    // one step, SSP(0) applies the M gradients sequentially)
+    let (_sync_r, sync_log) =
+        Trainer::new(base(Algorithm::SyncSgd, 0)).unwrap().run_logged().unwrap();
+    let (_s0_r, s0_log) = Trainer::new(base(Algorithm::Ssp, 0)).unwrap().run_logged().unwrap();
+    assert_eq!(sync_log.evals.len(), s0_log.evals.len());
+    for (i, (a, b)) in sync_log.evals.iter().zip(&s0_log.evals).enumerate() {
+        assert_eq!(a.passes, b.passes, "eval boundaries diverged");
+        // SSGD folds avg*(M*lr) in one f32 step, SSP(0) subtracts the M
+        // gradients sequentially: identical in exact arithmetic, so the
+        // trajectories coincide up to fold-order rounding, which compounds
+        // with depth — tight at the first eval, looser later
+        let tol = if i == 0 { 2e-3 } else { 5e-2 };
+        assert!(
+            (a.test_loss - b.test_loss).abs() < tol,
+            "eval loss diverged at passes {}: {} vs {}",
+            a.passes,
+            a.test_loss,
+            b.test_loss
+        );
+        assert!((a.test_error - b.test_error).abs() < 5e-2);
+    }
+    // the s=0 gate must actually stall workers (barrier-like waits)
+    assert!(s0_log.steps.iter().any(|r| r.wait > 0.0), "SSP(0) recorded no gate waits");
+
+    // DC-S3GD rides the same schedule with the DC update: it must differ
+    // from plain SSP on the same seed and respect the staleness cap
+    let (dc_r, _) = Trainer::new(base(Algorithm::DcS3gd, 2)).unwrap().run_logged().unwrap();
+    let (ssp2_r, _) = Trainer::new(base(Algorithm::Ssp, 2)).unwrap().run_logged().unwrap();
+    assert_ne!(dc_r.final_train_loss, ssp2_r.final_train_loss);
+    assert!(dc_r.staleness_max <= 3 * (2 * 2 + 1));
 }
 
 #[test]

@@ -1,12 +1,12 @@
 //! Property-based invariant tests over the coordinator substrates (no
 //! artifacts needed — these run pure-rust with the in-repo prop harness).
 
-use dc_asgd::config::Algorithm;
+use dc_asgd::config::{Algorithm, DelayModel};
 use dc_asgd::data::EpochPartition;
 use dc_asgd::optim;
 use dc_asgd::prop_assert;
 use dc_asgd::ps::{Hyper, NativeKernel, ParamServer};
-use dc_asgd::sim::EventQueue;
+use dc_asgd::sim::{DelaySampler, EventQueue, Scheduler, StalenessBounded};
 use dc_asgd::util::prop::{check, Gen};
 
 fn hyper(g: &mut Gen) -> Hyper {
@@ -180,6 +180,90 @@ fn prop_event_queue_never_goes_backwards() {
             if g.bool() && pops < 400 {
                 q.schedule_in(g.f64_in(0.0, 2.0), pops);
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_queue_deterministic_under_interleaved_ops() {
+    check("event queue replay is deterministic and time-ordered", 30, |g| {
+        // generate a plan of interleaved schedule/pop ops, then replay it
+        // twice: identical pop sequences (bitwise times, same payloads)
+        let n_ops = 1 + g.usize_in(0, 300);
+        let plan: Vec<(bool, f64)> =
+            (0..n_ops).map(|_| (g.bool(), g.f64_in(0.0, 5.0))).collect();
+        let run = |plan: &[(bool, f64)]| {
+            let mut q: EventQueue<usize> = EventQueue::new();
+            let mut popped = Vec::new();
+            for (i, &(sched, d)) in plan.iter().enumerate() {
+                if sched {
+                    q.schedule_in(d, i);
+                } else if let Some((t, p)) = q.pop() {
+                    popped.push((t.to_bits(), p));
+                }
+            }
+            while let Some((t, p)) = q.pop() {
+                popped.push((t.to_bits(), p));
+            }
+            popped
+        };
+        let a = run(&plan);
+        let b = run(&plan);
+        prop_assert!(a == b, "replay diverged after {} ops", n_ops);
+        for w in a.windows(2) {
+            prop_assert!(
+                f64::from_bits(w[0].0) <= f64::from_bits(w[1].0),
+                "pop times regressed"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ssp_scheduler_staleness_bounded() {
+    check("ssp clock gate bounds drift and version staleness", 25, |g| {
+        let m = g.usize_in(2, 8).max(2);
+        let s = g.usize_in(0, 6) as u64;
+        let steps = 50 + g.usize_in(0, 300);
+        let model = g
+            .pick(&[
+                DelayModel::Uniform { mean: 1.0, jitter: 0.4 },
+                DelayModel::Exponential { mean: 1.0 },
+                DelayModel::Heterogeneous { mean: 1.0, speeds: vec![1.0, 2.5], jitter: 0.2 },
+            ])
+            .clone();
+        let proto = StalenessBounded { bound: s };
+        let cap = proto.version_bound(m);
+        let delays = DelaySampler::new(model, m, g.rng.next_u64());
+        let mut sched = Scheduler::new(Box::new(proto), delays, 0.01);
+        // synthetic parameter-server version counter: each completed compute
+        // is one push; staleness = pushes between a worker's pull and push
+        let mut version = 0u64;
+        let mut pulled_at = vec![0u64; m];
+        for w in sched.start() {
+            pulled_at[w] = version;
+        }
+        for _ in 0..steps {
+            let (_, w) = match sched.next() {
+                Some(e) => e,
+                None => return Err("scheduler ran dry".into()),
+            };
+            let tau = version - pulled_at[w];
+            prop_assert!(tau <= cap, "staleness {tau} > cap {cap} (m={m}, s={s})");
+            version += 1;
+            for v in sched.complete(w) {
+                pulled_at[v] = version;
+            }
+            let min = *sched.clocks().iter().min().unwrap();
+            let max = *sched.clocks().iter().max().unwrap();
+            prop_assert!(
+                max - min <= s + 1,
+                "clock drift {} > s+1={} (m={m})",
+                max - min,
+                s + 1
+            );
         }
         Ok(())
     });
