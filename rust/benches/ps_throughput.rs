@@ -1,39 +1,164 @@
 //! Parameter-server hot-path microbenchmarks (DESIGN.md §6, ablations A+B,
 //! and the §Perf L3 baseline).
 //!
-//! A) update-rule cost, native fused loops vs the XLA/Pallas update
-//!    artifacts, on the real mlp_cifar parameter vector (860k f32).
-//!    The paper claims the DC update is a "lightweight overhead" vs plain
-//!    ASGD — quantified here as dc/sgd and dca/sgd cost ratios.
-//! B) lock sharding: end-to-end push throughput with M concurrent pusher
-//!    threads vs shard count.
+//! A) update-rule cost, native fused loops (and, when artifacts exist, the
+//!    XLA/Pallas update artifacts) on the real mlp_cifar parameter vector
+//!    (860k f32). The paper claims the DC update is a "lightweight
+//!    overhead" vs plain ASGD — quantified as dc/sgd and dca/sgd ratios.
+//! B) store-design ablation: end-to-end pull+push throughput of the
+//!    read-optimized RwLock store (per-shard RwLock + out-of-lock backups
+//!    + zero-allocation push scratch) against an in-bench replica of the
+//!    previous mutex-per-shard store, across store × shards × workers ×
+//!    update rule. One JSONL row per cell lands in
+//!    runs/bench/ps_throughput.jsonl so the win is measured, not asserted.
+//!    Acceptance gate for the store rework: >= 2x pushes/s at workers=8,
+//!    shards=8 for both ASGD and DC-ASGD-a (native kernel).
 //! C) pull cost (model copy + backup write) — the other half of Alg. 2.
 
 mod common;
 
+#[allow(unused_imports)]
 use common::*;
 use dc_asgd::bench::{header, time_fn, Table};
 use dc_asgd::config::Algorithm;
 use dc_asgd::optim;
 use dc_asgd::ps::{Hyper, NativeKernel, ParamServer};
+use dc_asgd::util::json::Json;
 use dc_asgd::util::rng::Pcg64;
+use std::io::Write;
+use std::ops::Range;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+
+/// mlp_cifar padded size — the store ablation runs on the real vector.
+const N: usize = 860_160;
+/// Measurement window per matrix cell.
+const CELL_MS: u64 = 250;
 
 fn randn(seed: u64, n: usize, scale: f64) -> Vec<f32> {
     let mut rng = Pcg64::new(seed);
     (0..n).map(|_| rng.normal(0.0, scale) as f32).collect()
 }
 
+fn hyper() -> Hyper {
+    Hyper { lambda0: 0.04, ms_momentum: 0.95, momentum: 0.0, eps: 1e-7 }
+}
+
+// ---------------------------------------------------------------------------
+// In-bench replica of the pre-rework store: one mutex per shard, backups
+// inside the shard state, pull copies w AND writes the backup under the
+// exclusive lock. Kept here (not in the library) purely as the ablation
+// baseline.
+
+struct LegacyShard {
+    w: Vec<f32>,
+    ms: Vec<f32>,
+    bak: Vec<Vec<f32>>,
+}
+
+struct LegacyStore {
+    ranges: Vec<Range<usize>>,
+    shards: Vec<Mutex<LegacyShard>>,
+}
+
+impl LegacyStore {
+    fn new(init: &[f32], workers: usize, shards: usize) -> Self {
+        let n = init.len();
+        let shards_n = shards.min(n.max(1));
+        let base = n / shards_n;
+        let rem = n % shards_n;
+        let mut ranges = Vec::with_capacity(shards_n);
+        let mut start = 0;
+        for s in 0..shards_n {
+            let size = base + usize::from(s < rem);
+            ranges.push(start..start + size);
+            start += size;
+        }
+        let shards = ranges
+            .iter()
+            .map(|r| {
+                let w = init[r.clone()].to_vec();
+                Mutex::new(LegacyShard {
+                    ms: vec![0.0; w.len()],
+                    bak: vec![w.clone(); workers],
+                    w,
+                })
+            })
+            .collect();
+        Self { ranges, shards }
+    }
+
+    fn pull(&self, worker: usize, out: &mut [f32]) {
+        for (range, shard) in self.ranges.iter().zip(&self.shards) {
+            let mut s = shard.lock().unwrap();
+            out[range.clone()].copy_from_slice(&s.w);
+            let w = std::mem::take(&mut s.w);
+            s.bak[worker].copy_from_slice(&w);
+            s.w = w;
+        }
+    }
+
+    fn push(&self, worker: usize, algo: Algorithm, g: &[f32], lr: f32) {
+        let h = hyper();
+        for (range, shard) in self.ranges.iter().zip(&self.shards) {
+            let mut s = shard.lock().unwrap();
+            let LegacyShard { w, ms, bak } = &mut *s;
+            match algo {
+                Algorithm::Asgd => optim::sgd_step(w, &g[range.clone()], lr),
+                Algorithm::DcAsgdAdaptive => optim::dc_adaptive_step(
+                    w,
+                    &g[range.clone()],
+                    &bak[worker],
+                    ms,
+                    lr,
+                    h.lambda0,
+                    h.ms_momentum,
+                    h.eps,
+                ),
+                _ => unreachable!("ablation covers asgd and dc-asgd-a"),
+            }
+        }
+    }
+}
+
+/// Run `workers` pull+push cycles against `target` for CELL_MS; returns
+/// total pushes/second.
+fn drive<T, P, Q>(workers: usize, target: Arc<T>, pull: P, push: Q) -> f64
+where
+    T: Send + Sync + 'static,
+    P: Fn(&T, usize, &mut [f32]) + Send + Copy + 'static,
+    Q: Fn(&T, usize, &[f32], f32) + Send + Copy + 'static,
+{
+    let g = Arc::new(randn(11, N, 0.01));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for m in 0..workers {
+        let (target, stop, g) = (Arc::clone(&target), Arc::clone(&stop), Arc::clone(&g));
+        handles.push(std::thread::spawn(move || {
+            let mut buf = vec![0.0f32; N];
+            let mut count = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                pull(&target, m, &mut buf);
+                push(&target, m, &g, 1e-6);
+                count += 1;
+            }
+            count
+        }));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(CELL_MS));
+    stop.store(true, Ordering::Relaxed);
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    total as f64 / (CELL_MS as f64 / 1e3)
+}
+
 fn main() {
-    let n: usize = 860_160; // mlp_cifar padded size
-    println!("# A) update-rule kernels on n={n} (f32)");
+    println!("# A) update-rule kernels on n={N} (f32)");
     header();
 
-    let g = randn(1, n, 0.01);
-    let bak = randn(2, n, 1.0);
-    let mut w = randn(3, n, 1.0);
-    let mut ms = randn(4, n, 0.01).iter().map(|x| x.abs()).collect::<Vec<f32>>();
+    let g = randn(1, N, 0.01);
+    let bak = randn(2, N, 1.0);
+    let mut w = randn(3, N, 1.0);
+    let mut ms = randn(4, N, 0.01).iter().map(|x| x.abs()).collect::<Vec<f32>>();
 
     let s_sgd = time_fn("native sgd_step", 3, 30, || {
         optim::sgd_step(&mut w, &g, 1e-6);
@@ -48,7 +173,122 @@ fn main() {
     });
     s_dca.print();
 
-    // XLA/Pallas update artifacts (ablation A) — whole-vector out-of-place
+    println!();
+    println!(
+        "DC overhead vs plain SGD update: native dc/sgd = {:.2}x, dca/sgd = {:.2}x",
+        s_dc.mean_s / s_sgd.mean_s,
+        s_dca.mean_s / s_sgd.mean_s
+    );
+    println!(
+        "bandwidth: dc touches 4 vectors/elem -> {:.2} GB/s effective",
+        (4.0 * N as f64 * 4.0) / s_dc.mean_s / 1e9
+    );
+
+    // B) store-design ablation under real thread contention
+    println!("\n# B) pull+push throughput: store design x shards x workers (JSONL)");
+    let mut table = Table::new(&[
+        "algo",
+        "workers",
+        "shards",
+        "legacy pushes/s",
+        "rwlock pushes/s",
+        "speedup",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut gate: Vec<(Algorithm, f64)> = Vec::new();
+    for algo in [Algorithm::Asgd, Algorithm::DcAsgdAdaptive] {
+        for workers in [1usize, 4, 8] {
+            for shards in [1usize, 4, 8, 16] {
+                let init = randn(5, N, 1.0);
+                let legacy = Arc::new(LegacyStore::new(&init, workers, shards));
+                let legacy_rate = drive(
+                    workers,
+                    legacy,
+                    |s: &LegacyStore, m, buf| s.pull(m, buf),
+                    move |s: &LegacyStore, m, g, lr| s.push(m, algo, g, lr),
+                );
+                let ps = Arc::new(
+                    ParamServer::new(&init, workers, shards, algo, hyper(), Box::new(NativeKernel))
+                        .unwrap(),
+                );
+                let rate = drive(
+                    workers,
+                    ps,
+                    |s: &ParamServer, m, buf| s.pull(m, buf),
+                    |s: &ParamServer, m, g, lr| {
+                        s.push(m, g, lr);
+                    },
+                );
+                let speedup = rate / legacy_rate;
+                eprintln!(
+                    "[cell] {} M={workers} S={shards}: legacy {legacy_rate:.0}/s rwlock {rate:.0}/s ({speedup:.2}x)",
+                    algo.name()
+                );
+                table.row(&[
+                    algo.name().into(),
+                    workers.to_string(),
+                    shards.to_string(),
+                    format!("{legacy_rate:.0}"),
+                    format!("{rate:.0}"),
+                    format!("{speedup:.2}x"),
+                ]);
+                for (store, r) in [("legacy_mutex", legacy_rate), ("rwlock", rate)] {
+                    rows.push(Json::obj(vec![
+                        ("bench", "ps_push_pull".into()),
+                        ("store", store.into()),
+                        ("algo", algo.name().into()),
+                        ("workers", workers.into()),
+                        ("shards", shards.into()),
+                        ("n", N.into()),
+                        ("pushes_per_sec", r.into()),
+                        (
+                            "speedup_vs_legacy",
+                            if store == "rwlock" { speedup.into() } else { Json::Null },
+                        ),
+                    ]));
+                }
+                if workers == 8 && shards == 8 {
+                    gate.push((algo, speedup));
+                }
+            }
+        }
+    }
+    table.print();
+    let path = dc_asgd::bench::bench_out_dir().join("ps_throughput.jsonl");
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path).expect("jsonl out"));
+    for row in &rows {
+        writeln!(f, "{row}").expect("jsonl write");
+    }
+    drop(f);
+    println!("rows: {}", path.display());
+    for (algo, speedup) in &gate {
+        println!(
+            "acceptance (workers=8, shards=8, {}): {:.2}x vs legacy store [target >= 2x]",
+            algo.name(),
+            speedup
+        );
+    }
+
+    // C) pull cost
+    println!("\n# C) pull (copy + backup) on n={N}");
+    header();
+    let init = randn(6, N, 1.0);
+    let ps = ParamServer::new(&init, 1, 1, Algorithm::Asgd, hyper(), Box::new(NativeKernel))
+        .unwrap();
+    let mut buf = vec![0.0f32; N];
+    time_fn("ps.pull (snapshot + w_bak write)", 3, 50, || {
+        ps.pull(0, &mut buf);
+    })
+    .print();
+
+    // XLA/Pallas update artifacts (ablation A) — whole-vector out-of-place;
+    // needs compiled artifacts, so this tail section skips loudly without
+    if dc_asgd::find_artifacts_dir().is_none() {
+        println!("\nSKIP: artifacts/manifest.json missing — XLA kernel ablation not run");
+        return;
+    }
+    println!("\n# A') XLA update artifacts vs native (n={N})");
+    header();
     let engine = engine_for("mlp_cifar", true);
     let s_xla_sgd = time_fn("xla sgd artifact", 2, 10, || {
         let _ = engine.update_sgd(&w, &g, 1e-6).unwrap();
@@ -62,79 +302,11 @@ fn main() {
         let _ = engine.update_dca(&w, &g, &bak, &ms, 1e-6, 2.0, 0.95, 1e-7).unwrap();
     });
     s_xla_dca.print();
-
-    println!();
-    println!(
-        "DC overhead vs plain SGD update: native dc/sgd = {:.2}x, dca/sgd = {:.2}x",
-        s_dc.mean_s / s_sgd.mean_s,
-        s_dca.mean_s / s_sgd.mean_s
-    );
     println!(
         "XLA-vs-native (same rule): sgd {:.1}x, dc {:.1}x, dca {:.1}x  (includes literal copies)",
         s_xla_sgd.mean_s / s_sgd.mean_s,
         s_xla_dc.mean_s / s_dc.mean_s,
         s_xla_dca.mean_s / s_dca.mean_s
     );
-    println!(
-        "bandwidth: dc touches 4 vectors/elem -> {:.2} GB/s effective",
-        (4.0 * n as f64 * 4.0) / s_dc.mean_s / 1e9
-    );
-
-    // B) sharding ablation under real thread contention
-    println!("\n# B) concurrent push throughput vs shard count (M=4 pusher threads)");
-    let mut table = Table::new(&["shards", "pushes/s", "speedup vs 1 shard"]);
-    let mut base_rate = 0.0f64;
-    for shards in [1usize, 2, 4, 8, 16] {
-        let init = randn(5, n, 1.0);
-        let hyper = Hyper { lambda0: 0.04, ms_momentum: 0.95, momentum: 0.0, eps: 1e-7 };
-        let ps = Arc::new(
-            ParamServer::new(&init, 4, shards, Algorithm::DcAsgdConst, hyper, Box::new(NativeKernel))
-                .unwrap(),
-        );
-        let stop = Arc::new(AtomicBool::new(false));
-        let mut handles = vec![];
-        for m in 0..4usize {
-            let ps = ps.clone();
-            let stop = stop.clone();
-            let g = g.clone();
-            handles.push(std::thread::spawn(move || {
-                let mut buf = vec![0.0f32; n];
-                let mut count = 0u64;
-                while !stop.load(Ordering::Relaxed) {
-                    ps.pull(m, &mut buf);
-                    ps.push(m, &g, 1e-6);
-                    count += 1;
-                }
-                count
-            }));
-        }
-        std::thread::sleep(std::time::Duration::from_millis(600));
-        stop.store(true, Ordering::Relaxed);
-        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
-        let rate = total as f64 / 0.6;
-        if shards == 1 {
-            base_rate = rate;
-        }
-        table.row(&[
-            shards.to_string(),
-            format!("{rate:.0}"),
-            format!("{:.2}x", rate / base_rate),
-        ]);
-    }
-    table.print();
-
-    // C) pull cost
-    println!("\n# C) pull (copy + backup) on n={n}");
-    header();
-    let init = randn(6, n, 1.0);
-    let hyper = Hyper { lambda0: 0.04, ms_momentum: 0.95, momentum: 0.0, eps: 1e-7 };
-    let ps =
-        ParamServer::new(&init, 1, 1, Algorithm::Asgd, hyper, Box::new(NativeKernel)).unwrap();
-    let mut buf = vec![0.0f32; n];
-    time_fn("ps.pull (snapshot + w_bak write)", 3, 50, || {
-        ps.pull(0, &mut buf);
-    })
-    .print();
-
     engine.shutdown();
 }

@@ -168,6 +168,32 @@ impl LrSchedule {
     }
 }
 
+/// Communication-cost model for the DES (`[comm]` section). When enabled,
+/// the scheduler charges `per_push + per_mb * MB` simulated seconds for
+/// every gradient upload and model download, so the sync-vs-async wallclock
+/// comparison pays for transfers instead of assuming a free network.
+/// Disabled by default: trajectories are bit-identical to earlier builds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CommConfig {
+    pub enabled: bool,
+    /// Cost parameters; the canonical preset constants live on
+    /// [`crate::sim::CommModel`] itself, never duplicated here.
+    pub model: crate::sim::CommModel,
+}
+
+impl CommConfig {
+    pub fn from_model(model: crate::sim::CommModel, enabled: bool) -> Self {
+        Self { enabled, model }
+    }
+}
+
+impl Default for CommConfig {
+    fn default() -> Self {
+        // InfiniBand-like parameters, inert until `enabled` is set
+        Self::from_model(crate::sim::CommModel::infiniband_like(), false)
+    }
+}
+
 /// How the server applies updates: pure-rust loops (fast path) or the
 /// AOT-compiled XLA/Pallas update artifact (ablation A).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -240,6 +266,8 @@ pub struct ExperimentConfig {
     pub seed: u64,
     pub exec_mode: ExecMode,
     pub delay: DelayModel,
+    /// Communication-cost model (`[comm]`; off by default).
+    pub comm: CommConfig,
     pub update_backend: UpdateBackend,
     /// Parameter-store lock shards.
     pub shards: usize,
@@ -280,6 +308,7 @@ impl Default for ExperimentConfig {
             seed: 17,
             exec_mode: ExecMode::SimulatedTime,
             delay: DelayModel::Uniform { mean: 1.0, jitter: 0.3 },
+            comm: CommConfig::default(),
             update_backend: UpdateBackend::Native,
             shards: 1,
             eval_every: 1,
@@ -428,6 +457,14 @@ impl ExperimentConfig {
             if !(0.0..1.0).contains(jitter) {
                 bail!("jitter must be in [0, 1)");
             }
+        }
+        if !(self.comm.model.per_push >= 0.0 && self.comm.model.per_push.is_finite())
+            || !(self.comm.model.per_mb >= 0.0 && self.comm.model.per_mb.is_finite())
+        {
+            bail!("comm per_push/per_mb must be finite and >= 0");
+        }
+        if self.comm.enabled && self.exec_mode == ExecMode::Threads {
+            bail!("comm cost model runs under the event-driven scheduler: set exec_mode = sim");
         }
         Ok(())
     }
@@ -587,6 +624,31 @@ impl ExperimentConfig {
             };
         }
 
+        // communication-cost model ([comm]): setting a preset or a cost
+        // parameter activates the model (matching the --comm-per-* CLI
+        // flags); an explicit `enabled` key always has the last word
+        if let Some(kind) = doc.get("comm.model").and_then(|v| v.as_str()) {
+            cfg.comm = match kind {
+                "off" | "none" => CommConfig::default(),
+                "infiniband" => {
+                    CommConfig::from_model(crate::sim::CommModel::infiniband_like(), true)
+                }
+                "ethernet" => CommConfig::from_model(crate::sim::CommModel::ethernet_like(), true),
+                other => bail!("unknown comm model {other:?} (off|infiniband|ethernet)"),
+            };
+        }
+        if let Some(v) = get_f64("comm.per_push")? {
+            cfg.comm.model.per_push = v;
+            cfg.comm.enabled = true;
+        }
+        if let Some(v) = get_f64("comm.per_mb")? {
+            cfg.comm.model.per_mb = v;
+            cfg.comm.enabled = true;
+        }
+        if let Some(v) = doc.get("comm.enabled").and_then(|v| v.as_bool()) {
+            cfg.comm.enabled = v;
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -609,6 +671,9 @@ impl ExperimentConfig {
             ("momentum", self.momentum.into()),
             ("seed", (self.seed as i64).into()),
             ("delay_model", self.delay.name().into()),
+            ("comm_enabled", self.comm.enabled.into()),
+            ("comm_per_push", self.comm.model.per_push.into()),
+            ("comm_per_mb", self.comm.model.per_mb.into()),
             ("shards", self.shards.into()),
             ("tag", self.tag.as_str().into()),
         ])
@@ -762,6 +827,51 @@ mod tests {
         assert_eq!(cfg.staleness_bound, 2);
         let json = cfg.to_json().to_string();
         assert!(json.contains("\"staleness_bound\""));
+    }
+
+    #[test]
+    fn from_toml_comm_section() {
+        // default: off, inert
+        let cfg = ExperimentConfig::from_toml("workers = 2").unwrap();
+        assert!(!cfg.comm.enabled);
+
+        // enable with custom parameters
+        let cfg = ExperimentConfig::from_toml(
+            "[comm]\nenabled = true\nper_push = 1e-4\nper_mb = 5e-4",
+        )
+        .unwrap();
+        assert!(cfg.comm.enabled);
+        assert_eq!(cfg.comm.model.per_push, 1e-4);
+        assert_eq!(cfg.comm.model.per_mb, 5e-4);
+
+        // setting a cost parameter activates the model (same semantics as
+        // the --comm-per-* CLI flags) ...
+        let cfg = ExperimentConfig::from_toml("[comm]\nper_push = 2e-4").unwrap();
+        assert!(cfg.comm.enabled);
+        // ... but an explicit `enabled` key always wins
+        let cfg =
+            ExperimentConfig::from_toml("[comm]\nper_push = 2e-4\nenabled = false").unwrap();
+        assert!(!cfg.comm.enabled);
+        assert_eq!(cfg.comm.model.per_push, 2e-4);
+
+        // presets pull their constants straight from sim::CommModel
+        let cfg = ExperimentConfig::from_toml("[comm]\nmodel = \"ethernet\"").unwrap();
+        assert!(cfg.comm.enabled);
+        assert_eq!(cfg.comm.model, crate::sim::CommModel::ethernet_like());
+        let cfg = ExperimentConfig::from_toml("[comm]\nmodel = \"off\"").unwrap();
+        assert!(!cfg.comm.enabled);
+
+        // rejected: unknown preset, negative cost, threads-mode comm (only
+        // the event-driven scheduler consults the comm model)
+        assert!(ExperimentConfig::from_toml("[comm]\nmodel = \"warp\"").is_err());
+        assert!(ExperimentConfig::from_toml("[comm]\nper_push = -1.0").is_err());
+        assert!(ExperimentConfig::from_toml(
+            "exec_mode = \"threads\"\n[comm]\nenabled = true"
+        )
+        .is_err());
+
+        let json = ExperimentConfig::default().to_json().to_string();
+        assert!(json.contains("\"comm_enabled\""));
     }
 
     #[test]

@@ -115,7 +115,9 @@ pub fn run_threads(ctx: &mut RunCtx) -> Result<()> {
             let passes = samples.load(Ordering::Relaxed) as f64 / train_len;
             if cfg.eval_every > 0 && passes >= next_eval_passes && !stop.load(Ordering::Relaxed)
             {
-                let step = steps.load(Ordering::Relaxed);
+                // tag the eval with the latest recorded step's index (the
+                // counter holds completed steps), matching the sim driver
+                let step = steps.load(Ordering::Relaxed).saturating_sub(1);
                 let time = wall_start.elapsed().as_secs_f64();
                 if let Err(e) = ctx.run_eval(step, passes, time) {
                     first_err.set(e);

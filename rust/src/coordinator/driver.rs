@@ -15,7 +15,8 @@ use crate::data::{EpochPartition, ShardCursor};
 use crate::metrics::StepRecord;
 use crate::optim::{average_into, DcSsgdAccumulator};
 use crate::sim::{
-    BarrierSync, CommitMode, DelaySampler, FullyAsync, Protocol, Scheduler, StalenessBounded,
+    BarrierSync, CommCosts, CommitMode, DelaySampler, FullyAsync, Protocol, Scheduler,
+    StalenessBounded,
 };
 use anyhow::Result;
 
@@ -60,8 +61,21 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
     } else {
         0.0
     };
-    let mut sched =
-        Scheduler::new(protocol_for(algo, ctx.cfg.staleness_bound as u64), delays, server_cost);
+    // communication charges ([comm]): when enabled, every gradient upload
+    // and model download adds virtual time via sim::CommModel; disabled
+    // (the default) keeps the schedule bit-identical to a free network
+    let comm = if ctx.cfg.comm.enabled {
+        let bytes = n * std::mem::size_of::<f32>();
+        CommCosts::from_model(&ctx.cfg.comm.model, bytes, bytes)
+    } else {
+        CommCosts::default()
+    };
+    let mut sched = Scheduler::with_comm(
+        protocol_for(algo, ctx.cfg.staleness_bound as u64),
+        delays,
+        server_cost,
+        comm,
+    );
     let barrier = sched.commit_mode() == CommitMode::Barrier;
     let dcssgd = algo == Algorithm::DcSyncSgd;
     let mut acc = DcSsgdAccumulator::new(n, ctx.cfg.lambda0 as f32);
@@ -80,9 +94,14 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
     }
 
     let wall_start = std::time::Instant::now();
-    // barrier round buffer, indexed by worker so the fold order is
-    // worker-deterministic regardless of arrival order
-    let mut round: Vec<Option<(f32, Vec<f32>)>> = vec![None; m];
+    // barrier round slots, indexed by worker so the fold order is
+    // worker-deterministic regardless of arrival order. Each slot takes
+    // ownership of the engine's per-step gradient buffer (a move, not a
+    // copy); the loss/filled arenas are allocated once, so the driver adds
+    // no allocations of its own to the round loop.
+    let mut round_grads: Vec<Vec<f32>> = vec![Vec::new(); if barrier { m } else { 0 }];
+    let mut round_loss = vec![0.0f32; m];
+    let mut round_filled = vec![false; m];
     let mut round_n = 0usize;
     let mut round_wait = 0.0f64;
     let mut step = 0u64;
@@ -105,38 +124,38 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
             // the round's wait is every worker's barrier stall summed, so
             // wait totals stay comparable with per-push protocols
             round_wait += sched.step_wait(w);
-            debug_assert!(round[w].is_none(), "worker {w} pushed twice in one round");
-            round[w] = Some((loss, grads));
+            debug_assert!(!round_filled[w], "worker {w} pushed twice in one round");
+            round_grads[w] = grads;
+            round_loss[w] = loss;
+            round_filled[w] = true;
             round_n += 1;
             let restarted = sched.complete(w);
             if round_n == m {
                 // the round completes when the slowest worker arrives; fold
-                // the M gradients into ONE global step (paper §1 / appx H)
+                // the M gradients into ONE global step (paper §1 / appx H).
+                // A malformed round (double-complete, unfilled slot) must
+                // panic, not fold a stale arena slot.
+                assert!(round_filled.iter().all(|&filled| filled), "incomplete barrier round");
                 let mut loss_sum = 0.0f32;
                 if dcssgd {
-                    for slot in round.iter_mut() {
-                        let (l, g) = slot.take().expect("incomplete barrier round");
+                    for (l, g) in round_loss.iter().zip(&round_grads) {
                         loss_sum += l;
-                        acc.push(g);
+                        acc.push_from(g);
                     }
                     ctx.ps.apply_with(|wv| acc.apply(wv, lr));
                 } else {
                     // Paper §1: each worker *adds* its gradient; the barrier
                     // only synchronizes, so one round applies the SUM of the
                     // M gradients — the "enlarged mini-batch" effect Table 1
-                    // attributes SSGD's degradation to.
-                    let refs: Vec<&[f32]> = round
-                        .iter()
-                        .map(|s| {
-                            let (l, g) = s.as_ref().expect("incomplete barrier round");
-                            loss_sum += l;
-                            g.as_slice()
-                        })
-                        .collect();
-                    average_into(&mut avg, &refs);
+                    // attributes SSGD's degradation to. Folded in worker
+                    // order straight out of the arenas.
+                    average_into(&mut avg, &round_grads);
+                    for &l in &round_loss {
+                        loss_sum += l;
+                    }
                     ctx.ps.apply_aggregated(&avg, lr * m as f32);
-                    round.iter_mut().for_each(|s| *s = None);
                 }
+                round_filled.fill(false);
                 round_n = 0;
                 samples += (m * ctx.batch_size) as u64;
                 let passes_now = samples as f64 / train_len;
@@ -153,7 +172,10 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                 step += 1;
                 round_wait = 0.0;
                 if ctx.should_eval(prev_passes, passes_now, step) {
-                    ctx.run_eval(step, passes_now, rec_time)?;
+                    // tag the eval row with the round that produced the
+                    // model it measures — the same index its StepRecord
+                    // carries (both branches use this convention)
+                    ctx.run_eval(step - 1, passes_now, rec_time)?;
                 }
                 prev_passes = passes_now;
             }
@@ -165,10 +187,9 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
         } else {
             let outcome = ctx.ps.push(w, &grads, lr);
             samples += ctx.batch_size as u64;
-            step += 1;
             let passes_now = samples as f64 / train_len;
             ctx.metrics.record_step(StepRecord {
-                step: step - 1,
+                step,
                 worker: w,
                 passes: passes_now,
                 time: rec_time,
@@ -177,8 +198,11 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                 staleness: outcome.staleness,
                 wait: sched.step_wait(w),
             });
+            step += 1;
             if ctx.should_eval(prev_passes, passes_now, step) {
-                ctx.run_eval(step, passes_now, rec_time)?;
+                // tag the eval row with the push that triggered it — the
+                // same index its StepRecord carries (was off by one)
+                ctx.run_eval(step - 1, passes_now, rec_time)?;
             }
             prev_passes = passes_now;
             // the protocol decides who re-pulls: always `w` itself when

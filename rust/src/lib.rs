@@ -46,6 +46,33 @@
 //! the in-flight step), capping observable version staleness at
 //! `(M-1)(2s+1)`.
 //!
+//! ## PS store architecture & comm model
+//!
+//! The parameter store ([`ps::ShardedStore`]) is read-optimized: the flat
+//! vector is split into `S` contiguous shards, each behind its own
+//! `RwLock` with a per-shard version counter. Snapshots and pulls take
+//! read locks (readers never serialize against each other), pushes to
+//! different shards proceed in parallel, and the per-worker backups
+//! `w_bak(m)` live *outside* the shard locks — a pull records the copy it
+//! actually handed out, so backup and snapshot are per-shard-consistent by
+//! construction. Pulls are shard-atomic, exactly the consistency a
+//! distributed PS provides. All push-path scratch (the momentum-DC
+//! compensation buffers, the whole-vector XLA operands, the barrier-round
+//! gradient slots and DC-SSGD fold buffers) lives in reusable arenas, so
+//! the steady-state hot path performs zero heap allocations; multi-shard
+//! aggregated applies fan out over scoped threads for large models with
+//! bit-identical results. Bench `ps_throughput` ablates this store against
+//! the previous mutex-per-shard design (JSONL rows per store × shards ×
+//! workers).
+//!
+//! Communication cost is modelled explicitly: the `[comm]` config section
+//! (off by default) makes the [`sim::Scheduler`] charge
+//! `per_push + per_mb * MB` simulated seconds for every gradient upload
+//! and model download ([`sim::CommModel`] / [`sim::CommCosts`]), so the
+//! sync-vs-async wallclock comparison pays for transfers instead of
+//! assuming a free network. With `[comm]` disabled the schedule is
+//! bit-identical to earlier builds (adding 0.0 to a duration is exact).
+//!
 //! ## Quickstart
 //!
 //! ```no_run

@@ -50,6 +50,8 @@ fn usage() {
            --staleness-bound N  (SSP/DC-S3GD: max local-step drift)\n\
            --mode sim|threads   --backend native|xla\n\
            --train-size N       --test-size N      --out DIR\n\
+           --comm               (charge push/pull transfer time in the DES)\n\
+           --comm-per-push F    --comm-per-mb F    (seconds, seconds/MB)\n\
            --tag NAME           --verbose\n\
          sweep options:\n\
            --algos a,b,c        --workers-list 1,4,8"
@@ -129,6 +131,17 @@ fn build_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
             "xla" => UpdateBackend::Xla,
             other => anyhow::bail!("unknown backend {other:?}"),
         };
+    }
+    if args.flag("comm") {
+        cfg.comm.enabled = true;
+    }
+    if let Some(v) = args.f64_opt("comm-per-push")? {
+        cfg.comm.model.per_push = v;
+        cfg.comm.enabled = true;
+    }
+    if let Some(v) = args.f64_opt("comm-per-mb")? {
+        cfg.comm.model.per_mb = v;
+        cfg.comm.enabled = true;
     }
     if let Some(v) = args.str_opt("out") {
         cfg.out_dir = v;

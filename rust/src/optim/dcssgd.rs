@@ -17,25 +17,55 @@ use super::compensate_into;
 
 /// Accumulates the M per-worker gradients of one synchronous step and
 /// applies them sequentially with delay compensation (Eqn. 110/111).
+///
+/// All buffers — the gradient slots, the sync-point snapshot, the sort
+/// scratch, the compensation scratch — are arenas: they grow to the round
+/// size once and are reused forever after, so the steady-state barrier
+/// fold performs no heap allocation.
 pub struct DcSsgdAccumulator {
     n: usize,
     lam: f32,
+    /// Gradient arena; `count` slots are live, the rest are reusable.
     grads: Vec<Vec<f32>>,
+    count: usize,
+    norms: Vec<f32>,
+    order: Vec<usize>,
+    w_t: Vec<f32>,
     comp_buf: Vec<f32>,
 }
 
 impl DcSsgdAccumulator {
     pub fn new(n: usize, lam: f32) -> Self {
-        Self { n, lam, grads: Vec::new(), comp_buf: vec![0.0; n] }
+        Self {
+            n,
+            lam,
+            grads: Vec::new(),
+            count: 0,
+            norms: Vec::new(),
+            order: Vec::new(),
+            w_t: vec![0.0; n],
+            comp_buf: vec![0.0; n],
+        }
     }
 
-    pub fn push(&mut self, grad: Vec<f32>) {
+    /// Copy `grad` into the next arena slot (allocation-free once the arena
+    /// has grown to the round size).
+    pub fn push_from(&mut self, grad: &[f32]) {
         assert_eq!(grad.len(), self.n);
-        self.grads.push(grad);
+        if self.count == self.grads.len() {
+            self.grads.push(vec![0.0f32; self.n]);
+        }
+        self.grads[self.count].copy_from_slice(grad);
+        self.count += 1;
+    }
+
+    /// Owned-buffer convenience wrapper over [`Self::push_from`].
+    pub fn push(&mut self, grad: Vec<f32>) {
+        self.push_from(&grad);
     }
 
     pub fn pending(&self) -> usize {
-        self.grads.len()
+        self.count
     }
 
     /// Apply all pending gradients to `w` (the model at the sync point) and
@@ -49,25 +79,29 @@ impl DcSsgdAccumulator {
     /// we order by ascending `||g||²` (smallest displacement first).
     pub fn apply(&mut self, w: &mut [f32], lr: f32) {
         assert_eq!(w.len(), self.n);
-        if self.grads.is_empty() {
+        if self.count == 0 {
             return;
         }
-        let w_t: Vec<f32> = w.to_vec(); // snapshot of the sync point
-        let mut order: Vec<usize> = (0..self.grads.len()).collect();
-        let norms: Vec<f32> =
-            self.grads.iter().map(|g| g.iter().map(|x| x * x).sum()).collect();
+        self.w_t.copy_from_slice(w); // snapshot of the sync point
+        self.norms.clear();
+        self.norms.extend(
+            self.grads[..self.count].iter().map(|g| g.iter().map(|x| x * x).sum::<f32>()),
+        );
+        self.order.clear();
+        self.order.extend(0..self.count);
         // total_cmp: gradients can be non-finite when the surrounding run
         // has already diverged; the fold must stay panic-free so the
         // experiment records the divergence instead of crashing.
-        order.sort_by(|&a, &b| norms[a].total_cmp(&norms[b]));
-        for &j in &order {
+        let norms = &self.norms;
+        self.order.sort_by(|&a, &b| norms[a].total_cmp(&norms[b]));
+        for &j in &self.order {
             // compensate g_j against the virtually-advanced model w (== w~^j)
-            compensate_into(&mut self.comp_buf, &self.grads[j], w, &w_t, self.lam);
+            compensate_into(&mut self.comp_buf, &self.grads[j], w, &self.w_t, self.lam);
             for (wi, ci) in w.iter_mut().zip(&self.comp_buf) {
                 *wi -= lr * ci;
             }
         }
-        self.grads.clear();
+        self.count = 0;
     }
 }
 
@@ -148,6 +182,27 @@ mod tests {
         acc.apply(&mut w, 0.1); // empty apply is a no-op
         let w2 = w.clone();
         assert_eq!(w, w2);
+    }
+
+    #[test]
+    fn push_from_equals_owned_push() {
+        let gs = grads(7, 96, 3);
+        let mut a = DcSsgdAccumulator::new(96, 1.5);
+        let mut b = DcSsgdAccumulator::new(96, 1.5);
+        for g in &gs {
+            a.push(g.clone());
+            b.push_from(g);
+        }
+        assert_eq!(a.pending(), b.pending());
+        let mut wa = vec![0.2f32; 96];
+        let mut wb = vec![0.2f32; 96];
+        a.apply(&mut wa, 0.05);
+        b.apply(&mut wb, 0.05);
+        assert_eq!(wa, wb);
+        // the arena survives a second round without growing demands
+        b.push_from(&gs[0]);
+        b.apply(&mut wb, 0.05);
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]

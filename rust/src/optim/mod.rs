@@ -104,12 +104,16 @@ pub fn compensate_adaptive_into(
     }
 }
 
-/// Average `count` gradient buffers of equal length into `out` (SSGD).
-pub fn average_into(out: &mut [f32], grads: &[&[f32]]) {
+/// Average equal-length gradient rows into `out` (SSGD). Generic over the
+/// row type (`&[f32]`, `Vec<f32>`, ...) so callers with owned arenas don't
+/// build a vector of slice refs; the f32 accumulation order (copy row 0,
+/// add the rest, scale) is part of the repo's determinism contract.
+pub fn average_into<G: AsRef<[f32]>>(out: &mut [f32], grads: &[G]) {
     assert!(!grads.is_empty());
     let inv = 1.0 / grads.len() as f32;
-    out.copy_from_slice(grads[0]);
+    out.copy_from_slice(grads[0].as_ref());
     for g in &grads[1..] {
+        let g = g.as_ref();
         debug_assert_eq!(g.len(), out.len());
         for (oi, gi) in out.iter_mut().zip(g.iter()) {
             *oi += gi;

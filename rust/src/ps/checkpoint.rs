@@ -69,14 +69,14 @@ impl Checkpoint {
         let mut ms = vec![0.0f32; n];
         let mut vel = vec![0.0f32; n];
         let mut baks = vec![vec![0.0f32; n]; workers];
-        ps.store().for_each_shard(|s, range| {
+        ps.store().for_each_shard_read(|s, range| {
             w[range.clone()].copy_from_slice(&s.w);
             ms[range.clone()].copy_from_slice(&s.ms);
-            vel[range.clone()].copy_from_slice(&s.vel);
-            for (m, bak) in baks.iter_mut().enumerate() {
-                bak[range.clone()].copy_from_slice(&s.bak[m]);
-            }
+            vel[range].copy_from_slice(&s.vel);
         });
+        for (m, bak) in baks.iter_mut().enumerate() {
+            ps.store().read_bak(m, bak);
+        }
         Checkpoint {
             model: model.to_string(),
             algorithm: algorithm.to_string(),
@@ -100,11 +100,13 @@ impl Checkpoint {
         ps.store().for_each_shard(|s, range| {
             s.w.copy_from_slice(&self.w[range.clone()]);
             s.ms.copy_from_slice(&self.ms[range.clone()]);
-            s.vel.copy_from_slice(&self.vel[range.clone()]);
-            for (m, bak) in self.baks.iter().enumerate() {
-                s.bak[m].copy_from_slice(&bak[range.clone()]);
-            }
+            s.vel.copy_from_slice(&self.vel[range]);
         });
+        for (m, bak) in self.baks.iter().enumerate() {
+            ps.store().write_bak(m, bak);
+        }
+        // resyncs pull versions and zeroes the pull counters, so resumed
+        // diagnostics start clean instead of drifting across restores
         ps.set_version(self.version);
         Ok(())
     }
@@ -275,13 +277,26 @@ mod tests {
             }
         }
         let ps_b = server(128, 2);
+        // dirty B's counters pre-restore so the reset is observable
+        ps_b.pull(0, &mut buf);
+        ps_b.pull(0, &mut buf);
         ck3.unwrap().restore_into(&ps_b).unwrap();
         assert_eq!(ps_b.version(), 3);
+        // restore must leave the diagnostics clean: pull counters zeroed,
+        // pull versions resynced (no phantom staleness)
+        for m in 0..2 {
+            assert_eq!(ps_b.pull_count(m), 0, "worker {m} pull_count not reset");
+            assert_eq!(ps_b.pending_staleness(m), 0, "worker {m} staleness not resynced");
+        }
         for (step, g) in grads.iter().enumerate().skip(3) {
             let m = step % 2;
             ps_b.pull(m, &mut buf);
             ps_b.push(m, g, 0.1);
         }
+        // replayed steps 3..6 alternate workers 1,0,1: pull counts reflect
+        // exactly the post-restore activity
+        assert_eq!(ps_b.pull_count(0), 1);
+        assert_eq!(ps_b.pull_count(1), 2);
         let mut wa = vec![0.0f32; 128];
         let mut wb = vec![0.0f32; 128];
         ps_a.snapshot(&mut wa);

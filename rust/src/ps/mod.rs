@@ -231,48 +231,50 @@ impl ParamServer {
             }
             Algorithm::DcAsgdConst | Algorithm::DcS3gd => {
                 if h.momentum > 0.0 {
+                    let bak = self.store.bak_lock(worker);
                     self.store.for_each_shard(|s, range| {
-                        let (w, vel, bak) = (&mut s.w, &mut s.vel, &s.bak[worker]);
-                        // compensate into a stack scratch, then momentum-apply
-                        let mut comp = vec![0.0f32; w.len()];
-                        optim::compensate_into(&mut comp, &g[range], w, bak, h.lambda0);
-                        optim::momentum_step(w, vel, &comp, lr, h.momentum);
+                        let ShardData { w, vel, comp, .. } = &mut *s;
+                        // compensate into the shard's reusable scratch, then
+                        // momentum-apply — zero allocations on this path
+                        optim::compensate_into(comp, &g[range.clone()], w, &bak[range], h.lambda0);
+                        optim::momentum_step(w, vel, comp, lr, h.momentum);
                     });
                 } else if self.kernel.requires_whole_vector() {
                     self.push_whole_dc(worker, g, lr);
                 } else {
+                    let bak = self.store.bak_lock(worker);
                     self.store.for_each_shard(|s, range| {
-                        let ShardData { w, bak, .. } = &mut *s;
-                        self.kernel.dc(w, &g[range], &bak[worker], lr, h.lambda0);
+                        self.kernel.dc(&mut s.w, &g[range.clone()], &bak[range], lr, h.lambda0);
                     });
                 }
             }
             Algorithm::DcAsgdAdaptive => {
                 if h.momentum > 0.0 {
+                    let bak = self.store.bak_lock(worker);
                     self.store.for_each_shard(|s, range| {
-                        let ShardData { w, ms, vel, bak } = &mut *s;
-                        let mut comp = vec![0.0f32; w.len()];
+                        let ShardData { w, ms, vel, comp } = &mut *s;
                         optim::compensate_adaptive_into(
-                            &mut comp,
-                            &g[range],
+                            comp,
+                            &g[range.clone()],
                             w,
-                            &bak[worker],
+                            &bak[range],
                             ms,
                             h.lambda0,
                             h.ms_momentum,
                             h.eps,
                         );
-                        optim::momentum_step(w, vel, &comp, lr, h.momentum);
+                        optim::momentum_step(w, vel, comp, lr, h.momentum);
                     });
                 } else if self.kernel.requires_whole_vector() {
                     self.push_whole_dca(worker, g, lr);
                 } else {
+                    let bak = self.store.bak_lock(worker);
                     self.store.for_each_shard(|s, range| {
-                        let ShardData { w, ms, bak, .. } = &mut *s;
+                        let ShardData { w, ms, .. } = &mut *s;
                         self.kernel.dca(
                             w,
-                            &g[range],
-                            &bak[worker],
+                            &g[range.clone()],
+                            &bak[range],
                             ms,
                             lr,
                             h.lambda0,
@@ -285,9 +287,9 @@ impl ParamServer {
             Algorithm::DcSyncSgd => {
                 // handled by the sync coordinator via DcSsgdAccumulator;
                 // a direct push falls back to the constant-lambda DC rule.
+                let bak = self.store.bak_lock(worker);
                 self.store.for_each_shard(|s, range| {
-                    let ShardData { w, bak, .. } = &mut *s;
-                    self.kernel.dc(w, &g[range], &bak[worker], lr, h.lambda0);
+                    self.kernel.dc(&mut s.w, &g[range.clone()], &bak[range], lr, h.lambda0);
                 });
             }
         }
@@ -318,9 +320,7 @@ impl ParamServer {
     fn push_whole_dc(&self, worker: usize, g: &[f32], lr: f32) {
         self.with_whole(|s| {
             self.store.snapshot_into(&mut s.w);
-            let mut ms_dummy = std::mem::take(&mut s.ms);
-            self.store.read_bak_ms(worker, &mut s.bak, &mut ms_dummy);
-            s.ms = ms_dummy;
+            self.store.read_bak(worker, &mut s.bak);
             self.kernel.dc(&mut s.w, g, &s.bak, lr, self.hyper.lambda0);
             self.store.store_w(&s.w);
         });
@@ -347,25 +347,34 @@ impl ParamServer {
     }
 
     /// Synchronous-mode update: apply an already-aggregated gradient as one
-    /// global step (used by the SSGD barrier loop).
+    /// global step (used by the SSGD barrier loop). Shard math is
+    /// independent, so the multi-shard apply fans out across threads for
+    /// large models — bit-identical to the sequential order.
     pub fn apply_aggregated(&self, g: &[f32], lr: f32) -> u64 {
         if self.hyper.momentum > 0.0 {
-            self.store.for_each_shard(|s, range| {
-                optim::momentum_step(&mut s.w, &mut s.vel, &g[range], lr, self.hyper.momentum);
+            let mu = self.hyper.momentum;
+            self.store.par_for_each_shard(|s, range| {
+                optim::momentum_step(&mut s.w, &mut s.vel, &g[range], lr, mu);
             });
         } else {
-            self.store.for_each_shard(|s, range| {
+            self.store.par_for_each_shard(|s, range| {
                 self.kernel.sgd(&mut s.w, &g[range], lr);
             });
         }
         self.version.fetch_add(1, Ordering::SeqCst) + 1
     }
 
-    /// Restore the global update counter (checkpoint resume).
+    /// Restore the global update counter (checkpoint resume). Pull versions
+    /// resync to `v` (next pushes see zero staleness) and the per-worker
+    /// pull counters restart from zero, so post-resume diagnostics count
+    /// only post-resume activity instead of drifting across restores.
     pub fn set_version(&self, v: u64) {
         self.version.store(v, Ordering::SeqCst);
         for pv in &self.pull_version {
             pv.store(v, Ordering::SeqCst);
+        }
+        for pc in &self.pull_count {
+            pc.store(0, Ordering::SeqCst);
         }
     }
 
@@ -374,22 +383,20 @@ impl ParamServer {
     /// term. Refresh w_bak(m) to the current model and reset its pull
     /// version, exactly as if it had just pulled.
     pub fn reset_worker(&self, m: usize) {
-        self.store.for_each_shard(|s, _| {
-            let w = std::mem::take(&mut s.w);
-            s.bak[m].copy_from_slice(&w);
-            s.w = w;
-        });
+        self.store.refresh_bak(m);
         self.pull_version[m].store(self.version.load(Ordering::SeqCst), Ordering::SeqCst);
     }
 
     /// Mutate the raw model (DC-SSGD fold); bumps the version by one.
     pub fn apply_with<F: FnOnce(&mut [f32])>(&self, f: F) -> u64 {
-        // materialize, transform, store: the fold is sequential anyway
-        let n = self.n();
-        let mut w = vec![0.0f32; n];
-        self.store.snapshot_into(&mut w);
-        f(&mut w);
-        self.store.store_w(&w);
+        // materialize into the reusable whole-vector arena, transform,
+        // store back (parallel across shards for large models): the fold
+        // itself is sequential, but the copies never allocate
+        self.with_whole(|s| {
+            self.store.snapshot_into(&mut s.w);
+            f(&mut s.w);
+            self.store.store_w(&s.w);
+        });
         self.version.fetch_add(1, Ordering::SeqCst) + 1
     }
 }
@@ -620,8 +627,16 @@ mod tests {
     #[test]
     fn set_version_restores_counters() {
         let ps = server(Algorithm::Asgd, 16, 2, 1);
+        let mut w = vec![0.0; 16];
+        ps.pull(0, &mut w);
+        ps.pull(0, &mut w);
+        assert_eq!(ps.pull_count(0), 2);
         ps.set_version(41);
         assert_eq!(ps.version(), 41);
+        // diagnostics restart clean on restore: counters zeroed, no
+        // phantom staleness
+        assert_eq!(ps.pull_count(0), 0);
+        assert_eq!(ps.pending_staleness(0), 0);
         let out = ps.push(0, &grad(1, 16), 0.1);
         assert_eq!(out.version, 42);
         assert_eq!(out.staleness, 0); // pull versions were synced to 41

@@ -1,33 +1,72 @@
-//! Lock-sharded parameter store.
+//! Read-optimized sharded parameter store.
 //!
-//! The flat parameter vector (plus its per-worker backup copies and the
-//! MeanSquare / velocity state) is split into `S` contiguous shards, each
-//! behind its own mutex, so concurrent pushes from different workers
-//! contend per-shard instead of per-model — the same trick real parameter
-//! servers use. Pulls are shard-atomic (not globally atomic), which is
-//! exactly the consistency a distributed PS provides; bench `ps_throughput`
-//! ablates S (DESIGN.md §6, Ablation B).
+//! The flat parameter vector (plus its MeanSquare / velocity state) is
+//! split into `S` contiguous shards, each behind its own `RwLock` with a
+//! per-shard version counter, so
+//!
+//! * snapshots and pulls take **read** locks — concurrent readers never
+//!   serialize against each other, and a push to shard `k` only blocks
+//!   readers of shard `k`;
+//! * pushes to *different* shards proceed fully in parallel (write locks
+//!   are per-shard);
+//! * the per-worker backup models `w_bak(m)` (paper Algorithm 2) live
+//!   *outside* the shard locks, one whole-vector buffer per worker behind
+//!   its own mutex. A pull copies `w` shard-by-shard under read locks and
+//!   then records the copy it actually handed out as the backup — so the
+//!   backup is per-shard-consistent with the snapshot by construction, and
+//!   the backup write no longer serializes against other workers' pulls.
+//!
+//! Pulls are shard-atomic (not globally atomic), which is exactly the
+//! consistency a distributed PS provides; the per-shard version counters
+//! make that observable (a reader can detect whether a shard changed
+//! between two looks). Each shard also carries a reusable `comp` scratch
+//! buffer so the momentum-DC push paths run without heap allocation —
+//! bench `ps_throughput` ablates this store against the old
+//! mutex-per-shard design (DESIGN.md §6, Ablation B).
+//!
+//! Lock order: a push path may hold the worker's backup lock *across*
+//! shard-lock acquisitions (bak → shard). The reverse nesting never occurs:
+//! pulls release every shard lock before touching the backup.
 
 use std::ops::Range;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, RwLock};
 
-/// State of one shard: the parameter slice plus all per-slice optimizer
-/// state. `bak[m]` is worker m's backup model w_bak(m) (paper Algorithm 2).
+/// Minimum elements of work per spawned thread for multi-shard applies
+/// (~512 KB of f32). Below this, thread spawn+join (~tens of us) dwarfs
+/// the memory-bound loop, so the apply stays sequential or uses fewer
+/// threads — the group count is sized from per-thread work, not total n.
+const PAR_APPLY_MIN_PER_THREAD: usize = 1 << 17;
+
+/// State of one shard: the parameter slice plus the per-slice optimizer
+/// state and a reusable compensation scratch (transient — not persisted).
 #[derive(Debug)]
 pub struct ShardData {
     pub w: Vec<f32>,
     pub ms: Vec<f32>,
     pub vel: Vec<f32>,
-    pub bak: Vec<Vec<f32>>,
+    /// Push-path scratch for the momentum-DC rules; same length as `w`.
+    pub comp: Vec<f32>,
+}
+
+#[derive(Debug)]
+struct Shard {
+    data: RwLock<ShardData>,
+    /// Bumped once per write-locked mutation of this shard.
+    version: AtomicU64,
 }
 
 /// Contiguously sharded store over the flat parameter vector.
 #[derive(Debug)]
 pub struct ShardedStore {
     ranges: Vec<Range<usize>>,
-    shards: Vec<Mutex<ShardData>>,
+    shards: Vec<Shard>,
+    /// Per-worker backup models w_bak(m), whole-vector, own lock each.
+    baks: Vec<Mutex<Vec<f32>>>,
     n: usize,
     workers: usize,
+    /// Thread budget for [`Self::par_for_each_shard`] (cached at build).
+    par_threads: usize,
 }
 
 impl ShardedStore {
@@ -48,15 +87,21 @@ impl ShardedStore {
             .iter()
             .map(|r| {
                 let w = init[r.clone()].to_vec();
-                Mutex::new(ShardData {
-                    ms: vec![0.0; w.len()],
-                    vel: vec![0.0; w.len()],
-                    bak: vec![w.clone(); workers],
-                    w,
-                })
+                Shard {
+                    data: RwLock::new(ShardData {
+                        ms: vec![0.0; w.len()],
+                        vel: vec![0.0; w.len()],
+                        comp: vec![0.0; w.len()],
+                        w,
+                    }),
+                    version: AtomicU64::new(0),
+                }
             })
             .collect();
-        Self { ranges, shards, n, workers }
+        let baks = (0..workers).map(|_| Mutex::new(init.to_vec())).collect();
+        let par_threads =
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8);
+        Self { ranges, shards, baks, n, workers, par_threads }
     }
 
     pub fn n(&self) -> usize {
@@ -72,61 +117,151 @@ impl ShardedStore {
         &self.ranges
     }
 
-    /// Copy the current model into `out` and record it as worker `m`'s
-    /// backup (the pull side of Algorithm 2: `w_bak(m) <- w_t`).
+    /// Mutation count of shard `i` (how many write-locked updates it has
+    /// absorbed). Readers can bracket a read-lock copy with two loads to
+    /// detect intervening writes — the observable half of "pulls are
+    /// shard-atomic, not globally atomic".
+    pub fn shard_version(&self, i: usize) -> u64 {
+        self.shards[i].version.load(Ordering::Acquire)
+    }
+
+    /// Copy the current model into `out` and record that copy as worker
+    /// `m`'s backup (the pull side of Algorithm 2: `w_bak(m) <- w_t`).
+    /// Each shard is copied under a read lock; the backup is then written
+    /// from `out` itself, so backup and snapshot agree per shard by
+    /// construction without ever excluding other readers.
     pub fn pull_into(&self, worker: usize, out: &mut [f32]) {
         assert_eq!(out.len(), self.n);
         for (range, shard) in self.ranges.iter().zip(&self.shards) {
-            let mut s = shard.lock().unwrap();
+            let s = shard.data.read().unwrap();
             out[range.clone()].copy_from_slice(&s.w);
-            let w = std::mem::take(&mut s.w); // appease the borrow checker
-            s.bak[worker].copy_from_slice(&w);
-            s.w = w;
         }
+        self.baks[worker].lock().unwrap().copy_from_slice(out);
     }
 
     /// Copy the current model into `out` without touching backups (eval).
+    /// Read locks only: never blocks other readers.
     pub fn snapshot_into(&self, out: &mut [f32]) {
         assert_eq!(out.len(), self.n);
         for (range, shard) in self.ranges.iter().zip(&self.shards) {
-            let s = shard.lock().unwrap();
+            let s = shard.data.read().unwrap();
             out[range.clone()].copy_from_slice(&s.w);
         }
     }
 
-    /// Apply `f` to every shard in order. `f` gets the shard state and the
-    /// global index range it owns.
+    /// Apply `f` to every shard in order under its write lock. `f` gets the
+    /// shard state and the global index range it owns. Bumps each shard's
+    /// version counter.
     pub fn for_each_shard<F: FnMut(&mut ShardData, Range<usize>)>(&self, mut f: F) {
         for (range, shard) in self.ranges.iter().zip(&self.shards) {
-            let mut s = shard.lock().unwrap();
+            let mut s = shard.data.write().unwrap();
             f(&mut s, range.clone());
+            shard.version.fetch_add(1, Ordering::Release);
         }
     }
 
-    /// Overwrite the model (used by the XLA update backend, which computes
-    /// the new full vector out-of-place).
+    /// Read-only visit of every shard in order (checkpoint capture, eval
+    /// paths that need more than `w`).
+    pub fn for_each_shard_read<F: FnMut(&ShardData, Range<usize>)>(&self, mut f: F) {
+        for (range, shard) in self.ranges.iter().zip(&self.shards) {
+            let s = shard.data.read().unwrap();
+            f(&s, range.clone());
+        }
+    }
+
+    /// Apply `f` to every shard, fanning the shards out over scoped
+    /// threads when each thread gets enough work to amortize its spawn
+    /// ([`PAR_APPLY_MIN_PER_THREAD`]; capped by `available_parallelism`
+    /// and the shard count). Shard math is independent, so the result is
+    /// bit-identical to the sequential order.
+    pub fn par_for_each_shard<F>(&self, f: F)
+    where
+        F: Fn(&mut ShardData, Range<usize>) + Sync,
+    {
+        let s_n = self.shards.len();
+        let groups = s_n.min(self.par_threads).min(self.n / PAR_APPLY_MIN_PER_THREAD);
+        if groups <= 1 {
+            for i in 0..s_n {
+                self.apply_shard(i, &f);
+            }
+            return;
+        }
+        std::thread::scope(|scope| {
+            for gi in 1..groups {
+                let f = &f;
+                scope.spawn(move || {
+                    let mut i = gi;
+                    while i < s_n {
+                        self.apply_shard(i, f);
+                        i += groups;
+                    }
+                });
+            }
+            let mut i = 0;
+            while i < s_n {
+                self.apply_shard(i, &f);
+                i += groups;
+            }
+        });
+    }
+
+    fn apply_shard<F: Fn(&mut ShardData, Range<usize>)>(&self, i: usize, f: &F) {
+        let mut s = self.shards[i].data.write().unwrap();
+        f(&mut s, self.ranges[i].clone());
+        self.shards[i].version.fetch_add(1, Ordering::Release);
+    }
+
+    /// Overwrite the model (XLA update backend / DC-SSGD fold write-back,
+    /// which compute the new full vector out-of-place).
     pub fn store_w(&self, new_w: &[f32]) {
         assert_eq!(new_w.len(), self.n);
-        for (range, shard) in self.ranges.iter().zip(&self.shards) {
-            let mut s = shard.lock().unwrap();
-            s.w.copy_from_slice(&new_w[range.clone()]);
-        }
+        self.par_for_each_shard(|s, range| {
+            s.w.copy_from_slice(&new_w[range]);
+        });
     }
 
-    /// Overwrite the MeanSquare state (XLA adaptive backend).
+    /// Overwrite the MeanSquare state (XLA adaptive backend; shards = 1).
     pub fn store_ms(&self, new_ms: &[f32]) {
         assert_eq!(new_ms.len(), self.n);
+        self.for_each_shard(|s, range| {
+            s.ms.copy_from_slice(&new_ms[range]);
+        });
+    }
+
+    /// Lock worker `m`'s backup for the duration of a push. Steady-state
+    /// uncontended: only worker `m` itself pulls/pushes against it.
+    pub fn bak_lock(&self, worker: usize) -> MutexGuard<'_, Vec<f32>> {
+        self.baks[worker].lock().unwrap()
+    }
+
+    /// Copy worker `m`'s backup out (checkpoint capture, diagnostics).
+    pub fn read_bak(&self, worker: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.n);
+        out.copy_from_slice(&self.baks[worker].lock().unwrap());
+    }
+
+    /// Overwrite worker `m`'s backup (checkpoint restore).
+    pub fn write_bak(&self, worker: usize, src: &[f32]) {
+        assert_eq!(src.len(), self.n);
+        self.baks[worker].lock().unwrap().copy_from_slice(src);
+    }
+
+    /// Refresh worker `m`'s backup to the current model (worker churn):
+    /// holds the backup lock and copies each shard under its read lock —
+    /// the same bak → shard order the push paths use.
+    pub fn refresh_bak(&self, worker: usize) {
+        let mut bak = self.baks[worker].lock().unwrap();
         for (range, shard) in self.ranges.iter().zip(&self.shards) {
-            let mut s = shard.lock().unwrap();
-            s.ms.copy_from_slice(&new_ms[range.clone()]);
+            let s = shard.data.read().unwrap();
+            bak[range.clone()].copy_from_slice(&s.w);
         }
     }
 
-    /// Read out backup + ms (XLA backend needs contiguous operands).
+    /// Read out backup + ms contiguously (XLA backend operands).
     pub fn read_bak_ms(&self, worker: usize, bak: &mut [f32], ms: &mut [f32]) {
+        self.read_bak(worker, bak);
         for (range, shard) in self.ranges.iter().zip(&self.shards) {
-            let s = shard.lock().unwrap();
-            bak[range.clone()].copy_from_slice(&s.bak[worker]);
+            let s = shard.data.read().unwrap();
             ms[range.clone()].copy_from_slice(&s.ms);
         }
     }
@@ -207,6 +342,64 @@ mod tests {
     }
 
     #[test]
+    fn shard_versions_count_mutations() {
+        let store = ShardedStore::new(&vec![0.0f32; 32], 1, 4);
+        assert!((0..store.num_shards()).all(|i| store.shard_version(i) == 0));
+        store.for_each_shard(|_, _| {});
+        assert!((0..store.num_shards()).all(|i| store.shard_version(i) == 1));
+        store.store_w(&vec![1.0f32; 32]);
+        assert!((0..store.num_shards()).all(|i| store.shard_version(i) == 2));
+        // reads don't bump versions
+        let mut out = vec![0.0; 32];
+        store.snapshot_into(&mut out);
+        store.for_each_shard_read(|_, _| {});
+        assert!((0..store.num_shards()).all(|i| store.shard_version(i) == 2));
+    }
+
+    #[test]
+    fn par_apply_matches_sequential() {
+        // par_for_each_shard must produce exactly the sequential result
+        // regardless of the per-thread-work gate (force both paths via n)
+        for n in [1024usize, 4 * PAR_APPLY_MIN_PER_THREAD + 13] {
+            let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).sin()).collect();
+            let g: Vec<f32> = (0..n).map(|i| (i as f32 * 0.02).cos()).collect();
+            let seq = ShardedStore::new(&init, 1, 8);
+            let par = ShardedStore::new(&init, 1, 8);
+            seq.for_each_shard(|s, range| {
+                crate::optim::sgd_step(&mut s.w, &g[range], 0.1);
+            });
+            par.par_for_each_shard(|s, range| {
+                crate::optim::sgd_step(&mut s.w, &g[range], 0.1);
+            });
+            let mut a = vec![0.0; n];
+            let mut b = vec![0.0; n];
+            seq.snapshot_into(&mut a);
+            par.snapshot_into(&mut b);
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn refresh_bak_copies_current_model() {
+        let init: Vec<f32> = (0..50).map(|i| i as f32).collect();
+        let store = ShardedStore::new(&init, 2, 3);
+        store.for_each_shard(|s, _| {
+            for w in s.w.iter_mut() {
+                *w *= 2.0;
+            }
+        });
+        store.refresh_bak(1);
+        let mut bak = vec![0.0; 50];
+        store.read_bak(1, &mut bak);
+        let mut now = vec![0.0; 50];
+        store.snapshot_into(&mut now);
+        assert_eq!(bak, now);
+        // worker 0 untouched
+        store.read_bak(0, &mut bak);
+        assert_eq!(bak, init);
+    }
+
+    #[test]
     fn concurrent_pushes_preserve_sum_invariant() {
         // adding deterministic per-worker deltas concurrently must commute:
         // final w == init + sum of all deltas regardless of interleaving
@@ -238,5 +431,51 @@ mod tests {
         for w in out {
             assert!((w - expect).abs() < 1e-4, "{w} vs {expect}");
         }
+    }
+
+    #[test]
+    fn concurrent_readers_see_shard_consistent_slices() {
+        // writers keep every element of a shard equal (uniform deltas per
+        // whole-store pass); shard-atomic reads must therefore never observe
+        // a mixed (torn) slice within any single shard
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Arc;
+        let n = 4096;
+        let store = Arc::new(ShardedStore::new(&vec![0.0f32; n], 2, 8));
+        let stop = Arc::new(AtomicBool::new(false));
+        let writer = {
+            let (store, stop) = (Arc::clone(&store), Arc::clone(&stop));
+            std::thread::spawn(move || {
+                let mut k = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    store.for_each_shard(|s, _| {
+                        for w in s.w.iter_mut() {
+                            *w += 1.0;
+                        }
+                    });
+                    k += 1;
+                    if k > 20_000 {
+                        break;
+                    }
+                }
+            })
+        };
+        let mut out = vec![0.0f32; n];
+        for _ in 0..200 {
+            store.pull_into(0, &mut out);
+            for (si, r) in store.ranges().iter().enumerate() {
+                let first = out[r.start];
+                assert!(
+                    out[r.clone()].iter().all(|&x| x == first),
+                    "torn read inside shard {si}"
+                );
+            }
+            // the backup recorded for this pull must be the same copy
+            let mut bak = vec![0.0f32; n];
+            store.read_bak(0, &mut bak);
+            assert_eq!(bak, out);
+        }
+        stop.store(true, Ordering::Relaxed);
+        writer.join().unwrap();
     }
 }

@@ -49,7 +49,9 @@ impl DelaySampler {
 /// Communication overhead model: fixed per-push cost plus per-byte cost.
 /// The paper reports DC-ASGD has *no extra communication* vs ASGD; the
 /// server-side compensation compute is modelled separately in the DES.
-#[derive(Clone, Copy, Debug)]
+/// Consulted by the [`crate::sim::Scheduler`] via [`CommCosts`] when the
+/// `[comm]` config section is enabled.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CommModel {
     pub per_push: f64,
     pub per_mb: f64,
@@ -61,8 +63,36 @@ impl CommModel {
         Self { per_push: 50e-6, per_mb: 1.0 / 5000.0 }
     }
 
+    pub fn ethernet_like() -> Self {
+        // ~200us latency, ~1.2 GB/s effective (10 GbE after framing)
+        Self { per_push: 200e-6, per_mb: 1.0 / 1200.0 }
+    }
+
     pub fn cost(&self, bytes: usize) -> f64 {
         self.per_push + self.per_mb * bytes as f64 / 1e6
+    }
+}
+
+/// Precomputed per-transfer virtual-time charges the scheduler adds to a
+/// worker's turnaround: `push` per gradient upload, `pull` per model
+/// download. The zero default reproduces the free-network schedule
+/// bit-for-bit (adding 0.0 to a non-negative duration is exact in f64).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommCosts {
+    /// Charge per gradient upload (simulated seconds).
+    pub push: f64,
+    /// Charge per model download (simulated seconds).
+    pub pull: f64,
+}
+
+impl CommCosts {
+    /// Derive the charges from a [`CommModel`] and the transfer sizes.
+    pub fn from_model(model: &CommModel, push_bytes: usize, pull_bytes: usize) -> Self {
+        Self { push: model.cost(push_bytes), pull: model.cost(pull_bytes) }
+    }
+
+    pub fn is_free(&self) -> bool {
+        self.push == 0.0 && self.pull == 0.0
     }
 }
 
@@ -130,5 +160,16 @@ mod tests {
         let c = CommModel::infiniband_like();
         assert!(c.cost(1_000_000) > c.cost(1_000));
         assert!(c.cost(0) > 0.0);
+        assert!(CommModel::ethernet_like().cost(1 << 20) > c.cost(1 << 20));
+    }
+
+    #[test]
+    fn comm_costs_derive_from_model_and_sizes() {
+        let model = CommModel { per_push: 1e-4, per_mb: 1e-3 };
+        let costs = CommCosts::from_model(&model, 2_000_000, 500_000);
+        assert!((costs.push - (1e-4 + 2.0 * 1e-3)).abs() < 1e-12);
+        assert!((costs.pull - (1e-4 + 0.5 * 1e-3)).abs() < 1e-12);
+        assert!(!costs.is_free());
+        assert!(CommCosts::default().is_free());
     }
 }

@@ -11,7 +11,7 @@
 pub mod delay;
 pub mod scheduler;
 
-pub use delay::{CommModel, DelaySampler};
+pub use delay::{CommCosts, CommModel, DelaySampler};
 pub use scheduler::{
     BarrierSync, CommitMode, FullyAsync, Protocol, Scheduler, StalenessBounded,
 };

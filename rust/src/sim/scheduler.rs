@@ -40,7 +40,7 @@
 //! the version staleness any push can observe by
 //! `(workers - 1) * (2s + 1)` (see [`StalenessBounded::version_bound`]).
 
-use super::delay::DelaySampler;
+use super::delay::{CommCosts, DelaySampler};
 use super::EventQueue;
 
 /// How finished gradients become global steps.
@@ -149,14 +149,36 @@ pub struct Scheduler {
     /// Simulated server-side cost charged before each compute after the
     /// first (the paper's "lightweight overhead" of the update rule).
     server_cost: f64,
+    /// Per-transfer communication charges ([`CommCosts`]); zero by default,
+    /// in which case the schedule is bit-identical to a free network.
+    comm: CommCosts,
+    /// Total communication time charged so far (diagnostic).
+    comm_total: f64,
     workers: usize,
     started: bool,
 }
 
 impl Scheduler {
     pub fn new(protocol: Box<dyn Protocol>, delays: DelaySampler, server_cost: f64) -> Self {
+        Self::with_comm(protocol, delays, server_cost, CommCosts::default())
+    }
+
+    /// Build a scheduler that charges communication time: each worker's
+    /// first compute is preceded by one model download (`comm.pull`), and
+    /// every subsequent turnaround is charged one gradient upload plus one
+    /// model download (`comm.push + comm.pull`) on top of the server cost.
+    /// With `CommCosts::default()` (both zero) the produced schedule is
+    /// bit-for-bit the pre-comm one: `x + 0.0 == x` for every non-negative
+    /// f64 duration.
+    pub fn with_comm(
+        protocol: Box<dyn Protocol>,
+        delays: DelaySampler,
+        server_cost: f64,
+        comm: CommCosts,
+    ) -> Self {
         let workers = delays.workers();
         assert!(workers >= 1);
+        assert!(comm.push >= 0.0 && comm.pull >= 0.0, "comm costs must be non-negative");
         Self {
             protocol,
             queue: EventQueue::new(),
@@ -167,6 +189,8 @@ impl Scheduler {
             step_wait: vec![0.0; workers],
             wait_total: vec![0.0; workers],
             server_cost,
+            comm,
+            comm_total: 0.0,
             workers,
             started: false,
         }
@@ -197,6 +221,11 @@ impl Scheduler {
     pub fn step_wait(&self, worker: usize) -> f64 {
         self.step_wait[worker]
     }
+    /// Total communication time charged to the virtual clock so far
+    /// (0.0 unless built via [`Self::with_comm`] with nonzero costs).
+    pub fn comm_time_total(&self) -> f64 {
+        self.comm_total
+    }
 
     /// Launch every worker at t = 0 (no protocol can gate clock-0 starts).
     /// Returns the workers that must pull a snapshot, in worker order. The
@@ -207,7 +236,9 @@ impl Scheduler {
         for w in 0..self.workers {
             self.state[w] = WorkerState::Computing;
             let d = self.delays.sample(w);
-            self.queue.schedule_in(d, w);
+            // initial model download precedes the first compute
+            self.queue.schedule_in(self.comm.pull + d, w);
+            self.comm_total += self.comm.pull;
         }
         (0..self.workers).collect()
     }
@@ -235,7 +266,10 @@ impl Scheduler {
                 self.wait_total[v] += waited;
                 self.state[v] = WorkerState::Computing;
                 let d = self.delays.sample(v);
-                self.queue.schedule_in(self.server_cost + d, v);
+                // turnaround = server update cost + gradient upload for the
+                // push that just committed + fresh model download
+                self.queue.schedule_in(self.server_cost + self.comm.push + self.comm.pull + d, v);
+                self.comm_total += self.comm.push + self.comm.pull;
                 restarted.push(v);
             }
         }
@@ -356,6 +390,80 @@ mod tests {
         // with jittered delays somebody must have waited at the barrier
         let total: f64 = sched.wait_totals().iter().sum();
         assert!(total > 0.0, "no barrier wait recorded");
+    }
+
+    #[test]
+    fn comm_disabled_reproduces_pre_comm_schedule_bitwise() {
+        // Regression for the dead-CommModel fix: the default (comm off)
+        // schedule must be bit-identical to the pre-comm recurrence
+        //   first finish:  t_w = d_w
+        //   next finishes: t_w += server_cost + d_w   (FullyAsync)
+        // replayed here by hand against the same DelaySampler stream.
+        let (workers, seed, server_cost) = (4usize, 77u64, 0.01f64);
+        let mut sched = Scheduler::new(Box::new(FullyAsync), sampler(workers, seed), server_cost);
+        sched.start();
+
+        let mut manual = sampler(workers, seed);
+        let mut times: Vec<f64> = (0..workers).map(|w| manual.sample(w)).collect();
+        for _ in 0..200 {
+            let (t, w) = sched.next().unwrap();
+            // manual replay: earliest finish wins; ties cannot occur with
+            // continuous uniform delays
+            let exp_w =
+                (0..workers).min_by(|&a, &b| times[a].partial_cmp(&times[b]).unwrap()).unwrap();
+            assert_eq!(w, exp_w);
+            assert_eq!(t.to_bits(), times[w].to_bits(), "schedule diverged");
+            sched.complete(w);
+            times[w] += server_cost + manual.sample(w);
+        }
+        assert_eq!(sched.comm_time_total(), 0.0);
+    }
+
+    #[test]
+    fn comm_costs_charge_push_and_pull_per_turnaround() {
+        use crate::sim::CommCosts;
+        let delays = DelaySampler::new(DelayModel::Constant { mean: 1.0 }, 1, 5);
+        let comm = CommCosts { push: 0.25, pull: 0.5 };
+        let mut sched = Scheduler::with_comm(Box::new(FullyAsync), delays, 0.0, comm);
+        sched.start();
+        // first finish: pull + compute = 0.5 + 1.0
+        let (t0, _) = sched.next().unwrap();
+        assert!((t0 - 1.5).abs() < 1e-12);
+        sched.complete(0);
+        // each turnaround adds push + pull + compute = 0.25 + 0.5 + 1.0
+        let (t1, _) = sched.next().unwrap();
+        assert!((t1 - 3.25).abs() < 1e-12);
+        sched.complete(0);
+        let (t2, _) = sched.next().unwrap();
+        assert!((t2 - 5.0).abs() < 1e-12);
+        // charged: initial pull + 2 turnarounds of (push + pull)
+        assert!((sched.comm_time_total() - (0.5 + 2.0 * 0.75)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_slows_every_protocol_uniformly() {
+        use crate::sim::CommCosts;
+        for proto in ["async", "barrier", "ssp"] {
+            let mk = |comm: CommCosts| -> f64 {
+                let p: Box<dyn Protocol> = match proto {
+                    "async" => Box::new(FullyAsync),
+                    "barrier" => Box::new(BarrierSync),
+                    _ => Box::new(StalenessBounded { bound: 1 }),
+                };
+                let mut sched = Scheduler::with_comm(p, sampler(3, 31), 0.01, comm);
+                sched.start();
+                let mut last = 0.0;
+                for _ in 0..60 {
+                    let (t, w) = sched.next().unwrap();
+                    last = t;
+                    sched.complete(w);
+                }
+                last
+            };
+            let free = mk(CommCosts::default());
+            let charged = mk(CommCosts { push: 0.05, pull: 0.05 });
+            assert!(charged > free, "{proto}: comm charge did not extend the schedule");
+        }
     }
 
     #[test]

@@ -262,6 +262,34 @@ fn ssp_spans_the_sync_async_spectrum() {
 }
 
 #[test]
+fn comm_model_charges_transfer_time() {
+    // [comm] off (default) is deterministic and free; enabling it must
+    // extend the simulated wallclock without changing how many steps fit
+    // in the epoch budget.
+    let _dir = require_artifacts!();
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::Asgd;
+    cfg.workers = 4;
+    let base = Trainer::new(cfg.clone()).unwrap().run().unwrap();
+    let repeat = Trainer::new(cfg.clone()).unwrap().run().unwrap();
+    assert_eq!(base.total_time, repeat.total_time, "default (comm off) must be deterministic");
+    assert_eq!(base.final_train_loss, repeat.final_train_loss);
+
+    let mut on = cfg.clone();
+    on.comm.enabled = true;
+    on.comm.model.per_push = 0.05; // sizeable vs the mean compute time of 1.0
+    on.comm.model.per_mb = 1e-3;
+    let charged = Trainer::new(on).unwrap().run().unwrap();
+    assert!(
+        charged.total_time > base.total_time,
+        "comm charge did not extend wallclock: {} vs {}",
+        charged.total_time,
+        base.total_time
+    );
+    assert_eq!(charged.total_steps, base.total_steps, "comm must not change the step budget");
+}
+
+#[test]
 fn sim_mode_is_deterministic() {
     let _dir = require_artifacts!();
     let mut cfg = tiny_cfg();

@@ -119,6 +119,74 @@ fn prop_sharding_invariant_under_any_push_sequence() {
 }
 
 #[test]
+fn concurrent_pull_push_staleness_and_shard_atomicity() {
+    // Live-threads invariants of the RwLock store (Algorithm 2 under real
+    // contention):
+    //  * every push's reported staleness is bracketed by the
+    //    pending_staleness the worker observed just before and just after
+    //    the push (before <= tau, tau + 1 <= after);
+    //  * pulls are shard-atomic: concurrent uniform pushes keep each shard
+    //    slice uniform, so a torn (intra-shard mixed) pull is detectable;
+    //  * the backup recorded by a pull is exactly the snapshot it returned,
+    //    hence per-shard-consistent by the same argument.
+    use std::sync::Arc;
+    let n = 4096;
+    let workers = 4;
+    let h = Hyper { lambda0: 0.5, ms_momentum: 0.9, momentum: 0.0, eps: 1e-7 };
+    let ps = Arc::new(
+        ParamServer::new(
+            &vec![0.0f32; n],
+            workers,
+            8,
+            Algorithm::DcAsgdConst,
+            h,
+            Box::new(NativeKernel),
+        )
+        .unwrap(),
+    );
+    let mut handles = vec![];
+    for m in 0..workers {
+        let ps = Arc::clone(&ps);
+        handles.push(std::thread::spawn(move || {
+            // uniform per-worker gradient: every complete update moves each
+            // shard uniformly, so shard slices stay elementwise-constant
+            let g = vec![0.5f32 + m as f32 * 0.25; n];
+            let mut out = vec![0.0f32; n];
+            let mut bak = vec![0.0f32; n];
+            for _ in 0..40 {
+                ps.pull(m, &mut out);
+                for (si, r) in ps.store().ranges().iter().enumerate() {
+                    let first = out[r.start];
+                    assert!(
+                        out[r.clone()].iter().all(|&x| x == first),
+                        "torn pull inside shard {si}"
+                    );
+                }
+                ps.store().read_bak(m, &mut bak);
+                assert_eq!(bak, out, "backup diverged from the pulled snapshot");
+                let before = ps.pending_staleness(m);
+                let outcome = ps.push(m, &g, 0.01);
+                let after = ps.pending_staleness(m);
+                assert!(
+                    outcome.staleness >= before,
+                    "staleness {} below pre-push pending bound {before}",
+                    outcome.staleness
+                );
+                assert!(
+                    outcome.staleness + 1 <= after,
+                    "staleness {} exceeds post-push pending bound {after}",
+                    outcome.staleness
+                );
+            }
+        }));
+    }
+    for hh in handles {
+        hh.join().unwrap();
+    }
+    assert_eq!(ps.version(), (workers * 40) as u64);
+}
+
+#[test]
 fn prop_dc_update_direction_and_magnitude() {
     check("dc update: bounded by lr*(|g| + lam*g^2*|delta|) elementwise", 30, |g| {
         let n = 64;
