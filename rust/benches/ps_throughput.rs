@@ -281,6 +281,62 @@ fn main() {
     })
     .print();
 
+    // D) compressed push path: pull + EF-encode + push_encoded, the same
+    // contention harness as B. All codec scratch lives in per-worker
+    // arenas, so the steady-state cycle performs zero heap allocations —
+    // throughput staying in the same decade as the dense path is the
+    // observable half of that invariant (the unit tests pin the
+    // pointer/capacity half).
+    println!("\n# D) pull + EF-encode + push_encoded throughput (workers=4, shards=8)");
+    {
+        use dc_asgd::compress::{CodecConfig, WorkerCompressor};
+        let mut table = Table::new(&["algo", "codec", "cycles/s"]);
+        for algo in [Algorithm::Asgd, Algorithm::DcAsgdAdaptive] {
+            for codec in [
+                CodecConfig::None,
+                CodecConfig::TopK { ratio: 0.1 },
+                CodecConfig::Qsgd { bits: 4 },
+            ] {
+                let workers = 4;
+                let init = randn(7, N, 1.0);
+                let ps = Arc::new(
+                    ParamServer::new(&init, workers, 8, algo, hyper(), Box::new(NativeKernel))
+                        .unwrap(),
+                );
+                let g = Arc::new(randn(12, N, 0.01));
+                let stop = Arc::new(AtomicBool::new(false));
+                let mut handles = Vec::new();
+                for m in 0..workers {
+                    let (ps, stop, g) = (Arc::clone(&ps), Arc::clone(&stop), Arc::clone(&g));
+                    handles.push(std::thread::spawn(move || {
+                        let mut wc = WorkerCompressor::new(&codec, N, 1, m);
+                        let mut buf = vec![0.0f32; N];
+                        let mut count = 0u64;
+                        while !stop.load(Ordering::Relaxed) {
+                            ps.pull(m, &mut buf);
+                            match wc.as_mut() {
+                                Some(wc) => {
+                                    ps.push_encoded(m, wc.compress(&g), 1e-6);
+                                }
+                                None => {
+                                    ps.push(m, &g, 1e-6);
+                                }
+                            }
+                            count += 1;
+                        }
+                        count
+                    }));
+                }
+                std::thread::sleep(std::time::Duration::from_millis(CELL_MS));
+                stop.store(true, Ordering::Relaxed);
+                let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+                let rate = total as f64 / (CELL_MS as f64 / 1e3);
+                table.row(&[algo.name().into(), codec.to_string(), format!("{rate:.0}")]);
+            }
+        }
+        table.print();
+    }
+
     // XLA/Pallas update artifacts (ablation A) — whole-vector out-of-place;
     // needs compiled artifacts, so this tail section skips loudly without
     if dc_asgd::find_artifacts_dir().is_none() {

@@ -1,0 +1,481 @@
+//! The codec implementations: TopK / RandK sparsification and QSGD-style
+//! stochastic quantization, plus the exact identity codec.
+//!
+//! All encoders write into reusable [`WirePayload`] buffers and keep their
+//! own selection scratch, so after the first call (which sizes the arenas)
+//! the encode path performs no heap allocation. Randomized codecs own a
+//! per-worker [`Pcg64`] stream: encoding is bit-deterministic given the
+//! codec's seed and call sequence.
+
+use super::{index_bits, GradientCodec, WirePayload};
+use crate::util::rng::Pcg64;
+
+/// `ceil(ratio * n)` clamped to `[1, n]` — the sparsifiers' kept count.
+pub(crate) fn kept(ratio: f64, n: usize) -> usize {
+    ((ratio * n as f64).ceil() as usize).clamp(1, n)
+}
+
+/// Reuse `out` as a Sparse payload for `n` elements, returning cleared
+/// idx/val buffers (variant replaced only on the first call).
+fn sparse_bufs(out: &mut WirePayload, n: usize) -> (&mut Vec<u32>, &mut Vec<f32>) {
+    if !matches!(out, WirePayload::Sparse { .. }) {
+        *out = WirePayload::Sparse { n: 0, idx: Vec::new(), val: Vec::new() };
+    }
+    match out {
+        WirePayload::Sparse { n: pn, idx, val } => {
+            *pn = n as u32;
+            idx.clear();
+            val.clear();
+            (idx, val)
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// Single source of truth for the sparse wire size: header + f32 values +
+/// bit-packed indices ([`WirePayload::wire_bytes`] and the codecs' static
+/// accounting both call this).
+pub(crate) fn sparse_wire_bytes(n: usize, k: usize) -> usize {
+    8 + 4 * k + (k * index_bits(n) as usize + 7) / 8
+}
+
+/// Single source of truth for the quantized wire size: self-describing
+/// header — n (4B) + bits (1B) + norm (4B) — plus bit-packed levels.
+pub(crate) fn quantized_wire_bytes(n: usize, bits: u32) -> usize {
+    9 + (n * bits as usize + 7) / 8
+}
+
+// ---------------------------------------------------------------------------
+// bit packing (shared by QSGD levels; width <= 32)
+
+/// Write `v` as a `width`-bit little-endian field at bit offset `off`.
+/// `buf` must be pre-zeroed over the written range.
+pub(crate) fn write_bits(buf: &mut [u8], off: usize, width: u32, v: u64) {
+    debug_assert!(width <= 32);
+    let mut v = v & ((1u64 << width) - 1);
+    let mut off = off;
+    let mut rem = width as usize;
+    while rem > 0 {
+        let byte = off / 8;
+        let bit = off % 8;
+        let take = (8 - bit).min(rem);
+        buf[byte] |= ((v & ((1u64 << take) - 1)) as u8) << bit;
+        v >>= take;
+        off += take;
+        rem -= take;
+    }
+}
+
+/// Read a `width`-bit little-endian field at bit offset `off`.
+pub(crate) fn read_bits(buf: &[u8], off: usize, width: u32) -> u64 {
+    debug_assert!(width <= 32);
+    let mut v = 0u64;
+    let mut got = 0usize;
+    let mut off = off;
+    let mut rem = width as usize;
+    while rem > 0 {
+        let byte = off / 8;
+        let bit = off % 8;
+        let take = (8 - bit).min(rem);
+        let part = (buf[byte] >> bit) as u64 & ((1u64 << take) - 1);
+        v |= part << got;
+        got += take;
+        off += take;
+        rem -= take;
+    }
+    v
+}
+
+/// Dequantize a packed level stream (see [`WirePayload::Quantized`]).
+pub(crate) fn dequantize_into(out: &mut [f32], n: usize, bits: u32, norm: f32, packed: &[u8]) {
+    debug_assert_eq!(out.len(), n);
+    let l = ((1u32 << (bits - 1)) - 1) as i64;
+    let scale = if l > 0 { norm / l as f32 } else { 0.0 };
+    for (i, o) in out.iter_mut().enumerate() {
+        let level = read_bits(packed, i * bits as usize, bits) as i64 - l;
+        *o = level as f32 * scale;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// identity
+
+/// Exact passthrough: dense f32 on the wire. Used for `qsgd` at 32 bits
+/// and directly in tests; `CodecConfig::None` skips encoding entirely.
+#[derive(Debug, Default)]
+pub struct IdentityCodec;
+
+impl GradientCodec for IdentityCodec {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+    fn encode(&mut self, g: &[f32], out: &mut WirePayload) {
+        if !matches!(out, WirePayload::Dense(_)) {
+            *out = WirePayload::Dense(Vec::new());
+        }
+        match out {
+            WirePayload::Dense(v) => {
+                v.clear();
+                v.extend_from_slice(g);
+            }
+            _ => unreachable!(),
+        }
+    }
+    fn wire_bytes(&self, n: usize) -> usize {
+        4 * n
+    }
+    fn is_identity(&self) -> bool {
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TopK
+
+/// Keep the `ceil(ratio * n)` largest-|value| coordinates; exact values,
+/// ascending indices. Ratio 1.0 keeps everything (exact identity).
+#[derive(Debug)]
+pub struct TopK {
+    ratio: f64,
+    /// Selection scratch: index permutation partitioned by |g|.
+    order: Vec<u32>,
+}
+
+impl TopK {
+    pub fn new(ratio: f64) -> Self {
+        assert!(ratio > 0.0 && ratio <= 1.0);
+        Self { ratio, order: Vec::new() }
+    }
+}
+
+impl GradientCodec for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+    fn encode(&mut self, g: &[f32], out: &mut WirePayload) {
+        let n = g.len();
+        let k = kept(self.ratio, n);
+        let (idx, val) = sparse_bufs(out, n);
+        if k == n {
+            idx.extend(0..n as u32);
+            val.extend_from_slice(g);
+            return;
+        }
+        self.order.clear();
+        self.order.extend(0..n as u32);
+        // partition the k largest magnitudes to the front (O(n) expected),
+        // then emit them in ascending index order for the sharded apply
+        self.order.select_nth_unstable_by(k - 1, |&a, &b| {
+            g[b as usize]
+                .abs()
+                .partial_cmp(&g[a as usize].abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx.extend_from_slice(&self.order[..k]);
+        idx.sort_unstable();
+        val.extend(idx.iter().map(|&i| g[i as usize]));
+    }
+    fn wire_bytes(&self, n: usize) -> usize {
+        sparse_wire_bytes(n, kept(self.ratio, n))
+    }
+    fn is_identity(&self) -> bool {
+        self.ratio >= 1.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RandK
+
+/// Keep `ceil(ratio * n)` uniformly random coordinates (exact values,
+/// unscaled — the EF residual absorbs the sampling bias; the classic
+/// `n/k` unbiasing rescale would break EF contractiveness). Ratio 1.0
+/// keeps everything.
+#[derive(Debug)]
+pub struct RandK {
+    ratio: f64,
+    rng: Pcg64,
+    /// Persistent permutation buffer for the partial Fisher–Yates draw.
+    perm: Vec<u32>,
+}
+
+impl RandK {
+    pub fn new(ratio: f64, rng: Pcg64) -> Self {
+        assert!(ratio > 0.0 && ratio <= 1.0);
+        Self { ratio, rng, perm: Vec::new() }
+    }
+}
+
+impl GradientCodec for RandK {
+    fn name(&self) -> &'static str {
+        "randk"
+    }
+    fn encode(&mut self, g: &[f32], out: &mut WirePayload) {
+        let n = g.len();
+        let k = kept(self.ratio, n);
+        let (idx, val) = sparse_bufs(out, n);
+        if k == n {
+            idx.extend(0..n as u32);
+            val.extend_from_slice(g);
+            return;
+        }
+        if self.perm.len() != n {
+            self.perm.clear();
+            self.perm.extend(0..n as u32);
+        }
+        // partial Fisher–Yates: the first k entries are a uniform sample
+        // (the buffer stays permuted between calls, which is still uniform)
+        for i in 0..k {
+            let j = i + self.rng.below((n - i) as u64) as usize;
+            self.perm.swap(i, j);
+        }
+        idx.extend_from_slice(&self.perm[..k]);
+        idx.sort_unstable();
+        val.extend(idx.iter().map(|&i| g[i as usize]));
+    }
+    fn wire_bytes(&self, n: usize) -> usize {
+        sparse_wire_bytes(n, kept(self.ratio, n))
+    }
+    fn is_identity(&self) -> bool {
+        self.ratio >= 1.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QSGD
+
+/// QSGD-style stochastic quantization at `bits` bits per element: levels
+/// `q ∈ [-L, L]` with `L = 2^(bits-1) - 1` against the max-norm, rounded
+/// stochastically (unbiased: `E[dequant] = value`). `bits = 32` is exact
+/// f32 passthrough. Per-element error is at most `norm / L`, so with
+/// error feedback the residual stays bounded for `bits >= 3`.
+#[derive(Debug)]
+pub struct Qsgd {
+    bits: u32,
+    rng: Pcg64,
+}
+
+impl Qsgd {
+    pub fn new(bits: u32, rng: Pcg64) -> Self {
+        assert!((3..=16).contains(&bits) || bits == 32, "qsgd bits {bits}");
+        Self { bits, rng }
+    }
+}
+
+impl GradientCodec for Qsgd {
+    fn name(&self) -> &'static str {
+        "qsgd"
+    }
+    fn encode(&mut self, g: &[f32], out: &mut WirePayload) {
+        if self.bits >= 32 {
+            // exact: dense f32 on the wire
+            IdentityCodec.encode(g, out);
+            return;
+        }
+        let n = g.len();
+        if !matches!(out, WirePayload::Quantized { .. }) {
+            *out = WirePayload::Quantized { n: 0, bits: 0, norm: 0.0, packed: Vec::new() };
+        }
+        let (pn, pbits, pnorm, packed) = match out {
+            WirePayload::Quantized { n, bits, norm, packed } => (n, bits, norm, packed),
+            _ => unreachable!(),
+        };
+        *pn = n as u32;
+        *pbits = self.bits as u8;
+        let norm = g.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        *pnorm = norm;
+        let nbytes = (n * self.bits as usize + 7) / 8;
+        packed.clear();
+        packed.resize(nbytes, 0);
+        if norm == 0.0 {
+            return; // all-zero levels decode to zero
+        }
+        let l = ((1u32 << (self.bits - 1)) - 1) as f32;
+        for (i, &x) in g.iter().enumerate() {
+            let scaled = x / norm * l; // in [-l, l]
+            let lo = scaled.floor();
+            let p = scaled - lo;
+            let q = (lo as i64 + (self.rng.next_f64() < p as f64) as i64)
+                .clamp(-(l as i64), l as i64);
+            write_bits(packed, i * self.bits as usize, self.bits, (q + l as i64) as u64);
+        }
+    }
+    fn wire_bytes(&self, n: usize) -> usize {
+        if self.bits >= 32 {
+            4 * n
+        } else {
+            quantized_wire_bytes(n, self.bits)
+        }
+    }
+    fn is_identity(&self) -> bool {
+        self.bits >= 32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grad(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn bit_roundtrip_all_widths() {
+        for width in 1u32..=32 {
+            let vals: Vec<u64> = (0..50)
+                .map(|i| (i as u64).wrapping_mul(0x9E37_79B9) & ((1u64 << width) - 1))
+                .collect();
+            let mut buf = vec![0u8; (50 * width as usize + 7) / 8];
+            for (i, &v) in vals.iter().enumerate() {
+                write_bits(&mut buf, i * width as usize, width, v);
+            }
+            for (i, &v) in vals.iter().enumerate() {
+                assert_eq!(read_bits(&buf, i * width as usize, width), v, "width {width}");
+            }
+        }
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes_sorted() {
+        let g = vec![0.1f32, -5.0, 0.0, 3.0, -0.2, 4.0];
+        let mut codec = TopK::new(0.5); // k = 3
+        let mut out = WirePayload::default();
+        codec.encode(&g, &mut out);
+        match &out {
+            WirePayload::Sparse { n, idx, val } => {
+                assert_eq!(*n, 6);
+                assert_eq!(idx, &[1, 3, 5], "largest |g| at ascending indices");
+                assert_eq!(val, &[-5.0, 3.0, 4.0]);
+            }
+            other => panic!("expected sparse, got {other:?}"),
+        }
+        let mut dec = vec![9.0f32; 6];
+        out.decode_into(&mut dec);
+        assert_eq!(dec, vec![0.0, -5.0, 0.0, 3.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn topk_ratio_one_is_exact_identity() {
+        let g = grad(3, 257);
+        let mut codec = TopK::new(1.0);
+        assert!(codec.is_identity());
+        let mut out = WirePayload::default();
+        codec.encode(&g, &mut out);
+        let mut dec = vec![0.0f32; 257];
+        out.decode_into(&mut dec);
+        assert_eq!(dec, g);
+    }
+
+    #[test]
+    fn randk_samples_k_distinct_ascending() {
+        let g = grad(4, 500);
+        let mut codec = RandK::new(0.1, Pcg64::new(9));
+        let mut out = WirePayload::default();
+        codec.encode(&g, &mut out);
+        match &out {
+            WirePayload::Sparse { idx, val, .. } => {
+                assert_eq!(idx.len(), 50);
+                assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices not strictly ascending");
+                for (&i, &v) in idx.iter().zip(val) {
+                    assert_eq!(v, g[i as usize], "values must be exact");
+                }
+            }
+            other => panic!("expected sparse, got {other:?}"),
+        }
+        // successive encodes draw different coordinate sets
+        let first = out.clone();
+        codec.encode(&g, &mut out);
+        assert_ne!(first, out);
+    }
+
+    #[test]
+    fn qsgd_error_bounded_by_norm_over_l() {
+        let n = 1000;
+        let g = grad(5, n);
+        for bits in [4u32, 6, 8] {
+            let mut codec = Qsgd::new(bits, Pcg64::new(1));
+            let mut out = WirePayload::default();
+            codec.encode(&g, &mut out);
+            let mut dec = vec![0.0f32; n];
+            out.decode_into(&mut dec);
+            let norm = g.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let l = ((1u32 << (bits - 1)) - 1) as f32;
+            let bound = norm / l * 1.0001;
+            for (a, b) in g.iter().zip(&dec) {
+                assert!((a - b).abs() <= bound, "bits={bits}: |{a} - {b}| > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn qsgd_rounding_is_unbiased_on_average() {
+        let n = 512;
+        let g = grad(6, n);
+        let mut codec = Qsgd::new(4, Pcg64::new(2));
+        let mut out = WirePayload::default();
+        let mut mean = vec![0.0f64; n];
+        let trials = 400;
+        let mut dec = vec![0.0f32; n];
+        for _ in 0..trials {
+            codec.encode(&g, &mut out);
+            out.decode_into(&mut dec);
+            for (m, &d) in mean.iter_mut().zip(&dec) {
+                *m += d as f64 / trials as f64;
+            }
+        }
+        let norm = g.iter().fold(0.0f32, |m, &x| m.max(x.abs())) as f64;
+        let l = 7.0; // bits=4
+        // stderr of the mean ~ (norm/l) / sqrt(trials); allow 5 sigma
+        let tol = norm / l / (trials as f64).sqrt() * 5.0;
+        for (i, (&m, &x)) in mean.iter().zip(&g).enumerate() {
+            assert!((m - x as f64).abs() < tol, "elem {i}: mean {m} vs {x} (tol {tol})");
+        }
+    }
+
+    #[test]
+    fn qsgd_zero_gradient_encodes_to_zero() {
+        let mut codec = Qsgd::new(4, Pcg64::new(3));
+        let mut out = WirePayload::default();
+        codec.encode(&vec![0.0f32; 64], &mut out);
+        let mut dec = vec![1.0f32; 64];
+        out.decode_into(&mut dec);
+        assert!(dec.iter().all(|&x| x == 0.0));
+        assert_eq!(out.wire_bytes(), 9 + 32);
+    }
+
+    #[test]
+    fn qsgd_32_bits_is_dense_exact() {
+        let g = grad(7, 100);
+        let mut codec = Qsgd::new(32, Pcg64::new(4));
+        assert!(codec.is_identity());
+        let mut out = WirePayload::default();
+        codec.encode(&g, &mut out);
+        assert!(matches!(out, WirePayload::Dense(_)));
+        let mut dec = vec![0.0f32; 100];
+        out.decode_into(&mut dec);
+        assert_eq!(dec, g);
+        assert_eq!(codec.wire_bytes(100), 400);
+    }
+
+    #[test]
+    fn wire_bytes_match_payload_accounting() {
+        let n = 4096;
+        let g = grad(8, n);
+        let mut topk = TopK::new(0.1);
+        let mut randk = RandK::new(0.1, Pcg64::new(5));
+        let mut qsgd = Qsgd::new(4, Pcg64::new(6));
+        let codecs: [&mut dyn GradientCodec; 3] = [&mut topk, &mut randk, &mut qsgd];
+        for codec in codecs {
+            let mut out = WirePayload::default();
+            codec.encode(&g, &mut out);
+            assert_eq!(
+                codec.wire_bytes(n),
+                out.wire_bytes(),
+                "{}: static and payload wire sizes disagree",
+                codec.name()
+            );
+            assert!(out.wire_bytes() < 4 * n, "{} did not compress", codec.name());
+        }
+    }
+}

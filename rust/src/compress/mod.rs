@@ -1,0 +1,491 @@
+//! Gradient compression: sparsification + quantization codecs with
+//! error-feedback residuals.
+//!
+//! Communication-efficient training is the standard companion to delay
+//! tolerance at scale (DC-S3GD pairs the two; see PAPERS.md): once the
+//! `[comm]` model charges per-byte transfer time, shipping the full dense
+//! `f32` gradient is just one point on the comm axis. This module opens the
+//! rest of it:
+//!
+//! * [`GradientCodec`] — a lossy encoder from a dense gradient to a
+//!   [`WirePayload`]; three implementations ([`codecs::TopK`],
+//!   [`codecs::RandK`], [`codecs::Qsgd`]) plus the exact
+//!   [`codecs::IdentityCodec`].
+//! * [`ErrorFeedback`] — the per-worker EF-SGD residual: whatever the codec
+//!   dropped this step is remembered and re-injected into the next encode,
+//!   so the *accumulated* applied update tracks the accumulated true
+//!   gradient (`sum(decoded) + residual == sum(g)` exactly, per step).
+//! * [`WorkerCompressor`] — one codec + EF state + a reusable payload
+//!   arena per worker. After warmup no steady-state heap allocation
+//!   happens on the encode path (PR 2's zero-allocation invariant).
+//!
+//! ## Wire format & byte accounting
+//!
+//! The in-process payload keeps `u32` indices / `f32` values so the
+//! parameter server can apply sparse updates shard-locally without
+//! densifying. The *bytes-on-wire* accounting ([`WirePayload::wire_bytes`])
+//! models what a real PS would ship: values as `f32`, sparse indices
+//! bit-packed at `ceil(log2 n)` bits, quantized levels bit-packed at the
+//! configured width plus one `f32` norm. The same philosophy as the DES
+//! itself: gradients are real, *costs* are modelled.
+//!
+//! Decoding is payload-self-describing ([`WirePayload::decode_into`]), so
+//! the server needs no codec instance — exactly like a tagged wire format.
+//!
+//! Selection via [`CodecConfig`] (the `[compress]` TOML section /
+//! `--compress` CLI flag). `CodecConfig::None` is the default and is pinned
+//! bit-identical to the uncompressed path: the driver builds no compressor
+//! at all and pushes dense gradients as before.
+
+pub mod codecs;
+
+pub use codecs::{IdentityCodec, Qsgd, RandK, TopK};
+
+use crate::util::rng::Pcg64;
+use anyhow::bail;
+
+/// Bits needed to address an index in `[0, n)` (wire model for sparse
+/// index streams). At least 1 so the degenerate n = 1 still costs a bit.
+pub fn index_bits(n: usize) -> u32 {
+    (usize::BITS - n.max(2).saturating_sub(1).leading_zeros()).max(1)
+}
+
+/// One encoded gradient. Buffers are reused across encodes (the enum
+/// variant is stable per codec, so steady state never reallocates).
+#[derive(Clone, Debug, PartialEq)]
+pub enum WirePayload {
+    /// Uncompressed f32 vector (identity / 32-bit quantization).
+    Dense(Vec<f32>),
+    /// Sparse (index, value) pairs; `idx` is strictly ascending so the
+    /// sharded store can partition it per shard with a linear walk.
+    Sparse { n: u32, idx: Vec<u32>, val: Vec<f32> },
+    /// QSGD-style levels: `level[i] ∈ [0, 2L]` offset-binary packed at
+    /// `bits` bits per element; dequantizes to `(level - L) / L * norm`
+    /// with `L = 2^(bits-1) - 1`.
+    Quantized { n: u32, bits: u8, norm: f32, packed: Vec<u8> },
+}
+
+impl Default for WirePayload {
+    fn default() -> Self {
+        WirePayload::Dense(Vec::new())
+    }
+}
+
+impl WirePayload {
+    /// Dense length this payload decodes to.
+    pub fn len(&self) -> usize {
+        match self {
+            WirePayload::Dense(v) => v.len(),
+            WirePayload::Sparse { n, .. } | WirePayload::Quantized { n, .. } => *n as usize,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Modelled bytes this payload occupies on the wire (see module docs).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            WirePayload::Dense(v) => 4 * v.len(),
+            WirePayload::Sparse { n, idx, .. } => {
+                codecs::sparse_wire_bytes(*n as usize, idx.len())
+            }
+            WirePayload::Quantized { n, bits, .. } => {
+                codecs::quantized_wire_bytes(*n as usize, *bits as u32)
+            }
+        }
+    }
+
+    /// Decode into a dense vector (overwrites `out` entirely).
+    pub fn decode_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len(), "decode length mismatch");
+        match self {
+            WirePayload::Dense(v) => out.copy_from_slice(v),
+            WirePayload::Sparse { idx, val, .. } => {
+                out.fill(0.0);
+                for (&i, &v) in idx.iter().zip(val) {
+                    out[i as usize] = v;
+                }
+            }
+            WirePayload::Quantized { n, bits, norm, packed } => {
+                codecs::dequantize_into(out, *n as usize, *bits as u32, *norm, packed);
+            }
+        }
+    }
+}
+
+/// A lossy (or exact) gradient encoder. Stateful (`&mut self`) because
+/// RandK / QSGD carry per-worker random streams; encoding must be
+/// deterministic given the codec's seed and call sequence.
+pub trait GradientCodec: Send {
+    fn name(&self) -> &'static str;
+    /// Encode `g` into `out`, reusing `out`'s buffers (no steady-state
+    /// allocation once the buffers have reached capacity).
+    fn encode(&mut self, g: &[f32], out: &mut WirePayload);
+    /// Modelled wire size of an encoded `n`-element gradient (all codecs
+    /// here are fixed-rate, so this is exact, not an estimate).
+    fn wire_bytes(&self, n: usize) -> usize;
+    /// True if `decode(encode(g)) == g` exactly (ratio 1.0 / 32 bits /
+    /// identity): the error-feedback residual then stays identically zero.
+    /// Decoding needs no codec method at all — payloads are
+    /// self-describing ([`WirePayload::decode_into`]).
+    fn is_identity(&self) -> bool {
+        false
+    }
+}
+
+/// Error-feedback (EF-SGD) residual state for one worker: the part of the
+/// injected gradient the codec dropped, carried into the next encode.
+///
+/// Per step: `e = g + r`; `wire = encode(e)`; `r' = e - decode(wire)`.
+/// Summing over steps telescopes to
+/// `sum(decoded) + r_T == sum(g) + r_0` — the accumulated applied update
+/// equals the accumulated true gradient up to the (bounded) final residual.
+#[derive(Debug)]
+pub struct ErrorFeedback {
+    residual: Vec<f32>,
+    injected: Vec<f32>,
+    decoded: Vec<f32>,
+}
+
+impl ErrorFeedback {
+    pub fn new(n: usize) -> Self {
+        Self { residual: vec![0.0; n], injected: vec![0.0; n], decoded: vec![0.0; n] }
+    }
+
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+
+    /// One EF step: inject the residual, encode, update the residual.
+    /// Identity codecs skip the residual arithmetic entirely (it is
+    /// identically zero, and the arenas may be empty), which keeps the
+    /// ratio-1.0 / 32-bit paths bit-exact with the dense pipeline.
+    pub fn step(&mut self, codec: &mut dyn GradientCodec, g: &[f32], out: &mut WirePayload) {
+        if codec.is_identity() {
+            codec.encode(g, out);
+            return;
+        }
+        assert_eq!(g.len(), self.residual.len());
+        for ((e, gi), r) in self.injected.iter_mut().zip(g).zip(&self.residual) {
+            *e = gi + r;
+        }
+        codec.encode(&self.injected, out);
+        out.decode_into(&mut self.decoded);
+        for ((r, e), d) in self.residual.iter_mut().zip(&self.injected).zip(&self.decoded) {
+            *r = e - d;
+        }
+    }
+}
+
+/// Per-worker compression state: codec + EF residual + the reusable
+/// payload arena. This is what the driver holds, one per worker.
+pub struct WorkerCompressor {
+    codec: Box<dyn GradientCodec>,
+    ef: ErrorFeedback,
+    payload: WirePayload,
+}
+
+impl WorkerCompressor {
+    /// Build from config; `None` config means no compression (callers
+    /// should then skip the encode path entirely).
+    pub fn new(cfg: &CodecConfig, n: usize, seed: u64, worker: usize) -> Option<Self> {
+        let codec = cfg.build(seed, worker)?;
+        // identity codecs never touch the EF arenas (the residual is
+        // identically zero): don't pay 3n floats per worker for them
+        let ef = ErrorFeedback::new(if codec.is_identity() { 0 } else { n });
+        Some(Self { codec, ef, payload: WirePayload::default() })
+    }
+
+    /// EF-inject + encode `g`; the returned payload borrows this worker's
+    /// arena and is valid until the next `compress` call.
+    pub fn compress(&mut self, g: &[f32]) -> &WirePayload {
+        self.ef.step(self.codec.as_mut(), g, &mut self.payload);
+        &self.payload
+    }
+
+    pub fn residual(&self) -> &[f32] {
+        self.ef.residual()
+    }
+
+    pub fn codec(&self) -> &dyn GradientCodec {
+        self.codec.as_ref()
+    }
+}
+
+/// Codec selection + parameters (the `[compress]` config section). `None`
+/// is the default: no compressor is built and the training path is
+/// bit-identical to pre-compression builds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CodecConfig {
+    None,
+    /// Keep the `ceil(ratio * n)` largest-magnitude coordinates.
+    TopK { ratio: f64 },
+    /// Keep `ceil(ratio * n)` uniformly random coordinates (per-worker
+    /// deterministic stream; unscaled — EF absorbs the bias).
+    RandK { ratio: f64 },
+    /// QSGD-style stochastic quantization at `bits` bits per element
+    /// (sign + magnitude levels against the max-norm); 32 = exact f32.
+    Qsgd { bits: u32 },
+}
+
+impl CodecConfig {
+    /// Parse a codec name with its parameter knobs (TOML / CLI).
+    pub fn parse(name: &str, ratio: f64, bits: u32) -> anyhow::Result<Self> {
+        let cfg = match name.to_ascii_lowercase().as_str() {
+            "none" | "off" | "dense" => CodecConfig::None,
+            "topk" | "top-k" => CodecConfig::TopK { ratio },
+            "randk" | "rand-k" => CodecConfig::RandK { ratio },
+            "qsgd" | "quant" => CodecConfig::Qsgd { bits },
+            other => bail!("unknown codec {other:?} (none|topk|randk|qsgd)"),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodecConfig::None => "none",
+            CodecConfig::TopK { .. } => "topk",
+            CodecConfig::RandK { .. } => "randk",
+            CodecConfig::Qsgd { .. } => "qsgd",
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, CodecConfig::None)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match self {
+            CodecConfig::None => {}
+            CodecConfig::TopK { ratio } | CodecConfig::RandK { ratio } => {
+                if !(*ratio > 0.0 && *ratio <= 1.0) {
+                    bail!("{} ratio must be in (0, 1], got {ratio}", self.name());
+                }
+            }
+            CodecConfig::Qsgd { bits } => {
+                // bits = 2 gives L = 1: per-element error reaches the full
+                // norm and the EF residual is no longer contractive
+                if !((3..=16).contains(bits) || *bits == 32) {
+                    bail!("qsgd bits must be in [3, 16] or exactly 32, got {bits}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Instantiate the codec for one worker. Random codecs derive their
+    /// stream from `(seed, worker)` so runs are bit-reproducible and
+    /// workers are decorrelated.
+    pub fn build(&self, seed: u64, worker: usize) -> Option<Box<dyn GradientCodec>> {
+        let rng = || Pcg64::new(seed ^ 0xC0DE_C0DE).fork(worker as u64);
+        match *self {
+            CodecConfig::None => None,
+            CodecConfig::TopK { ratio } => Some(Box::new(TopK::new(ratio))),
+            CodecConfig::RandK { ratio } => Some(Box::new(RandK::new(ratio, rng()))),
+            CodecConfig::Qsgd { bits } => Some(Box::new(Qsgd::new(bits, rng()))),
+        }
+    }
+
+    /// Modelled per-push bytes on the wire for an `n`-element gradient
+    /// (dense f32 for `None`). Mirrors the codecs' own `wire_bytes`
+    /// without instantiating one (pinned equal by the property tests).
+    /// Note the sparse container is *larger* than dense at ratio 1.0
+    /// (indices ride along), so identity-point schedules match dense only
+    /// while `[comm]` is disabled.
+    pub fn wire_bytes(&self, n: usize) -> usize {
+        match *self {
+            CodecConfig::None => 4 * n,
+            CodecConfig::TopK { ratio } | CodecConfig::RandK { ratio } => {
+                codecs::sparse_wire_bytes(n, codecs::kept(ratio, n))
+            }
+            CodecConfig::Qsgd { bits } => {
+                if bits >= 32 {
+                    4 * n
+                } else {
+                    codecs::quantized_wire_bytes(n, bits)
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for CodecConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecConfig::None => write!(f, "none"),
+            CodecConfig::TopK { ratio } => write!(f, "topk({ratio})"),
+            CodecConfig::RandK { ratio } => write!(f, "randk({ratio})"),
+            CodecConfig::Qsgd { bits } => write!(f, "qsgd({bits}b)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grad(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| rng.normal(0.0, 0.5) as f32).collect()
+    }
+
+    #[test]
+    fn index_bits_covers_range() {
+        assert_eq!(index_bits(1), 1);
+        assert_eq!(index_bits(2), 1);
+        assert_eq!(index_bits(3), 2);
+        assert_eq!(index_bits(256), 8);
+        assert_eq!(index_bits(257), 9);
+        assert_eq!(index_bits(860_160), 20);
+        // every valid index must fit
+        for n in [1usize, 2, 7, 100, 4097] {
+            let b = index_bits(n);
+            assert!((n - 1) as u64 <= (1u64 << b) - 1, "n={n} b={b}");
+        }
+    }
+
+    #[test]
+    fn codec_config_parse_and_validate() {
+        assert_eq!(CodecConfig::parse("none", 0.1, 8).unwrap(), CodecConfig::None);
+        assert_eq!(
+            CodecConfig::parse("topk", 0.25, 8).unwrap(),
+            CodecConfig::TopK { ratio: 0.25 }
+        );
+        assert_eq!(
+            CodecConfig::parse("randk", 0.5, 8).unwrap(),
+            CodecConfig::RandK { ratio: 0.5 }
+        );
+        assert_eq!(CodecConfig::parse("qsgd", 0.1, 4).unwrap(), CodecConfig::Qsgd { bits: 4 });
+        assert!(CodecConfig::parse("warp", 0.1, 8).is_err());
+        assert!(CodecConfig::parse("topk", 0.0, 8).is_err());
+        assert!(CodecConfig::parse("topk", 1.5, 8).is_err());
+        assert!(CodecConfig::parse("qsgd", 0.1, 1).is_err());
+        assert!(CodecConfig::parse("qsgd", 0.1, 2).is_err(), "L=1 is not EF-contractive");
+        assert!(CodecConfig::parse("qsgd", 0.1, 3).is_ok());
+        assert!(CodecConfig::parse("qsgd", 0.1, 17).is_err());
+        assert!(CodecConfig::parse("qsgd", 0.1, 32).is_ok());
+    }
+
+    #[test]
+    fn none_builds_no_codec_and_costs_dense() {
+        assert!(CodecConfig::None.build(1, 0).is_none());
+        assert_eq!(CodecConfig::None.wire_bytes(1000), 4000);
+        assert!(WorkerCompressor::new(&CodecConfig::None, 64, 1, 0).is_none());
+    }
+
+    #[test]
+    fn topk_wire_bytes_beat_dense_by_5x_at_ratio_0_1() {
+        // the acceptance gate's arithmetic: ratio 0.1 with bit-packed
+        // indices must model >= 5x below dense f32
+        for n in [100_000usize, 272_384, 860_160] {
+            let dense = CodecConfig::None.wire_bytes(n);
+            let topk = CodecConfig::TopK { ratio: 0.1 }.wire_bytes(n);
+            assert!(
+                dense as f64 / topk as f64 >= 5.0,
+                "n={n}: dense {dense} / topk {topk} < 5x"
+            );
+        }
+    }
+
+    #[test]
+    fn ef_telescopes_sum_applied_plus_residual_equals_sum_true() {
+        let n = 256;
+        for cfg in [
+            CodecConfig::TopK { ratio: 0.2 },
+            CodecConfig::RandK { ratio: 0.3 },
+            CodecConfig::Qsgd { bits: 6 },
+        ] {
+            let mut wc = WorkerCompressor::new(&cfg, n, 7, 0).unwrap();
+            let mut sum_true = vec![0.0f64; n];
+            let mut sum_applied = vec![0.0f64; n];
+            let mut dec = vec![0.0f32; n];
+            for t in 0..50 {
+                let g = grad(100 + t, n);
+                let p = wc.compress(&g);
+                p.decode_into(&mut dec);
+                for i in 0..n {
+                    sum_true[i] += g[i] as f64;
+                    sum_applied[i] += dec[i] as f64;
+                }
+            }
+            let r = wc.residual();
+            for i in 0..n {
+                let gap = (sum_applied[i] + r[i] as f64 - sum_true[i]).abs();
+                assert!(gap < 1e-3, "{cfg:?}: telescoping broke at {i}: {gap}");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_configs_keep_residual_zero_and_roundtrip_exactly() {
+        let n = 333;
+        let g = grad(5, n);
+        for cfg in [
+            CodecConfig::TopK { ratio: 1.0 },
+            CodecConfig::RandK { ratio: 1.0 },
+            CodecConfig::Qsgd { bits: 32 },
+        ] {
+            let mut wc = WorkerCompressor::new(&cfg, n, 3, 1).unwrap();
+            assert!(wc.codec().is_identity(), "{cfg:?}");
+            let mut dec = vec![0.0f32; n];
+            for _ in 0..3 {
+                let p = wc.compress(&g);
+                p.decode_into(&mut dec);
+            }
+            assert_eq!(dec, g, "{cfg:?} roundtrip not exact");
+            assert!(wc.residual().iter().all(|&r| r == 0.0), "{cfg:?} residual nonzero");
+        }
+    }
+
+    #[test]
+    fn encode_path_has_no_steady_state_allocation() {
+        // After one warmup encode, every reusable buffer's pointer and
+        // capacity must stay fixed across many more encodes — the
+        // PR 2 zero-allocation invariant, extended to the codec arenas.
+        let n = 2048;
+        for cfg in [
+            CodecConfig::TopK { ratio: 0.1 },
+            CodecConfig::RandK { ratio: 0.1 },
+            CodecConfig::Qsgd { bits: 4 },
+        ] {
+            let mut wc = WorkerCompressor::new(&cfg, n, 11, 0).unwrap();
+            let _ = wc.compress(&grad(1, n)); // warmup: arenas reach capacity
+            let fingerprint = |p: &WirePayload| -> Vec<(usize, usize)> {
+                match p {
+                    WirePayload::Dense(v) => vec![(v.as_ptr() as usize, v.capacity())],
+                    WirePayload::Sparse { idx, val, .. } => vec![
+                        (idx.as_ptr() as usize, idx.capacity()),
+                        (val.as_ptr() as usize, val.capacity()),
+                    ],
+                    WirePayload::Quantized { packed, .. } => {
+                        vec![(packed.as_ptr() as usize, packed.capacity())]
+                    }
+                }
+            };
+            let before = fingerprint(&wc.payload);
+            for t in 0..100 {
+                let _ = wc.compress(&grad(200 + t, n));
+            }
+            let after = fingerprint(&wc.payload);
+            assert_eq!(before, after, "{cfg:?}: payload arena reallocated");
+        }
+    }
+
+    #[test]
+    fn per_worker_streams_are_deterministic_and_distinct() {
+        let n = 128;
+        let g = grad(2, n);
+        let cfg = CodecConfig::RandK { ratio: 0.1 };
+        let mut a = WorkerCompressor::new(&cfg, n, 9, 0).unwrap();
+        let mut b = WorkerCompressor::new(&cfg, n, 9, 0).unwrap();
+        let mut c = WorkerCompressor::new(&cfg, n, 9, 1).unwrap();
+        let pa = a.compress(&g).clone();
+        let pb = b.compress(&g).clone();
+        let pc = c.compress(&g).clone();
+        assert_eq!(pa, pb, "same (seed, worker) must encode identically");
+        assert_ne!(pa, pc, "different workers must draw distinct coordinates");
+    }
+}

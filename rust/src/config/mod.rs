@@ -268,6 +268,9 @@ pub struct ExperimentConfig {
     pub delay: DelayModel,
     /// Communication-cost model (`[comm]`; off by default).
     pub comm: CommConfig,
+    /// Gradient compression codec (`[compress]`; `none` by default —
+    /// pinned bit-identical to the uncompressed path).
+    pub compress: crate::compress::CodecConfig,
     pub update_backend: UpdateBackend,
     /// Parameter-store lock shards.
     pub shards: usize,
@@ -309,6 +312,7 @@ impl Default for ExperimentConfig {
             exec_mode: ExecMode::SimulatedTime,
             delay: DelayModel::Uniform { mean: 1.0, jitter: 0.3 },
             comm: CommConfig::default(),
+            compress: crate::compress::CodecConfig::None,
             update_backend: UpdateBackend::Native,
             shards: 1,
             eval_every: 1,
@@ -465,6 +469,36 @@ impl ExperimentConfig {
         }
         if self.comm.enabled && self.exec_mode == ExecMode::Threads {
             bail!("comm cost model runs under the event-driven scheduler: set exec_mode = sim");
+        }
+        self.compress.validate()?;
+        if !self.compress.is_none() {
+            // compression composes with the immediate-commit protocols on
+            // the native momentum-free path (see the protocol matrix);
+            // barrier folds, momentum velocity, and whole-vector XLA
+            // operands all need the dense gradient
+            if matches!(self.algorithm, Algorithm::SyncSgd | Algorithm::DcSyncSgd) {
+                bail!(
+                    "{} folds dense gradients at the barrier: compression requires an \
+                     immediate-commit protocol (asgd/dc-asgd-*/ssp/dc-s3gd/sgd)",
+                    self.algorithm.name()
+                );
+            }
+            if self.momentum > 0.0 {
+                bail!("momentum does not compose with gradient compression");
+            }
+            if self.update_backend == UpdateBackend::Xla {
+                bail!("compression requires the native update backend");
+            }
+            if self.exec_mode == ExecMode::Threads {
+                bail!("compression runs under the event-driven scheduler: set exec_mode = sim");
+            }
+            if !self.resume_from.is_empty() {
+                bail!(
+                    "resume does not compose with gradient compression: checkpoints do not \
+                     capture the per-worker error-feedback residuals, so a resumed run would \
+                     silently drop accumulated gradient mass"
+                );
+            }
         }
         Ok(())
     }
@@ -649,6 +683,17 @@ impl ExperimentConfig {
             cfg.comm.enabled = v;
         }
 
+        // gradient compression ([compress]): codec + its parameter knobs
+        if let Some(kind) = doc.get("compress.codec").and_then(|v| v.as_str()) {
+            let ratio = get_f64("compress.ratio")?.unwrap_or(0.1);
+            let bits = get_usize("compress.bits")?.unwrap_or(8);
+            // checked conversion: `as u32` would wrap out-of-range values
+            // onto valid bit widths before validation sees them
+            let bits = u32::try_from(bits)
+                .map_err(|_| anyhow::anyhow!("compress.bits {bits} out of range"))?;
+            cfg.compress = crate::compress::CodecConfig::parse(kind, ratio, bits)?;
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -674,6 +719,22 @@ impl ExperimentConfig {
             ("comm_enabled", self.comm.enabled.into()),
             ("comm_per_push", self.comm.model.per_push.into()),
             ("comm_per_mb", self.comm.model.per_mb.into()),
+            ("compress", self.compress.name().into()),
+            (
+                "compress_ratio",
+                match self.compress {
+                    crate::compress::CodecConfig::TopK { ratio }
+                    | crate::compress::CodecConfig::RandK { ratio } => ratio.into(),
+                    _ => 0.0.into(),
+                },
+            ),
+            (
+                "compress_bits",
+                match self.compress {
+                    crate::compress::CodecConfig::Qsgd { bits } => (bits as i64).into(),
+                    _ => 0i64.into(),
+                },
+            ),
             ("shards", self.shards.into()),
             ("tag", self.tag.as_str().into()),
         ])
@@ -872,6 +933,59 @@ mod tests {
 
         let json = ExperimentConfig::default().to_json().to_string();
         assert!(json.contains("\"comm_enabled\""));
+    }
+
+    #[test]
+    fn from_toml_compress_section() {
+        use crate::compress::CodecConfig;
+        // default: none (pinned bit-identical to the uncompressed path)
+        let cfg = ExperimentConfig::from_toml("workers = 2").unwrap();
+        assert_eq!(cfg.compress, CodecConfig::None);
+
+        let cfg = ExperimentConfig::from_toml(
+            "[compress]\ncodec = \"topk\"\nratio = 0.25",
+        )
+        .unwrap();
+        assert_eq!(cfg.compress, CodecConfig::TopK { ratio: 0.25 });
+
+        let cfg = ExperimentConfig::from_toml("[compress]\ncodec = \"qsgd\"\nbits = 4").unwrap();
+        assert_eq!(cfg.compress, CodecConfig::Qsgd { bits: 4 });
+
+        let cfg = ExperimentConfig::from_toml("[compress]\ncodec = \"randk\"").unwrap();
+        assert_eq!(cfg.compress, CodecConfig::RandK { ratio: 0.1 }, "default ratio");
+
+        // rejected: bad codec, bad params, and non-composing configs
+        assert!(ExperimentConfig::from_toml("[compress]\ncodec = \"warp\"").is_err());
+        assert!(
+            ExperimentConfig::from_toml("[compress]\ncodec = \"topk\"\nratio = 0.0").is_err()
+        );
+        assert!(ExperimentConfig::from_toml("[compress]\ncodec = \"qsgd\"\nbits = 1").is_err());
+        assert!(ExperimentConfig::from_toml(
+            "algorithm = \"ssgd\"\n[compress]\ncodec = \"topk\""
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[train]\nmomentum = 0.9\n[compress]\ncodec = \"topk\""
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "update_backend = \"xla\"\nshards = 1\n[compress]\ncodec = \"topk\""
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "exec_mode = \"threads\"\n[compress]\ncodec = \"topk\""
+        )
+        .is_err());
+        // checkpoints don't carry EF residuals: resuming compressed runs
+        // would silently drop accumulated gradient mass
+        assert!(ExperimentConfig::from_toml(
+            "resume_from = \"ck.bin\"\n[compress]\ncodec = \"topk\""
+        )
+        .is_err());
+
+        let json = cfg.to_json().to_string();
+        assert!(json.contains("\"compress\""));
+        assert!(json.contains("randk"));
     }
 
     #[test]

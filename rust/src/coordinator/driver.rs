@@ -10,6 +10,7 @@
 //! thin adapters over this loop.
 
 use super::RunCtx;
+use crate::compress::WorkerCompressor;
 use crate::config::Algorithm;
 use crate::data::{EpochPartition, ShardCursor};
 use crate::metrics::StepRecord;
@@ -61,14 +62,25 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
     } else {
         0.0
     };
+    // gradient compression ([compress]): one codec + EF residual + payload
+    // arena per worker. `none` builds nothing and the push path below is
+    // exactly the pre-compression dense code.
+    let mut compressors: Vec<WorkerCompressor> = (0..m)
+        .filter_map(|w| WorkerCompressor::new(&ctx.cfg.compress, n, ctx.cfg.seed, w))
+        .collect();
+    debug_assert!(compressors.is_empty() || compressors.len() == m);
     // communication charges ([comm]): when enabled, every gradient upload
     // and model download adds virtual time via sim::CommModel; disabled
-    // (the default) keeps the schedule bit-identical to a free network
+    // (the default) keeps the schedule bit-identical to a free network.
+    // Uploads cost the *encoded* wire size; model downloads stay dense.
+    // Byte accounting rides along either way (it never affects the
+    // schedule), so sweeps can report bytes-on-wire.
+    let dense_bytes = n * std::mem::size_of::<f32>();
+    let push_bytes = ctx.cfg.compress.wire_bytes(n);
     let comm = if ctx.cfg.comm.enabled {
-        let bytes = n * std::mem::size_of::<f32>();
-        CommCosts::from_model(&ctx.cfg.comm.model, bytes, bytes)
+        CommCosts::from_model(&ctx.cfg.comm.model, push_bytes, dense_bytes)
     } else {
-        CommCosts::default()
+        CommCosts::sized(push_bytes, dense_bytes)
     };
     let mut sched = Scheduler::with_comm(
         protocol_for(algo, ctx.cfg.staleness_bound as u64),
@@ -77,6 +89,10 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
         comm,
     );
     let barrier = sched.commit_mode() == CommitMode::Barrier;
+    debug_assert!(
+        !barrier || compressors.is_empty(),
+        "barrier protocols fold dense gradients (config validation rejects this)"
+    );
     let dcssgd = algo == Algorithm::DcSyncSgd;
     let mut acc = DcSsgdAccumulator::new(n, ctx.cfg.lambda0 as f32);
     let mut avg = vec![0.0f32; n];
@@ -185,7 +201,14 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                 ctx.ps.pull(0, &mut snapshots[0]);
             }
         } else {
-            let outcome = ctx.ps.push(w, &grads, lr);
+            // compressed path: EF-inject + encode, then the server decodes
+            // (or applies sparse shard-locally); DC compensates the decoded
+            // gradient against w_bak exactly as it would the dense one
+            let outcome = if compressors.is_empty() {
+                ctx.ps.push(w, &grads, lr)
+            } else {
+                ctx.ps.push_encoded(w, compressors[w].compress(&grads), lr)
+            };
             samples += ctx.batch_size as u64;
             let passes_now = samples as f64 / train_len;
             ctx.metrics.record_step(StepRecord {
@@ -212,5 +235,6 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
             }
         }
     }
+    ctx.metrics.set_comm_bytes(sched.comm_bytes_total());
     Ok(())
 }

@@ -73,6 +73,37 @@
 //! assuming a free network. With `[comm]` disabled the schedule is
 //! bit-identical to earlier builds (adding 0.0 to a duration is exact).
 //!
+//! ## Gradient compression & wire format
+//!
+//! The `[compress]` config section (`--compress` CLI flag; `none` by
+//! default) selects a [`compress::GradientCodec`] that every worker runs
+//! on its gradient before the push: `topk` / `randk` sparsification (keep
+//! `ceil(ratio * n)` coordinates) or `qsgd` stochastic quantization at a
+//! configurable bit width. Each worker carries an **error-feedback
+//! residual** ([`compress::ErrorFeedback`], living alongside `w_bak(m)`
+//! outside the shard locks): whatever the codec dropped is re-injected
+//! into the next encode, so the accumulated applied update telescopes to
+//! the accumulated true gradient. Encode/decode scratch lives in reusable
+//! per-worker arenas — the push path stays zero-allocation.
+//!
+//! On the server, sparse payloads apply **shard-locally without
+//! densifying** for the elementwise rules (bit-identical to pushing the
+//! densified gradient); DC-ASGD-a decodes densely first because its
+//! MeanSquare state decays every coordinate per push. Delay compensation
+//! composes unchanged: the *decoded* gradient is compensated against
+//! `w_bak` (Eqn. 10). Codec composition: `asgd` / `ssp` / `dc-asgd-c` /
+//! `dc-s3gd` take the sparse fast path, `dc-asgd-a` the dense-decode path,
+//! and the barrier protocols (`ssgd` / `dc-ssgd`), momentum variants, and
+//! the XLA backend reject compression at config validation.
+//!
+//! The [`sim::Scheduler`] charges gradient uploads at the **encoded wire
+//! size** (bit-packed sparse indices / quantization levels; model
+//! downloads stay dense) and accounts total bytes-on-wire either way.
+//! With `compress = "none"` (the default) no codec is built and schedules
+//! and trajectories are bit-identical to pre-compression builds (pinned by
+//! regression tests). Bench `compression_sweep` sweeps codec × ratio/bits
+//! × protocol × delay model into JSONL.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -85,6 +116,7 @@
 //! println!("final test error {:.2}%", report.final_test_error * 100.0);
 //! ```
 
+pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;

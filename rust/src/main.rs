@@ -52,6 +52,9 @@ fn usage() {
            --train-size N       --test-size N      --out DIR\n\
            --comm               (charge push/pull transfer time in the DES)\n\
            --comm-per-push F    --comm-per-mb F    (seconds, seconds/MB)\n\
+           --compress none|topk|randk|qsgd         gradient codec (+ error feedback)\n\
+           --topk-ratio F       (topk/randk kept fraction, default 0.1)\n\
+           --quant-bits N       (qsgd bits per element, default 8; 32 = exact)\n\
            --tag NAME           --verbose\n\
          sweep options:\n\
            --algos a,b,c        --workers-list 1,4,8"
@@ -142,6 +145,48 @@ fn build_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
     if let Some(v) = args.f64_opt("comm-per-mb")? {
         cfg.comm.model.per_mb = v;
         cfg.comm.enabled = true;
+    }
+    // gradient compression: --compress picks the codec; the knob flags
+    // refine whichever codec is selected (here or in the config file)
+    let topk_ratio = args.f64_opt("topk-ratio")?;
+    // checked conversion: a wrapping `as u32` could alias an out-of-range
+    // value onto a valid bit width before validation sees it
+    let quant_bits = match args.usize_opt("quant-bits")? {
+        Some(b) => Some(
+            u32::try_from(b).map_err(|_| anyhow::anyhow!("--quant-bits {b} out of range"))?,
+        ),
+        None => None,
+    };
+    use dc_asgd::compress::CodecConfig;
+    if let Some(c) = args.str_opt("compress") {
+        // knob fallbacks inherit from whatever the config file selected,
+        // so `--config exp.toml --compress randk` keeps a tuned ratio
+        // instead of silently reverting to the built-in defaults
+        let cur_ratio = match cfg.compress {
+            CodecConfig::TopK { ratio } | CodecConfig::RandK { ratio } => ratio,
+            _ => 0.1,
+        };
+        let cur_bits = match cfg.compress {
+            CodecConfig::Qsgd { bits } => bits,
+            _ => 8,
+        };
+        cfg.compress = CodecConfig::parse(
+            &c,
+            topk_ratio.unwrap_or(cur_ratio),
+            quant_bits.unwrap_or(cur_bits),
+        )?;
+    } else {
+        if let Some(r) = topk_ratio {
+            if let CodecConfig::TopK { ratio } | CodecConfig::RandK { ratio } = &mut cfg.compress
+            {
+                *ratio = r;
+            }
+        }
+        if let Some(b) = quant_bits {
+            if let CodecConfig::Qsgd { bits } = &mut cfg.compress {
+                *bits = b;
+            }
+        }
     }
     if let Some(v) = args.str_opt("out") {
         cfg.out_dir = v;

@@ -59,6 +59,10 @@ pub struct MetricsLog {
     /// Exact running maximum staleness (the folded tail would otherwise
     /// clamp heavy-tail outliers to the cap).
     stale_max: u64,
+    /// Total modelled bytes on the wire (encoded gradient uploads + dense
+    /// model downloads), reported by the scheduler at end of run. Zero in
+    /// threads mode (no wire model there).
+    comm_bytes: u64,
 }
 
 impl Default for MetricsLog {
@@ -77,7 +81,18 @@ impl MetricsLog {
             wait_accum: 0.0,
             stale_counts: Vec::new(),
             stale_max: 0,
+            comm_bytes: 0,
         }
+    }
+
+    /// Record the run's total bytes-on-wire (set once by the driver from
+    /// [`crate::sim::Scheduler::comm_bytes_total`]).
+    pub fn set_comm_bytes(&mut self, bytes: u64) {
+        self.comm_bytes = bytes;
+    }
+
+    pub fn comm_bytes(&self) -> u64 {
+        self.comm_bytes
     }
 
     pub fn record_step(&mut self, r: StepRecord) {
@@ -218,6 +233,7 @@ impl MetricsLog {
             staleness_p99: stale_p99,
             staleness_max: stale_max,
             wait_total,
+            comm_bytes: self.comm_bytes,
             staleness_hist: self.staleness_histogram(64),
         }
     }
@@ -241,6 +257,9 @@ pub struct TrainReport {
     pub staleness_max: u64,
     /// Total simulated seconds lost to protocol gates (barrier / SSP).
     pub wait_total: f64,
+    /// Total modelled bytes on the wire (encoded uploads + dense
+    /// downloads; 0 in threads mode).
+    pub comm_bytes: u64,
     /// `staleness_hist[tau]` = steps that observed delay tau (tail folded
     /// into the last bucket).
     pub staleness_hist: Vec<u64>,
@@ -261,6 +280,7 @@ impl TrainReport {
             ("staleness_p99", self.staleness_p99.into()),
             ("staleness_max", (self.staleness_max as i64).into()),
             ("wait_total", self.wait_total.into()),
+            ("comm_bytes", (self.comm_bytes as i64).into()),
             (
                 "staleness_hist",
                 Json::arr(self.staleness_hist.iter().map(|&c| Json::from(c as i64))),

@@ -104,6 +104,40 @@ pub fn compensate_adaptive_into(
     }
 }
 
+/// Sparse SGD on one shard slice: for each pair `(i, v)` with global index
+/// `i` inside the shard that starts at `base`, `w[i - base] -= lr * v`.
+/// Identical f32 ops (in ascending-index order) to [`sgd_step`] on the
+/// densified gradient — untouched coordinates are exactly unchanged there
+/// too (`x - lr * 0.0 == x`), so sparse and dense applies are bit-equal.
+pub fn sgd_step_sparse(w: &mut [f32], base: usize, idx: &[u32], val: &[f32], lr: f32) {
+    debug_assert_eq!(idx.len(), val.len());
+    for (&i, &v) in idx.iter().zip(val) {
+        w[i as usize - base] -= lr * v;
+    }
+}
+
+/// Sparse DC-ASGD-c (Eqn. 10) on one shard slice: compensation against the
+/// worker's backup only at the transmitted coordinates. Bit-equal to
+/// [`dc_step`] on the densified gradient (a zero gradient element
+/// contributes `0 + lam * 0 * delta = 0` there).
+pub fn dc_step_sparse(
+    w: &mut [f32],
+    w_bak: &[f32],
+    base: usize,
+    idx: &[u32],
+    val: &[f32],
+    lr: f32,
+    lam: f32,
+) {
+    debug_assert_eq!(w.len(), w_bak.len());
+    debug_assert_eq!(idx.len(), val.len());
+    for (&i, &v) in idx.iter().zip(val) {
+        let j = i as usize - base;
+        let delta = w[j] - w_bak[j];
+        w[j] -= lr * (v + lam * v * v * delta);
+    }
+}
+
 /// Average equal-length gradient rows into `out` (SSGD). Generic over the
 /// row type (`&[f32]`, `Vec<f32>`, ...) so callers with owned arenas don't
 /// build a vector of slice refs; the f32 accumulation order (copy row 0,
@@ -264,6 +298,45 @@ mod tests {
         for (a, b) in w1.iter().zip(&w2) {
             assert!((a - b).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn sparse_steps_match_densified_dense_steps_bitwise() {
+        // sparse kernels must be BIT-equal to the dense kernels on the
+        // densified gradient (zeros at untransmitted coordinates)
+        let v = vecs(8, 300, 3);
+        let (w0, wb) = (&v[0], &v[2]);
+        let idx: Vec<u32> = (0..300).filter(|i| i % 7 == 0).map(|i| i as u32).collect();
+        let val: Vec<f32> = idx.iter().map(|&i| v[1][i as usize]).collect();
+        let mut dense_g = vec![0.0f32; 300];
+        for (&i, &x) in idx.iter().zip(&val) {
+            dense_g[i as usize] = x;
+        }
+
+        let mut a = w0.clone();
+        let mut b = w0.clone();
+        sgd_step(&mut a, &dense_g, 0.3);
+        sgd_step_sparse(&mut b, 0, &idx, &val, 0.3);
+        assert_eq!(a, b);
+
+        let mut a = w0.clone();
+        let mut b = w0.clone();
+        dc_step(&mut a, &dense_g, wb, 0.3, 1.7);
+        dc_step_sparse(&mut b, wb, 0, &idx, &val, 0.3, 1.7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sparse_steps_respect_shard_base_offset() {
+        // global indices [100, 105) applied to a shard starting at 100
+        let mut w = vec![1.0f32; 5];
+        let bak = vec![0.5f32; 5];
+        let idx = [101u32, 103];
+        let val = [2.0f32, -1.0];
+        sgd_step_sparse(&mut w, 100, &idx, &val, 0.1);
+        assert_eq!(w, vec![1.0, 0.8, 1.0, 1.1, 1.0]);
+        dc_step_sparse(&mut w, &bak, 100, &idx, &val, 0.1, 0.0);
+        assert_eq!(w, vec![1.0, 0.6, 1.0, 1.2, 1.0]);
     }
 
     #[test]

@@ -37,6 +37,27 @@ pub trait UpdateKernel: Send + Sync {
     fn requires_whole_vector(&self) -> bool {
         false
     }
+    /// Sparse variants for compressed pushes ([`Self::sgd`]/[`Self::dc`]
+    /// restricted to the transmitted coordinates). Defaults delegate to
+    /// the fused native loops so any elementwise kernel stays consistent
+    /// between dense and compressed pushes; whole-vector kernels never see
+    /// them (`push_encoded` rejects `requires_whole_vector`).
+    fn sgd_sparse(&self, w: &mut [f32], base: usize, idx: &[u32], val: &[f32], lr: f32) {
+        optim::sgd_step_sparse(w, base, idx, val, lr);
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn dc_sparse(
+        &self,
+        w: &mut [f32],
+        w_bak: &[f32],
+        base: usize,
+        idx: &[u32],
+        val: &[f32],
+        lr: f32,
+        lam: f32,
+    ) {
+        optim::dc_step_sparse(w, w_bak, base, idx, val, lr, lam);
+    }
     fn name(&self) -> &'static str;
 }
 
@@ -111,6 +132,11 @@ pub struct ParamServer {
     pull_count: Vec<AtomicU64>,
     /// Scratch buffers for the whole-vector (XLA) path.
     whole_scratch: std::sync::Mutex<WholeScratch>,
+    /// Reusable per-worker dense buffers for decoding quantized /
+    /// densified payloads on the encoded push path (sized lazily, then
+    /// steady-state). Per-worker like `w_bak(m)`: concurrent compressed
+    /// pushes never serialize on a shared decode arena.
+    decode_scratch: Vec<std::sync::Mutex<Vec<f32>>>,
 }
 
 #[derive(Default)]
@@ -147,6 +173,7 @@ impl ParamServer {
             pull_version: (0..workers).map(|_| AtomicU64::new(0)).collect(),
             pull_count: (0..workers).map(|_| AtomicU64::new(0)).collect(),
             whole_scratch: std::sync::Mutex::new(WholeScratch::default()),
+            decode_scratch: (0..workers).map(|_| std::sync::Mutex::new(Vec::new())).collect(),
         })
     }
 
@@ -293,9 +320,90 @@ impl ParamServer {
                 });
             }
         }
+        self.commit(worker)
+    }
+
+    /// Shared push tail: bump the global version and report the delay tau
+    /// this update suffered.
+    fn commit(&self, worker: usize) -> PushOutcome {
         let version = self.version.fetch_add(1, Ordering::SeqCst) + 1;
         let pulled = self.pull_version[worker].load(Ordering::SeqCst);
         PushOutcome { version, staleness: (version - 1).saturating_sub(pulled) }
+    }
+
+    /// Worker push of a compressed gradient ([`crate::compress`]): the
+    /// decoded gradient goes through exactly the same update rules as a
+    /// dense push — delay compensation composes unchanged (the *decoded*
+    /// gradient is compensated against `w_bak(m)`, Eqn. 10).
+    ///
+    /// Sparse payloads apply shard-locally without densifying for the
+    /// elementwise rules (SGD family, constant-lambda DC family) — only
+    /// the shards owning transmitted coordinates take write locks, and the
+    /// result is bit-identical to pushing the densified gradient. The
+    /// adaptive rule (DC-ASGD-a) decodes densely first: its MeanSquare
+    /// state decays at *every* coordinate per push, transmitted or not, so
+    /// a truly sparse apply would change the math. Quantized payloads
+    /// always decode densely (into a reusable arena). Momentum and
+    /// whole-vector (XLA) backends don't compose with compression; config
+    /// validation rejects them upstream.
+    pub fn push_encoded(
+        &self,
+        worker: usize,
+        p: &crate::compress::WirePayload,
+        lr: f32,
+    ) -> PushOutcome {
+        use crate::compress::WirePayload as P;
+        assert_eq!(p.len(), self.n(), "payload length mismatch");
+        assert!(
+            self.hyper.momentum == 0.0 && !self.kernel.requires_whole_vector(),
+            "compression requires the native momentum-free backend"
+        );
+        let h = self.hyper;
+        match p {
+            P::Dense(g) => self.push(worker, g, lr),
+            P::Quantized { .. } => self.push_densified(worker, p, lr),
+            P::Sparse { idx, val, .. } => match self.algo {
+                Algorithm::DcAsgdAdaptive => self.push_densified(worker, p, lr),
+                Algorithm::Asgd
+                | Algorithm::SequentialSgd
+                | Algorithm::SyncSgd
+                | Algorithm::Ssp => {
+                    self.store.for_each_shard_sparse(idx, val, |s, range, si, sv| {
+                        self.kernel.sgd_sparse(&mut s.w, range.start, si, sv, lr);
+                    });
+                    self.commit(worker)
+                }
+                Algorithm::DcAsgdConst | Algorithm::DcS3gd | Algorithm::DcSyncSgd => {
+                    let bak = self.store.bak_lock(worker);
+                    self.store.for_each_shard_sparse(idx, val, |s, range, si, sv| {
+                        self.kernel.dc_sparse(
+                            &mut s.w,
+                            &bak[range.clone()],
+                            range.start,
+                            si,
+                            sv,
+                            lr,
+                            h.lambda0,
+                        );
+                    });
+                    self.commit(worker)
+                }
+            },
+        }
+    }
+
+    /// Decode a payload into the reusable dense arena and run the normal
+    /// dense push path.
+    fn push_densified(
+        &self,
+        worker: usize,
+        p: &crate::compress::WirePayload,
+        lr: f32,
+    ) -> PushOutcome {
+        let mut buf = self.decode_scratch[worker].lock().unwrap();
+        buf.resize(self.n(), 0.0);
+        p.decode_into(&mut buf);
+        self.push(worker, &buf, lr)
     }
 
     // ---- whole-vector (XLA artifact) paths --------------------------------
@@ -640,6 +748,67 @@ mod tests {
         let out = ps.push(0, &grad(1, 16), 0.1);
         assert_eq!(out.version, 42);
         assert_eq!(out.staleness, 0); // pull versions were synced to 41
+    }
+
+    #[test]
+    fn encoded_push_matches_dense_push_bitwise() {
+        use crate::compress::WirePayload;
+        // sparse payloads must produce BIT-identical models to pushing the
+        // densified gradient through the dense rule, for every update rule
+        // (the adaptive rule routes through the dense decode internally)
+        let n = 517;
+        for algo in [Algorithm::Asgd, Algorithm::DcAsgdConst, Algorithm::DcAsgdAdaptive] {
+            let enc = server(algo, n, 2, 4);
+            let den = server(algo, n, 2, 4);
+            let mut buf = vec![0.0; n];
+            for step in 0..6u64 {
+                let worker = (step % 2) as usize;
+                enc.pull(worker, &mut buf);
+                den.pull(worker, &mut buf);
+                let g = grad(40 + step, n);
+                let idx: Vec<u32> =
+                    (0..n).filter(|i| (i + step as usize) % 3 == 0).map(|i| i as u32).collect();
+                let val: Vec<f32> = idx.iter().map(|&i| g[i as usize]).collect();
+                let mut densified = vec![0.0f32; n];
+                for (&i, &v) in idx.iter().zip(&val) {
+                    densified[i as usize] = v;
+                }
+                let p = WirePayload::Sparse { n: n as u32, idx, val };
+                let a = enc.push_encoded(worker, &p, 0.1);
+                let b = den.push(worker, &densified, 0.1);
+                assert_eq!(a.version, b.version);
+                assert_eq!(a.staleness, b.staleness);
+            }
+            let mut we = vec![0.0; n];
+            let mut wd = vec![0.0; n];
+            enc.snapshot(&mut we);
+            den.snapshot(&mut wd);
+            assert_eq!(we, wd, "{algo:?}: encoded push diverged from dense");
+        }
+    }
+
+    #[test]
+    fn quantized_push_decodes_through_dense_path() {
+        use crate::compress::{GradientCodec, Qsgd, WirePayload};
+        let n = 256;
+        let ps = server(Algorithm::DcAsgdConst, n, 1, 2);
+        let dense = server(Algorithm::DcAsgdConst, n, 1, 2);
+        let mut buf = vec![0.0; n];
+        ps.pull(0, &mut buf);
+        dense.pull(0, &mut buf);
+        let g = grad(50, n);
+        let mut codec = Qsgd::new(8, crate::util::rng::Pcg64::new(1));
+        let mut p = WirePayload::default();
+        codec.encode(&g, &mut p);
+        let mut decoded = vec![0.0f32; n];
+        p.decode_into(&mut decoded);
+        ps.push_encoded(0, &p, 0.2);
+        dense.push(0, &decoded, 0.2);
+        let mut a = vec![0.0; n];
+        let mut b = vec![0.0; n];
+        ps.snapshot(&mut a);
+        dense.snapshot(&mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

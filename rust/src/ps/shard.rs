@@ -160,6 +160,34 @@ impl ShardedStore {
         }
     }
 
+    /// Sparse visit: walk a *sorted* (ascending global index) sparse
+    /// gradient, write-locking only the shards that own at least one
+    /// transmitted coordinate and handing each the idx/val sub-slices that
+    /// fall inside it. Untouched shards are never locked and their version
+    /// counters don't move (they were not mutated). One linear pass over
+    /// `idx`; no allocation.
+    pub fn for_each_shard_sparse<F>(&self, idx: &[u32], val: &[f32], mut f: F)
+    where
+        F: FnMut(&mut ShardData, Range<usize>, &[u32], &[f32]),
+    {
+        debug_assert_eq!(idx.len(), val.len());
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "sparse indices must be ascending");
+        debug_assert!(idx.last().map(|&i| (i as usize) < self.n).unwrap_or(true));
+        let mut lo = 0usize;
+        for (range, shard) in self.ranges.iter().zip(&self.shards) {
+            if lo >= idx.len() {
+                break;
+            }
+            let hi = lo + idx[lo..].partition_point(|&i| (i as usize) < range.end);
+            if hi > lo {
+                let mut s = shard.data.write().unwrap();
+                f(&mut s, range.clone(), &idx[lo..hi], &val[lo..hi]);
+                shard.version.fetch_add(1, Ordering::Release);
+                lo = hi;
+            }
+        }
+    }
+
     /// Read-only visit of every shard in order (checkpoint capture, eval
     /// paths that need more than `w`).
     pub fn for_each_shard_read<F: FnMut(&ShardData, Range<usize>)>(&self, mut f: F) {
@@ -329,6 +357,36 @@ mod tests {
         one.snapshot_into(&mut a);
         many.snapshot_into(&mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sparse_visit_partitions_indices_and_skips_untouched_shards() {
+        let n = 100;
+        let store = ShardedStore::new(&vec![0.0f32; n], 1, 4); // shards of 25
+        // coordinates in shards 0 and 2 only
+        let idx = [3u32, 24, 50, 60, 74];
+        let val = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let mut seen: Vec<(usize, Vec<u32>)> = Vec::new();
+        store.for_each_shard_sparse(&idx, &val, |s, range, si, sv| {
+            assert!(si.iter().all(|&i| range.contains(&(i as usize))));
+            assert_eq!(si.len(), sv.len());
+            for (&i, &v) in si.iter().zip(sv) {
+                s.w[i as usize - range.start] += v;
+            }
+            seen.push((range.start, si.to_vec()));
+        });
+        assert_eq!(seen, vec![(0, vec![3, 24]), (50, vec![50, 60, 74])]);
+        // only the two touched shards' versions moved
+        assert_eq!(
+            (0..4).map(|i| store.shard_version(i)).collect::<Vec<_>>(),
+            vec![1, 0, 1, 0]
+        );
+        let mut out = vec![0.0f32; n];
+        store.snapshot_into(&mut out);
+        for (&i, &v) in idx.iter().zip(&val) {
+            assert_eq!(out[i as usize], v);
+        }
+        assert_eq!(out.iter().filter(|&&x| x != 0.0).count(), idx.len());
     }
 
     #[test]

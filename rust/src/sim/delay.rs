@@ -77,18 +77,35 @@ impl CommModel {
 /// worker's turnaround: `push` per gradient upload, `pull` per model
 /// download. The zero default reproduces the free-network schedule
 /// bit-for-bit (adding 0.0 to a non-negative duration is exact in f64).
+///
+/// The transfer *sizes* ride along so the scheduler can account total
+/// bytes on the wire — with gradient compression the push size is the
+/// encoded wire size, not the dense vector ([`crate::compress`]). Sizes
+/// are pure accounting: they never influence the schedule (only the
+/// pre-multiplied `push`/`pull` charges do), so tracking them keeps the
+/// comm-off schedule bit-identical.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CommCosts {
     /// Charge per gradient upload (simulated seconds).
     pub push: f64,
     /// Charge per model download (simulated seconds).
     pub pull: f64,
+    /// Bytes per gradient upload (wire accounting only).
+    pub push_bytes: usize,
+    /// Bytes per model download (wire accounting only).
+    pub pull_bytes: usize,
 }
 
 impl CommCosts {
     /// Derive the charges from a [`CommModel`] and the transfer sizes.
     pub fn from_model(model: &CommModel, push_bytes: usize, pull_bytes: usize) -> Self {
-        Self { push: model.cost(push_bytes), pull: model.cost(pull_bytes) }
+        Self { push: model.cost(push_bytes), pull: model.cost(pull_bytes), push_bytes, pull_bytes }
+    }
+
+    /// Free transfers (zero time charge) that still account their sizes —
+    /// the `[comm]`-disabled case, where bytes-on-wire stays reportable.
+    pub fn sized(push_bytes: usize, pull_bytes: usize) -> Self {
+        Self { push_bytes, pull_bytes, ..Self::default() }
     }
 
     pub fn is_free(&self) -> bool {
@@ -169,7 +186,15 @@ mod tests {
         let costs = CommCosts::from_model(&model, 2_000_000, 500_000);
         assert!((costs.push - (1e-4 + 2.0 * 1e-3)).abs() < 1e-12);
         assert!((costs.pull - (1e-4 + 0.5 * 1e-3)).abs() < 1e-12);
+        assert_eq!((costs.push_bytes, costs.pull_bytes), (2_000_000, 500_000));
         assert!(!costs.is_free());
         assert!(CommCosts::default().is_free());
+    }
+
+    #[test]
+    fn sized_costs_are_free_but_account_bytes() {
+        let c = CommCosts::sized(1234, 5678);
+        assert!(c.is_free());
+        assert_eq!((c.push_bytes, c.pull_bytes), (1234, 5678));
     }
 }

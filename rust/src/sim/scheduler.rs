@@ -154,6 +154,10 @@ pub struct Scheduler {
     comm: CommCosts,
     /// Total communication time charged so far (diagnostic).
     comm_total: f64,
+    /// Total bytes shipped over the modelled wire (uploads + downloads);
+    /// tracked even when the time charges are zero so compression sweeps
+    /// can report bytes-on-wire without enabling `[comm]`.
+    comm_bytes: u64,
     workers: usize,
     started: bool,
 }
@@ -191,6 +195,7 @@ impl Scheduler {
             server_cost,
             comm,
             comm_total: 0.0,
+            comm_bytes: 0,
             workers,
             started: false,
         }
@@ -226,6 +231,12 @@ impl Scheduler {
     pub fn comm_time_total(&self) -> f64 {
         self.comm_total
     }
+    /// Total bytes shipped over the modelled wire so far: one encoded
+    /// gradient upload per completed compute (counted even if the worker
+    /// is then gated) plus one dense model download per (re)start.
+    pub fn comm_bytes_total(&self) -> u64 {
+        self.comm_bytes
+    }
 
     /// Launch every worker at t = 0 (no protocol can gate clock-0 starts).
     /// Returns the workers that must pull a snapshot, in worker order. The
@@ -239,6 +250,7 @@ impl Scheduler {
             // initial model download precedes the first compute
             self.queue.schedule_in(self.comm.pull + d, w);
             self.comm_total += self.comm.pull;
+            self.comm_bytes += self.comm.pull_bytes as u64;
         }
         (0..self.workers).collect()
     }
@@ -255,6 +267,12 @@ impl Scheduler {
     pub fn complete(&mut self, worker: usize) -> Vec<usize> {
         debug_assert_eq!(self.state[worker], WorkerState::Computing);
         let now = self.queue.now();
+        // the completing worker's gradient is uploaded (committed by the
+        // caller) regardless of whether the protocol gates its restart —
+        // count the upload bytes here so the counter is exact even for
+        // workers still blocked when the run ends. The TIME charge stays
+        // on the restart path (it delays the *next* turnaround).
+        self.comm_bytes += self.comm.push_bytes as u64;
         self.clocks[worker] += 1;
         self.state[worker] = WorkerState::Blocked;
         self.blocked_since[worker] = now;
@@ -270,6 +288,7 @@ impl Scheduler {
                 // push that just committed + fresh model download
                 self.queue.schedule_in(self.server_cost + self.comm.push + self.comm.pull + d, v);
                 self.comm_total += self.comm.push + self.comm.pull;
+                self.comm_bytes += self.comm.pull_bytes as u64;
                 restarted.push(v);
             }
         }
@@ -423,7 +442,7 @@ mod tests {
     fn comm_costs_charge_push_and_pull_per_turnaround() {
         use crate::sim::CommCosts;
         let delays = DelaySampler::new(DelayModel::Constant { mean: 1.0 }, 1, 5);
-        let comm = CommCosts { push: 0.25, pull: 0.5 };
+        let comm = CommCosts { push: 0.25, pull: 0.5, ..CommCosts::default() };
         let mut sched = Scheduler::with_comm(Box::new(FullyAsync), delays, 0.0, comm);
         sched.start();
         // first finish: pull + compute = 0.5 + 1.0
@@ -461,9 +480,68 @@ mod tests {
                 last
             };
             let free = mk(CommCosts::default());
-            let charged = mk(CommCosts { push: 0.05, pull: 0.05 });
+            let charged = mk(CommCosts { push: 0.05, pull: 0.05, ..CommCosts::default() });
             assert!(charged > free, "{proto}: comm charge did not extend the schedule");
         }
+    }
+
+    #[test]
+    fn byte_accounting_tracks_transfers_without_touching_the_schedule() {
+        use crate::sim::CommCosts;
+        // two schedulers, identical streams: one free, one free-but-sized.
+        // The schedules must be bit-identical (sizes are pure accounting)
+        // while the sized one reports exact bytes on the wire.
+        let (workers, seed) = (3usize, 41u64);
+        let mut free = Scheduler::new(Box::new(FullyAsync), sampler(workers, seed), 0.01);
+        let mut sized = Scheduler::with_comm(
+            Box::new(FullyAsync),
+            sampler(workers, seed),
+            0.01,
+            CommCosts::sized(100, 1000),
+        );
+        free.start();
+        sized.start();
+        let mut completes = 0u64;
+        let mut restarts = 0u64;
+        for _ in 0..60 {
+            let (ta, wa) = free.next().unwrap();
+            let (tb, wb) = sized.next().unwrap();
+            assert_eq!(wa, wb);
+            assert_eq!(ta.to_bits(), tb.to_bits(), "sizes perturbed the schedule");
+            free.complete(wa);
+            completes += 1;
+            restarts += sized.complete(wb).len() as u64;
+        }
+        assert_eq!(sized.comm_time_total(), 0.0);
+        assert_eq!(free.comm_bytes_total(), 0);
+        // one dense download per (re)start + one encoded upload per
+        // completed compute (counted even if the worker were gated)
+        assert_eq!(
+            sized.comm_bytes_total(),
+            (workers as u64 + restarts) * 1000 + completes * 100
+        );
+    }
+
+    #[test]
+    fn upload_bytes_counted_even_for_gated_workers() {
+        use crate::sim::CommCosts;
+        // SSP s=0: early finishers block at the gate, but their pushed
+        // gradients were committed — the byte counter must include them.
+        let workers = 3;
+        let mut sched = Scheduler::with_comm(
+            Box::new(StalenessBounded { bound: 0 }),
+            sampler(workers, 57),
+            0.0,
+            CommCosts::sized(10, 0),
+        );
+        sched.start();
+        // complete two workers: both stay gated (round incomplete), yet
+        // both uploads count
+        for _ in 0..2 {
+            let (_, w) = sched.next().unwrap();
+            assert!(sched.complete(w).is_empty(), "s=0 must gate early finishers");
+        }
+        assert_eq!(sched.comm_bytes_total(), 20);
     }
 
     #[test]

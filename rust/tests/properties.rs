@@ -1,6 +1,7 @@
 //! Property-based invariant tests over the coordinator substrates (no
 //! artifacts needed — these run pure-rust with the in-repo prop harness).
 
+use dc_asgd::compress::{CodecConfig, WorkerCompressor};
 use dc_asgd::config::{Algorithm, DelayModel};
 use dc_asgd::data::EpochPartition;
 use dc_asgd::optim;
@@ -184,6 +185,249 @@ fn concurrent_pull_push_staleness_and_shard_atomicity() {
         hh.join().unwrap();
     }
     assert_eq!(ps.version(), (workers * 40) as u64);
+}
+
+fn random_codec(g: &mut Gen) -> CodecConfig {
+    match g.usize_in(0, 2) {
+        0 => CodecConfig::TopK { ratio: g.f64_in(0.05, 0.9) },
+        1 => CodecConfig::RandK { ratio: g.f64_in(0.2, 0.9) },
+        // cover the whole validated bit range, including the floor (3)
+        _ => CodecConfig::Qsgd { bits: 3 + g.usize_in(0, 5) as u32 },
+    }
+}
+
+#[test]
+fn prop_error_feedback_is_contractive() {
+    // EF-SGD invariant: over T steps the accumulated applied (decoded)
+    // update telescopes to the accumulated true gradient minus the final
+    // residual, and with a CONSTANT gradient the average applied update
+    // converges to it (the residual stays bounded, so its share of the
+    // average vanishes as 1/T).
+    check("EF residual telescopes and the mean applied update converges", 15, |g| {
+        let n = 64 + g.usize_in(0, 256);
+        let cfg = random_codec(g);
+        let mut wc = WorkerCompressor::new(&cfg, n, g.rng.next_u64(), 0).unwrap();
+        let grad = g.f32_vec(n, 0.5);
+        let t = 150;
+        let mut sum_applied = vec![0.0f64; n];
+        let mut dec = vec![0.0f32; n];
+        for _ in 0..t {
+            let p = wc.compress(&grad);
+            p.decode_into(&mut dec);
+            for (s, &d) in sum_applied.iter_mut().zip(&dec) {
+                *s += d as f64;
+            }
+        }
+        let gmax = grad.iter().fold(0.0f32, |m, &x| m.max(x.abs())) as f64;
+        for i in 0..n {
+            // exact telescoping: sum(decoded) + residual == T * g
+            let gap =
+                (sum_applied[i] + wc.residual()[i] as f64 - t as f64 * grad[i] as f64).abs();
+            prop_assert!(
+                gap < 1e-2 * (1.0 + gmax),
+                "{cfg:?}: telescoping broke at {i} by {gap}"
+            );
+            // convergence of the running mean to the true gradient (its
+            // error is residual/T, and the residual is bounded)
+            let mean_err = (sum_applied[i] / t as f64 - grad[i] as f64).abs();
+            prop_assert!(
+                mean_err < 0.5 * (1.0 + gmax),
+                "{cfg:?}: mean applied update off by {mean_err} at {i}"
+            );
+        }
+        // the residual must stay bounded (contractive), not grow with T:
+        // TopK cycles coordinates within ~n/k steps, RandK's selection gaps
+        // are geometric, QSGD's error is norm/L per step — all far below
+        // the linear-in-T growth a non-contractive loop would show
+        let rmax = wc.residual().iter().fold(0.0f32, |m, &x| m.max(x.abs())) as f64;
+        prop_assert!(rmax.is_finite() && rmax < 60.0 * (gmax + 0.1), "residual blew up: {rmax}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_identity_codecs_are_exact() {
+    // ratio 1.0 sparsifiers and 32-bit quantization must be exactly the
+    // identity: bitwise roundtrip, residual pinned at zero
+    check("ratio-1.0 / 32-bit codecs are exactly identity", 20, |g| {
+        let n = 32 + g.usize_in(0, 500);
+        let grad = g.f32_vec(n, 1.0);
+        for cfg in [
+            CodecConfig::TopK { ratio: 1.0 },
+            CodecConfig::RandK { ratio: 1.0 },
+            CodecConfig::Qsgd { bits: 32 },
+        ] {
+            let mut wc = WorkerCompressor::new(&cfg, n, g.rng.next_u64(), 0).unwrap();
+            let mut dec = vec![0.0f32; n];
+            wc.compress(&grad).decode_into(&mut dec);
+            prop_assert!(dec == grad, "{cfg:?}: roundtrip not bitwise exact");
+            prop_assert!(
+                wc.residual().iter().all(|&r| r == 0.0),
+                "{cfg:?}: residual nonzero"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_encoded_push_equals_densified_dense_push() {
+    // a sparse/quantized push must land the model exactly where pushing
+    // the densified decoded gradient lands it, for every update rule
+    check("push_encoded == push(decode(payload)) bitwise", 15, |g| {
+        let n = 64 + g.usize_in(0, 300);
+        let workers = 1 + g.usize_in(0, 2);
+        let algo = *g.pick(&[
+            Algorithm::Asgd,
+            Algorithm::Ssp,
+            Algorithm::DcAsgdConst,
+            Algorithm::DcS3gd,
+            Algorithm::DcAsgdAdaptive,
+        ]);
+        let init = g.f32_vec(n, 1.0);
+        let h = hyper(g);
+        let shards = g.usize_in(1, 6).max(1);
+        let a =
+            ParamServer::new(&init, workers, shards, algo, h, Box::new(NativeKernel)).unwrap();
+        let b = ParamServer::new(&init, workers, 1, algo, h, Box::new(NativeKernel)).unwrap();
+        let cfg = random_codec(g);
+        let mut wc = WorkerCompressor::new(&cfg, n, g.rng.next_u64(), 0).unwrap();
+        let mut buf = vec![0.0f32; n];
+        let mut dec = vec![0.0f32; n];
+        for step in 0..8 {
+            let m = g.usize_in(0, workers - 1);
+            a.pull(m, &mut buf);
+            b.pull(m, &mut buf);
+            let grad = g.f32_vec(n, 0.3);
+            let p = wc.compress(&grad);
+            p.decode_into(&mut dec);
+            let oa = a.push_encoded(m, p, 0.05);
+            let ob = b.push(m, &dec, 0.05);
+            prop_assert!(
+                (oa.version, oa.staleness) == (ob.version, ob.staleness),
+                "outcome diverged at step {step}"
+            );
+        }
+        let mut wa = vec![0.0f32; n];
+        let mut wb = vec![0.0f32; n];
+        a.snapshot(&mut wa);
+        b.snapshot(&mut wb);
+        prop_assert!(wa == wb, "{algo:?}/{cfg:?}: encoded push != densified push");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_delay_sampler_deterministic_per_seed() {
+    // same (model, workers, seed) => identical per-worker sample streams,
+    // across every DelayModel variant; different seeds diverge
+    check("delay sampler streams are seed-deterministic", 20, |g| {
+        let workers = 1 + g.usize_in(0, 5);
+        let seed = g.rng.next_u64();
+        let models = [
+            DelayModel::Constant { mean: 1.0 + g.f64_in(0.0, 2.0) },
+            DelayModel::Uniform { mean: 1.0, jitter: g.f64_in(0.0, 0.9) },
+            DelayModel::Exponential { mean: g.f64_in(0.1, 3.0) },
+            DelayModel::Pareto { scale: g.f64_in(0.5, 2.0), alpha: g.f64_in(1.5, 4.0) },
+            DelayModel::Heterogeneous {
+                mean: 1.0,
+                speeds: vec![1.0, g.f64_in(1.0, 3.0)],
+                jitter: 0.2,
+            },
+        ];
+        for model in &models {
+            let mut s1 = DelaySampler::new(model.clone(), workers, seed);
+            let mut s2 = DelaySampler::new(model.clone(), workers, seed);
+            let mut s3 = DelaySampler::new(model.clone(), workers, seed ^ 0x5EED_BEEF);
+            let mut diverged = false;
+            for _ in 0..40 {
+                for w in 0..workers {
+                    let (a, b, c) = (s1.sample(w), s2.sample(w), s3.sample(w));
+                    prop_assert!(
+                        a.to_bits() == b.to_bits(),
+                        "{}: same seed diverged",
+                        model.name()
+                    );
+                    diverged |= a.to_bits() != c.to_bits();
+                }
+            }
+            if !matches!(model, DelayModel::Constant { .. }) {
+                prop_assert!(diverged, "{}: different seeds never diverged", model.name());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_delay_model_mean_matches_empirical() {
+    // DelayModel::mean() must match the fleet-average empirical mean (the
+    // heterogeneous case averages speeds over the worker cycle, so pick
+    // speeds averaging 1.0 and an even worker count)
+    check("declared delay-model mean matches sampled mean", 10, |g| {
+        let mean = g.f64_in(0.5, 2.0);
+        let models = [
+            DelayModel::Constant { mean },
+            DelayModel::Uniform { mean, jitter: g.f64_in(0.0, 0.9) },
+            DelayModel::Exponential { mean },
+            DelayModel::Pareto { scale: mean, alpha: 2.5 },
+            DelayModel::Heterogeneous { mean, speeds: vec![0.5, 1.5], jitter: 0.25 },
+        ];
+        for model in &models {
+            let workers = 4; // multiple of the speed-cycle length
+            let mut s = DelaySampler::new(model.clone(), workers, g.rng.next_u64());
+            let per_worker = 8_000;
+            let mut sum = 0.0f64;
+            for w in 0..workers {
+                for _ in 0..per_worker {
+                    sum += s.sample(w);
+                }
+            }
+            let empirical = sum / (workers * per_worker) as f64;
+            let declared = model.mean();
+            // Pareto(alpha 2.5) has heavy tails: wider tolerance there
+            let tol = if matches!(model, DelayModel::Pareto { .. }) { 0.10 } else { 0.05 };
+            prop_assert!(
+                (empirical - declared).abs() <= tol * declared,
+                "{}: empirical {empirical} vs declared {declared}",
+                model.name()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_payload_wire_bytes_below_dense() {
+    // fixed-rate accounting: encoded wire bytes must match the codec's
+    // static prediction and beat dense f32 whenever ratio/bits say so
+    check("wire accounting consistent and compressive", 20, |g| {
+        let n = 512 + g.usize_in(0, 4000);
+        let cfg = random_codec(g);
+        let mut wc = WorkerCompressor::new(&cfg, n, g.rng.next_u64(), 0).unwrap();
+        let grad = g.f32_vec(n, 0.5);
+        let p = wc.compress(&grad);
+        prop_assert!(
+            p.wire_bytes() == cfg.wire_bytes(n),
+            "{cfg:?}: payload bytes {} != static {}",
+            p.wire_bytes(),
+            cfg.wire_bytes(n)
+        );
+        let dense = 4 * n;
+        let compressive = match cfg {
+            CodecConfig::TopK { ratio } | CodecConfig::RandK { ratio } => ratio <= 0.4,
+            CodecConfig::Qsgd { bits } => bits <= 16,
+            CodecConfig::None => false,
+        };
+        if compressive {
+            prop_assert!(
+                p.wire_bytes() < dense,
+                "{cfg:?}: {} bytes not below dense {dense}",
+                p.wire_bytes()
+            );
+        }
+        Ok(())
+    });
 }
 
 #[test]
