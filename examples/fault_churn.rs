@@ -1,0 +1,67 @@
+//! Fault injection in one picture: the same workload on a healthy fleet
+//! and on a churny one (crashes + restarts + post-recovery stragglers),
+//! for plain ASGD vs DC-ASGD-a.
+//!
+//! Churn amplifies gradient staleness — a straggling worker holds its
+//! snapshot while peers push past it — which is exactly what delay
+//! compensation (Eqn. 10) corrects. Expect the ASGD loss to degrade with
+//! churn while DC-ASGD-a holds close to its healthy-fleet loss.
+//!
+//!     cargo run --release --example fault_churn
+
+use dc_asgd::bench::Table;
+use dc_asgd::config::{Algorithm, ExperimentConfig};
+use dc_asgd::coordinator::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = dc_asgd::find_artifacts_dir()
+        .expect("artifacts/manifest.json not found — run `make artifacts` first");
+    let engine = dc_asgd::runtime::start_engine(&artifacts, "mlp_tiny", false)?;
+
+    let mut table = Table::new(&[
+        "algo",
+        "churn",
+        "loss",
+        "err(%)",
+        "crashes",
+        "restarts",
+        "stale(mean)",
+        "time(s)",
+    ]);
+    for algo in [Algorithm::Asgd, Algorithm::DcAsgdAdaptive] {
+        for &churn in &[0.0f64, 0.1] {
+            let mut cfg = ExperimentConfig::preset_quickstart();
+            cfg.algorithm = algo;
+            cfg.workers = 8;
+            cfg.epochs = 4;
+            if churn > 0.0 {
+                cfg.faults.enabled = true;
+                cfg.faults.crash_rate = churn;
+                cfg.faults.restart_mean = 3.0;
+                cfg.faults.departure_prob = 0.0; // crashes always restart
+                cfg.faults.straggler_rate = churn;
+                cfg.faults.straggler_factor = 5.0;
+                cfg.faults.straggler_duration = 5.0;
+            }
+            let report = Trainer::with_engine(cfg, engine.clone(), &artifacts)?.run()?;
+            table.row(&[
+                algo.name().into(),
+                format!("{churn}"),
+                format!("{:.4}", report.final_train_loss),
+                format!("{:.2}", report.final_test_error * 100.0),
+                report.faults.crashes.to_string(),
+                report.faults.restarts.to_string(),
+                format!("{:.2}", report.staleness_mean),
+                format!("{:.1}", report.total_time),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "(churn = crashes/worker/s AND straggle windows/worker/s; in-flight gradients \
+         are dropped on crash, w_bak and the EF residual are re-seeded on rejoin — \
+         see the `[faults]` section in README.md)"
+    );
+    engine.shutdown();
+    Ok(())
+}

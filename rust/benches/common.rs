@@ -32,6 +32,22 @@ pub fn engine_for(model: &str, with_updates: bool) -> EngineHandle {
         .expect("engine startup failed")
 }
 
+/// Like [`engine_for`] but SKIPS (loudly, exit 0) when the artifact
+/// directory is absent, so CI can smoke-run benches on checkouts without
+/// compiled artifacts instead of letting them rot uncompiled-and-unrun.
+pub fn engine_or_skip(model: &str, with_updates: bool) -> Option<EngineHandle> {
+    match dc_asgd::find_artifacts_dir() {
+        None => {
+            eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+            None
+        }
+        Some(dir) => Some(
+            dc_asgd::runtime::start_engine(&dir, model, with_updates)
+                .expect("engine startup failed"),
+        ),
+    }
+}
+
 /// Run one experiment against a shared engine, logging progress to stderr.
 pub fn run_case(cfg: ExperimentConfig, engine: &EngineHandle) -> TrainReport {
     let t0 = std::time::Instant::now();

@@ -56,7 +56,9 @@ fn main() {
         "compression sweep (codec x ratio/bits x {asgd, dc-asgd-a} x delay model, M=8)",
         "sparsification/quantization cut bytes-on-wire and wallclock; EF keeps the loss near dense",
     );
-    let engine = engine_for("mlp_tiny", false);
+    let Some(engine) = engine_or_skip("mlp_tiny", false) else {
+        return; // no artifacts: smoke-run mode (CI) skips loudly
+    };
     let codecs = [
         CodecConfig::None,
         CodecConfig::TopK { ratio: 0.25 },

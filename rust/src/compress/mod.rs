@@ -158,6 +158,24 @@ impl ErrorFeedback {
         &self.residual
     }
 
+    /// Zero the residual in place (worker churn: a rejoining worker's
+    /// accumulated mass belongs to its dead incarnation and must not leak
+    /// into the new epoch). No allocation; arena pointers stay fixed.
+    pub fn reset(&mut self) {
+        self.residual.fill(0.0);
+    }
+
+    /// Overwrite the residual (checkpoint resume). Lengths must match —
+    /// identity codecs carry an empty residual and accept only `&[]`.
+    pub fn set_residual(&mut self, src: &[f32]) {
+        assert_eq!(
+            src.len(),
+            self.residual.len(),
+            "error-feedback residual length mismatch"
+        );
+        self.residual.copy_from_slice(src);
+    }
+
     /// One EF step: inject the residual, encode, update the residual.
     /// Identity codecs skip the residual arithmetic entirely (it is
     /// identically zero, and the arenas may be empty), which keeps the
@@ -209,6 +227,19 @@ impl WorkerCompressor {
         self.ef.residual()
     }
 
+    /// Zero this worker's error-feedback residual (crash/rejoin: the
+    /// accumulated mass of the dead incarnation must not leak into the new
+    /// epoch, exactly as `w_bak(m)` is re-seeded on the server side).
+    pub fn reset(&mut self) {
+        self.ef.reset();
+    }
+
+    /// Restore this worker's residual from a checkpoint. Identity codecs
+    /// carry no residual state (it is identically zero) and accept `&[]`.
+    pub fn set_residual(&mut self, src: &[f32]) {
+        self.ef.set_residual(src);
+    }
+
     pub fn codec(&self) -> &dyn GradientCodec {
         self.codec.as_ref()
     }
@@ -255,6 +286,18 @@ impl CodecConfig {
 
     pub fn is_none(&self) -> bool {
         matches!(self, CodecConfig::None)
+    }
+
+    /// True when the configured codec is exact (`none`, ratio-1.0
+    /// sparsifiers, 32-bit quantization): the error-feedback residual is
+    /// then identically zero, so there is no per-worker compressor state
+    /// to carry through checkpoints or invalidate on worker churn.
+    pub fn is_lossless(&self) -> bool {
+        match *self {
+            CodecConfig::None => true,
+            CodecConfig::TopK { ratio } | CodecConfig::RandK { ratio } => ratio >= 1.0,
+            CodecConfig::Qsgd { bits } => bits >= 32,
+        }
     }
 
     pub fn validate(&self) -> anyhow::Result<()> {
@@ -471,6 +514,53 @@ mod tests {
             }
             let after = fingerprint(&wc.payload);
             assert_eq!(before, after, "{cfg:?}: payload arena reallocated");
+        }
+    }
+
+    #[test]
+    fn residual_reset_and_restore_roundtrip() {
+        let n = 128;
+        let cfg = CodecConfig::TopK { ratio: 0.1 };
+        let mut wc = WorkerCompressor::new(&cfg, n, 3, 0).unwrap();
+        for t in 0..5 {
+            let _ = wc.compress(&grad(60 + t, n));
+        }
+        assert!(wc.residual().iter().any(|&r| r != 0.0), "lossy codec left a zero residual");
+        let saved: Vec<f32> = wc.residual().to_vec();
+        // reset zeroes in place without reallocating the arena
+        let ptr = wc.residual().as_ptr();
+        wc.reset();
+        assert!(wc.residual().iter().all(|&r| r == 0.0));
+        assert_eq!(wc.residual().as_ptr(), ptr, "reset reallocated the residual arena");
+        // restore brings the exact state back
+        wc.set_residual(&saved);
+        assert_eq!(wc.residual(), &saved[..]);
+        // identity codecs have no state: only the empty restore is legal
+        let mut ident = WorkerCompressor::new(&CodecConfig::Qsgd { bits: 32 }, n, 3, 0).unwrap();
+        ident.set_residual(&[]);
+        ident.reset();
+    }
+
+    #[test]
+    fn lossless_classification_matches_identity_codecs() {
+        assert!(CodecConfig::None.is_lossless());
+        assert!(CodecConfig::TopK { ratio: 1.0 }.is_lossless());
+        assert!(CodecConfig::RandK { ratio: 1.0 }.is_lossless());
+        assert!(CodecConfig::Qsgd { bits: 32 }.is_lossless());
+        assert!(!CodecConfig::TopK { ratio: 0.5 }.is_lossless());
+        assert!(!CodecConfig::RandK { ratio: 0.99 }.is_lossless());
+        assert!(!CodecConfig::Qsgd { bits: 8 }.is_lossless());
+        for cfg in [
+            CodecConfig::TopK { ratio: 1.0 },
+            CodecConfig::RandK { ratio: 1.0 },
+            CodecConfig::Qsgd { bits: 32 },
+        ] {
+            let wc = WorkerCompressor::new(&cfg, 64, 1, 0).unwrap();
+            assert_eq!(
+                cfg.is_lossless(),
+                wc.codec().is_identity(),
+                "{cfg:?}: static and built identity classification disagree"
+            );
         }
     }
 

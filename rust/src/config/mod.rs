@@ -268,6 +268,9 @@ pub struct ExperimentConfig {
     pub delay: DelayModel,
     /// Communication-cost model (`[comm]`; off by default).
     pub comm: CommConfig,
+    /// Fault injection & elastic membership (`[faults]`; off by default —
+    /// schedules and trajectories are bit-identical with it off).
+    pub faults: crate::sim::FaultConfig,
     /// Gradient compression codec (`[compress]`; `none` by default —
     /// pinned bit-identical to the uncompressed path).
     pub compress: crate::compress::CodecConfig,
@@ -312,6 +315,7 @@ impl Default for ExperimentConfig {
             exec_mode: ExecMode::SimulatedTime,
             delay: DelayModel::Uniform { mean: 1.0, jitter: 0.3 },
             comm: CommConfig::default(),
+            faults: crate::sim::FaultConfig::default(),
             compress: crate::compress::CodecConfig::None,
             update_backend: UpdateBackend::Native,
             shards: 1,
@@ -470,6 +474,10 @@ impl ExperimentConfig {
         if self.comm.enabled && self.exec_mode == ExecMode::Threads {
             bail!("comm cost model runs under the event-driven scheduler: set exec_mode = sim");
         }
+        self.faults.validate(self.workers)?;
+        if self.faults.enabled && self.exec_mode == ExecMode::Threads {
+            bail!("fault injection runs under the event-driven scheduler: set exec_mode = sim");
+        }
         self.compress.validate()?;
         if !self.compress.is_none() {
             // compression composes with the immediate-commit protocols on
@@ -492,13 +500,10 @@ impl ExperimentConfig {
             if self.exec_mode == ExecMode::Threads {
                 bail!("compression runs under the event-driven scheduler: set exec_mode = sim");
             }
-            if !self.resume_from.is_empty() {
-                bail!(
-                    "resume does not compose with gradient compression: checkpoints do not \
-                     capture the per-worker error-feedback residuals, so a resumed run would \
-                     silently drop accumulated gradient mass"
-                );
-            }
+            // resume + compression is legal at the config level: checkpoints
+            // (format v2) round-trip the per-worker error-feedback residuals.
+            // The trainer rejects EF-less (v1 / uncompressed-run) checkpoints
+            // at load time via ps::checkpoint::check_ef_compat.
         }
         Ok(())
     }
@@ -683,6 +688,53 @@ impl ExperimentConfig {
             cfg.comm.enabled = v;
         }
 
+        // fault injection ([faults]): setting any parameter activates the
+        // section (matching the [comm] / --fault-* CLI semantics); an
+        // explicit `enabled` key always has the last word
+        if let Some(v) = get_f64("faults.crash_rate")? {
+            cfg.faults.crash_rate = v;
+            cfg.faults.enabled = true;
+        }
+        if let Some(v) = get_f64("faults.restart_mean")? {
+            cfg.faults.restart_mean = v;
+            cfg.faults.enabled = true;
+        }
+        if let Some(v) = get_f64("faults.departure_prob")? {
+            cfg.faults.departure_prob = v;
+            cfg.faults.enabled = true;
+        }
+        if let Some(v) = get_f64("faults.straggler_rate")? {
+            cfg.faults.straggler_rate = v;
+            cfg.faults.enabled = true;
+        }
+        if let Some(v) = get_f64("faults.straggler_factor")? {
+            cfg.faults.straggler_factor = v;
+            cfg.faults.enabled = true;
+        }
+        if let Some(v) = get_f64("faults.straggler_duration")? {
+            cfg.faults.straggler_duration = v;
+            cfg.faults.enabled = true;
+        }
+        if let Some(v) = get_usize("faults.late_join")? {
+            cfg.faults.late_join = v;
+            cfg.faults.enabled = true;
+        }
+        if let Some(v) = get_f64("faults.late_join_by")? {
+            cfg.faults.late_join_by = v;
+            cfg.faults.enabled = true;
+        }
+        if let Some(v) = doc.get("faults.policy").and_then(|v| v.as_str()) {
+            cfg.faults.policy = crate::sim::CrashPolicy::parse(v)?;
+            cfg.faults.enabled = true;
+        }
+        if let Some(v) = doc.get("faults.seed").and_then(|v| v.as_i64()) {
+            cfg.faults.seed = v as u64;
+            cfg.faults.enabled = true;
+        }
+        if let Some(v) = doc.get("faults.enabled").and_then(|v| v.as_bool()) {
+            cfg.faults.enabled = v;
+        }
+
         // gradient compression ([compress]): codec + its parameter knobs
         if let Some(kind) = doc.get("compress.codec").and_then(|v| v.as_str()) {
             let ratio = get_f64("compress.ratio")?.unwrap_or(0.1);
@@ -719,6 +771,13 @@ impl ExperimentConfig {
             ("comm_enabled", self.comm.enabled.into()),
             ("comm_per_push", self.comm.model.per_push.into()),
             ("comm_per_mb", self.comm.model.per_mb.into()),
+            ("faults_enabled", self.faults.enabled.into()),
+            ("fault_crash_rate", self.faults.crash_rate.into()),
+            ("fault_restart_mean", self.faults.restart_mean.into()),
+            ("fault_departure_prob", self.faults.departure_prob.into()),
+            ("fault_straggler_rate", self.faults.straggler_rate.into()),
+            ("fault_late_join", self.faults.late_join.into()),
+            ("fault_policy", self.faults.policy.name().into()),
             ("compress", self.compress.name().into()),
             (
                 "compress_ratio",
@@ -976,16 +1035,135 @@ mod tests {
             "exec_mode = \"threads\"\n[compress]\ncodec = \"topk\""
         )
         .is_err());
-        // checkpoints don't carry EF residuals: resuming compressed runs
-        // would silently drop accumulated gradient mass
-        assert!(ExperimentConfig::from_toml(
-            "resume_from = \"ck.bin\"\n[compress]\ncodec = \"topk\""
+        // resume + compression is legal at the config level since v2
+        // checkpoints round-trip the EF residuals; EF-less checkpoints are
+        // rejected at load time (ps::checkpoint::check_ef_compat)
+        let cfg = ExperimentConfig::from_toml(
+            "resume_from = \"ck.bin\"\n[compress]\ncodec = \"topk\"",
         )
-        .is_err());
+        .unwrap();
+        assert_eq!(cfg.compress, CodecConfig::TopK { ratio: 0.1 });
+        assert_eq!(cfg.resume_from, "ck.bin");
 
         let json = cfg.to_json().to_string();
         assert!(json.contains("\"compress\""));
         assert!(json.contains("randk"));
+    }
+
+    #[test]
+    fn from_toml_faults_section() {
+        use crate::sim::CrashPolicy;
+        // default: off, inert
+        let cfg = ExperimentConfig::from_toml("workers = 2").unwrap();
+        assert!(!cfg.faults.enabled);
+
+        // enable with custom parameters
+        let cfg = ExperimentConfig::from_toml(
+            "[faults]\nenabled = true\ncrash_rate = 0.05\nrestart_mean = 2.0\n\
+             departure_prob = 0.2\npolicy = \"salvage\"\nseed = 9",
+        )
+        .unwrap();
+        assert!(cfg.faults.enabled);
+        assert_eq!(cfg.faults.crash_rate, 0.05);
+        assert_eq!(cfg.faults.restart_mean, 2.0);
+        assert_eq!(cfg.faults.departure_prob, 0.2);
+        assert_eq!(cfg.faults.policy, CrashPolicy::Salvage);
+        assert_eq!(cfg.faults.seed, 9);
+
+        // setting any parameter activates the section (same semantics as
+        // the --fault-* CLI flags) ...
+        let cfg = ExperimentConfig::from_toml("[faults]\ncrash_rate = 0.1").unwrap();
+        assert!(cfg.faults.enabled);
+        // ... but an explicit `enabled` key always wins
+        let cfg =
+            ExperimentConfig::from_toml("[faults]\ncrash_rate = 0.1\nenabled = false").unwrap();
+        assert!(!cfg.faults.enabled);
+        assert_eq!(cfg.faults.crash_rate, 0.1);
+
+        // late join + stragglers
+        let cfg = ExperimentConfig::from_toml(
+            "workers = 4\n[faults]\nlate_join = 2\nlate_join_by = 5.0\n\
+             straggler_rate = 0.02\nstraggler_factor = 3.0\nstraggler_duration = 4.0",
+        )
+        .unwrap();
+        assert_eq!(cfg.faults.late_join, 2);
+        assert_eq!(cfg.faults.straggler_factor, 3.0);
+
+        let json = cfg.to_json().to_string();
+        assert!(json.contains("\"faults_enabled\""));
+        assert!(json.contains("\"fault_policy\""));
+    }
+
+    /// Exhaustive rejected-combination matrix: every illegal combination
+    /// must fail with its *specific* message, so a refactor can't silently
+    /// swap one rejection for another (or let a combination slip through).
+    #[test]
+    fn rejected_combination_matrix() {
+        let reject = |toml: &str, needle: &str| {
+            let err = ExperimentConfig::from_toml(toml)
+                .expect_err(&format!("config must be rejected: {toml}"))
+                .to_string();
+            assert!(err.contains(needle), "{toml:?}: error {err:?} lacks {needle:?}");
+        };
+        // compression x barrier protocols (dense fold)
+        reject("algorithm = \"ssgd\"\n[compress]\ncodec = \"topk\"", "folds dense gradients");
+        reject("algorithm = \"dc-ssgd\"\n[compress]\ncodec = \"qsgd\"", "folds dense gradients");
+        // compression x momentum / XLA / threads
+        reject(
+            "[train]\nmomentum = 0.9\n[compress]\ncodec = \"topk\"",
+            "momentum does not compose",
+        );
+        reject(
+            "update_backend = \"xla\"\nshards = 1\n[compress]\ncodec = \"topk\"",
+            "native update backend",
+        );
+        reject(
+            "exec_mode = \"threads\"\n[compress]\ncodec = \"topk\"",
+            "event-driven scheduler",
+        );
+        // comm x threads
+        reject("exec_mode = \"threads\"\n[comm]\nenabled = true", "event-driven scheduler");
+        // SSP family x threads
+        reject("algorithm = \"ssp\"\nexec_mode = \"threads\"", "event-driven scheduler");
+        reject("algorithm = \"dc-s3gd\"\nexec_mode = \"threads\"", "event-driven scheduler");
+        // faults x threads
+        reject(
+            "exec_mode = \"threads\"\n[faults]\nenabled = true",
+            "fault injection runs under the event-driven scheduler",
+        );
+        // faults parameter domain
+        reject("[faults]\ncrash_rate = -0.1", "crash_rate must be finite and >= 0");
+        reject("[faults]\nrestart_mean = 0.0", "restart_mean must be finite and > 0");
+        reject("[faults]\ndeparture_prob = 1.5", "departure_prob must be in [0, 1]");
+        reject(
+            "[faults]\nstraggler_rate = 0.1\nstraggler_factor = 0.5",
+            "straggler_factor must be >= 1",
+        );
+        reject(
+            "[faults]\nstraggler_rate = 0.1\nstraggler_duration = 0.0",
+            "straggler_duration must be finite and > 0",
+        );
+        reject(
+            "workers = 4\n[faults]\nlate_join = 4",
+            "at least one worker must be present at t = 0",
+        );
+        reject(
+            "workers = 4\n[faults]\nlate_join = 1\nlate_join_by = 0.0",
+            "late_join_by must be finite and > 0",
+        );
+        reject("[faults]\npolicy = \"explode\"", "unknown crash policy");
+        // codec parameter domain
+        reject("[compress]\ncodec = \"warp\"", "unknown codec");
+        reject("[compress]\ncodec = \"topk\"\nratio = 0.0", "ratio must be in (0, 1]");
+        reject("[compress]\ncodec = \"qsgd\"\nbits = 2", "qsgd bits must be in [3, 16]");
+        // core invariants
+        reject("workers = 0", "workers must be >= 1");
+        reject("algorithm = \"sgd\"\nworkers = 4", "sequential SGD requires workers = 1");
+        reject("epochs = 0", "one of epochs / max_steps must be positive");
+        reject("[train]\nlr = -1.0", "lr must be positive");
+        reject("shards = 0", "shards must be >= 1");
+        reject("[sim.delay]\nmodel = \"uniform\"\njitter = 1.5", "jitter must be in [0, 1)");
+        reject("[comm]\nper_push = -1.0", "comm per_push/per_mb must be finite");
     }
 
     #[test]

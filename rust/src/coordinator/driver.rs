@@ -3,21 +3,41 @@
 //! Every simulated-time protocol — sequential, SSGD/DC-SSGD barriers,
 //! SSP/DC-S3GD staleness windows, fully-async ASGD/DC-ASGD — runs through
 //! this single loop: the [`Scheduler`] decides *who computes when* (and who
-//! waits), this driver turns finish events into real gradient computations
-//! and parameter-server commits, and the shared [`RunCtx`] helpers handle
+//! waits, and — under a `[faults]` plan — who crashes, rejoins, or departs),
+//! this driver turns finish events into real gradient computations and
+//! parameter-server commits, and the shared [`RunCtx`] helpers handle
 //! learning-rate schedules, stopping, evals, and metrics. The per-protocol
 //! modules ([`super::sequential`], [`super::sync`], [`super::async_`]) are
 //! thin adapters over this loop.
+//!
+//! ## Worker churn
+//!
+//! Fault events surface as [`SimEvent`]s and map onto parameter-server
+//! state exactly once each:
+//!
+//! * **Crash** — the scheduler already invalidated (or marked for salvage)
+//!   the in-flight compute; the driver only needs to settle a barrier round
+//!   that the membership change may have completed, then re-pull for any
+//!   workers the shrunken gate released.
+//! * **Join** — the worker's server-side backup `w_bak(m)` is re-seeded to
+//!   the current model ([`crate::ps::ParamServer::reset_worker`]) so DC
+//!   compensation never sees a dead incarnation's snapshot, its
+//!   error-feedback residual is zeroed (accumulated mass belongs to the
+//!   crashed epoch), and it pulls a fresh snapshot.
+//!
+//! Barrier rounds complete over the **live** membership: the round folds
+//! whatever the contributors delivered (sum of k gradients at `k * lr`),
+//! so a dead worker never wedges a round. With `[faults]` off none of
+//! these paths run and trajectories are bit-identical to pre-fault builds.
 
 use super::RunCtx;
-use crate::compress::WorkerCompressor;
 use crate::config::Algorithm;
 use crate::data::{EpochPartition, ShardCursor};
 use crate::metrics::StepRecord;
-use crate::optim::{average_into, DcSsgdAccumulator};
+use crate::optim::DcSsgdAccumulator;
 use crate::sim::{
-    BarrierSync, CommCosts, CommitMode, DelaySampler, FullyAsync, Protocol, Scheduler,
-    StalenessBounded,
+    BarrierSync, CommCosts, CommitMode, DelaySampler, FaultPlan, FullyAsync, Protocol, Scheduler,
+    SimEvent, StalenessBounded,
 };
 use anyhow::Result;
 
@@ -43,6 +63,122 @@ pub fn protocol_for(algo: Algorithm, staleness_bound: u64) -> Box<dyn Protocol> 
     }
 }
 
+/// Barrier-round arenas: per-worker gradient slots (each takes ownership of
+/// the engine's buffer — a move, not a copy), losses, fill flags, and the
+/// round's accumulated gate wait. Allocated once; the round loop adds no
+/// allocations of its own.
+struct RoundState {
+    grads: Vec<Vec<f32>>,
+    loss: Vec<f32>,
+    filled: Vec<bool>,
+    wait: f64,
+}
+
+/// Fold the barrier round into ONE global step if every *live* worker has
+/// contributed (paper §1 / appx H, generalized to elastic membership).
+/// Called at every arrival and at every membership change — a crash of the
+/// last missing worker completes the round. A dead contributor's completed
+/// gradient still folds (its *in-flight* work was already handled by the
+/// crash policy). Returns whether a fold happened.
+#[allow(clippy::too_many_arguments)]
+fn fold_round_if_complete(
+    ctx: &mut RunCtx,
+    sched: &Scheduler,
+    round: &mut RoundState,
+    acc: &mut DcSsgdAccumulator,
+    avg: &mut [f32],
+    dcssgd: bool,
+    step: &mut u64,
+    samples: &mut u64,
+    prev_passes: &mut f64,
+    train_len: f64,
+    lr: f32,
+    rec_time: f64,
+) -> Result<bool> {
+    let m = round.filled.len();
+    let contributors = round.filled.iter().filter(|&&f| f).count();
+    if contributors == 0 {
+        return Ok(false);
+    }
+    if (0..m).any(|v| sched.is_live(v) && !round.filled[v]) {
+        return Ok(false); // a live worker is still computing this round
+    }
+    let mut loss_sum = 0.0f32;
+    if dcssgd {
+        for v in 0..m {
+            if round.filled[v] {
+                loss_sum += round.loss[v];
+                acc.push_from(&round.grads[v]);
+            }
+        }
+        ctx.ps.apply_with(|wv| acc.apply(wv, lr));
+    } else {
+        // Paper §1: each worker *adds* its gradient; the barrier only
+        // synchronizes, so one round applies the SUM of the contributed
+        // gradients — folded in worker order straight out of the arenas,
+        // f32-identical to the pre-fault path when the fleet is whole.
+        let mut seen = 0usize;
+        for v in 0..m {
+            if !round.filled[v] {
+                continue;
+            }
+            loss_sum += round.loss[v];
+            if seen == 0 {
+                avg.copy_from_slice(&round.grads[v]);
+            } else {
+                for (a, g) in avg.iter_mut().zip(&round.grads[v]) {
+                    *a += g;
+                }
+            }
+            seen += 1;
+        }
+        let inv = 1.0 / contributors as f32;
+        for a in avg.iter_mut() {
+            *a *= inv;
+        }
+        ctx.ps.apply_aggregated(avg, lr * contributors as f32);
+    }
+    round.filled.fill(false);
+    *samples += (contributors * ctx.batch_size) as u64;
+    let passes_now = *samples as f64 / train_len;
+    ctx.metrics.record_step(StepRecord {
+        step: *step,
+        worker: 0,
+        passes: passes_now,
+        time: rec_time,
+        loss: loss_sum / contributors as f32,
+        lr,
+        staleness: 0, // barrier: no delayed gradients
+        wait: round.wait,
+    });
+    *step += 1;
+    round.wait = 0.0;
+    if ctx.should_eval(*prev_passes, passes_now, *step) {
+        // tag the eval row with the round that produced the model it
+        // measures — the same index its StepRecord carries (both commit
+        // branches use this convention)
+        ctx.run_eval(*step - 1, passes_now, rec_time)?;
+    }
+    *prev_passes = passes_now;
+    Ok(true)
+}
+
+/// Pull fresh snapshots for the workers a scheduler event just released.
+/// Barrier protocols share ONE snapshot slot (all released workers compute
+/// the same round on the post-fold model); immediate protocols re-pull
+/// each released worker's own slot.
+fn pull_released(ctx: &mut RunCtx, barrier: bool, released: &[usize], snapshots: &mut [Vec<f32>]) {
+    if barrier {
+        if !released.is_empty() {
+            ctx.ps.pull(0, &mut snapshots[0]);
+        }
+    } else {
+        for &v in released {
+            ctx.ps.pull(v, &mut snapshots[v]);
+        }
+    }
+}
+
 /// Run one experiment under the event-driven scheduler. `wall` records
 /// host wallclock instead of virtual time (sync threads mode); the
 /// schedule itself is always driven by the virtual clock.
@@ -62,13 +198,11 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
     } else {
         0.0
     };
-    // gradient compression ([compress]): one codec + EF residual + payload
-    // arena per worker. `none` builds nothing and the push path below is
-    // exactly the pre-compression dense code.
-    let mut compressors: Vec<WorkerCompressor> = (0..m)
-        .filter_map(|w| WorkerCompressor::new(&ctx.cfg.compress, n, ctx.cfg.seed, w))
-        .collect();
-    debug_assert!(compressors.is_empty() || compressors.len() == m);
+    // gradient compression ([compress]): per-worker codec + EF residual
+    // live on the RunCtx (so checkpoints capture the residuals); `none`
+    // builds nothing and the push path below is exactly the dense code.
+    let compressed = !ctx.compressors.is_empty();
+    debug_assert!(!compressed || ctx.compressors.len() == m);
     // communication charges ([comm]): when enabled, every gradient upload
     // and model download adds virtual time via sim::CommModel; disabled
     // (the default) keeps the schedule bit-identical to a free network.
@@ -82,15 +216,20 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
     } else {
         CommCosts::sized(push_bytes, dense_bytes)
     };
-    let mut sched = Scheduler::with_comm(
+    // fault injection ([faults]): the scheduler owns the whole lifecycle
+    // (crash/restart/departure/late-join/straggle); with the section off
+    // no plan is built and the event stream is pure finishes.
+    let faults = FaultPlan::from_config(&ctx.cfg.faults, m, ctx.cfg.seed);
+    let mut sched = Scheduler::with_faults(
         protocol_for(algo, ctx.cfg.staleness_bound as u64),
         delays,
         server_cost,
         comm,
+        faults,
     );
     let barrier = sched.commit_mode() == CommitMode::Barrier;
     debug_assert!(
-        !barrier || compressors.is_empty(),
+        !barrier || !compressed,
         "barrier protocols fold dense gradients (config validation rejects this)"
     );
     let dcssgd = algo == Algorithm::DcSyncSgd;
@@ -110,131 +249,140 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
     }
 
     let wall_start = std::time::Instant::now();
-    // barrier round slots, indexed by worker so the fold order is
-    // worker-deterministic regardless of arrival order. Each slot takes
-    // ownership of the engine's per-step gradient buffer (a move, not a
-    // copy); the loss/filled arenas are allocated once, so the driver adds
-    // no allocations of its own to the round loop.
-    let mut round_grads: Vec<Vec<f32>> = vec![Vec::new(); if barrier { m } else { 0 }];
-    let mut round_loss = vec![0.0f32; m];
-    let mut round_filled = vec![false; m];
-    let mut round_n = 0usize;
-    let mut round_wait = 0.0f64;
+    let mut round = RoundState {
+        grads: vec![Vec::new(); if barrier { m } else { 0 }],
+        loss: vec![0.0f32; m],
+        filled: vec![false; m],
+        wait: 0.0,
+    };
     let mut step = 0u64;
     let mut samples = 0u64;
     let mut prev_passes = 0.0f64;
 
-    while let Some((t, w)) = sched.next() {
-        let passes = samples as f64 / train_len;
-        if ctx.done(step, passes) {
-            break;
-        }
-        let lr = ctx.lr_at(passes);
-        let batch = ctx.train_set.make_batch(&cursors[w].next_indices());
-        // the gradient is computed on the (possibly stale) snapshot worker
-        // w pulled when the protocol last admitted it
-        let (loss, grads) = ctx.engine.train(&snapshots[snap(w)], &batch)?;
-        let rec_time = if wall { wall_start.elapsed().as_secs_f64() } else { t };
+    while let Some(event) = sched.next_event() {
+        match event {
+            SimEvent::Finish { time: t, worker: w } => {
+                let passes = samples as f64 / train_len;
+                if ctx.done(step, passes) {
+                    break;
+                }
+                let lr = ctx.lr_at(passes);
+                let batch = ctx.train_set.make_batch(&cursors[w].next_indices());
+                // the gradient is computed on the (possibly stale) snapshot
+                // worker w pulled when the protocol last admitted it
+                let (loss, grads) = ctx.engine.train(&snapshots[snap(w)], &batch)?;
+                let rec_time = if wall { wall_start.elapsed().as_secs_f64() } else { t };
 
-        if barrier {
-            // the round's wait is every worker's barrier stall summed, so
-            // wait totals stay comparable with per-push protocols
-            round_wait += sched.step_wait(w);
-            debug_assert!(!round_filled[w], "worker {w} pushed twice in one round");
-            round_grads[w] = grads;
-            round_loss[w] = loss;
-            round_filled[w] = true;
-            round_n += 1;
-            let restarted = sched.complete(w);
-            if round_n == m {
-                // the round completes when the slowest worker arrives; fold
-                // the M gradients into ONE global step (paper §1 / appx H).
-                // A malformed round (double-complete, unfilled slot) must
-                // panic, not fold a stale arena slot.
-                assert!(round_filled.iter().all(|&filled| filled), "incomplete barrier round");
-                let mut loss_sum = 0.0f32;
-                if dcssgd {
-                    for (l, g) in round_loss.iter().zip(&round_grads) {
-                        loss_sum += l;
-                        acc.push_from(g);
-                    }
-                    ctx.ps.apply_with(|wv| acc.apply(wv, lr));
+                if barrier {
+                    // the round's wait is every worker's barrier stall
+                    // summed, so wait totals stay comparable with per-push
+                    // protocols
+                    round.wait += sched.step_wait(w);
+                    debug_assert!(!round.filled[w], "worker {w} pushed twice in one round");
+                    round.grads[w] = grads;
+                    round.loss[w] = loss;
+                    round.filled[w] = true;
+                    let restarted = sched.complete(w);
+                    fold_round_if_complete(
+                        ctx,
+                        &sched,
+                        &mut round,
+                        &mut acc,
+                        &mut avg,
+                        dcssgd,
+                        &mut step,
+                        &mut samples,
+                        &mut prev_passes,
+                        train_len,
+                        lr,
+                        rec_time,
+                    )?;
+                    // one shared pull for the whole round (restarted is
+                    // either empty mid-round or the full live fleet at the
+                    // round boundary)
+                    pull_released(ctx, true, &restarted, &mut snapshots);
                 } else {
-                    // Paper §1: each worker *adds* its gradient; the barrier
-                    // only synchronizes, so one round applies the SUM of the
-                    // M gradients — the "enlarged mini-batch" effect Table 1
-                    // attributes SSGD's degradation to. Folded in worker
-                    // order straight out of the arenas.
-                    average_into(&mut avg, &round_grads);
-                    for &l in &round_loss {
-                        loss_sum += l;
+                    // compressed path: EF-inject + encode, then the server
+                    // decodes (or applies sparse shard-locally); DC
+                    // compensates the decoded gradient against w_bak
+                    // exactly as it would the dense one
+                    let outcome = if compressed {
+                        let payload = ctx.compressors[w].compress(&grads);
+                        ctx.ps.push_encoded(w, payload, lr)
+                    } else {
+                        ctx.ps.push(w, &grads, lr)
+                    };
+                    samples += ctx.batch_size as u64;
+                    let passes_now = samples as f64 / train_len;
+                    ctx.metrics.record_step(StepRecord {
+                        step,
+                        worker: w,
+                        passes: passes_now,
+                        time: rec_time,
+                        loss,
+                        lr,
+                        staleness: outcome.staleness,
+                        wait: sched.step_wait(w),
+                    });
+                    step += 1;
+                    if ctx.should_eval(prev_passes, passes_now, step) {
+                        // tag the eval row with the push that triggered it —
+                        // the same index its StepRecord carries
+                        ctx.run_eval(step - 1, passes_now, rec_time)?;
                     }
-                    ctx.ps.apply_aggregated(&avg, lr * m as f32);
+                    prev_passes = passes_now;
+                    // the protocol decides who re-pulls: always `w` itself
+                    // when ungated, plus any peers its completion (or, on a
+                    // salvage drain, its death) just released
+                    let released = sched.complete(w);
+                    pull_released(ctx, false, &released, &mut snapshots);
                 }
-                round_filled.fill(false);
-                round_n = 0;
-                samples += (m * ctx.batch_size) as u64;
-                let passes_now = samples as f64 / train_len;
-                ctx.metrics.record_step(StepRecord {
-                    step,
-                    worker: 0,
-                    passes: passes_now,
-                    time: rec_time,
-                    loss: loss_sum / m as f32,
-                    lr,
-                    staleness: 0, // barrier: no delayed gradients
-                    wait: round_wait,
-                });
-                step += 1;
-                round_wait = 0.0;
-                if ctx.should_eval(prev_passes, passes_now, step) {
-                    // tag the eval row with the round that produced the
-                    // model it measures — the same index its StepRecord
-                    // carries (both branches use this convention)
-                    ctx.run_eval(step - 1, passes_now, rec_time)?;
+            }
+            SimEvent::Crash { time: t, released, .. } => {
+                // the scheduler already dropped (or marked for salvage) the
+                // in-flight compute and shrank the live set; a barrier round
+                // missing only the dead worker completes right here
+                if barrier {
+                    let lr = ctx.lr_at(samples as f64 / train_len);
+                    let rec_time = if wall { wall_start.elapsed().as_secs_f64() } else { t };
+                    fold_round_if_complete(
+                        ctx,
+                        &sched,
+                        &mut round,
+                        &mut acc,
+                        &mut avg,
+                        dcssgd,
+                        &mut step,
+                        &mut samples,
+                        &mut prev_passes,
+                        train_len,
+                        lr,
+                        rec_time,
+                    )?;
                 }
-                prev_passes = passes_now;
+                // released workers pull the (post-fold) model
+                pull_released(ctx, barrier, &released, &mut snapshots);
             }
-            // one shared pull for the whole round (restarted is either
-            // empty mid-round or all M workers at the round boundary)
-            if !restarted.is_empty() {
-                ctx.ps.pull(0, &mut snapshots[0]);
-            }
-        } else {
-            // compressed path: EF-inject + encode, then the server decodes
-            // (or applies sparse shard-locally); DC compensates the decoded
-            // gradient against w_bak exactly as it would the dense one
-            let outcome = if compressors.is_empty() {
-                ctx.ps.push(w, &grads, lr)
-            } else {
-                ctx.ps.push_encoded(w, compressors[w].compress(&grads), lr)
-            };
-            samples += ctx.batch_size as u64;
-            let passes_now = samples as f64 / train_len;
-            ctx.metrics.record_step(StepRecord {
-                step,
-                worker: w,
-                passes: passes_now,
-                time: rec_time,
-                loss,
-                lr,
-                staleness: outcome.staleness,
-                wait: sched.step_wait(w),
-            });
-            step += 1;
-            if ctx.should_eval(prev_passes, passes_now, step) {
-                // tag the eval row with the push that triggered it — the
-                // same index its StepRecord carries (was off by one)
-                ctx.run_eval(step - 1, passes_now, rec_time)?;
-            }
-            prev_passes = passes_now;
-            // the protocol decides who re-pulls: always `w` itself when
-            // ungated, plus any peers its completion just released
-            for v in sched.complete(w) {
-                ctx.ps.pull(v, &mut snapshots[v]);
+            SimEvent::Join { worker: w, computing, released, .. } => {
+                // rejoin / elastic scale-up: the dead incarnation's state
+                // must not leak into the new epoch — refresh w_bak(m) (so
+                // DC compensates against a live snapshot) and zero the EF
+                // residual
+                ctx.ps.reset_worker(w);
+                if compressed {
+                    ctx.compressors[w].reset();
+                }
+                // a joiner that started computing right away needs its
+                // snapshot now; a gate-blocked one (it died ahead of the
+                // fleet) is pulled via the released list when admitted
+                if computing {
+                    ctx.ps.pull(w, &mut snapshots[snap(w)]);
+                }
+                pull_released(ctx, barrier, &released, &mut snapshots);
             }
         }
     }
     ctx.metrics.set_comm_bytes(sched.comm_bytes_total());
+    ctx.metrics.set_fault_stats(sched.fault_stats());
     Ok(())
 }

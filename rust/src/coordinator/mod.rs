@@ -16,6 +16,7 @@ pub mod driver;
 pub mod sequential;
 pub mod sync;
 
+use crate::compress::WorkerCompressor;
 use crate::config::{Algorithm, ExecMode, ExperimentConfig, UpdateBackend};
 use crate::data::{build_dataset, Dataset};
 use crate::eval::evaluate;
@@ -90,6 +91,11 @@ pub struct RunCtx {
     pub metrics: MetricsLog,
     /// Examples per gradient (the artifact's batch size).
     pub batch_size: usize,
+    /// Gradient compression ([compress]): one codec + error-feedback
+    /// residual + payload arena per worker; empty when compression is off.
+    /// Lives on the context (not the driver loop) so checkpoints can
+    /// capture the residuals and resume can re-seed them.
+    pub compressors: Vec<WorkerCompressor>,
 }
 
 impl RunCtx {
@@ -173,6 +179,12 @@ impl Trainer {
             UpdateBackend::Xla => Box::new(XlaUpdateKernel::new(engine.clone())),
         };
         let ps = Arc::new(ParamServer::from_config(&cfg, &init, kernel)?);
+        // one compressor (codec + EF residual + payload arena) per worker;
+        // `none` builds nothing and the push path stays exactly dense
+        let mut compressors: Vec<WorkerCompressor> = (0..cfg.workers)
+            .filter_map(|w| WorkerCompressor::new(&cfg.compress, init.len(), cfg.seed, w))
+            .collect();
+        debug_assert!(compressors.is_empty() || compressors.len() == cfg.workers);
         if !cfg.resume_from.is_empty() {
             let ck = crate::ps::Checkpoint::load(std::path::Path::new(&cfg.resume_from))?;
             anyhow::ensure!(
@@ -182,6 +194,15 @@ impl Trainer {
                 cfg.model
             );
             ck.restore_into(&ps)?;
+            // lossy compression resumes only from checkpoints that carry
+            // the per-worker EF residuals (format v2); lossless codecs
+            // have no residual state to restore
+            crate::ps::check_ef_compat(&ck, &cfg.compress, cfg.workers)?;
+            if !cfg.compress.is_lossless() {
+                for (w, comp) in compressors.iter_mut().enumerate() {
+                    comp.set_residual(&ck.ef[w]);
+                }
+            }
             log::info!("resumed from {} at version {}", cfg.resume_from, ck.version);
         }
         let train_set: Arc<dyn Dataset> = Arc::from(build_dataset(
@@ -210,6 +231,7 @@ impl Trainer {
                 train_set,
                 test_set,
                 metrics,
+                compressors,
             },
         })
     }
@@ -248,12 +270,19 @@ impl Trainer {
         let report = self.ctx.metrics.report();
         if !self.ctx.cfg.checkpoint_out.is_empty() {
             let samples = (report.passes * self.ctx.cfg.train_size as f64) as u64;
-            let ck = crate::ps::Checkpoint::capture(
+            let mut ck = crate::ps::Checkpoint::capture(
                 &self.ctx.ps,
                 &self.ctx.cfg.model,
                 self.ctx.cfg.algorithm.name(),
                 samples,
             );
+            if !self.ctx.cfg.compress.is_lossless() {
+                // carry the per-worker EF residuals so a compressed run can
+                // resume without dropping accumulated gradient mass
+                ck = ck.with_ef(
+                    self.ctx.compressors.iter().map(|c| c.residual().to_vec()).collect(),
+                );
+            }
             ck.save(std::path::Path::new(&self.ctx.cfg.checkpoint_out))?;
         }
         if !self.ctx.cfg.out_dir.is_empty() {

@@ -16,7 +16,8 @@
 //! * [`sim`] is the discrete-event substrate: a virtual clock, worker
 //!   compute-time models, and the event-driven [`sim::Scheduler`] that
 //!   runs the per-worker pull → compute → push lifecycle under a
-//!   pluggable synchronization [`sim::Protocol`].
+//!   pluggable synchronization [`sim::Protocol`] — including first-class
+//!   worker faults and elastic membership ([`sim::faults`]).
 //! * [`coordinator`] drives every protocol through one unified loop
 //!   ([`coordinator::driver`]); `exec_mode = threads` additionally offers a
 //!   real-OS-threads path for the ASGD family.
@@ -103,6 +104,48 @@
 //! and trajectories are bit-identical to pre-compression builds (pinned by
 //! regression tests). Bench `compression_sweep` sweeps codec × ratio/bits
 //! × protocol × delay model into JSONL.
+//!
+//! ## Fault injection & elastic membership
+//!
+//! The `[faults]` config section (`--faults` / `--fault-*` CLI; off by
+//! default) installs a seeded [`sim::FaultPlan`] into the scheduler:
+//! Poisson worker crashes with exponential restart delays (or permanent
+//! departures), late-joining workers, and transient straggler windows that
+//! stretch compute times. The scheduler owns the whole lifecycle:
+//!
+//! * a crash under [`sim::CrashPolicy::Drop`] invalidates the in-flight
+//!   compute (finish events are epoch-tagged, so a push from a crashed
+//!   epoch can never commit); [`sim::CrashPolicy::Salvage`] drains it —
+//!   the compute finishes and commits, then the worker goes down;
+//! * every protocol gate evaluates over the **live** membership: a dead
+//!   worker never wedges a `BarrierSync` round (the round folds whatever
+//!   the live fleet contributed, k gradients at `k * lr`) and never pins
+//!   the `StalenessBounded` minimum;
+//! * on rejoin a lagging worker adopts the slowest live peer's clock and
+//!   starts immediately, while one that died *ahead* of the fleet (its
+//!   completed work is still buffered at an open barrier) re-enters
+//!   through the protocol gate — clocks never regress, so completed work
+//!   is never redone; either way its server-side backup `w_bak(m)` is
+//!   re-seeded to the current model (DC-ASGD compensates against a live
+//!   snapshot, never a dead incarnation's) and its error-feedback
+//!   residual is zeroed;
+//! * per-run counters (crashes / restarts / departures / late joins /
+//!   dropped / salvaged pushes / straggle windows) surface in
+//!   [`metrics::TrainReport`] and the summary JSON.
+//!
+//! Per-protocol churn behaviour: the immediate-commit protocols (`asgd` /
+//! `dc-asgd-*`) lose at most the in-flight gradient per crash; `ssp` /
+//! `dc-s3gd` additionally recompute the staleness gate over survivors
+//! (live drift stays ≤ s + 1 through arbitrary churn); the barrier
+//! protocols (`ssgd` / `dc-ssgd`) shrink the round to the live fleet.
+//!
+//! With `[faults]` off, no fault code path executes and schedules and
+//! trajectories are **bit-identical** to pre-fault builds — pinned by the
+//! scheduler tests and the chaos harness (`tests/chaos.rs`), which drives
+//! 100+ seeded random fault plans per run (`CHAOS_SEEDS` scales it in CI)
+//! and asserts the structural invariants above on every one. Bench
+//! `fault_churn` sweeps crash-rate × {asgd, dc-asgd-a, ssp} and shows
+//! DC-ASGD-a holding its loss advantage as churn amplifies staleness.
 //!
 //! ## Quickstart
 //!

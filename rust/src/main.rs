@@ -55,6 +55,12 @@ fn usage() {
            --compress none|topk|randk|qsgd         gradient codec (+ error feedback)\n\
            --topk-ratio F       (topk/randk kept fraction, default 0.1)\n\
            --quant-bits N       (qsgd bits per element, default 8; 32 = exact)\n\
+           --faults             (inject worker crashes/restarts into the DES)\n\
+           --fault-crash-rate F --fault-restart-mean F --fault-departure-prob F\n\
+           --fault-straggler-rate F --fault-straggler-factor F --fault-straggler-duration F\n\
+           --fault-late-join N  --fault-late-join-by F\n\
+           --fault-policy drop|salvage             in-flight gradient on crash\n\
+           --fault-seed N       (0 = derive from --seed)\n\
            --tag NAME           --verbose\n\
          sweep options:\n\
            --algos a,b,c        --workers-list 1,4,8"
@@ -145,6 +151,51 @@ fn build_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
     if let Some(v) = args.f64_opt("comm-per-mb")? {
         cfg.comm.model.per_mb = v;
         cfg.comm.enabled = true;
+    }
+    // fault injection: --faults enables the defaults; any --fault-* knob
+    // both sets its value and enables the section (like --comm-per-*)
+    if args.flag("faults") {
+        cfg.faults.enabled = true;
+    }
+    if let Some(v) = args.f64_opt("fault-crash-rate")? {
+        cfg.faults.crash_rate = v;
+        cfg.faults.enabled = true;
+    }
+    if let Some(v) = args.f64_opt("fault-restart-mean")? {
+        cfg.faults.restart_mean = v;
+        cfg.faults.enabled = true;
+    }
+    if let Some(v) = args.f64_opt("fault-departure-prob")? {
+        cfg.faults.departure_prob = v;
+        cfg.faults.enabled = true;
+    }
+    if let Some(v) = args.f64_opt("fault-straggler-rate")? {
+        cfg.faults.straggler_rate = v;
+        cfg.faults.enabled = true;
+    }
+    if let Some(v) = args.f64_opt("fault-straggler-factor")? {
+        cfg.faults.straggler_factor = v;
+        cfg.faults.enabled = true;
+    }
+    if let Some(v) = args.f64_opt("fault-straggler-duration")? {
+        cfg.faults.straggler_duration = v;
+        cfg.faults.enabled = true;
+    }
+    if let Some(v) = args.usize_opt("fault-late-join")? {
+        cfg.faults.late_join = v;
+        cfg.faults.enabled = true;
+    }
+    if let Some(v) = args.f64_opt("fault-late-join-by")? {
+        cfg.faults.late_join_by = v;
+        cfg.faults.enabled = true;
+    }
+    if let Some(v) = args.str_opt("fault-policy") {
+        cfg.faults.policy = dc_asgd::sim::CrashPolicy::parse(&v)?;
+        cfg.faults.enabled = true;
+    }
+    if let Some(v) = args.usize_opt("fault-seed")? {
+        cfg.faults.seed = v as u64;
+        cfg.faults.enabled = true;
     }
     // gradient compression: --compress picks the codec; the knob flags
     // refine whichever codec is selected (here or in the config file)
@@ -245,6 +296,20 @@ fn cmd_train(args: &Args) -> i32 {
                 report.staleness_p99,
                 report.staleness_max,
             );
+            if report.faults != dc_asgd::sim::FaultStats::default() {
+                let f = report.faults;
+                println!(
+                    "faults: crashes={} restarts={} departures={} late_joins={} \
+                     dropped={} salvaged={} straggles={}",
+                    f.crashes,
+                    f.restarts,
+                    f.departures,
+                    f.late_joins,
+                    f.dropped_inflight,
+                    f.salvaged_inflight,
+                    f.straggle_events,
+                );
+            }
             0
         }
         Err(e) => {

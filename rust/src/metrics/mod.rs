@@ -1,6 +1,7 @@
 //! Training metrics: per-step records, eval records, CSV/JSON output, and
 //! the summary report returned by the trainer.
 
+use crate::sim::FaultStats;
 use crate::util::json::Json;
 use std::io::Write;
 use std::path::Path;
@@ -63,6 +64,10 @@ pub struct MetricsLog {
     /// model downloads), reported by the scheduler at end of run. Zero in
     /// threads mode (no wire model there).
     comm_bytes: u64,
+    /// Worker lifecycle counters (crashes / restarts / membership churn),
+    /// reported by the scheduler at end of run; all zero without a
+    /// `[faults]` section.
+    fault_stats: FaultStats,
 }
 
 impl Default for MetricsLog {
@@ -82,6 +87,7 @@ impl MetricsLog {
             stale_counts: Vec::new(),
             stale_max: 0,
             comm_bytes: 0,
+            fault_stats: FaultStats::default(),
         }
     }
 
@@ -93,6 +99,16 @@ impl MetricsLog {
 
     pub fn comm_bytes(&self) -> u64 {
         self.comm_bytes
+    }
+
+    /// Record the run's worker-lifecycle counters (set once by the driver
+    /// from [`crate::sim::Scheduler::fault_stats`]).
+    pub fn set_fault_stats(&mut self, stats: FaultStats) {
+        self.fault_stats = stats;
+    }
+
+    pub fn fault_stats(&self) -> FaultStats {
+        self.fault_stats
     }
 
     pub fn record_step(&mut self, r: StepRecord) {
@@ -234,6 +250,7 @@ impl MetricsLog {
             staleness_max: stale_max,
             wait_total,
             comm_bytes: self.comm_bytes,
+            faults: self.fault_stats,
             staleness_hist: self.staleness_histogram(64),
         }
     }
@@ -260,6 +277,8 @@ pub struct TrainReport {
     /// Total modelled bytes on the wire (encoded uploads + dense
     /// downloads; 0 in threads mode).
     pub comm_bytes: u64,
+    /// Worker lifecycle counters (all zero without a `[faults]` section).
+    pub faults: FaultStats,
     /// `staleness_hist[tau]` = steps that observed delay tau (tail folded
     /// into the last bucket).
     pub staleness_hist: Vec<u64>,
@@ -281,6 +300,13 @@ impl TrainReport {
             ("staleness_max", (self.staleness_max as i64).into()),
             ("wait_total", self.wait_total.into()),
             ("comm_bytes", (self.comm_bytes as i64).into()),
+            ("crashes", (self.faults.crashes as i64).into()),
+            ("restarts", (self.faults.restarts as i64).into()),
+            ("departures", (self.faults.departures as i64).into()),
+            ("late_joins", (self.faults.late_joins as i64).into()),
+            ("dropped_inflight", (self.faults.dropped_inflight as i64).into()),
+            ("salvaged_inflight", (self.faults.salvaged_inflight as i64).into()),
+            ("straggle_events", (self.faults.straggle_events as i64).into()),
             (
                 "staleness_hist",
                 Json::arr(self.staleness_hist.iter().map(|&c| Json::from(c as i64))),
@@ -415,5 +441,55 @@ mod tests {
         let r = log.report();
         assert_eq!(r.total_steps, 0);
         assert!(r.final_test_error.is_nan());
+        assert_eq!(r.faults, FaultStats::default());
+    }
+
+    #[test]
+    fn fault_stats_flow_into_the_report_json() {
+        let mut log = sample_log();
+        let stats = FaultStats {
+            crashes: 3,
+            restarts: 2,
+            departures: 1,
+            late_joins: 1,
+            dropped_inflight: 2,
+            salvaged_inflight: 1,
+            straggle_events: 4,
+        };
+        log.set_fault_stats(stats);
+        let r = log.report();
+        assert_eq!(r.faults, stats);
+        let json = r.to_json().to_string();
+        for key in ["\"crashes\"", "\"restarts\"", "\"departures\"", "\"late_joins\""] {
+            assert!(json.contains(key), "report json lacks {key}");
+        }
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("crashes").as_i64(), Some(3));
+        assert_eq!(parsed.get("dropped_inflight").as_i64(), Some(2));
+    }
+
+    #[test]
+    fn staleness_histogram_edge_cases() {
+        // empty log: a single zero bucket, nothing to fold
+        let log = MetricsLog::new(1);
+        assert_eq!(log.staleness_histogram(8), vec![0]);
+        // cap 0 folds EVERYTHING into one bucket
+        let mut log = MetricsLog::new(1);
+        for &tau in &[0u64, 3, 700] {
+            log.record_step(StepRecord {
+                step: tau,
+                worker: 0,
+                passes: 0.0,
+                time: 0.0,
+                loss: 0.0,
+                lr: 0.0,
+                staleness: tau,
+                wait: 0.0,
+            });
+        }
+        assert_eq!(log.staleness_histogram(0), vec![3]);
+        // exact max is preserved even though the tracked tail folds
+        let (_, _, max) = log.staleness_summary();
+        assert_eq!(max, 700);
     }
 }

@@ -6,15 +6,33 @@
 //! Format: a small JSON header followed by raw little-endian f32 sections,
 //! each 16-byte aligned. Integrity is guarded by a FNV-1a checksum over
 //! the payload. Written atomically (temp file + rename).
+//!
+//! ## Format v2: error-feedback residuals
+//!
+//! Compressed runs ([`crate::compress`]) carry per-worker error-feedback
+//! residuals — gradient mass the codec dropped but promised to re-inject.
+//! Format v2 round-trips them: the header gains an `ef_workers` count and
+//! the payload appends one residual section per worker after the backups.
+//! v1 files (no `ef_workers` key) still load with an empty `ef`.
+//!
+//! Resuming a **lossy-compressed** run from a checkpoint *without* EF
+//! residuals (v1, or one saved from an uncompressed run) is rejected by
+//! [`check_ef_compat`] — silently dropping the accumulated residual mass
+//! would violate the EF telescoping invariant the compression subsystem is
+//! pinned on. Lossless codecs (`none`, ratio-1.0 sparsifiers, 32-bit
+//! quantization) have identically-zero residuals and resume from any
+//! checkpoint.
 
 use super::ParamServer;
+use crate::compress::CodecConfig;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &str = "dcasgd-ckpt";
-const VERSION: i64 = 1;
+/// Current write version. v1 (no EF sections) is still accepted on load.
+const VERSION: i64 = 2;
 
 /// Everything needed to resume a run.
 #[derive(Clone, Debug, PartialEq)]
@@ -30,6 +48,47 @@ pub struct Checkpoint {
     pub vel: Vec<f32>,
     /// Per-worker backup models w_bak(m), concatenated.
     pub baks: Vec<Vec<f32>>,
+    /// Per-worker error-feedback residuals (format v2). Empty when the run
+    /// used no lossy compression; otherwise one length-n section per
+    /// worker, restored into the [`crate::compress::WorkerCompressor`]s.
+    pub ef: Vec<Vec<f32>>,
+}
+
+/// Can a run with codec `compress` resume from `ck`? Rejects resuming a
+/// lossy-compressed run from a checkpoint that carries no (or mismatched)
+/// error-feedback residuals — see the module docs. Pure (no artifact or
+/// engine dependency) so the reject path is unit-testable.
+pub fn check_ef_compat(
+    ck: &Checkpoint,
+    compress: &CodecConfig,
+    workers: usize,
+) -> Result<()> {
+    if compress.is_lossless() {
+        // no residual state exists; any EF sections in the file are simply
+        // not restored (the residual of a lossless codec is pinned at zero)
+        return Ok(());
+    }
+    if ck.ef.is_empty() {
+        bail!(
+            "checkpoint carries no error-feedback residuals: resuming the lossy-compressed \
+             run ({compress}) would silently drop accumulated gradient mass. Re-save the \
+             checkpoint from a compressed run (format v2), or resume with compress = \"none\""
+        );
+    }
+    if ck.ef.len() != workers {
+        bail!(
+            "checkpoint has error-feedback residuals for {} workers, config wants {workers}",
+            ck.ef.len()
+        );
+    }
+    let n = ck.w.len();
+    if let Some(bad) = ck.ef.iter().position(|r| r.len() != n) {
+        bail!(
+            "error-feedback residual for worker {bad} has length {}, model has {n}",
+            ck.ef[bad].len()
+        );
+    }
+    Ok(())
 }
 
 fn fnv1a(data: &[u8], mut hash: u64) -> u64 {
@@ -86,7 +145,20 @@ impl Checkpoint {
             ms,
             vel,
             baks,
+            ef: Vec::new(),
         }
+    }
+
+    /// Attach per-worker error-feedback residuals (compressed runs). Each
+    /// residual must match the model length; pass exactly one per worker.
+    pub fn with_ef(mut self, ef: Vec<Vec<f32>>) -> Checkpoint {
+        let n = self.w.len();
+        assert!(
+            ef.iter().all(|r| r.len() == n),
+            "EF residual sections must match the model length"
+        );
+        self.ef = ef;
+        self
     }
 
     /// Restore this checkpoint into a parameter server (shapes must match).
@@ -121,6 +193,9 @@ impl Checkpoint {
         for bak in &self.baks {
             payload.extend_from_slice(&f32s_to_bytes(bak));
         }
+        for r in &self.ef {
+            payload.extend_from_slice(&f32s_to_bytes(r));
+        }
         let checksum = fnv1a(&payload, 0xcbf2_9ce4_8422_2325);
         let header = Json::obj(vec![
             ("magic", MAGIC.into()),
@@ -131,6 +206,7 @@ impl Checkpoint {
             ("samples", (self.samples as i64).into()),
             ("n", self.w.len().into()),
             ("workers", self.baks.len().into()),
+            ("ef_workers", self.ef.len().into()),
             ("checksum", format!("{checksum:016x}").into()),
         ])
         .to_string();
@@ -176,19 +252,22 @@ impl Checkpoint {
         if header.get("magic").as_str() != Some(MAGIC) {
             bail!("not a dcasgd checkpoint");
         }
-        if header.get("version").as_i64() != Some(VERSION) {
+        let file_version = header.get("version").as_i64();
+        if !matches!(file_version, Some(1) | Some(2)) {
             bail!("unsupported checkpoint version");
         }
         let n = header.get("n").as_usize().ok_or_else(|| anyhow!("header missing n"))?;
         let workers =
             header.get("workers").as_usize().ok_or_else(|| anyhow!("header missing workers"))?;
+        // v1 headers predate EF sections; absent key means none
+        let ef_workers = header.get("ef_workers").as_usize().unwrap_or(0);
         let off = 8 + hlen;
         let pad = (16 - off % 16) % 16;
         let mut skip = vec![0u8; pad];
         f.read_exact(&mut skip)?;
         let mut payload = Vec::new();
         f.read_to_end(&mut payload)?;
-        let expect = (3 + workers) * n * 4;
+        let expect = (3 + workers + ef_workers) * n * 4;
         if payload.len() != expect {
             bail!("payload {} bytes, expected {expect}", payload.len());
         }
@@ -199,6 +278,7 @@ impl Checkpoint {
         }
         let sec = |i: usize| -> Result<Vec<f32>> { bytes_to_f32s(&payload[i * n * 4..(i + 1) * n * 4]) };
         let baks = (0..workers).map(|m| sec(3 + m)).collect::<Result<Vec<_>>>()?;
+        let ef = (0..ef_workers).map(|m| sec(3 + workers + m)).collect::<Result<Vec<_>>>()?;
         Ok(Checkpoint {
             model: header.get("model").as_str().unwrap_or("?").to_string(),
             algorithm: header.get("algorithm").as_str().unwrap_or("?").to_string(),
@@ -208,6 +288,7 @@ impl Checkpoint {
             ms: sec(1)?,
             vel: sec(2)?,
             baks,
+            ef,
         })
     }
 }
@@ -328,6 +409,91 @@ mod tests {
         assert!(ck.restore_into(&other_n).is_err());
         let other_workers = server(64, 3);
         assert!(ck.restore_into(&other_workers).is_err());
+    }
+
+    #[test]
+    fn ef_residuals_roundtrip_through_v2_files() {
+        let ps = server(96, 2);
+        let mut rng = Pcg64::new(9);
+        let ef: Vec<Vec<f32>> =
+            (0..2).map(|_| (0..96).map(|_| rng.normal(0.0, 0.3) as f32).collect()).collect();
+        let ck = Checkpoint::capture(&ps, "m", "dc-asgd-a", 10).with_ef(ef.clone());
+        let path = tmppath("ef");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        assert_eq!(back.ef, ef);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "EF residual sections must match the model length")]
+    fn with_ef_rejects_mismatched_lengths() {
+        let ps = server(64, 1);
+        let _ = Checkpoint::capture(&ps, "m", "asgd", 0).with_ef(vec![vec![0.0; 32]]);
+    }
+
+    #[test]
+    fn v1_files_without_ef_sections_still_load() {
+        // a v2 writer and a v1 writer produce the same payload when no EF
+        // sections exist; rebuild the header as v1 (no ef_workers key) and
+        // the loader must accept it with an empty `ef`
+        let ps = server(64, 2);
+        let ck = Checkpoint::capture(&ps, "m", "asgd", 7);
+        let path = tmppath("v1");
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let hlen = u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
+        let header =
+            Json::parse(std::str::from_utf8(&bytes[8..8 + hlen]).unwrap()).unwrap();
+        let pad = (16 - (8 + hlen) % 16) % 16;
+        let payload = bytes[8 + hlen + pad..].to_vec();
+        let v1_header = Json::obj(vec![
+            ("magic", header.get("magic").clone()),
+            ("version", 1i64.into()),
+            ("model", header.get("model").clone()),
+            ("algorithm", header.get("algorithm").clone()),
+            ("ps_version", header.get("ps_version").clone()),
+            ("samples", header.get("samples").clone()),
+            ("n", header.get("n").clone()),
+            ("workers", header.get("workers").clone()),
+            ("checksum", header.get("checksum").clone()),
+        ])
+        .to_string();
+        let hbytes = v1_header.as_bytes();
+        let mut out = Vec::new();
+        out.extend_from_slice(&(hbytes.len() as u64).to_le_bytes());
+        out.extend_from_slice(hbytes);
+        out.extend_from_slice(&vec![0u8; (16 - (8 + hbytes.len()) % 16) % 16]);
+        out.extend_from_slice(&payload);
+        std::fs::write(&path, out).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert!(back.ef.is_empty(), "v1 file must load with no EF state");
+        assert_eq!(back.w, ck.w);
+        assert_eq!(back.baks, ck.baks);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn ef_compat_gate_covers_reject_and_accept_paths() {
+        use crate::compress::CodecConfig;
+        let ps = server(64, 2);
+        let bare = Checkpoint::capture(&ps, "m", "asgd", 0);
+        // lossless codecs resume from anything (residual pinned at zero)
+        check_ef_compat(&bare, &CodecConfig::None, 2).unwrap();
+        check_ef_compat(&bare, &CodecConfig::TopK { ratio: 1.0 }, 2).unwrap();
+        check_ef_compat(&bare, &CodecConfig::Qsgd { bits: 32 }, 2).unwrap();
+        // lossy resume from an EF-less checkpoint: the explicit rejection
+        let lossy = CodecConfig::TopK { ratio: 0.1 };
+        let err = check_ef_compat(&bare, &lossy, 2).unwrap_err().to_string();
+        assert!(err.contains("no error-feedback residuals"), "{err}");
+        assert!(err.contains("drop accumulated gradient mass"), "{err}");
+        // matching EF sections: accepted
+        let with = bare.clone().with_ef(vec![vec![0.1; 64]; 2]);
+        check_ef_compat(&with, &lossy, 2).unwrap();
+        // worker-count mismatch: rejected with its own message
+        let err = check_ef_compat(&with, &lossy, 3).unwrap_err().to_string();
+        assert!(err.contains("residuals for 2 workers"), "{err}");
     }
 
     #[test]

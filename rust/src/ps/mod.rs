@@ -8,7 +8,7 @@
 pub mod checkpoint;
 pub mod shard;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{check_ef_compat, Checkpoint};
 pub use shard::{ShardData, ShardedStore};
 
 use crate::config::{Algorithm, UpdateBackend};

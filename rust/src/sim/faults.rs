@@ -1,0 +1,419 @@
+//! Fault injection & elastic worker membership for the discrete-event core.
+//!
+//! DC-ASGD's value proposition is robustness to *delayed* gradients, and the
+//! regime where delay actually explodes in production is not a healthy fleet
+//! with mild jitter — it is worker crashes, restarts, permanent departures,
+//! late joins, and post-recovery slowdowns (the "arbitrary delays" regime of
+//! Mishchenko et al. and Zhou et al., see PAPERS.md). This module gives the
+//! simulator that regime:
+//!
+//! * [`FaultConfig`] — the `[faults]` config section (off by default; with
+//!   it off the scheduler is bit-identical to a fault-free build).
+//! * [`FaultPlan`] — a seeded, per-worker stream of fault decisions: when
+//!   the next crash lands (Poisson), how long a restart takes (exponential,
+//!   or never — permanent departure), when transient straggler windows open
+//!   and how much they slow the worker, and which workers join late.
+//! * [`CrashPolicy`] — what happens to the gradient a worker was computing
+//!   when it crashed: [`CrashPolicy::Drop`] discards it (kill -9), while
+//!   [`CrashPolicy::Salvage`] lets the in-flight compute finish and commit
+//!   before the worker goes down (graceful drain).
+//! * [`FaultStats`] — counters the scheduler maintains and the metrics
+//!   pipeline surfaces (`crashes`, `restarts`, `departures`, `late_joins`,
+//!   `dropped_inflight`, `salvaged_inflight`, `straggle_events`).
+//!
+//! The plan only makes *decisions*; the [`crate::sim::Scheduler`] owns the
+//! lifecycle mechanics (epoch-tagged finish events so a crashed epoch can
+//! never commit, live-membership-aware protocol gates so a dead worker
+//! never wedges a barrier or an SSP window, restart/join scheduling). All
+//! randomness flows through per-worker forked [`Pcg64`] streams, so fault
+//! timelines are bit-reproducible for a given `(config, workers, seed)` and
+//! decorrelated across workers.
+
+use crate::util::rng::Pcg64;
+use anyhow::bail;
+
+/// What to do with the gradient a worker was computing when it crashed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrashPolicy {
+    /// The in-flight compute is lost (kill -9): its finish event is
+    /// invalidated and counted as `dropped_inflight`.
+    Drop,
+    /// The in-flight compute finishes and commits, then the worker goes
+    /// down (graceful drain); counted as `salvaged_inflight`.
+    Salvage,
+}
+
+impl CrashPolicy {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "drop" => CrashPolicy::Drop,
+            "salvage" | "drain" => CrashPolicy::Salvage,
+            other => bail!("unknown crash policy {other:?} (drop|salvage)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CrashPolicy::Drop => "drop",
+            CrashPolicy::Salvage => "salvage",
+        }
+    }
+}
+
+/// The `[faults]` config section. Defaults model a mildly unreliable fleet
+/// but stay **inert** until `enabled` is set (or, like `[comm]`, until any
+/// parameter is given explicitly); with faults off the scheduler takes no
+/// fault code path and schedules stay bit-identical to pre-fault builds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    pub enabled: bool,
+    /// Expected crashes per worker per simulated second (Poisson rate).
+    pub crash_rate: f64,
+    /// Mean restart delay in simulated seconds (exponential).
+    pub restart_mean: f64,
+    /// Probability that a crash is a permanent departure (never restarts).
+    pub departure_prob: f64,
+    /// Expected transient-slowdown windows per worker per simulated second.
+    pub straggler_rate: f64,
+    /// Compute-time multiplier while a straggle window is open (>= 1).
+    pub straggler_factor: f64,
+    /// Mean straggle-window length in simulated seconds (exponential).
+    pub straggler_duration: f64,
+    /// Number of workers absent at t = 0 that join later (elastic
+    /// scale-up). The highest-indexed workers are the late joiners.
+    pub late_join: usize,
+    /// Late joiners arrive uniformly within (0, late_join_by].
+    pub late_join_by: f64,
+    /// In-flight gradient policy on crash.
+    pub policy: CrashPolicy,
+    /// Fault-stream seed; 0 derives it from the experiment seed.
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            crash_rate: 0.02,
+            restart_mean: 5.0,
+            departure_prob: 0.1,
+            straggler_rate: 0.0,
+            straggler_factor: 4.0,
+            straggler_duration: 5.0,
+            late_join: 0,
+            late_join_by: 10.0,
+            policy: CrashPolicy::Drop,
+            seed: 0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Validate the knobs against a fleet of `workers` workers.
+    pub fn validate(&self, workers: usize) -> anyhow::Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        if !(self.crash_rate >= 0.0 && self.crash_rate.is_finite()) {
+            bail!("faults.crash_rate must be finite and >= 0");
+        }
+        if !(self.restart_mean > 0.0 && self.restart_mean.is_finite()) {
+            bail!("faults.restart_mean must be finite and > 0");
+        }
+        if !(0.0..=1.0).contains(&self.departure_prob) {
+            bail!("faults.departure_prob must be in [0, 1]");
+        }
+        if !(self.straggler_rate >= 0.0 && self.straggler_rate.is_finite()) {
+            bail!("faults.straggler_rate must be finite and >= 0");
+        }
+        if self.straggler_rate > 0.0 && self.straggler_factor < 1.0 {
+            bail!("faults.straggler_factor must be >= 1 (it multiplies compute time)");
+        }
+        if self.straggler_rate > 0.0
+            && !(self.straggler_duration > 0.0 && self.straggler_duration.is_finite())
+        {
+            bail!("faults.straggler_duration must be finite and > 0");
+        }
+        if self.late_join >= workers {
+            bail!(
+                "faults.late_join = {} but only {} workers exist: at least one worker \
+                 must be present at t = 0",
+                self.late_join,
+                workers
+            );
+        }
+        if self.late_join > 0 && !(self.late_join_by > 0.0 && self.late_join_by.is_finite()) {
+            bail!("faults.late_join_by must be finite and > 0");
+        }
+        Ok(())
+    }
+}
+
+/// Lifecycle counters maintained by the scheduler while a fault plan is
+/// active; surfaced through [`crate::metrics::TrainReport`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Crash events that hit a live worker.
+    pub crashes: u64,
+    /// Rejoins after a crash (excludes late joins).
+    pub restarts: u64,
+    /// Crashes that became permanent departures.
+    pub departures: u64,
+    /// Workers that joined an already-running fleet (elastic scale-up).
+    pub late_joins: u64,
+    /// In-flight computes invalidated by a [`CrashPolicy::Drop`] crash.
+    pub dropped_inflight: u64,
+    /// In-flight computes delivered before death ([`CrashPolicy::Salvage`]).
+    pub salvaged_inflight: u64,
+    /// Transient straggle windows opened.
+    pub straggle_events: u64,
+}
+
+/// A seeded stream of per-worker fault decisions, consumed lazily by the
+/// scheduler (no horizon needed: the next crash / straggle window is
+/// sampled when the previous one resolves, so plans extend to arbitrarily
+/// long runs while staying bit-reproducible).
+#[derive(Debug)]
+pub struct FaultPlan {
+    crash_rate: f64,
+    restart_mean: f64,
+    departure_prob: f64,
+    straggler_rate: f64,
+    straggler_factor: f64,
+    straggler_duration: f64,
+    policy: CrashPolicy,
+    /// Late joiners' arrival times (None = present at t = 0).
+    join_at: Vec<Option<f64>>,
+    rngs: Vec<Pcg64>,
+}
+
+impl FaultPlan {
+    /// Build the plan for a fleet; `None` when the section is disabled, so
+    /// callers pass it straight to [`crate::sim::Scheduler::with_faults`].
+    /// `run_seed` feeds the fault streams when `cfg.seed == 0`.
+    pub fn from_config(cfg: &FaultConfig, workers: usize, run_seed: u64) -> Option<FaultPlan> {
+        if !cfg.enabled {
+            return None;
+        }
+        let seed = if cfg.seed != 0 { cfg.seed } else { run_seed ^ 0xFA_17_5EED };
+        let mut root = Pcg64::new(seed ^ 0xC4A5_4EE5);
+        let mut rngs: Vec<Pcg64> = (0..workers).map(|m| root.fork(m as u64)).collect();
+        // the highest-indexed workers join late (deterministic choice:
+        // worker 0 is always present at t = 0 when the config validates)
+        let first_late = workers - cfg.late_join.min(workers.saturating_sub(1));
+        let join_at = (0..workers)
+            .map(|m| {
+                if m >= first_late {
+                    // (0, by]: strictly after t = 0 so "late" means late
+                    let u = 1.0 - rngs[m].next_f64();
+                    Some(u * cfg.late_join_by)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        Some(FaultPlan {
+            crash_rate: cfg.crash_rate,
+            restart_mean: cfg.restart_mean,
+            departure_prob: cfg.departure_prob,
+            straggler_rate: cfg.straggler_rate,
+            straggler_factor: cfg.straggler_factor,
+            straggler_duration: cfg.straggler_duration,
+            policy: cfg.policy,
+            join_at,
+            rngs,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.rngs.len()
+    }
+
+    pub fn policy(&self) -> CrashPolicy {
+        self.policy
+    }
+
+    /// When worker `m` joins the fleet (None = present at t = 0).
+    pub fn join_time(&self, worker: usize) -> Option<f64> {
+        self.join_at[worker]
+    }
+
+    /// Time until worker `m`'s next crash, sampled at (re)activation.
+    /// `None` when crashes are disabled (rate 0).
+    pub fn next_crash_in(&mut self, worker: usize) -> Option<f64> {
+        if self.crash_rate <= 0.0 {
+            return None;
+        }
+        Some(self.rngs[worker].exponential(1.0 / self.crash_rate))
+    }
+
+    /// Restart delay for worker `m`'s current crash; `None` means the
+    /// crash is a permanent departure.
+    pub fn restart_delay(&mut self, worker: usize) -> Option<f64> {
+        let rng = &mut self.rngs[worker];
+        if rng.next_f64() < self.departure_prob {
+            None
+        } else {
+            Some(rng.exponential(self.restart_mean))
+        }
+    }
+
+    /// Time until worker `m`'s next straggle window opens; `None` when
+    /// straggling is disabled (rate 0).
+    pub fn next_straggle_in(&mut self, worker: usize) -> Option<f64> {
+        if self.straggler_rate <= 0.0 {
+            return None;
+        }
+        Some(self.rngs[worker].exponential(1.0 / self.straggler_rate))
+    }
+
+    /// `(slowdown factor, window length)` for a straggle window that just
+    /// opened on worker `m`.
+    pub fn straggle_window(&mut self, worker: usize) -> (f64, f64) {
+        let dur = self.rngs[worker].exponential(self.straggler_duration);
+        (self.straggler_factor, dur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enabled() -> FaultConfig {
+        FaultConfig { enabled: true, ..FaultConfig::default() }
+    }
+
+    #[test]
+    fn disabled_config_builds_no_plan() {
+        assert!(FaultPlan::from_config(&FaultConfig::default(), 4, 1).is_none());
+        assert!(FaultPlan::from_config(&enabled(), 4, 1).is_some());
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [CrashPolicy::Drop, CrashPolicy::Salvage] {
+            assert_eq!(CrashPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(CrashPolicy::parse("drain").unwrap(), CrashPolicy::Salvage);
+        assert!(CrashPolicy::parse("explode").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_knobs() {
+        let ok = enabled();
+        ok.validate(4).unwrap();
+        // disabled sections validate regardless of garbage values
+        let mut off = FaultConfig { crash_rate: -1.0, ..FaultConfig::default() };
+        off.validate(4).unwrap();
+        off.enabled = true;
+        assert!(off.validate(4).is_err());
+
+        let bad = FaultConfig { restart_mean: 0.0, ..enabled() };
+        assert!(bad.validate(4).is_err());
+        let bad = FaultConfig { departure_prob: 1.5, ..enabled() };
+        assert!(bad.validate(4).is_err());
+        let bad =
+            FaultConfig { straggler_rate: 0.1, straggler_factor: 0.5, ..enabled() };
+        assert!(bad.validate(4).is_err());
+        let bad =
+            FaultConfig { straggler_rate: 0.1, straggler_duration: 0.0, ..enabled() };
+        assert!(bad.validate(4).is_err());
+        let bad = FaultConfig { late_join: 4, ..enabled() };
+        assert!(bad.validate(4).is_err(), "the whole fleet cannot join late");
+        let bad = FaultConfig { late_join: 1, late_join_by: 0.0, ..enabled() };
+        assert!(bad.validate(4).is_err());
+    }
+
+    #[test]
+    fn streams_are_seed_deterministic_and_per_worker_distinct() {
+        let cfg = FaultConfig { crash_rate: 0.1, straggler_rate: 0.05, ..enabled() };
+        let mut a = FaultPlan::from_config(&cfg, 3, 7).unwrap();
+        let mut b = FaultPlan::from_config(&cfg, 3, 7).unwrap();
+        let mut c = FaultPlan::from_config(&cfg, 3, 8).unwrap();
+        let mut diverged = false;
+        for w in 0..3 {
+            for _ in 0..20 {
+                let (x, y, z) =
+                    (a.next_crash_in(w).unwrap(), b.next_crash_in(w).unwrap(), c.next_crash_in(w).unwrap());
+                assert_eq!(x.to_bits(), y.to_bits(), "same seed diverged");
+                diverged |= x.to_bits() != z.to_bits();
+            }
+        }
+        assert!(diverged, "different run seeds never diverged");
+        // workers draw distinct streams
+        let mut d = FaultPlan::from_config(&cfg, 2, 9).unwrap();
+        let xs: Vec<u64> = (0..10).map(|_| d.next_crash_in(0).unwrap().to_bits()).collect();
+        let ys: Vec<u64> = (0..10).map(|_| d.next_crash_in(1).unwrap().to_bits()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn explicit_fault_seed_overrides_run_seed() {
+        let cfg = FaultConfig { crash_rate: 0.1, seed: 42, ..enabled() };
+        let mut a = FaultPlan::from_config(&cfg, 2, 1).unwrap();
+        let mut b = FaultPlan::from_config(&cfg, 2, 2).unwrap();
+        for w in 0..2 {
+            assert_eq!(
+                a.next_crash_in(w).unwrap().to_bits(),
+                b.next_crash_in(w).unwrap().to_bits(),
+                "pinned fault seed must decouple the plan from the run seed"
+            );
+        }
+    }
+
+    #[test]
+    fn late_joiners_are_the_top_indices_with_positive_times() {
+        let cfg = FaultConfig { late_join: 2, late_join_by: 7.0, ..enabled() };
+        let plan = FaultPlan::from_config(&cfg, 5, 3).unwrap();
+        for w in 0..3 {
+            assert_eq!(plan.join_time(w), None, "worker {w} must start at t = 0");
+        }
+        for w in 3..5 {
+            let t = plan.join_time(w).expect("late joiner has a join time");
+            assert!(t > 0.0 && t <= 7.0, "join time {t} outside (0, 7]");
+        }
+    }
+
+    #[test]
+    fn zero_rates_disable_their_streams() {
+        let cfg = FaultConfig { crash_rate: 0.0, straggler_rate: 0.0, ..enabled() };
+        let mut plan = FaultPlan::from_config(&cfg, 2, 1).unwrap();
+        assert!(plan.next_crash_in(0).is_none());
+        assert!(plan.next_straggle_in(0).is_none());
+    }
+
+    #[test]
+    fn departure_prob_extremes() {
+        let cfg = FaultConfig { departure_prob: 1.0, ..enabled() };
+        let mut plan = FaultPlan::from_config(&cfg, 1, 1).unwrap();
+        for _ in 0..10 {
+            assert!(plan.restart_delay(0).is_none(), "prob 1 must always depart");
+        }
+        let cfg = FaultConfig { departure_prob: 0.0, ..enabled() };
+        let mut plan = FaultPlan::from_config(&cfg, 1, 1).unwrap();
+        for _ in 0..10 {
+            let d = plan.restart_delay(0).expect("prob 0 must always restart");
+            assert!(d >= 0.0);
+        }
+    }
+
+    #[test]
+    fn straggle_windows_scale_with_config() {
+        let cfg = FaultConfig {
+            straggler_rate: 0.5,
+            straggler_factor: 3.5,
+            straggler_duration: 2.0,
+            ..enabled()
+        };
+        let mut plan = FaultPlan::from_config(&cfg, 1, 1).unwrap();
+        let mut total = 0.0;
+        for _ in 0..2000 {
+            let (f, d) = plan.straggle_window(0);
+            assert_eq!(f, 3.5);
+            assert!(d >= 0.0);
+            total += d;
+        }
+        let mean = total / 2000.0;
+        assert!((mean - 2.0).abs() < 0.2, "empirical window mean {mean} far from 2.0");
+    }
+}

@@ -6,14 +6,20 @@
 //! PJRT engine); only *time* is simulated, so runs are deterministic and
 //! hardware-independent. The schedule itself is produced by the
 //! event-driven [`scheduler`]: a per-worker pull → compute → push lifecycle
-//! gated by a pluggable synchronization [`Protocol`].
+//! gated by a pluggable synchronization [`Protocol`]. The [`faults`] module
+//! adds the unhealthy-fleet regime — seeded crashes, restarts, permanent
+//! departures, late joins, and transient straggler slowdowns — driven by
+//! the same scheduler with first-class worker lifecycle (off by default;
+//! bit-identical schedules when off).
 
 pub mod delay;
+pub mod faults;
 pub mod scheduler;
 
 pub use delay::{CommCosts, CommModel, DelaySampler};
+pub use faults::{CrashPolicy, FaultConfig, FaultPlan, FaultStats};
 pub use scheduler::{
-    BarrierSync, CommitMode, FullyAsync, Protocol, Scheduler, StalenessBounded,
+    BarrierSync, CommitMode, FullyAsync, Protocol, Scheduler, SimEvent, StalenessBounded,
 };
 
 use std::cmp::Ordering;

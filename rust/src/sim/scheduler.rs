@@ -1,22 +1,29 @@
 //! Event-driven scheduler: the per-worker lifecycle (pull → compute → push)
-//! under a pluggable synchronization [`Protocol`].
+//! under a pluggable synchronization [`Protocol`], with first-class worker
+//! faults and elastic membership ([`crate::sim::faults`]).
 //!
 //! The scheduler owns *time* (the [`EventQueue`] virtual clock), the
 //! per-worker compute-duration streams ([`DelaySampler`]), the per-worker
-//! logical clocks (completed local steps), and the wait/gate accounting.
-//! It deliberately knows nothing about gradients, models, or the parameter
-//! server: the coordinator drives it event-at-a-time —
+//! logical clocks (completed local steps), the wait/gate accounting, and —
+//! when a [`FaultPlan`] is installed — the fleet membership: who is alive,
+//! who crashed, who is restarting, who joined late. It deliberately knows
+//! nothing about gradients, models, or the parameter server: the
+//! coordinator drives it event-at-a-time —
 //!
 //! ```text
-//! for w in sched.start()          { pull snapshot for w }
-//! while let Some((t, w)) = sched.next() {
-//!     compute gradient on w's snapshot; commit it (push or barrier fold);
-//!     for v in sched.complete(w)  { pull fresh snapshot for v }
+//! for w in sched.start()             { pull snapshot for w }
+//! while let Some(ev) = sched.next_event() {
+//!     match ev {
+//!         Finish { worker, .. } => { compute + commit; for v in sched.complete(worker) { pull v } }
+//!         Crash  { released, .. } => { settle any barrier round; for v in released { pull v } }
+//!         Join   { worker, released, .. } => { re-seed worker state; pull worker; pull released }
+//!     }
 //! }
 //! ```
 //!
 //! — which keeps the core testable without any compiled artifacts (see the
-//! property tests in `tests/properties.rs`).
+//! property tests in `tests/properties.rs` and the chaos harness in
+//! `tests/chaos.rs`).
 //!
 //! A [`Protocol`] decides, each time a worker could begin a new compute,
 //! whether it may proceed or must wait, and whether finished gradients
@@ -39,8 +46,29 @@
 //! observed fastest-slowest drift is at most `s + 1`, which in turn bounds
 //! the version staleness any push can observe by
 //! `(workers - 1) * (2s + 1)` (see [`StalenessBounded::version_bound`]).
+//!
+//! ## Worker lifecycle under faults
+//!
+//! Every gate evaluates over the **live** membership only, so a dead
+//! worker can never wedge a barrier round or pin the SSP minimum. Finish
+//! events carry the epoch they were scheduled under; a crash under
+//! [`CrashPolicy::Drop`] bumps the worker's epoch, so the in-flight finish
+//! is recognized as stale and silently discarded — a push from a crashed
+//! epoch can never commit. Under [`CrashPolicy::Salvage`] the in-flight
+//! compute is delivered and committed first (graceful drain), then the
+//! worker goes down. A restarting or late-joining worker that lags the
+//! fleet adopts the slowest live peer's clock and starts immediately (so
+//! it neither trips the SSP gate for its peers nor wedges a barrier round
+//! that is waiting on it); one that died *ahead* of the slowest live peer
+//! re-enters through the protocol gate instead — clocks never regress, so
+//! completed work is never redone. Either way it downloads a fresh model
+//! and re-arms its crash stream. Without a fault plan none of these paths
+//! execute and
+//! the produced schedule is bit-identical to pre-fault builds (pinned by
+//! tests here and in `tests/chaos.rs`).
 
 use super::delay::{CommCosts, DelaySampler};
+use super::faults::{CrashPolicy, FaultPlan, FaultStats};
 use super::EventQueue;
 
 /// How finished gradients become global steps.
@@ -55,16 +83,20 @@ pub enum CommitMode {
 
 /// A synchronization protocol: the policy half of the scheduler.
 ///
-/// `clocks[w]` is the number of computes worker `w` has *completed*.
-/// `may_start` is consulted every time worker `worker` is idle and could
-/// begin another compute; returning `false` leaves it gated until another
-/// worker's completion changes the clock vector.
+/// `clocks[w]` is the number of computes worker `w` has *completed*;
+/// `alive[w]` says whether worker `w` is currently part of the fleet
+/// (always all-true without a fault plan). `may_start` is consulted every
+/// time worker `worker` is idle and could begin another compute; returning
+/// `false` leaves it gated until another worker's completion — or a
+/// membership change — updates the clock vector. Gates must ignore dead
+/// workers' clocks: a crashed straggler would otherwise pin the minimum
+/// forever and wedge the fleet.
 pub trait Protocol: Send {
     fn name(&self) -> &'static str;
     fn commit_mode(&self) -> CommitMode {
         CommitMode::Immediate
     }
-    fn may_start(&self, worker: usize, clocks: &[u64]) -> bool;
+    fn may_start(&self, worker: usize, clocks: &[u64], alive: &[bool]) -> bool;
 }
 
 /// ASGD-family schedule: nobody ever waits.
@@ -75,13 +107,14 @@ impl Protocol for FullyAsync {
     fn name(&self) -> &'static str {
         "async"
     }
-    fn may_start(&self, _worker: usize, _clocks: &[u64]) -> bool {
+    fn may_start(&self, _worker: usize, _clocks: &[u64], _alive: &[bool]) -> bool {
         true
     }
 }
 
 /// SSGD-family schedule: a full barrier every round; gradients fold into a
-/// single aggregated step.
+/// single aggregated step. The barrier spans the *live* membership: a dead
+/// worker neither blocks the round nor is waited for.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct BarrierSync;
 
@@ -92,14 +125,14 @@ impl Protocol for BarrierSync {
     fn commit_mode(&self) -> CommitMode {
         CommitMode::Barrier
     }
-    fn may_start(&self, worker: usize, clocks: &[u64]) -> bool {
+    fn may_start(&self, worker: usize, clocks: &[u64], alive: &[bool]) -> bool {
         let c = clocks[worker];
-        clocks.iter().all(|&k| k == c)
+        clocks.iter().zip(alive).all(|(&k, &a)| !a || k == c)
     }
 }
 
 /// Stale-synchronous parallel: a worker may run at most `bound` local steps
-/// ahead of the slowest worker.
+/// ahead of the slowest **live** worker.
 #[derive(Clone, Copy, Debug)]
 pub struct StalenessBounded {
     pub bound: u64,
@@ -120,8 +153,14 @@ impl Protocol for StalenessBounded {
     fn name(&self) -> &'static str {
         "ssp"
     }
-    fn may_start(&self, worker: usize, clocks: &[u64]) -> bool {
-        let min = clocks.iter().copied().min().unwrap_or(0);
+    fn may_start(&self, worker: usize, clocks: &[u64], alive: &[bool]) -> bool {
+        let min = clocks
+            .iter()
+            .zip(alive)
+            .filter(|&(_, &a)| a)
+            .map(|(&k, _)| k)
+            .min()
+            .unwrap_or(0);
         clocks[worker] - min <= self.bound
     }
 }
@@ -132,13 +171,49 @@ enum WorkerState {
     /// Finished its last compute; gated by the protocol since the stored
     /// virtual time.
     Blocked,
+    /// Crashed / departed / not yet joined: not part of the live fleet.
+    Dead,
+}
+
+/// Internal queue payload: worker finishes plus the fault timeline.
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    /// Worker's compute finishes. `epoch` pins it to the lifecycle epoch it
+    /// was scheduled under: a crash bumps the epoch, so stale finishes from
+    /// a dead incarnation are dropped on pop.
+    Finish { worker: usize, epoch: u32 },
+    Crash { worker: usize },
+    Join { worker: usize },
+    Straggle { worker: usize },
+}
+
+/// What the scheduler hands the coordinator per popped event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SimEvent {
+    /// `worker`'s compute finished at `time`: compute its gradient on the
+    /// snapshot it pulled, commit it, then call
+    /// [`Scheduler::complete`] and pull for every returned worker.
+    Finish { time: f64, worker: usize },
+    /// `worker` crashed. Its in-flight gradient (if any) was dropped or
+    /// marked for salvage per [`CrashPolicy`]; `released` lists workers the
+    /// membership change just un-gated — the caller must settle any barrier
+    /// round over the shrunken fleet **before** pulling for them.
+    Crash { time: f64, worker: usize, permanent: bool, released: Vec<usize> },
+    /// `worker` (re)joined the fleet. The caller must re-seed its
+    /// server-side state (`w_bak`, error-feedback residual) and pull it a
+    /// fresh snapshot. `computing` says whether it started a compute right
+    /// away (fresh/lagging joiner) or re-entered through the protocol gate
+    /// (it died *ahead* of the slowest live peer — e.g. blocked at a
+    /// barrier with its contribution already buffered — and will appear in
+    /// a later `released` list instead).
+    Join { time: f64, worker: usize, computing: bool, released: Vec<usize> },
 }
 
 /// The event-driven scheduler core. See the module docs for the driving
 /// contract.
 pub struct Scheduler {
     protocol: Box<dyn Protocol>,
-    queue: EventQueue<usize>,
+    queue: EventQueue<Ev>,
     delays: DelaySampler,
     clocks: Vec<u64>,
     state: Vec<WorkerState>,
@@ -160,6 +235,27 @@ pub struct Scheduler {
     comm_bytes: u64,
     workers: usize,
     started: bool,
+    // ---- fault / membership state (inert without a plan) ----------------
+    faults: Option<FaultPlan>,
+    /// Live-fleet membership; all-true without a fault plan.
+    alive: Vec<bool>,
+    /// Lifecycle epoch per worker; finish events from older epochs are
+    /// stale and dropped.
+    epoch: Vec<u32>,
+    /// Salvage drain: crashed mid-compute, dies at its own finish.
+    dying: Vec<bool>,
+    /// Restart decision captured at crash time for a draining worker
+    /// (`Some(None)` = permanent departure at finish).
+    pending_restart: Vec<Option<Option<f64>>>,
+    /// Permanently departed: straggle chains stop rescheduling.
+    departed: Vec<bool>,
+    /// First join of a late joiner (vs a post-crash restart).
+    late_join_pending: Vec<bool>,
+    /// Open straggle window: sampled compute times are multiplied by
+    /// `slow_factor` while `now < slow_until`.
+    slow_until: Vec<f64>,
+    slow_factor: Vec<f64>,
+    stats: FaultStats,
 }
 
 impl Scheduler {
@@ -180,15 +276,35 @@ impl Scheduler {
         server_cost: f64,
         comm: CommCosts,
     ) -> Self {
+        Self::with_faults(protocol, delays, server_cost, comm, None)
+    }
+
+    /// Build a scheduler with an optional fault plan. With `None` this is
+    /// exactly [`Self::with_comm`]: no fault code path executes and the
+    /// schedule is bit-identical to a fault-free build (pinned by tests).
+    pub fn with_faults(
+        protocol: Box<dyn Protocol>,
+        delays: DelaySampler,
+        server_cost: f64,
+        comm: CommCosts,
+        faults: Option<FaultPlan>,
+    ) -> Self {
         let workers = delays.workers();
         assert!(workers >= 1);
         assert!(comm.push >= 0.0 && comm.pull >= 0.0, "comm costs must be non-negative");
+        if let Some(p) = &faults {
+            assert_eq!(p.workers(), workers, "fault plan sized for a different fleet");
+        }
+        let alive: Vec<bool> = (0..workers)
+            .map(|w| faults.as_ref().map_or(true, |p| p.join_time(w).is_none()))
+            .collect();
+        assert!(alive.iter().any(|&a| a), "at least one worker must be present at t = 0");
         Self {
             protocol,
             queue: EventQueue::new(),
             delays,
             clocks: vec![0; workers],
-            state: vec![WorkerState::Blocked; workers],
+            state: vec![WorkerState::Dead; workers],
             blocked_since: vec![0.0; workers],
             step_wait: vec![0.0; workers],
             wait_total: vec![0.0; workers],
@@ -198,6 +314,16 @@ impl Scheduler {
             comm_bytes: 0,
             workers,
             started: false,
+            faults,
+            alive,
+            epoch: vec![0; workers],
+            dying: vec![false; workers],
+            pending_restart: vec![None; workers],
+            departed: vec![false; workers],
+            late_join_pending: vec![false; workers],
+            slow_until: vec![0.0; workers],
+            slow_factor: vec![1.0; workers],
+            stats: FaultStats::default(),
         }
     }
 
@@ -210,7 +336,7 @@ impl Scheduler {
     pub fn protocol_name(&self) -> &'static str {
         self.protocol.name()
     }
-    /// Current virtual time (time of the last popped finish event).
+    /// Current virtual time (time of the last popped event).
     pub fn now(&self) -> f64 {
         self.queue.now()
     }
@@ -237,33 +363,116 @@ impl Scheduler {
     pub fn comm_bytes_total(&self) -> u64 {
         self.comm_bytes
     }
+    /// Is worker `w` currently part of the live fleet? (A salvage-draining
+    /// worker counts as live until its final finish commits.)
+    pub fn is_live(&self, worker: usize) -> bool {
+        self.alive[worker]
+    }
+    /// Size of the live fleet right now.
+    pub fn live_workers(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+    /// Whether a fault plan is installed.
+    pub fn has_faults(&self) -> bool {
+        self.faults.is_some()
+    }
+    /// Lifecycle counters (all zero without fault activity).
+    pub fn fault_stats(&self) -> FaultStats {
+        self.stats
+    }
 
-    /// Launch every worker at t = 0 (no protocol can gate clock-0 starts).
+    /// Launch every t=0 worker (no protocol can gate clock-0 starts) and
+    /// arm the fault timeline: late joiners get their join events, present
+    /// workers their crash streams, everyone their straggle chains.
     /// Returns the workers that must pull a snapshot, in worker order. The
     /// first compute carries no server cost, matching a cold cluster start.
     pub fn start(&mut self) -> Vec<usize> {
         assert!(!self.started, "scheduler already started");
         self.started = true;
+        let mut pulls = Vec::new();
         for w in 0..self.workers {
+            if !self.alive[w] {
+                // late joiner: schedule its arrival instead of a compute
+                let at = self
+                    .faults
+                    .as_ref()
+                    .and_then(|p| p.join_time(w))
+                    .expect("dead-at-start worker without a join time");
+                self.late_join_pending[w] = true;
+                self.queue.schedule_at(at, Ev::Join { worker: w });
+                continue;
+            }
             self.state[w] = WorkerState::Computing;
-            let d = self.delays.sample(w);
+            let d = self.sample_delay(w);
             // initial model download precedes the first compute
-            self.queue.schedule_in(self.comm.pull + d, w);
+            self.queue.schedule_in(self.comm.pull + d, Ev::Finish { worker: w, epoch: self.epoch[w] });
             self.comm_total += self.comm.pull;
             self.comm_bytes += self.comm.pull_bytes as u64;
+            if let Some(tc) = self.faults.as_mut().and_then(|p| p.next_crash_in(w)) {
+                self.queue.schedule_in(tc, Ev::Crash { worker: w });
+            }
+            pulls.push(w);
         }
-        (0..self.workers).collect()
+        // straggle chains cover every worker; a window opening while the
+        // worker is down just slows its first computes after rejoining
+        for w in 0..self.workers {
+            if let Some(ts) = self.faults.as_mut().and_then(|p| p.next_straggle_in(w)) {
+                self.queue.schedule_in(ts, Ev::Straggle { worker: w });
+            }
+        }
+        pulls
     }
 
-    /// Pop the next finish event: `(time, worker)` whose compute is done.
+    /// Pop the next *finish* event: `(time, worker)` whose compute is done.
+    /// Fault events are processed internally and skipped; callers that must
+    /// react to membership changes (the coordinator driver, the chaos
+    /// harness) should drive [`Self::next_event`] instead. Without a fault
+    /// plan the two are equivalent.
     pub fn next(&mut self) -> Option<(f64, usize)> {
-        self.queue.pop()
+        while let Some(ev) = self.next_event() {
+            if let SimEvent::Finish { time, worker } = ev {
+                return Some((time, worker));
+            }
+        }
+        None
+    }
+
+    /// Pop the next observable event (finish / crash / join), advancing the
+    /// virtual clock. Stale finishes from crashed epochs and internal
+    /// straggle-window events are consumed silently. Returns `None` when
+    /// the timeline is exhausted — which, under faults, means the whole
+    /// fleet has permanently departed.
+    pub fn next_event(&mut self) -> Option<SimEvent> {
+        loop {
+            let (t, ev) = self.queue.pop()?;
+            match ev {
+                Ev::Finish { worker, epoch } => {
+                    if epoch != self.epoch[worker] {
+                        continue; // finish from a crashed epoch: never commits
+                    }
+                    return Some(SimEvent::Finish { time: t, worker });
+                }
+                Ev::Crash { worker } => {
+                    if let Some(e) = self.process_crash(t, worker) {
+                        return Some(e);
+                    }
+                }
+                Ev::Join { worker } => {
+                    if !self.alive[worker] {
+                        return Some(self.process_join(t, worker));
+                    }
+                }
+                Ev::Straggle { worker } => self.process_straggle(worker),
+            }
+        }
     }
 
     /// Mark `worker`'s compute complete (after the caller committed or
     /// buffered its gradient) and restart every worker the protocol now
     /// admits. Returns the restarted workers in worker order; the caller
     /// must pull a fresh snapshot for each before its next finish event.
+    /// A salvage-draining worker dies here — its committed push was its
+    /// last act — and the gates recompute over the survivors.
     pub fn complete(&mut self, worker: usize) -> Vec<usize> {
         debug_assert_eq!(self.state[worker], WorkerState::Computing);
         let now = self.queue.now();
@@ -274,19 +483,67 @@ impl Scheduler {
         // on the restart path (it delays the *next* turnaround).
         self.comm_bytes += self.comm.push_bytes as u64;
         self.clocks[worker] += 1;
+        if self.dying[worker] {
+            self.stats.salvaged_inflight += 1;
+            let restart = self.pending_restart[worker].take().unwrap_or(None);
+            return self.kill(worker, restart);
+        }
         self.state[worker] = WorkerState::Blocked;
         self.blocked_since[worker] = now;
+        self.release_gated()
+    }
+
+    /// Test/diagnostic hook: schedule a crash for `worker` at absolute
+    /// virtual time `at`. On a scheduler without a fault plan the crash is
+    /// a permanent departure under [`CrashPolicy::Drop`].
+    pub fn inject_crash_at(&mut self, at: f64, worker: usize) {
+        assert!(worker < self.workers);
+        self.queue.schedule_at(at, Ev::Crash { worker });
+    }
+
+    /// Test/diagnostic hook: schedule a (re)join for `worker` at absolute
+    /// virtual time `at`. Ignored if the worker is alive when it fires.
+    pub fn inject_join_at(&mut self, at: f64, worker: usize) {
+        assert!(worker < self.workers);
+        self.queue.schedule_at(at, Ev::Join { worker });
+    }
+
+    // ---- internal lifecycle mechanics -----------------------------------
+
+    /// Sample worker `w`'s next compute duration, stretched by an open
+    /// straggle window. Outside a window no arithmetic touches the sample,
+    /// so fault-free schedules stay bit-identical.
+    fn sample_delay(&mut self, worker: usize) -> f64 {
+        let now = self.queue.now();
+        let d = self.delays.sample(worker);
+        if now < self.slow_until[worker] {
+            d * self.slow_factor[worker]
+        } else {
+            d
+        }
+    }
+
+    /// Restart every blocked live worker the protocol now admits (called
+    /// after any clock or membership change). Returns them in worker order.
+    fn release_gated(&mut self) -> Vec<usize> {
+        let now = self.queue.now();
         let mut restarted = Vec::new();
         for v in 0..self.workers {
-            if self.state[v] == WorkerState::Blocked && self.protocol.may_start(v, &self.clocks) {
+            if self.state[v] == WorkerState::Blocked
+                && self.alive[v]
+                && self.protocol.may_start(v, &self.clocks, &self.alive)
+            {
                 let waited = now - self.blocked_since[v];
                 self.step_wait[v] = waited;
                 self.wait_total[v] += waited;
                 self.state[v] = WorkerState::Computing;
-                let d = self.delays.sample(v);
+                let d = self.sample_delay(v);
                 // turnaround = server update cost + gradient upload for the
                 // push that just committed + fresh model download
-                self.queue.schedule_in(self.server_cost + self.comm.push + self.comm.pull + d, v);
+                self.queue.schedule_in(
+                    self.server_cost + self.comm.push + self.comm.pull + d,
+                    Ev::Finish { worker: v, epoch: self.epoch[v] },
+                );
                 self.comm_total += self.comm.push + self.comm.pull;
                 self.comm_bytes += self.comm.pull_bytes as u64;
                 restarted.push(v);
@@ -294,12 +551,121 @@ impl Scheduler {
         }
         restarted
     }
+
+    /// Take `worker` out of the fleet; schedule its rejoin (or record the
+    /// departure) and recompute the gates over the survivors.
+    fn kill(&mut self, worker: usize, restart: Option<f64>) -> Vec<usize> {
+        self.alive[worker] = false;
+        self.state[worker] = WorkerState::Dead;
+        self.dying[worker] = false;
+        match restart {
+            Some(d) => self.queue.schedule_in(d, Ev::Join { worker }),
+            None => {
+                self.stats.departures += 1;
+                self.departed[worker] = true;
+            }
+        }
+        self.release_gated()
+    }
+
+    fn process_crash(&mut self, time: f64, worker: usize) -> Option<SimEvent> {
+        if !self.alive[worker] || self.dying[worker] {
+            return None; // crash aimed at an already-down worker
+        }
+        self.stats.crashes += 1;
+        let restart = self.faults.as_mut().and_then(|p| p.restart_delay(worker));
+        let policy = self.faults.as_ref().map_or(CrashPolicy::Drop, |p| p.policy());
+        let computing = self.state[worker] == WorkerState::Computing;
+        let released = if computing && policy == CrashPolicy::Salvage {
+            // graceful drain: the in-flight compute will finish and commit;
+            // the worker dies at its own finish event (see `complete`)
+            self.dying[worker] = true;
+            self.pending_restart[worker] = Some(restart);
+            Vec::new()
+        } else {
+            if computing {
+                // kill -9: the in-flight finish now belongs to a dead epoch
+                self.epoch[worker] = self.epoch[worker].wrapping_add(1);
+                self.stats.dropped_inflight += 1;
+            }
+            self.kill(worker, restart)
+        };
+        Some(SimEvent::Crash { time, worker, permanent: restart.is_none(), released })
+    }
+
+    fn process_join(&mut self, time: f64, worker: usize) -> SimEvent {
+        if self.late_join_pending[worker] {
+            self.late_join_pending[worker] = false;
+            self.stats.late_joins += 1;
+        } else {
+            self.stats.restarts += 1;
+        }
+        self.alive[worker] = true;
+        self.departed[worker] = false;
+        // a new epoch: nothing scheduled before this join can ever commit
+        self.epoch[worker] = self.epoch[worker].wrapping_add(1);
+        self.blocked_since[worker] = time;
+        self.step_wait[worker] = 0.0;
+        let min_live = (0..self.workers)
+            .filter(|&v| v != worker && self.alive[v])
+            .map(|v| self.clocks[v])
+            .min();
+        // Clocks never regress. A fresh or lagging joiner adopts the
+        // slowest live peer's clock and starts computing the fleet's
+        // current round immediately (the SSP gate would admit the minimum
+        // anyway, and a barrier round that is waiting on the joiner must
+        // not be wedged by the all-equal gate). A worker that died AHEAD
+        // of the slowest live peer — it crashed after completing work the
+        // fleet hasn't caught up to, e.g. blocked at a barrier with its
+        // contribution already buffered — must NOT redo that work:
+        // regressing its clock would double-contribute to the open round,
+        // so it re-enters through the protocol gate instead and shows up
+        // in a later `released` list.
+        let computing = min_live.map_or(true, |m0| self.clocks[worker] <= m0);
+        if computing {
+            if let Some(m0) = min_live {
+                self.clocks[worker] = m0;
+            }
+            self.state[worker] = WorkerState::Computing;
+            // fresh model download precedes the first compute of the epoch
+            let d = self.sample_delay(worker);
+            self.queue
+                .schedule_in(self.comm.pull + d, Ev::Finish { worker, epoch: self.epoch[worker] });
+            self.comm_total += self.comm.pull;
+            self.comm_bytes += self.comm.pull_bytes as u64;
+        } else {
+            self.state[worker] = WorkerState::Blocked;
+        }
+        // re-arm the crash stream for the reborn worker
+        if let Some(tc) = self.faults.as_mut().and_then(|p| p.next_crash_in(worker)) {
+            self.queue.schedule_in(tc, Ev::Crash { worker });
+        }
+        let released = self.release_gated();
+        SimEvent::Join { time, worker, computing, released }
+    }
+
+    fn process_straggle(&mut self, worker: usize) {
+        if self.departed[worker] {
+            return; // the chain dies with a departed worker
+        }
+        let now = self.queue.now();
+        if let Some(p) = self.faults.as_mut() {
+            let (factor, dur) = p.straggle_window(worker);
+            self.slow_factor[worker] = factor;
+            self.slow_until[worker] = now + dur;
+            self.stats.straggle_events += 1;
+            if let Some(tn) = p.next_straggle_in(worker) {
+                self.queue.schedule_in(tn, Ev::Straggle { worker });
+            }
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::DelayModel;
+    use crate::sim::faults::FaultConfig;
 
     fn sampler(workers: usize, seed: u64) -> DelaySampler {
         DelaySampler::new(DelayModel::Uniform { mean: 1.0, jitter: 0.4 }, workers, seed)
@@ -558,5 +924,381 @@ mod tests {
             assert_eq!(sched.complete(0), vec![0]);
         }
         assert_eq!(sched.clocks(), &[20]);
+    }
+
+    // ---- fault / membership lifecycle -----------------------------------
+
+    /// A fault plan with every stream disabled (useful as an enabled-but-
+    /// inert [faults] section).
+    fn inert_plan(workers: usize) -> FaultPlan {
+        let cfg = FaultConfig {
+            enabled: true,
+            crash_rate: 0.0,
+            straggler_rate: 0.0,
+            late_join: 0,
+            ..FaultConfig::default()
+        };
+        FaultPlan::from_config(&cfg, workers, 1).unwrap()
+    }
+
+    #[test]
+    fn inert_fault_plan_is_bitwise_identical_to_no_plan() {
+        // The PR-3 pin: an installed-but-inert [faults] section must not
+        // perturb a single bit of the schedule.
+        let (workers, seed) = (4usize, 91u64);
+        let mut plain = Scheduler::new(Box::new(FullyAsync), sampler(workers, seed), 0.01);
+        let mut faulty = Scheduler::with_faults(
+            Box::new(FullyAsync),
+            sampler(workers, seed),
+            0.01,
+            CommCosts::default(),
+            Some(inert_plan(workers)),
+        );
+        assert_eq!(plain.start(), faulty.start());
+        for _ in 0..300 {
+            let (ta, wa) = plain.next().unwrap();
+            let (tb, wb) = faulty.next().unwrap();
+            assert_eq!(wa, wb);
+            assert_eq!(ta.to_bits(), tb.to_bits(), "inert plan perturbed the schedule");
+            assert_eq!(plain.complete(wa), faulty.complete(wb));
+        }
+        assert_eq!(faulty.fault_stats(), FaultStats::default());
+    }
+
+    #[test]
+    fn drop_crash_discards_inflight_and_departs() {
+        // single worker, constant 1s computes: crash at t=0.5 mid-compute
+        // with no plan => permanent departure, in-flight finish dropped
+        let delays = DelaySampler::new(DelayModel::Constant { mean: 1.0 }, 1, 3);
+        let mut sched = Scheduler::new(Box::new(FullyAsync), delays, 0.0);
+        sched.inject_crash_at(0.5, 0);
+        sched.start();
+        match sched.next_event().unwrap() {
+            SimEvent::Crash { time, worker, permanent, released } => {
+                assert_eq!((worker, permanent), (0, true));
+                assert!((time - 0.5).abs() < 1e-12);
+                assert!(released.is_empty());
+            }
+            other => panic!("expected crash, got {other:?}"),
+        }
+        assert_eq!(sched.next_event(), None, "dead fleet must end the timeline");
+        assert_eq!(sched.live_workers(), 0);
+        let stats = sched.fault_stats();
+        assert_eq!((stats.crashes, stats.dropped_inflight, stats.departures), (1, 1, 1));
+        assert_eq!(sched.clocks(), &[0], "dropped compute must not advance the clock");
+    }
+
+    #[test]
+    fn injected_join_revives_a_crashed_worker() {
+        let delays = DelaySampler::new(DelayModel::Constant { mean: 1.0 }, 2, 3);
+        let mut sched = Scheduler::new(Box::new(FullyAsync), delays, 0.0);
+        sched.inject_crash_at(0.5, 1);
+        sched.inject_join_at(2.25, 1);
+        sched.start();
+        let mut finishes_w1 = 0;
+        let mut joined_at = f64::NAN;
+        for _ in 0..20 {
+            match sched.next_event().unwrap() {
+                SimEvent::Finish { time, worker } => {
+                    if worker == 1 {
+                        finishes_w1 += 1;
+                        assert!(
+                            time >= 2.25,
+                            "worker 1 finished at {time} before rejoining at 2.25"
+                        );
+                    }
+                    sched.complete(worker);
+                }
+                SimEvent::Crash { worker, .. } => assert_eq!(worker, 1),
+                SimEvent::Join { time, worker, .. } => {
+                    assert_eq!(worker, 1);
+                    joined_at = time;
+                }
+            }
+        }
+        assert!((joined_at - 2.25).abs() < 1e-12);
+        assert!(finishes_w1 > 0, "rejoined worker never computed");
+        assert_eq!(sched.fault_stats().restarts, 1);
+        assert_eq!(sched.live_workers(), 2);
+    }
+
+    #[test]
+    fn barrier_round_survives_a_dead_worker() {
+        // 3 workers under BarrierSync; worker 2 departs mid-run. The
+        // remaining two must keep completing rounds (no wedge).
+        let delays = DelaySampler::new(DelayModel::Constant { mean: 1.0 }, 3, 3);
+        let mut sched = Scheduler::new(Box::new(BarrierSync), delays, 0.0);
+        sched.inject_crash_at(2.5, 2); // mid third-compute... (rounds at t=1,2,3..)
+        sched.start();
+        let mut completes = 0u64;
+        for _ in 0..40 {
+            match sched.next_event() {
+                Some(SimEvent::Finish { worker, .. }) => {
+                    completes += 1;
+                    sched.complete(worker);
+                }
+                Some(SimEvent::Crash { worker, released, .. }) => {
+                    assert_eq!(worker, 2);
+                    // constant delays: at t=2.5 all three were computing
+                    // round 3, so nobody was blocked to release
+                    assert!(released.is_empty());
+                }
+                Some(SimEvent::Join { .. }) => unreachable!("no joins injected"),
+                None => break,
+            }
+        }
+        assert_eq!(sched.live_workers(), 2);
+        // the two survivors keep producing rounds: barrier drift stays <= 1
+        // (the drive may stop mid-round) and clocks run well past the crash
+        assert!(completes > 20, "barrier wedged after the crash: {completes} completes");
+        let (c0, c1) = (sched.clocks()[0], sched.clocks()[1]);
+        assert!(c0.abs_diff(c1) <= 1, "barrier drift broke: {c0} vs {c1}");
+        assert!(c0.min(c1) > 8);
+    }
+
+    #[test]
+    fn ssp_gate_recomputes_over_live_membership() {
+        // 2 workers, worker 1 is 4x slower; s = 1 gates worker 0 hard.
+        // After worker 1 departs, worker 0 must run free (min over live).
+        let model = DelayModel::Heterogeneous { mean: 1.0, speeds: vec![1.0, 4.0], jitter: 0.0 };
+        let delays = DelaySampler::new(model, 2, 3);
+        let mut sched = Scheduler::new(Box::new(StalenessBounded { bound: 1 }), delays, 0.0);
+        sched.inject_crash_at(9.9, 1);
+        sched.start();
+        let mut after_crash = 0u64;
+        let mut crashed = false;
+        for _ in 0..60 {
+            match sched.next_event() {
+                Some(SimEvent::Finish { worker, .. }) => {
+                    if crashed {
+                        assert_eq!(worker, 0, "dead worker produced a finish");
+                        after_crash += 1;
+                    }
+                    sched.complete(worker);
+                }
+                Some(SimEvent::Crash { worker, released, .. }) => {
+                    assert_eq!(worker, 1);
+                    crashed = true;
+                    // if worker 0 was gated on the dead straggler it must be
+                    // released right here
+                    for &v in &released {
+                        assert_eq!(v, 0);
+                    }
+                }
+                Some(SimEvent::Join { .. }) => unreachable!(),
+                None => break,
+            }
+        }
+        assert!(crashed);
+        assert!(after_crash > 20, "survivor stayed gated on a dead straggler: {after_crash}");
+    }
+
+    #[test]
+    fn salvage_policy_delivers_inflight_then_kills() {
+        // Salvage needs a plan (policy lives there): crash_rate high enough
+        // to fire during the first 1s compute of a single worker.
+        let cfg = FaultConfig {
+            enabled: true,
+            crash_rate: 2.0, // mean time-to-crash 0.5s
+            departure_prob: 1.0,
+            straggler_rate: 0.0,
+            policy: CrashPolicy::Salvage,
+            ..FaultConfig::default()
+        };
+        let plan = FaultPlan::from_config(&cfg, 1, 5).unwrap();
+        let delays = DelaySampler::new(DelayModel::Constant { mean: 1.0 }, 1, 3);
+        let mut sched = Scheduler::with_faults(
+            Box::new(FullyAsync),
+            delays,
+            0.0,
+            CommCosts::default(),
+            Some(plan),
+        );
+        sched.start();
+        // drive until the (salvaged) departure; the crash may land mid-
+        // compute (salvage) or between computes; retry over events
+        let mut salvage_seen = false;
+        for _ in 0..200 {
+            match sched.next_event() {
+                Some(SimEvent::Finish { worker, .. }) => {
+                    sched.complete(worker);
+                }
+                Some(SimEvent::Crash { .. }) => {}
+                Some(SimEvent::Join { .. }) => unreachable!("departure_prob = 1"),
+                None => {
+                    salvage_seen = sched.fault_stats().salvaged_inflight > 0
+                        || sched.fault_stats().crashes > 0;
+                    break;
+                }
+            }
+        }
+        assert!(salvage_seen, "no crash ever fired");
+        let stats = sched.fault_stats();
+        assert_eq!(stats.dropped_inflight, 0, "salvage policy must never drop in-flight work");
+        assert_eq!(stats.departures, 1);
+        if stats.salvaged_inflight > 0 {
+            // the salvaged compute advanced the clock before death
+            assert!(sched.clocks()[0] > 0);
+        }
+    }
+
+    #[test]
+    fn late_joiners_start_dead_and_join_on_time() {
+        let cfg = FaultConfig {
+            enabled: true,
+            crash_rate: 0.0,
+            straggler_rate: 0.0,
+            late_join: 1,
+            late_join_by: 3.0,
+            ..FaultConfig::default()
+        };
+        let plan = FaultPlan::from_config(&cfg, 3, 11).unwrap();
+        let join_t = plan.join_time(2).unwrap();
+        let delays = DelaySampler::new(DelayModel::Constant { mean: 1.0 }, 3, 3);
+        let mut sched = Scheduler::with_faults(
+            Box::new(FullyAsync),
+            delays,
+            0.0,
+            CommCosts::default(),
+            Some(plan),
+        );
+        assert_eq!(sched.start(), vec![0, 1], "late joiner must not pull at t = 0");
+        assert_eq!(sched.live_workers(), 2);
+        let mut joined = false;
+        for _ in 0..30 {
+            match sched.next_event().unwrap() {
+                SimEvent::Finish { time, worker } => {
+                    if worker == 2 {
+                        assert!(joined, "joiner finished before joining");
+                        assert!(time > join_t);
+                    }
+                    sched.complete(worker);
+                }
+                SimEvent::Join { time, worker, .. } => {
+                    assert_eq!(worker, 2);
+                    assert!((time - join_t).abs() < 1e-12);
+                    joined = true;
+                }
+                SimEvent::Crash { .. } => unreachable!("crash rate 0"),
+            }
+        }
+        assert!(joined);
+        assert_eq!(sched.live_workers(), 3);
+        assert_eq!(sched.fault_stats().late_joins, 1);
+    }
+
+    #[test]
+    fn straggle_windows_stretch_compute_times() {
+        // one worker, constant 1s computes, a straggle stream that opens
+        // long 8x windows almost immediately: mean turnaround must exceed
+        // the fault-free 1s by a wide margin
+        let cfg = FaultConfig {
+            enabled: true,
+            crash_rate: 0.0,
+            straggler_rate: 1.0,
+            straggler_factor: 8.0,
+            straggler_duration: 50.0,
+            ..FaultConfig::default()
+        };
+        let plan = FaultPlan::from_config(&cfg, 1, 13).unwrap();
+        let delays = DelaySampler::new(DelayModel::Constant { mean: 1.0 }, 1, 3);
+        let mut sched = Scheduler::with_faults(
+            Box::new(FullyAsync),
+            delays,
+            0.0,
+            CommCosts::default(),
+            Some(plan),
+        );
+        sched.start();
+        let mut last = 0.0;
+        for _ in 0..30 {
+            let (t, w) = sched.next().unwrap();
+            last = t;
+            sched.complete(w);
+        }
+        assert!(sched.fault_stats().straggle_events > 0);
+        assert!(
+            last > 30.0 * 1.5,
+            "30 slowed computes took only {last}s — straggle window inert"
+        );
+    }
+
+    #[test]
+    fn rejoining_ahead_of_the_fleet_waits_for_the_gate() {
+        // Regression: worker 0 finishes barrier round 1 (blocked, its
+        // contribution buffered), crashes while blocked, and rejoins while
+        // the slow worker 2 is still computing round 1. Its clock must NOT
+        // regress to the live minimum — that would make it recompute and
+        // double-contribute to the open round — so it re-enters through
+        // the gate and is released with everyone at the round boundary.
+        let model =
+            DelayModel::Heterogeneous { mean: 1.0, speeds: vec![1.0, 1.0, 3.0], jitter: 0.0 };
+        let delays = DelaySampler::new(model, 3, 3);
+        let mut sched = Scheduler::new(Box::new(BarrierSync), delays, 0.0);
+        sched.inject_crash_at(1.5, 0); // blocked since t=1, contribution buffered
+        sched.inject_join_at(2.0, 0); // rejoins while worker 2 computes until t=3
+        sched.start();
+        let mut filled = vec![false; 3];
+        let mut folds = 0u64;
+        for _ in 0..40 {
+            match sched.next_event() {
+                Some(SimEvent::Finish { worker, .. }) => {
+                    assert!(
+                        !filled[worker],
+                        "worker {worker} contributed twice to one barrier round"
+                    );
+                    filled[worker] = true;
+                    sched.complete(worker);
+                }
+                Some(SimEvent::Crash { .. }) => {}
+                Some(SimEvent::Join { worker, computing, .. }) => {
+                    assert_eq!(worker, 0);
+                    assert!(
+                        !computing,
+                        "ahead-of-fleet rejoiner must wait for the gate, not recompute"
+                    );
+                    assert_eq!(sched.clocks()[0], 1, "rejoiner's clock regressed");
+                }
+                None => break,
+            }
+            // settle the round exactly like the driver does
+            if filled.iter().any(|&f| f)
+                && (0..3).all(|v| !sched.is_live(v) || filled[v])
+            {
+                filled.fill(false);
+                folds += 1;
+            }
+        }
+        assert!(folds >= 5, "barrier wedged after an ahead-of-fleet rejoin: {folds} folds");
+        assert_eq!(sched.fault_stats().restarts, 1);
+        assert_eq!(sched.live_workers(), 3);
+    }
+
+    #[test]
+    fn rejoiner_adopts_the_slowest_live_clock() {
+        let delays = DelaySampler::new(DelayModel::Constant { mean: 1.0 }, 3, 3);
+        let mut sched = Scheduler::new(Box::new(FullyAsync), delays, 0.0);
+        sched.inject_crash_at(0.5, 2);
+        sched.inject_join_at(10.5, 2);
+        sched.start();
+        loop {
+            match sched.next_event().unwrap() {
+                SimEvent::Finish { worker, .. } => {
+                    sched.complete(worker);
+                }
+                SimEvent::Crash { .. } => {}
+                SimEvent::Join { worker, .. } => {
+                    assert_eq!(worker, 2);
+                    break;
+                }
+            }
+        }
+        let min_live = sched.clocks()[0].min(sched.clocks()[1]);
+        assert_eq!(
+            sched.clocks()[2],
+            min_live,
+            "joiner must adopt the slowest live clock, got {:?}",
+            sched.clocks()
+        );
     }
 }

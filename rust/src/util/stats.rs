@@ -168,4 +168,99 @@ mod tests {
         assert!((a - 3.0).abs() < 1e-9);
         assert!((b - 2.0).abs() < 1e-9);
     }
+
+    // -- edge cases: these helpers back the bench harness and the chaos
+    // metrics, so their corner behaviour must be pinned ------------------
+
+    #[test]
+    fn running_empty_and_single_sample() {
+        let r = Running::new();
+        assert_eq!(r.count(), 0);
+        assert_eq!(r.mean(), 0.0);
+        assert_eq!(r.var(), 0.0);
+        assert_eq!(r.min(), f64::INFINITY);
+        assert_eq!(r.max(), f64::NEG_INFINITY);
+        let mut r = Running::new();
+        r.push(4.2);
+        assert_eq!(r.count(), 1);
+        assert_eq!(r.mean(), 4.2);
+        assert_eq!(r.var(), 0.0, "n < 2 must report zero variance, not NaN");
+        assert_eq!((r.min(), r.max()), (4.2, 4.2));
+    }
+
+    #[test]
+    fn running_handles_constant_streams_without_negative_variance() {
+        let mut r = Running::new();
+        for _ in 0..1000 {
+            r.push(0.1 + 0.2); // deliberately non-representable sum
+        }
+        assert!(r.var() >= 0.0, "catastrophic cancellation produced var {}", r.var());
+        assert!(r.std() >= 0.0);
+    }
+
+    #[test]
+    fn percentile_single_element_and_exact_ranks() {
+        assert_eq!(percentile(&[7.5], 0.0), 7.5);
+        assert_eq!(percentile(&[7.5], 50.0), 7.5);
+        assert_eq!(percentile(&[7.5], 100.0), 7.5);
+        // two elements: p50 interpolates the midpoint exactly
+        assert_eq!(percentile(&[1.0, 3.0], 50.0), 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_rejects_empty_samples() {
+        let _ = percentile(&[], 50.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_rejects_out_of_range_p() {
+        let _ = percentile(&[1.0], 101.0);
+    }
+
+    #[test]
+    fn mean_of_empty_is_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+    }
+
+    #[test]
+    fn ema_alpha_extremes() {
+        // alpha = 0: after the first sample the value never moves
+        let mut e = Ema::new(0.0);
+        assert_eq!(e.push(5.0), 5.0);
+        assert_eq!(e.push(100.0), 5.0);
+        assert_eq!(e.get(), Some(5.0));
+        // alpha = 1: tracks the latest sample exactly
+        let mut e = Ema::new(1.0);
+        e.push(5.0);
+        assert_eq!(e.push(-3.0), -3.0);
+        // fresh smoother reports nothing
+        assert_eq!(Ema::new(0.5).get(), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ema_rejects_alpha_above_one() {
+        let _ = Ema::new(1.5);
+    }
+
+    #[test]
+    fn linreg_degenerate_inputs() {
+        // vertical stack (all x equal): slope defined as 0, intercept = mean y
+        let (a, b) = linreg(&[2.0, 2.0, 2.0], &[1.0, 2.0, 3.0]);
+        assert_eq!(b, 0.0);
+        assert!((a - 2.0).abs() < 1e-12);
+        // two points: exact fit
+        let (a, b) = linreg(&[0.0, 1.0], &[1.0, 3.0]);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!((b - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn linreg_rejects_single_point() {
+        let _ = linreg(&[1.0], &[1.0]);
+    }
 }

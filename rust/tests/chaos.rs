@@ -1,0 +1,536 @@
+//! Deterministic chaos harness: hundreds of seeded random fault plans
+//! driven through the event-driven scheduler (and a real parameter server),
+//! with structural invariants asserted on every one.
+//!
+//! Pure-rust — no compiled artifacts needed — so it runs everywhere
+//! `cargo test` runs. Seed count scales with the `CHAOS_SEEDS` env var
+//! (default 120, split across the suites below; the scheduled CI slow job
+//! sets 500).
+//!
+//! Invariants (per ISSUE: the "arbitrary delays" regime of Mishchenko et
+//! al. / Zhou et al., where crashes and churn are what actually produce
+//! large delays):
+//!
+//! * the virtual clock is monotone non-decreasing across ALL events;
+//! * no finish is ever delivered from a crashed epoch (Drop policy), and
+//!   Salvage delivers exactly the one in-flight compute before death;
+//! * the SSP clock gate holds over the *live* membership at every event
+//!   (`max - min <= s + 1` among live workers);
+//! * barrier rounds always complete over the live fleet (no wedge): a
+//!   release implies a fold, nobody contributes twice per round;
+//! * per-shard version counters equal applied pushes exactly (every dense
+//!   push bumps every shard), and the PS global version matches;
+//! * the timeline only ends when the whole fleet has permanently departed;
+//! * fault counters are mutually consistent (restarts + departures never
+//!   exceed crashes; policy Drop never salvages; policy Salvage never
+//!   drops; late joins bounded by the config);
+//! * identical seeds reproduce identical event streams bitwise, and a
+//!   zero-rate (inert) plan reproduces the fault-free schedule bitwise —
+//!   the "faults off == PR-3 behaviour" pin.
+
+use dc_asgd::config::{Algorithm, DelayModel};
+use dc_asgd::ps::{Hyper, NativeKernel, ParamServer};
+use dc_asgd::sim::{
+    BarrierSync, CommCosts, CrashPolicy, DelaySampler, FaultConfig, FaultPlan, FullyAsync,
+    Protocol, Scheduler, SimEvent, StalenessBounded,
+};
+use dc_asgd::util::rng::Pcg64;
+
+/// Total seeded fault plans across the suites (env-scalable for CI).
+fn total_seeds() -> u64 {
+    std::env::var("CHAOS_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(120)
+}
+
+/// Sample a random fault config from a seeded stream.
+fn random_fault_config(rng: &mut Pcg64, workers: usize) -> FaultConfig {
+    FaultConfig {
+        enabled: true,
+        crash_rate: rng.uniform(0.02, 0.25),
+        restart_mean: rng.uniform(0.5, 4.0),
+        departure_prob: rng.uniform(0.0, 0.3),
+        straggler_rate: rng.uniform(0.0, 0.08),
+        straggler_factor: rng.uniform(1.5, 6.0),
+        straggler_duration: rng.uniform(1.0, 8.0),
+        late_join: (rng.below(workers as u64) as usize).min(2),
+        late_join_by: rng.uniform(1.0, 8.0),
+        policy: if rng.below(2) == 0 { CrashPolicy::Drop } else { CrashPolicy::Salvage },
+        seed: 0,
+    }
+}
+
+fn random_delay_model(rng: &mut Pcg64) -> DelayModel {
+    match rng.below(3) {
+        0 => DelayModel::Uniform { mean: 1.0, jitter: 0.4 },
+        1 => DelayModel::Exponential { mean: 1.0 },
+        _ => DelayModel::Pareto { scale: 0.7, alpha: 2.2 },
+    }
+}
+
+/// Mirror of what the driver believes about each worker, maintained purely
+/// from the event stream — any disagreement with the scheduler is a bug.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Mirror {
+    Computing,
+    Idle,
+    Down,
+    /// Salvage drain: crashed mid-compute, exactly one more finish allowed.
+    Draining,
+}
+
+/// One immediate-commit chaos case: random protocol (async or SSP), random
+/// delay model, random fault plan, driven against a REAL parameter server.
+fn immediate_case(seed: u64) {
+    let mut rng = Pcg64::new(seed);
+    let m = 2 + rng.below(7) as usize; // 2..=8 workers
+    let s = rng.below(5); // SSP bound 0..=4
+    let use_ssp = rng.below(2) == 1;
+    let protocol: Box<dyn Protocol> = if use_ssp {
+        Box::new(StalenessBounded { bound: s })
+    } else {
+        Box::new(FullyAsync)
+    };
+    let fcfg = random_fault_config(&mut rng, m);
+    let policy = fcfg.policy;
+    let plan = FaultPlan::from_config(&fcfg, m, seed).unwrap();
+    let delays = DelaySampler::new(random_delay_model(&mut rng), m, seed ^ 0x77);
+    let mut sched =
+        Scheduler::with_faults(protocol, delays, 0.01, CommCosts::default(), Some(plan));
+
+    // real PS: 3 shards, so the shard-version == pushes invariant is
+    // non-trivial (every dense push must bump every shard exactly once)
+    let n = 48;
+    let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.1).sin()).collect();
+    let hyper = Hyper { lambda0: 0.5, ms_momentum: 0.9, momentum: 0.0, eps: 1e-7 };
+    let algo = if rng.below(2) == 0 { Algorithm::Asgd } else { Algorithm::DcAsgdConst };
+    let ps = ParamServer::new(&init, m, 3, algo, hyper, Box::new(NativeKernel)).unwrap();
+    let g: Vec<f32> = (0..n).map(|i| ((i * 7 + 3) as f32 * 0.01).cos() * 0.1).collect();
+    let mut buf = vec![0.0f32; n];
+
+    let mut mirror = vec![Mirror::Down; m];
+    for w in sched.start() {
+        ps.pull(w, &mut buf);
+        mirror[w] = Mirror::Computing;
+    }
+
+    let mut last_t = 0.0f64;
+    let mut pushes = 0u64;
+    let mut events = 0usize;
+    let mut finishes = 0usize;
+    let mut ended_dead = false;
+    while events < 4000 && finishes < 350 {
+        events += 1;
+        match sched.next_event() {
+            None => {
+                assert_eq!(
+                    sched.live_workers(),
+                    0,
+                    "seed {seed}: timeline ended with live workers"
+                );
+                ended_dead = true;
+                break;
+            }
+            Some(SimEvent::Finish { time, worker }) => {
+                assert!(time >= last_t, "seed {seed}: clock regressed {last_t} -> {time}");
+                last_t = time;
+                assert!(
+                    matches!(mirror[worker], Mirror::Computing | Mirror::Draining),
+                    "seed {seed}: finish delivered from a crashed epoch (worker {worker}, \
+                     state {:?})",
+                    mirror[worker]
+                );
+                let was_draining = mirror[worker] == Mirror::Draining;
+                let out = ps.push(worker, &g, 0.05);
+                pushes += 1;
+                assert_eq!(out.version, pushes, "seed {seed}: version fell out of step");
+                mirror[worker] = Mirror::Idle;
+                for v in sched.complete(worker) {
+                    assert_eq!(
+                        mirror[v],
+                        Mirror::Idle,
+                        "seed {seed}: released worker {v} was not idle"
+                    );
+                    ps.pull(v, &mut buf);
+                    mirror[v] = Mirror::Computing;
+                }
+                if was_draining {
+                    // the salvaged push was the worker's last act
+                    mirror[worker] = Mirror::Down;
+                }
+                finishes += 1;
+            }
+            Some(SimEvent::Crash { time, worker, released, .. }) => {
+                assert!(time >= last_t, "seed {seed}: clock regressed at crash");
+                last_t = time;
+                match (mirror[worker], policy) {
+                    (Mirror::Computing, CrashPolicy::Salvage) => {
+                        mirror[worker] = Mirror::Draining;
+                    }
+                    (Mirror::Computing, CrashPolicy::Drop) | (Mirror::Idle, _) => {
+                        mirror[worker] = Mirror::Down;
+                    }
+                    (state, _) => {
+                        panic!("seed {seed}: crash hit non-live worker {worker} ({state:?})")
+                    }
+                }
+                for v in released {
+                    assert_eq!(mirror[v], Mirror::Idle, "seed {seed}: bad crash release");
+                    ps.pull(v, &mut buf);
+                    mirror[v] = Mirror::Computing;
+                }
+            }
+            Some(SimEvent::Join { time, worker, computing, released }) => {
+                assert!(time >= last_t, "seed {seed}: clock regressed at join");
+                last_t = time;
+                assert_eq!(
+                    mirror[worker],
+                    Mirror::Down,
+                    "seed {seed}: join for a live worker {worker}"
+                );
+                // what the driver does on a rejoin: refresh w_bak, and pull
+                // only if the joiner started computing. A joiner that died
+                // ahead of the fleet re-enters through the gate
+                // (computing = false) and is pulled via a later released
+                // list instead.
+                ps.reset_worker(worker);
+                if computing {
+                    ps.pull(worker, &mut buf);
+                }
+                mirror[worker] = if computing { Mirror::Computing } else { Mirror::Idle };
+                for v in released {
+                    assert_eq!(mirror[v], Mirror::Idle, "seed {seed}: bad join release");
+                    ps.pull(v, &mut buf);
+                    mirror[v] = Mirror::Computing;
+                }
+            }
+        }
+        if use_ssp {
+            // the staleness gate must hold over the LIVE membership only
+            let live: Vec<u64> =
+                (0..m).filter(|&v| sched.is_live(v)).map(|v| sched.clocks()[v]).collect();
+            if let (Some(&max), Some(&min)) = (live.iter().max(), live.iter().min()) {
+                assert!(
+                    max - min <= s + 1,
+                    "seed {seed}: live clock drift {} > s+1={}",
+                    max - min,
+                    s + 1
+                );
+            }
+        }
+    }
+
+    // per-shard version counters == applied pushes (dense pushes touch
+    // every shard exactly once), and the global version agrees
+    for i in 0..ps.store().num_shards() {
+        assert_eq!(
+            ps.store().shard_version(i),
+            pushes,
+            "seed {seed}: shard {i} version drifted from applied pushes"
+        );
+    }
+    assert_eq!(ps.version(), pushes);
+
+    // counter consistency
+    let st = sched.fault_stats();
+    assert!(
+        st.restarts + st.departures <= st.crashes,
+        "seed {seed}: {} restarts + {} departures > {} crashes",
+        st.restarts,
+        st.departures,
+        st.crashes
+    );
+    assert!(st.late_joins <= fcfg.late_join as u64, "seed {seed}: late-join overcount");
+    assert!(st.dropped_inflight <= st.crashes, "seed {seed}: drop overcount");
+    assert!(st.salvaged_inflight <= st.crashes, "seed {seed}: salvage overcount");
+    match policy {
+        CrashPolicy::Drop => assert_eq!(
+            st.salvaged_inflight, 0,
+            "seed {seed}: Drop policy salvaged in-flight work"
+        ),
+        CrashPolicy::Salvage => assert_eq!(
+            st.dropped_inflight, 0,
+            "seed {seed}: Salvage policy dropped in-flight work"
+        ),
+    }
+    if ended_dead {
+        assert_eq!(
+            st.departures as usize, m,
+            "seed {seed}: timeline ended but not every worker departed"
+        );
+    }
+}
+
+/// One barrier chaos case: SSGD-style rounds over an elastic fleet. Purely
+/// structural (the driver's fold bookkeeping is emulated): rounds must
+/// complete over the live membership, nobody contributes twice, and every
+/// barrier release coincides with a completed round.
+fn barrier_case(seed: u64) {
+    let mut rng = Pcg64::new(seed);
+    let m = 2 + rng.below(5) as usize; // 2..=6 workers
+    let fcfg = random_fault_config(&mut rng, m);
+    let plan = FaultPlan::from_config(&fcfg, m, seed).unwrap();
+    let delays = DelaySampler::new(random_delay_model(&mut rng), m, seed ^ 0x3A);
+    let mut sched = Scheduler::with_faults(
+        Box::new(BarrierSync),
+        delays,
+        0.0,
+        CommCosts::default(),
+        Some(plan),
+    );
+
+    let mut filled = vec![false; m];
+    let mut folds = 0u64;
+    let mut contributions = 0u64;
+    let mut finishes = 0u64;
+    let mut last_t = 0.0f64;
+    sched.start();
+
+    // the driver's completeness rule: fold when at least one slot is
+    // filled and no live worker is missing
+    let fold_if_complete = |sched: &Scheduler, filled: &mut Vec<bool>| -> Option<u64> {
+        let contributors = filled.iter().filter(|&&f| f).count() as u64;
+        if contributors == 0 {
+            return None;
+        }
+        if (0..filled.len()).any(|v| sched.is_live(v) && !filled[v]) {
+            return None;
+        }
+        filled.fill(false);
+        Some(contributors)
+    };
+
+    let mut events = 0usize;
+    while events < 4000 && finishes < 240 {
+        events += 1;
+        match sched.next_event() {
+            None => {
+                assert_eq!(sched.live_workers(), 0, "seed {seed}: wedged with live workers");
+                break;
+            }
+            Some(SimEvent::Finish { time, worker }) => {
+                assert!(time >= last_t, "seed {seed}: clock regressed");
+                last_t = time;
+                assert!(
+                    !filled[worker],
+                    "seed {seed}: worker {worker} contributed twice in one round"
+                );
+                filled[worker] = true;
+                finishes += 1;
+                let released = sched.complete(worker);
+                let folded = fold_if_complete(&sched, &mut filled);
+                if let Some(k) = folded {
+                    folds += 1;
+                    contributions += k;
+                }
+                // a barrier release can only happen when the round is done
+                assert!(
+                    released.is_empty() || folded.is_some(),
+                    "seed {seed}: barrier released workers mid-round"
+                );
+            }
+            Some(SimEvent::Crash { time, released, .. }) => {
+                assert!(time >= last_t, "seed {seed}: clock regressed at crash");
+                last_t = time;
+                // membership shrank: the round may have just completed
+                let folded = fold_if_complete(&sched, &mut filled);
+                if let Some(k) = folded {
+                    folds += 1;
+                    contributions += k;
+                }
+                assert!(
+                    released.is_empty() || folded.is_some(),
+                    "seed {seed}: crash released workers without completing the round"
+                );
+            }
+            Some(SimEvent::Join { time, .. }) => {
+                assert!(time >= last_t, "seed {seed}: clock regressed at join");
+                last_t = time;
+                // the joiner enters the CURRENT round as a live, unfilled
+                // worker: the next fold must wait for it (checked
+                // implicitly by fold_if_complete's live scan)
+            }
+        }
+        // barrier drift invariant over live workers: never more than one
+        // round apart
+        let live: Vec<u64> =
+            (0..m).filter(|&v| sched.is_live(v)).map(|v| sched.clocks()[v]).collect();
+        if let (Some(&max), Some(&min)) = (live.iter().max(), live.iter().min()) {
+            assert!(max - min <= 1, "seed {seed}: barrier drift {} > 1", max - min);
+        }
+    }
+    // every finish either folded into a round or still sits in the current
+    // (incomplete) round's slots — nothing lost, nothing double-counted
+    let leftover = filled.iter().filter(|&&f| f).count() as u64;
+    assert_eq!(
+        contributions + leftover,
+        finishes,
+        "seed {seed}: {contributions} folded + {leftover} pending != {finishes} finishes \
+         (a contribution was lost or double-folded)"
+    );
+    if finishes >= m as u64 {
+        assert!(folds > 0, "seed {seed}: {finishes} finishes but no round ever folded");
+    }
+}
+
+#[test]
+fn chaos_immediate_protocols_hold_invariants() {
+    let cases = (total_seeds() / 2).max(1);
+    for case in 0..cases {
+        immediate_case(0xC4A0_5000 + case);
+    }
+}
+
+#[test]
+fn chaos_barrier_rounds_complete_over_live_membership() {
+    let cases = (total_seeds() / 4).max(1);
+    for case in 0..cases {
+        barrier_case(0xBA_6000 + case);
+    }
+}
+
+/// Identical seeds must reproduce identical event streams bitwise — the
+/// whole point of a *deterministic* chaos harness (a flaky fault timeline
+/// would make every failure unreproducible).
+#[test]
+fn chaos_event_streams_are_seed_deterministic() {
+    let cases = (total_seeds() / 4).max(1);
+    for case in 0..cases {
+        let seed = 0xDE_7E00 + case;
+        let trace = |seed: u64| -> Vec<(u64, u8, usize)> {
+            let mut rng = Pcg64::new(seed);
+            let m = 2 + rng.below(5) as usize;
+            let proto: Box<dyn Protocol> = match rng.below(3) {
+                0 => Box::new(FullyAsync),
+                1 => Box::new(StalenessBounded { bound: rng.below(4) }),
+                _ => Box::new(BarrierSync),
+            };
+            let fcfg = random_fault_config(&mut rng, m);
+            let plan = FaultPlan::from_config(&fcfg, m, seed).unwrap();
+            let delays = DelaySampler::new(random_delay_model(&mut rng), m, seed ^ 0x55);
+            let mut sched =
+                Scheduler::with_faults(proto, delays, 0.01, CommCosts::default(), Some(plan));
+            sched.start();
+            let mut out = Vec::new();
+            for _ in 0..600 {
+                match sched.next_event() {
+                    None => break,
+                    Some(SimEvent::Finish { time, worker }) => {
+                        out.push((time.to_bits(), 0u8, worker));
+                        sched.complete(worker);
+                    }
+                    Some(SimEvent::Crash { time, worker, .. }) => {
+                        out.push((time.to_bits(), 1u8, worker));
+                    }
+                    Some(SimEvent::Join { time, worker, .. }) => {
+                        out.push((time.to_bits(), 2u8, worker));
+                    }
+                }
+            }
+            out
+        };
+        let a = trace(seed);
+        let b = trace(seed);
+        assert_eq!(a, b, "seed {seed}: chaos replay diverged");
+        assert!(!a.is_empty());
+    }
+}
+
+/// The PR-3 pin: with `[faults]` absent — or present but inert (all rates
+/// zero) — every protocol's schedule is bit-identical to a scheduler built
+/// with no fault plan at all. Fault support must cost nothing when off.
+#[test]
+fn faults_off_schedule_is_bitwise_identical_to_pre_fault_builds() {
+    let inert = |m: usize| {
+        let cfg = FaultConfig {
+            enabled: true,
+            crash_rate: 0.0,
+            straggler_rate: 0.0,
+            late_join: 0,
+            ..FaultConfig::default()
+        };
+        FaultPlan::from_config(&cfg, m, 1).unwrap()
+    };
+    for proto_id in 0..3 {
+        let (m, seed) = (4usize, 0xB17_0000 + proto_id as u64);
+        let mk_proto = |id: usize| -> Box<dyn Protocol> {
+            match id {
+                0 => Box::new(FullyAsync),
+                1 => Box::new(StalenessBounded { bound: 1 }),
+                _ => Box::new(BarrierSync),
+            }
+        };
+        let delays =
+            |seed: u64| DelaySampler::new(DelayModel::Uniform { mean: 1.0, jitter: 0.4 }, m, seed);
+        let mut plain = Scheduler::new(mk_proto(proto_id), delays(seed), 0.01);
+        let mut faulty = Scheduler::with_faults(
+            mk_proto(proto_id),
+            delays(seed),
+            0.01,
+            CommCosts::default(),
+            Some(inert(m)),
+        );
+        assert_eq!(plain.start(), faulty.start());
+        for step in 0..400 {
+            let (ta, wa) = plain.next().expect("plain ran dry");
+            // drive the faulty one through next_event to pin the richer API
+            let (tb, wb) = match faulty.next_event().expect("faulty ran dry") {
+                SimEvent::Finish { time, worker } => (time, worker),
+                other => panic!("inert plan produced a fault event: {other:?}"),
+            };
+            assert_eq!(wa, wb, "worker diverged at step {step}");
+            assert_eq!(
+                ta.to_bits(),
+                tb.to_bits(),
+                "schedule diverged at step {step} (protocol {proto_id})"
+            );
+            assert_eq!(plain.complete(wa), faulty.complete(wb));
+        }
+        assert_eq!(plain.comm_bytes_total(), faulty.comm_bytes_total());
+        assert_eq!(plain.wait_totals(), faulty.wait_totals());
+        assert_eq!(faulty.fault_stats(), dc_asgd::sim::FaultStats::default());
+    }
+}
+
+/// Scripted churn through the public injection hooks: a crash mid-round
+/// under every protocol, with the driver-side bookkeeping emulated — the
+/// precise, non-random counterpart to the randomized suites above.
+#[test]
+fn scripted_crash_and_rejoin_preserve_protocol_semantics() {
+    // SSP s=0 (round-structured): crash one of three workers, rejoin later;
+    // the round structure must continue over 2, then again over 3 workers.
+    let delays = DelaySampler::new(DelayModel::Constant { mean: 1.0 }, 3, 9);
+    let mut sched =
+        Scheduler::new(Box::new(StalenessBounded { bound: 0 }), delays, 0.0);
+    sched.inject_crash_at(2.5, 0);
+    sched.inject_join_at(6.5, 0);
+    sched.start();
+    let mut finishes_by_epoch = [0u64; 3]; // before crash / down / after join
+    for _ in 0..40 {
+        match sched.next_event() {
+            Some(SimEvent::Finish { time, worker }) => {
+                let phase = if time < 2.5 {
+                    0
+                } else if time < 6.5 {
+                    1
+                } else {
+                    2
+                };
+                if phase == 1 {
+                    assert_ne!(worker, 0, "dead worker computed while down");
+                }
+                finishes_by_epoch[phase] += 1;
+                sched.complete(worker);
+            }
+            Some(SimEvent::Crash { worker, .. }) => assert_eq!(worker, 0),
+            Some(SimEvent::Join { worker, .. }) => assert_eq!(worker, 0),
+            None => break,
+        }
+    }
+    assert!(finishes_by_epoch[0] > 0);
+    assert!(finishes_by_epoch[1] > 0, "survivors stalled while worker 0 was down");
+    assert!(finishes_by_epoch[2] > 0, "fleet stalled after worker 0 rejoined");
+    // rejoiner is live again and inside the s=0 drift band
+    assert_eq!(sched.live_workers(), 3);
+    let clocks = sched.clocks();
+    let (min, max) = (clocks.iter().min().unwrap(), clocks.iter().max().unwrap());
+    assert!(max - min <= 1, "post-rejoin drift {} under s=0", max - min);
+}

@@ -379,6 +379,129 @@ fn compression_reduces_bytes_and_wallclock_and_still_converges() {
 }
 
 #[test]
+fn protocol_matrix_is_deterministic_bitwise() {
+    // Run EVERY algorithm in the protocol matrix twice on the same seed and
+    // assert bit-identical loss trajectories AND schedules. The per-feature
+    // pins (comm off, compress none, ssp endpoints) each cover one slice;
+    // this catches nondeterminism regressions anywhere in the matrix —
+    // including an accidental RNG-draw reorder that would shift every
+    // stream downstream of it.
+    let _dir = require_artifacts!();
+    for algo in [
+        Algorithm::SequentialSgd,
+        Algorithm::SyncSgd,
+        Algorithm::DcSyncSgd,
+        Algorithm::Asgd,
+        Algorithm::DcAsgdConst,
+        Algorithm::DcAsgdAdaptive,
+        Algorithm::Ssp,
+        Algorithm::DcS3gd,
+    ] {
+        let mk = || {
+            let mut cfg = tiny_cfg();
+            cfg.algorithm = algo;
+            cfg.workers = if algo == Algorithm::SequentialSgd { 1 } else { 4 };
+            cfg.staleness_bound = 2;
+            Trainer::new(cfg).unwrap().run_logged().unwrap()
+        };
+        let (r1, log1) = mk();
+        let (r2, log2) = mk();
+        assert_eq!(r1.total_steps, r2.total_steps, "{algo:?}");
+        assert_eq!(r1.total_time.to_bits(), r2.total_time.to_bits(), "{algo:?}");
+        assert_eq!(log1.steps.len(), log2.steps.len(), "{algo:?}");
+        for (a, b) in log1.steps.iter().zip(&log2.steps) {
+            assert_eq!(
+                (a.step, a.worker, a.staleness),
+                (b.step, b.worker, b.staleness),
+                "{algo:?}: schedule diverged at step {}",
+                a.step
+            );
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{algo:?} loss at {}", a.step);
+            assert_eq!(a.time.to_bits(), b.time.to_bits(), "{algo:?} time at {}", a.step);
+            assert_eq!(a.wait.to_bits(), b.wait.to_bits(), "{algo:?} wait at {}", a.step);
+        }
+        assert_eq!(log1.evals.len(), log2.evals.len(), "{algo:?}");
+        for (a, b) in log1.evals.iter().zip(&log2.evals) {
+            assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "{algo:?} eval");
+        }
+    }
+}
+
+#[test]
+fn fault_injection_trains_through_churn_and_stays_deterministic() {
+    // End-to-end churn: crashes + restarts + a straggler stream under both
+    // an immediate protocol (dc-asgd-a) and the barrier (ssgd). The run
+    // must stay finite, actually experience churn, and reproduce itself
+    // bit-for-bit on the same seed (chaos must be deterministic).
+    let _dir = require_artifacts!();
+    for algo in [Algorithm::DcAsgdAdaptive, Algorithm::SyncSgd, Algorithm::Ssp] {
+        let mk = || {
+            let mut cfg = tiny_cfg();
+            cfg.algorithm = algo;
+            cfg.workers = 4;
+            cfg.epochs = 3;
+            cfg.staleness_bound = 3;
+            cfg.faults.enabled = true;
+            cfg.faults.crash_rate = 0.15;
+            cfg.faults.restart_mean = 2.0;
+            cfg.faults.departure_prob = 0.0; // keep the fleet size stable
+            cfg.faults.straggler_rate = 0.02;
+            cfg.faults.straggler_factor = 3.0;
+            cfg.faults.straggler_duration = 3.0;
+            Trainer::new(cfg).unwrap().run_logged().unwrap()
+        };
+        let (r1, log1) = mk();
+        assert!(r1.final_train_loss.is_finite(), "{algo:?} diverged under churn");
+        assert!(
+            r1.faults.crashes > 0,
+            "{algo:?}: no crash ever fired (rate 0.15 over ~{} sim-seconds)",
+            r1.total_time
+        );
+        assert_eq!(r1.faults.departures, 0);
+        // every crash either restarted already or its rejoin was still
+        // pending when the run ended
+        assert!(r1.faults.restarts <= r1.faults.crashes);
+        let (r2, log2) = mk();
+        assert_eq!(r1.total_steps, r2.total_steps, "{algo:?}");
+        assert_eq!(r1.faults, r2.faults, "{algo:?}: fault timeline not deterministic");
+        assert_eq!(log1.steps.len(), log2.steps.len());
+        for (a, b) in log1.steps.iter().zip(&log2.steps) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{algo:?} churn loss diverged");
+            assert_eq!(a.time.to_bits(), b.time.to_bits(), "{algo:?} churn schedule diverged");
+        }
+    }
+}
+
+#[test]
+fn faults_off_is_bit_identical_to_default_config() {
+    // the [faults] struct present-but-disabled must not perturb anything:
+    // same binary, same seed, one run with the default struct and one with
+    // an explicitly-disabled-but-configured section
+    let _dir = require_artifacts!();
+    let mk = |configured: bool| {
+        let mut cfg = tiny_cfg();
+        cfg.algorithm = Algorithm::DcAsgdConst;
+        cfg.workers = 4;
+        if configured {
+            cfg.faults.enabled = false;
+            cfg.faults.crash_rate = 99.0; // garbage that must stay inert
+            cfg.faults.straggler_rate = 99.0;
+        }
+        Trainer::new(cfg).unwrap().run_logged().unwrap()
+    };
+    let (r1, log1) = mk(false);
+    let (r2, log2) = mk(true);
+    assert_eq!(r1.total_steps, r2.total_steps);
+    assert_eq!(r1.total_time.to_bits(), r2.total_time.to_bits());
+    assert_eq!(r1.faults.crashes, 0);
+    assert_eq!(r2.faults.crashes, 0);
+    for (a, b) in log1.steps.iter().zip(&log2.steps) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        assert_eq!(a.time.to_bits(), b.time.to_bits());
+    }
+}
+
+#[test]
 fn sim_mode_is_deterministic() {
     let _dir = require_artifacts!();
     let mut cfg = tiny_cfg();
@@ -680,6 +803,62 @@ fn momentum_variants_train_comparably() {
             report.final_train_loss
         );
     }
+}
+
+#[test]
+fn compressed_run_resumes_through_ef_checkpoint() {
+    // A lossy-compressed run checkpoints its EF residuals (format v2) and
+    // resumes with them; resuming from an EF-less checkpoint (saved by an
+    // uncompressed run) is rejected with the explicit message.
+    let _dir = require_artifacts!();
+    use dc_asgd::compress::CodecConfig;
+    let dir = std::env::temp_dir().join(format!("dcasgd_efresume_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let compressed_ck = dir.join("compressed.ckpt");
+    let plain_ck = dir.join("plain.ckpt");
+
+    let mut cfg = tiny_cfg();
+    cfg.algorithm = Algorithm::DcAsgdAdaptive;
+    cfg.workers = 2;
+    cfg.compress = CodecConfig::TopK { ratio: 0.1 };
+    cfg.checkpoint_out = compressed_ck.to_string_lossy().into_owned();
+    let r1 = Trainer::new(cfg.clone()).unwrap().run().unwrap();
+    assert!(r1.final_train_loss.is_finite());
+
+    // the file carries one residual per worker and at least one is nonzero
+    // (a lossy codec always leaves mass behind)
+    let ck = dc_asgd::ps::Checkpoint::load(&compressed_ck).unwrap();
+    assert_eq!(ck.ef.len(), 2);
+    assert!(
+        ck.ef.iter().any(|r| r.iter().any(|&x| x != 0.0)),
+        "compressed run checkpointed an all-zero residual"
+    );
+
+    // resume the compressed run: config validates, residuals are re-seeded
+    let mut cfg2 = cfg.clone();
+    cfg2.checkpoint_out = String::new();
+    cfg2.resume_from = compressed_ck.to_string_lossy().into_owned();
+    let r2 = Trainer::new(cfg2).unwrap().run().unwrap();
+    assert!(r2.final_train_loss.is_finite());
+
+    // an uncompressed run's checkpoint has no EF sections: resuming it
+    // compressed must fail loudly, not silently drop gradient mass
+    let mut plain = tiny_cfg();
+    plain.algorithm = Algorithm::DcAsgdAdaptive;
+    plain.workers = 2;
+    plain.checkpoint_out = plain_ck.to_string_lossy().into_owned();
+    Trainer::new(plain).unwrap().run().unwrap();
+    let mut bad = tiny_cfg();
+    bad.algorithm = Algorithm::DcAsgdAdaptive;
+    bad.workers = 2;
+    bad.compress = CodecConfig::TopK { ratio: 0.1 };
+    bad.resume_from = plain_ck.to_string_lossy().into_owned();
+    let err = match Trainer::new(bad) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("EF-less checkpoint accepted for a compressed resume"),
+    };
+    assert!(err.contains("no error-feedback residuals"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
