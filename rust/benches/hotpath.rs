@@ -1,0 +1,297 @@
+//! Hot-path micro-benchmarks + the PR-5 machine-readable perf baseline.
+//!
+//! Sections (none need compiled artifacts — this bench runs everywhere):
+//!
+//! A) update-rule kernels on the real mlp_cifar vector (860k f32),
+//! B) codec encode/decode through the word-level bit packers,
+//! C) multi-shard apply: serial vs per-call scoped-spawn (the pre-PR-5
+//!    implementation, replicated in-bench) vs the persistent compute pool,
+//! D) the ps_throughput headline cell (M=8, S=8 pull+push cycles).
+//!
+//! Output modes:
+//!
+//! * default — print the tables and write the headline numbers to
+//!   `BENCH_PR5.json` (repo root, `"calibrated": true`), refreshing the
+//!   committed perf baseline;
+//! * `DCASGD_PERF_GATE=1` — measure, compare against the committed
+//!   `BENCH_PR5.json`, and FAIL (exit 1) on a >2x regression of any time
+//!   (or >2x drop of any throughput). A baseline with
+//!   `"calibrated": false` (the checked-in placeholder before the first
+//!   real run) skips the gate loudly instead of failing on noise.
+
+use dc_asgd::bench::{header, time_fn};
+use dc_asgd::compress::{GradientCodec, Qsgd, TopK, WirePayload};
+use dc_asgd::config::Algorithm;
+use dc_asgd::optim;
+use dc_asgd::ps::{Hyper, NativeKernel, ParamServer, ShardedStore};
+use dc_asgd::util::json::Json;
+use dc_asgd::util::pool::ComputePool;
+use dc_asgd::util::rng::Pcg64;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// mlp_cifar padded size — all sections run on the real vector.
+const N: usize = 860_160;
+const SHARDS: usize = 8;
+/// Measurement window for the throughput cell.
+const CELL_MS: u64 = 250;
+
+fn randn(seed: u64, n: usize, scale: f64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    (0..n).map(|_| rng.normal(0.0, scale) as f32).collect()
+}
+
+fn hyper() -> Hyper {
+    Hyper { lambda0: 0.04, ms_momentum: 0.95, momentum: 0.0, eps: 1e-7 }
+}
+
+/// Contiguous shard ranges over n elements (mirrors ShardedStore's split).
+fn shard_ranges(n: usize, shards: usize) -> Vec<Range<usize>> {
+    let base = n / shards;
+    let rem = n % shards;
+    let mut ranges = Vec::with_capacity(shards);
+    let mut start = 0;
+    for s in 0..shards {
+        let size = base + usize::from(s < rem);
+        ranges.push(start..start + size);
+        start += size;
+    }
+    ranges
+}
+
+/// In-bench replica of the pre-PR-5 multi-shard apply: a fresh
+/// `thread::scope` spawn/join per call fanning strided shard groups over
+/// the same per-element SGD math, on `w` pre-split into per-shard vectors.
+/// This is exactly the structure `par_for_each_shard` had before the
+/// persistent pool; the delta against the pool path is the spawn/join
+/// cost the pool removes.
+fn scoped_spawn_apply(
+    shards: &mut [Vec<f32>],
+    ranges: &[Range<usize>],
+    g: &[f32],
+    lr: f32,
+    groups: usize,
+) {
+    std::thread::scope(|scope| {
+        let mut by_group: Vec<Vec<(&mut Vec<f32>, Range<usize>)>> =
+            (0..groups).map(|_| Vec::new()).collect();
+        for (i, shard) in shards.iter_mut().enumerate() {
+            by_group[i % groups].push((shard, ranges[i].clone()));
+        }
+        for group in by_group {
+            scope.spawn(move || {
+                for (shard, range) in group {
+                    optim::sgd_step(shard, &g[range], lr);
+                }
+            });
+        }
+    });
+}
+
+/// One pull+push throughput cell (the ps_throughput headline): M workers
+/// hammer pull+push for CELL_MS; returns pushes/second.
+fn throughput_cell(workers: usize, shards: usize, algo: Algorithm) -> f64 {
+    let init = randn(5, N, 1.0);
+    let ps = Arc::new(
+        ParamServer::new(&init, workers, shards, algo, hyper(), Box::new(NativeKernel)).unwrap(),
+    );
+    let g = Arc::new(randn(11, N, 0.01));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for m in 0..workers {
+        let (ps, stop, g) = (Arc::clone(&ps), Arc::clone(&stop), Arc::clone(&g));
+        handles.push(std::thread::spawn(move || {
+            let mut buf = vec![0.0f32; N];
+            let mut count = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                ps.pull(m, &mut buf);
+                ps.push(m, &g, 1e-6);
+                count += 1;
+            }
+            count
+        }));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(CELL_MS));
+    stop.store(true, Ordering::Relaxed);
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    total as f64 / (CELL_MS as f64 / 1e3)
+}
+
+fn main() {
+    // gate on DCASGD_PERF_GATE being set to a truthy value ("0"/"" = off,
+    // like the repo's other env knobs)
+    let gate = std::env::var("DCASGD_PERF_GATE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let baseline_path = std::path::Path::new("BENCH_PR5.json");
+    // gate mode: read and validate the committed baseline BEFORE the
+    // multi-minute measurement suite, so an uncalibrated placeholder (or a
+    // missing file) skips instantly instead of measuring and discarding
+    let gate_baseline = if gate {
+        let committed = match std::fs::read_to_string(baseline_path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("PERF GATE SKIPPED: no committed {}: {e}", baseline_path.display());
+                return;
+            }
+        };
+        let committed = match Json::parse(&committed) {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!("PERF GATE FAILED: unparsable BENCH_PR5.json: {e:?}");
+                std::process::exit(1);
+            }
+        };
+        if committed.get("calibrated").as_bool() != Some(true) {
+            eprintln!(
+                "PERF GATE SKIPPED: committed baseline is uncalibrated (placeholder) — \
+                 run `cargo bench --bench hotpath` on a quiet machine and commit the result"
+            );
+            return;
+        }
+        Some(committed)
+    } else {
+        None
+    };
+    let mut results: Vec<(&'static str, f64)> = Vec::new();
+
+    // ---- A) update-rule kernels -----------------------------------------
+    println!("# A) update-rule kernels on n={N} (f32)");
+    header();
+    let g = randn(1, N, 0.01);
+    let bak = randn(2, N, 1.0);
+    let mut w = randn(3, N, 1.0);
+    let mut ms: Vec<f32> = randn(4, N, 0.01).iter().map(|x| x.abs()).collect();
+    let s_sgd = time_fn("native sgd_step", 3, 30, || {
+        optim::sgd_step(&mut w, &g, 1e-6);
+    });
+    s_sgd.print();
+    let s_dc = time_fn("native dc_step (Eqn.10)", 3, 30, || {
+        optim::dc_step(&mut w, &g, &bak, 1e-6, 0.04);
+    });
+    s_dc.print();
+    let s_dca = time_fn("native dc_adaptive_step", 3, 30, || {
+        optim::dc_adaptive_step(&mut w, &g, &bak, &mut ms, 1e-6, 2.0, 0.95, 1e-7);
+    });
+    s_dca.print();
+    results.push(("sgd_step_s", s_sgd.mean_s));
+    results.push(("dc_step_s", s_dc.mean_s));
+    results.push(("dca_step_s", s_dca.mean_s));
+
+    // ---- B) codecs through the word-level bit packers --------------------
+    println!("\n# B) codec encode/decode (word-level packing) on n={N}");
+    header();
+    let mut qsgd = Qsgd::new(4, Pcg64::new(7));
+    let mut payload = WirePayload::default();
+    let s_qenc = time_fn("qsgd@4 encode (write_bits)", 2, 15, || {
+        qsgd.encode(&g, &mut payload);
+    });
+    s_qenc.print();
+    let mut dec = vec![0.0f32; N];
+    let s_qdec = time_fn("qsgd@4 decode (dequantize_into)", 2, 15, || {
+        payload.decode_into(&mut dec);
+    });
+    s_qdec.print();
+    let mut topk = TopK::new(0.1);
+    let mut sparse = WirePayload::default();
+    let s_topk = time_fn("topk@0.1 encode (select+sort)", 2, 15, || {
+        topk.encode(&g, &mut sparse);
+    });
+    s_topk.print();
+    results.push(("qsgd_encode_s", s_qenc.mean_s));
+    results.push(("qsgd_decode_s", s_qdec.mean_s));
+    results.push(("topk_encode_s", s_topk.mean_s));
+
+    // ---- C) multi-shard apply: serial vs scoped-spawn vs pool ------------
+    println!("\n# C) multi-shard apply (S={SHARDS}) on n={N}: serial vs scoped vs pool");
+    header();
+    let init = randn(6, N, 1.0);
+    let serial_store = ShardedStore::with_pool(&init, 1, SHARDS, Arc::new(ComputePool::new(1)));
+    let s_serial = time_fn("apply serial (1 lane)", 3, 30, || {
+        serial_store.par_for_each_shard(|s, range| {
+            optim::sgd_step(&mut s.w, &g[range], 1e-6);
+        });
+    });
+    s_serial.print();
+    let lanes = dc_asgd::util::pool::default_threads();
+    let ranges = shard_ranges(N, SHARDS);
+    let mut shard_vecs: Vec<Vec<f32>> =
+        ranges.iter().map(|r| init[r.clone()].to_vec()).collect();
+    let groups = SHARDS.min(lanes);
+    let s_scoped = time_fn("apply scoped-spawn (pre-PR5 replica)", 3, 30, || {
+        scoped_spawn_apply(&mut shard_vecs, &ranges, &g, 1e-6, groups);
+    });
+    s_scoped.print();
+    let pool = Arc::new(ComputePool::new(lanes));
+    let pool_store = ShardedStore::with_pool(&init, 1, SHARDS, Arc::clone(&pool));
+    let s_pool = time_fn("apply via persistent pool", 3, 30, || {
+        pool_store.par_for_each_shard(|s, range| {
+            optim::sgd_step(&mut s.w, &g[range], 1e-6);
+        });
+    });
+    s_pool.print();
+    println!(
+        "pool vs scoped-spawn: {:.2}x | pool vs serial: {:.2}x ({lanes} lanes)",
+        s_scoped.mean_s / s_pool.mean_s,
+        s_serial.mean_s / s_pool.mean_s,
+    );
+    results.push(("apply_serial_s", s_serial.mean_s));
+    results.push(("apply_scoped_s", s_scoped.mean_s));
+    results.push(("apply_pool_s", s_pool.mean_s));
+
+    // ---- D) ps_throughput headline cell ----------------------------------
+    println!("\n# D) ps_throughput headline: M=8 S={SHARDS} pull+push");
+    for algo in [Algorithm::Asgd, Algorithm::DcAsgdAdaptive] {
+        let rate = throughput_cell(8, SHARDS, algo);
+        println!("{} M=8 S={SHARDS}: {rate:.0} pushes/s", algo.name());
+        match algo {
+            Algorithm::Asgd => results.push(("ps_throughput_m8_s8_asgd_per_sec", rate)),
+            _ => results.push(("ps_throughput_m8_s8_dca_per_sec", rate)),
+        }
+    }
+
+    // ---- baseline file / regression gate ---------------------------------
+    if let Some(committed) = gate_baseline {
+        let mut failed = false;
+        for (key, fresh) in &results {
+            let base = committed.get("results").get(key).as_f64().unwrap_or(0.0);
+            if base <= 0.0 || !base.is_finite() {
+                println!("gate {key}: no baseline, skipped");
+                continue;
+            }
+            // times: fresh > 2x base is a regression; throughputs inverted
+            let regressed = if key.ends_with("_per_sec") {
+                *fresh < base / 2.0
+            } else {
+                *fresh > base * 2.0
+            };
+            println!(
+                "gate {key}: fresh {fresh:.6} vs baseline {base:.6} -> {}",
+                if regressed { "REGRESSED" } else { "ok" }
+            );
+            failed |= regressed;
+        }
+        if failed {
+            eprintln!("PERF GATE FAILED: >2x regression vs committed BENCH_PR5.json");
+            std::process::exit(1);
+        }
+        println!("perf gate passed (all metrics within 2x of the committed baseline)");
+    } else {
+        let json = Json::obj(vec![
+            ("bench", "hotpath".into()),
+            ("calibrated", true.into()),
+            ("n", N.into()),
+            ("shards", SHARDS.into()),
+            ("lanes", dc_asgd::util::pool::default_threads().into()),
+            (
+                "results",
+                Json::Obj(results.iter().map(|(k, v)| (k.to_string(), Json::Num(*v))).collect()),
+            ),
+        ]);
+        match std::fs::write(baseline_path, format!("{json}\n")) {
+            Ok(()) => println!("\nbaseline written: {}", baseline_path.display()),
+            Err(e) => eprintln!("could not write {}: {e}", baseline_path.display()),
+        }
+    }
+}

@@ -47,12 +47,30 @@ pub(crate) fn quantized_wire_bytes(n: usize, bits: u32) -> usize {
 
 // ---------------------------------------------------------------------------
 // bit packing (shared by QSGD levels; width <= 32)
+//
+// All three routines operate on u64 WORDS, not per-field byte loops: a
+// field of width <= 32 at a bit offset < 8 within its first byte spans at
+// most 5 bytes, so whenever a full 8-byte window fits inside the buffer
+// one unaligned little-endian load/store covers the whole field. Only the
+// last few fields of a stream (where the window would run past the end)
+// fall back to the byte loop — bit-for-bit the same layout, pinned by
+// `word_packing_is_byte_exact_vs_reference` below.
 
 /// Write `v` as a `width`-bit little-endian field at bit offset `off`.
 /// `buf` must be pre-zeroed over the written range.
 pub(crate) fn write_bits(buf: &mut [u8], off: usize, width: u32, v: u64) {
     debug_assert!(width <= 32);
-    let mut v = v & ((1u64 << width) - 1);
+    let v = v & ((1u64 << width) - 1);
+    let byte = off / 8;
+    let bit = off % 8;
+    if byte + 8 <= buf.len() {
+        let mut word = u64::from_le_bytes(buf[byte..byte + 8].try_into().expect("8-byte window"));
+        word |= v << bit;
+        buf[byte..byte + 8].copy_from_slice(&word.to_le_bytes());
+        return;
+    }
+    // tail fields: the 8-byte window would run past the buffer
+    let mut v = v;
     let mut off = off;
     let mut rem = width as usize;
     while rem > 0 {
@@ -69,6 +87,13 @@ pub(crate) fn write_bits(buf: &mut [u8], off: usize, width: u32, v: u64) {
 /// Read a `width`-bit little-endian field at bit offset `off`.
 pub(crate) fn read_bits(buf: &[u8], off: usize, width: u32) -> u64 {
     debug_assert!(width <= 32);
+    let mask = (1u64 << width) - 1;
+    let byte = off / 8;
+    let bit = off % 8;
+    if byte + 8 <= buf.len() {
+        let word = u64::from_le_bytes(buf[byte..byte + 8].try_into().expect("8-byte window"));
+        return (word >> bit) & mask;
+    }
     let mut v = 0u64;
     let mut got = 0usize;
     let mut off = off;
@@ -87,12 +112,38 @@ pub(crate) fn read_bits(buf: &[u8], off: usize, width: u32) -> u64 {
 }
 
 /// Dequantize a packed level stream (see [`WirePayload::Quantized`]).
+/// Streams the packed bytes through a u64 accumulator (refilled a word at
+/// a time while one fits), so the per-element work is a shift and a mask
+/// instead of per-field offset arithmetic.
 pub(crate) fn dequantize_into(out: &mut [f32], n: usize, bits: u32, norm: f32, packed: &[u8]) {
     debug_assert_eq!(out.len(), n);
     let l = ((1u32 << (bits - 1)) - 1) as i64;
     let scale = if l > 0 { norm / l as f32 } else { 0.0 };
-    for (i, o) in out.iter_mut().enumerate() {
-        let level = read_bits(packed, i * bits as usize, bits) as i64 - l;
+    let mask = (1u64 << bits) - 1;
+    let mut acc = 0u64;
+    let mut acc_bits = 0u32;
+    let mut pos = 0usize;
+    for o in out.iter_mut() {
+        while acc_bits < bits {
+            // acc_bits < 32 here, so a 32-bit refill always fits in the
+            // accumulator; the stream tail refills byte-wise
+            if pos + 4 <= packed.len() {
+                let w = u32::from_le_bytes(
+                    packed[pos..pos + 4].try_into().expect("4-byte window"),
+                ) as u64;
+                acc |= w << acc_bits;
+                pos += 4;
+                acc_bits += 32;
+            } else {
+                debug_assert!(pos < packed.len(), "packed stream exhausted early");
+                acc |= (packed[pos] as u64) << acc_bits;
+                pos += 1;
+                acc_bits += 8;
+            }
+        }
+        let level = (acc & mask) as i64 - l;
+        acc >>= bits;
+        acc_bits -= bits;
         *o = level as f32 * scale;
     }
 }
@@ -164,12 +215,17 @@ impl GradientCodec for TopK {
         self.order.clear();
         self.order.extend(0..n as u32);
         // partition the k largest magnitudes to the front (O(n) expected),
-        // then emit them in ascending index order for the sharded apply
+        // then emit them in ascending index order for the sharded apply.
+        // Ties break by index explicitly: select_nth_unstable_by partitions
+        // equal keys arbitrarily, so without the index tiebreak the kept
+        // set could differ across platforms / std versions whenever
+        // magnitudes collide at the selection boundary.
         self.order.select_nth_unstable_by(k - 1, |&a, &b| {
             g[b as usize]
                 .abs()
                 .partial_cmp(&g[a as usize].abs())
                 .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.cmp(&b))
         });
         idx.extend_from_slice(&self.order[..k]);
         idx.sort_unstable();
@@ -320,6 +376,93 @@ mod tests {
         (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect()
     }
 
+    /// The pre-word-packing byte-loop writer, kept as the layout oracle.
+    fn write_bits_ref(buf: &mut [u8], off: usize, width: u32, v: u64) {
+        let mut v = v & ((1u64 << width) - 1);
+        let mut off = off;
+        let mut rem = width as usize;
+        while rem > 0 {
+            let byte = off / 8;
+            let bit = off % 8;
+            let take = (8 - bit).min(rem);
+            buf[byte] |= ((v & ((1u64 << take) - 1)) as u8) << bit;
+            v >>= take;
+            off += take;
+            rem -= take;
+        }
+    }
+
+    /// The pre-word-packing byte-loop reader, kept as the layout oracle.
+    fn read_bits_ref(buf: &[u8], off: usize, width: u32) -> u64 {
+        let mut v = 0u64;
+        let mut got = 0usize;
+        let mut off = off;
+        let mut rem = width as usize;
+        while rem > 0 {
+            let byte = off / 8;
+            let bit = off % 8;
+            let take = (8 - bit).min(rem);
+            let part = (buf[byte] >> bit) as u64 & ((1u64 << take) - 1);
+            v |= part << got;
+            got += take;
+            off += take;
+            rem -= take;
+        }
+        v
+    }
+
+    #[test]
+    fn word_packing_is_byte_exact_vs_reference() {
+        // every width, awkward field counts (word path + tail fallback):
+        // the u64-word writer must produce byte-identical buffers to the
+        // byte-loop reference, and both readers must agree on every field
+        let mut rng = Pcg64::new(77);
+        for width in 1u32..=32 {
+            for count in [1usize, 7, 64, 129] {
+                let vals: Vec<u64> =
+                    (0..count).map(|_| rng.next_u64() & ((1u64 << width) - 1)).collect();
+                let nbytes = (count * width as usize + 7) / 8;
+                let mut fast = vec![0u8; nbytes];
+                let mut slow = vec![0u8; nbytes];
+                for (i, &v) in vals.iter().enumerate() {
+                    write_bits(&mut fast, i * width as usize, width, v);
+                    write_bits_ref(&mut slow, i * width as usize, width, v);
+                }
+                assert_eq!(fast, slow, "width {width} count {count}: payload bytes diverged");
+                for (i, &v) in vals.iter().enumerate() {
+                    assert_eq!(read_bits(&fast, i * width as usize, width), v);
+                    assert_eq!(read_bits_ref(&fast, i * width as usize, width), v);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_dequantize_matches_per_field_reference() {
+        let n = 1003; // odd length: exercises the byte-wise refill tail
+        let g = grad(21, n);
+        for bits in [3u32, 4, 7, 8, 12, 16] {
+            let mut codec = Qsgd::new(bits, Pcg64::new(9));
+            let mut out = WirePayload::default();
+            codec.encode(&g, &mut out);
+            let (norm, packed) = match &out {
+                WirePayload::Quantized { norm, packed, .. } => (*norm, packed.clone()),
+                other => panic!("expected quantized, got {other:?}"),
+            };
+            let mut fast = vec![0.0f32; n];
+            dequantize_into(&mut fast, n, bits, norm, &packed);
+            // per-field reference decode
+            let l = ((1u32 << (bits - 1)) - 1) as i64;
+            let scale = if l > 0 { norm / l as f32 } else { 0.0 };
+            let slow: Vec<f32> = (0..n)
+                .map(|i| {
+                    (read_bits_ref(&packed, i * bits as usize, bits) as i64 - l) as f32 * scale
+                })
+                .collect();
+            assert_eq!(fast, slow, "bits {bits}: streaming decode diverged");
+        }
+    }
+
     #[test]
     fn bit_roundtrip_all_widths() {
         for width in 1u32..=32 {
@@ -353,6 +496,55 @@ mod tests {
         let mut dec = vec![9.0f32; 6];
         out.decode_into(&mut dec);
         assert_eq!(dec, vec![0.0, -5.0, 0.0, 3.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn topk_breaks_ties_by_index_deterministically() {
+        // tie-heavy gradient: every coordinate has one of two magnitudes,
+        // so the selection boundary falls inside a huge tie class. The
+        // kept set must match a full-sort reference ordered by
+        // (|g| desc, index asc) — i.e. lowest indices win inside a tie —
+        // regardless of how select_nth partitions internally.
+        let n = 256;
+        let g: Vec<f32> = (0..n)
+            .map(|i| {
+                let mag = if i % 5 == 0 { 2.0 } else { 1.0 };
+                if i % 2 == 0 {
+                    mag
+                } else {
+                    -mag
+                }
+            })
+            .collect();
+        for ratio in [0.1f64, 0.3, 0.5, 0.9] {
+            let k = kept(ratio, n);
+            let mut reference: Vec<u32> = (0..n as u32).collect();
+            reference.sort_by(|&a, &b| {
+                g[b as usize]
+                    .abs()
+                    .partial_cmp(&g[a as usize].abs())
+                    .unwrap()
+                    .then_with(|| a.cmp(&b))
+            });
+            let mut expect: Vec<u32> = reference[..k].to_vec();
+            expect.sort_unstable();
+            let mut codec = TopK::new(ratio);
+            let mut out = WirePayload::default();
+            codec.encode(&g, &mut out);
+            match &out {
+                WirePayload::Sparse { idx, val, .. } => {
+                    assert_eq!(idx, &expect, "ratio {ratio}: tie-break not by index");
+                    for (&i, &v) in idx.iter().zip(val) {
+                        assert_eq!(v, g[i as usize]);
+                    }
+                }
+                other => panic!("expected sparse, got {other:?}"),
+            }
+            // and the selection is stable across repeated encodes
+            let first = out.clone();
+            codec.encode(&g, &mut out);
+            assert_eq!(first, out, "ratio {ratio}: repeated encode diverged");
+        }
     }
 
     #[test]

@@ -202,6 +202,25 @@ pub enum UpdateBackend {
     Xla,
 }
 
+/// Host compute-runtime knobs (`[runtime]`): lane count of the persistent
+/// [`crate::util::pool::ComputePool`] that serves multi-shard applies,
+/// `store_w`, and the driver's pipelined gradient stage. `0` = auto
+/// (available parallelism, the default), `1` = fully serial (no pool
+/// threads — the inline reference path), `n` = a dedicated `n`-lane pool.
+/// The knob trades wallclock only: every setting produces bit-identical
+/// schedules and trajectories (pinned by the chaos harness and the store
+/// lane-invariance tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RuntimeConfig {
+    pub threads: usize,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        Self { threads: 0 }
+    }
+}
+
 /// Execution mode for parallel algorithms.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ExecMode {
@@ -275,6 +294,8 @@ pub struct ExperimentConfig {
     /// pinned bit-identical to the uncompressed path).
     pub compress: crate::compress::CodecConfig,
     pub update_backend: UpdateBackend,
+    /// Host compute runtime (`[runtime]`; `threads = 0` auto-sizes).
+    pub runtime: RuntimeConfig,
     /// Parameter-store lock shards.
     pub shards: usize,
     /// Evaluate on the test set every `eval_every` effective epochs.
@@ -318,6 +339,7 @@ impl Default for ExperimentConfig {
             faults: crate::sim::FaultConfig::default(),
             compress: crate::compress::CodecConfig::None,
             update_backend: UpdateBackend::Native,
+            runtime: RuntimeConfig::default(),
             shards: 1,
             eval_every: 1,
             eval_every_steps: 0,
@@ -437,6 +459,9 @@ impl ExperimentConfig {
         }
         if self.shards == 0 {
             bail!("shards must be >= 1");
+        }
+        if self.runtime.threads > 1024 {
+            bail!("runtime.threads must be <= 1024 (0 = auto)");
         }
         if self.algorithm.is_staleness_bounded() && self.exec_mode == ExecMode::Threads {
             bail!(
@@ -611,6 +636,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = get_usize("shards")? {
             cfg.shards = v;
+        }
+        if let Some(v) = get_usize("runtime.threads")? {
+            cfg.runtime.threads = v;
         }
         if let Some(v) = get_usize("eval.every")? {
             cfg.eval_every = v;
@@ -795,6 +823,7 @@ impl ExperimentConfig {
                 },
             ),
             ("shards", self.shards.into()),
+            ("runtime_threads", self.runtime.threads.into()),
             ("tag", self.tag.as_str().into()),
         ])
     }
@@ -1164,6 +1193,22 @@ mod tests {
         reject("shards = 0", "shards must be >= 1");
         reject("[sim.delay]\nmodel = \"uniform\"\njitter = 1.5", "jitter must be in [0, 1)");
         reject("[comm]\nper_push = -1.0", "comm per_push/per_mb must be finite");
+    }
+
+    #[test]
+    fn from_toml_runtime_section() {
+        // default: auto (0)
+        let cfg = ExperimentConfig::from_toml("workers = 2").unwrap();
+        assert_eq!(cfg.runtime, RuntimeConfig { threads: 0 });
+        // explicit lane counts
+        let cfg = ExperimentConfig::from_toml("[runtime]\nthreads = 1").unwrap();
+        assert_eq!(cfg.runtime.threads, 1);
+        let cfg = ExperimentConfig::from_toml("[runtime]\nthreads = 6").unwrap();
+        assert_eq!(cfg.runtime.threads, 6);
+        // absurd lane counts are rejected
+        assert!(ExperimentConfig::from_toml("[runtime]\nthreads = 4096").is_err());
+        let json = cfg.to_json().to_string();
+        assert!(json.contains("\"runtime_threads\""));
     }
 
     #[test]

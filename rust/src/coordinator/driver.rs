@@ -10,15 +10,48 @@
 //! modules ([`super::sequential`], [`super::sync`], [`super::async_`]) are
 //! thin adapters over this loop.
 //!
+//! ## Pipelined gradient stage
+//!
+//! Between a worker's pull and its finish event, its gradient depends only
+//! on inputs the worker already holds — the snapshot it pulled and its own
+//! batch cursor — so the in-flight computations are mutually independent
+//! (Mishchenko et al. 2022). The driver exploits that through a
+//! [`ComputeStage`]: each pull draws the worker's batch and enqueues the
+//! compute on a [`GradPipeline`] over the run's persistent
+//! [`ComputePool`]; the first finish event that needs an unevaluated
+//! result flushes *every* queued worker concurrently in one pool burst.
+//! Commits still happen strictly in the scheduler's event order, results
+//! are keyed by worker, and each gradient is a pure function of its
+//! per-worker inputs — so lane count cannot change a single produced bit
+//! (`runtime.threads = 1` is the pinned serial reference).
+//!
+//! One subtlety keeps crashed runs bit-identical to the old draw-at-commit
+//! loop: a drop-policy crash invalidates an in-flight compute whose batch
+//! the serial loop would never have drawn. The stage therefore *retains*
+//! the dropped batch and re-uses it for the worker's first compute after
+//! rejoining — the cursor advances exactly when a compute can still
+//! commit, never for work that died.
+//!
+//! Concurrency caveat: the PJRT backend executes every Train request on
+//! its single engine thread ([`crate::runtime`] module docs), so on that
+//! backend a flush currently *pipelines request issue* — all in-flight
+//! requests are queued back-to-back and the engine never waits on the
+//! driver between gradients — rather than parallelizing XLA execution
+//! itself. Engine-free consumers of the stage (the chaos harness's
+//! synthetic gradients, future multi-engine backends: the per-worker
+//! handle slots are already in place) parallelize fully, as do the pool's
+//! other clients (multi-shard applies, `store_w`, barrier folds).
+//!
 //! ## Worker churn
 //!
 //! Fault events surface as [`SimEvent`]s and map onto parameter-server
 //! state exactly once each:
 //!
 //! * **Crash** — the scheduler already invalidated (or marked for salvage)
-//!   the in-flight compute; the driver only needs to settle a barrier round
-//!   that the membership change may have completed, then re-pull for any
-//!   workers the shrunken gate released.
+//!   the in-flight compute; the driver discards the pipelined result for a
+//!   dropped epoch (a salvage drain keeps it — that finish still commits),
+//!   settles a barrier round the membership change may have completed,
+//!   then re-pulls for any workers the shrunken gate released.
 //! * **Join** — the worker's server-side backup `w_bak(m)` is re-seeded to
 //!   the current model ([`crate::ps::ParamServer::reset_worker`]) so DC
 //!   compensation never sees a dead incarnation's snapshot, its
@@ -32,14 +65,17 @@
 
 use super::RunCtx;
 use crate::config::Algorithm;
-use crate::data::{EpochPartition, ShardCursor};
+use crate::data::{Batch, Dataset, EpochPartition, ShardCursor};
 use crate::metrics::StepRecord;
 use crate::optim::DcSsgdAccumulator;
+use crate::runtime::EngineHandle;
 use crate::sim::{
     BarrierSync, CommCosts, CommitMode, DelaySampler, FaultPlan, FullyAsync, Protocol, Scheduler,
     SimEvent, StalenessBounded,
 };
+use crate::util::pool::{ComputePool, GradPipeline};
 use anyhow::Result;
+use std::sync::{Arc, Mutex};
 
 /// Server-side cost per update in simulated seconds, as a fraction of the
 /// mean worker compute time. The paper reports the DC compensation is a
@@ -48,6 +84,9 @@ use anyhow::Result;
 /// protocols fold once per round on the critical path of the slowest
 /// worker, so (as before this refactor) they carry no per-push charge.
 const SERVER_COST_FRAC: f64 = 0.01;
+
+/// What one gradient computation produces.
+type GradResult = Result<(f32, Vec<f32>)>;
 
 /// Map an algorithm to its synchronization [`Protocol`].
 pub fn protocol_for(algo: Algorithm, staleness_bound: u64) -> Box<dyn Protocol> {
@@ -60,6 +99,60 @@ pub fn protocol_for(algo: Algorithm, staleness_bound: u64) -> Box<dyn Protocol> 
         | Algorithm::Asgd
         | Algorithm::DcAsgdConst
         | Algorithm::DcAsgdAdaptive => Box::new(FullyAsync),
+    }
+}
+
+/// The driver's pipelined gradient stage (see the module docs): per-worker
+/// batches drawn at pull time, gradients evaluated in pool bursts the
+/// first time a finish event demands one, results consumed in commit
+/// order. Engine handles are pre-cloned per worker behind uncontended
+/// mutexes so flush tasks can issue engine requests from any pool lane.
+struct ComputeStage {
+    pipe: GradPipeline<GradResult>,
+    /// The batch each in-flight compute trains on, drawn at enqueue time.
+    batches: Vec<Option<Batch>>,
+    engines: Vec<Mutex<EngineHandle>>,
+}
+
+impl ComputeStage {
+    fn new(engine: &EngineHandle, workers: usize, pool: Arc<ComputePool>) -> Self {
+        Self {
+            pipe: GradPipeline::new(pool, workers),
+            batches: vec![None; workers],
+            engines: (0..workers).map(|_| Mutex::new(engine.clone())).collect(),
+        }
+    }
+
+    /// Register worker `w`'s next compute: draw its batch — unless the
+    /// pipeline retained the batch of a crash-dropped compute, which the
+    /// serial draw-at-commit order never consumed and must see again —
+    /// and queue the gradient for the next flush.
+    fn enqueue(&mut self, worker: usize, cursor: &mut ShardCursor, ds: &dyn Dataset) {
+        if self.pipe.enqueue(worker) {
+            self.batches[worker] = Some(ds.make_batch(&cursor.next_indices()));
+        } else {
+            debug_assert!(self.batches[worker].is_some(), "retained compute without a batch");
+        }
+    }
+
+    /// Void worker `w`'s in-flight compute (its epoch died under a
+    /// drop-policy crash); the pipeline retains its inputs for re-use.
+    fn discard(&mut self, worker: usize) {
+        self.pipe.discard(worker);
+    }
+
+    /// Consume worker `w`'s gradient, flushing every queued compute
+    /// concurrently on the pool if `w`'s is not evaluated yet. Barrier
+    /// protocols share snapshot slot 0; immediate protocols read the
+    /// worker's own slot.
+    fn take(&mut self, worker: usize, snapshots: &[Vec<f32>], barrier: bool) -> GradResult {
+        let Self { pipe, batches, engines, .. } = self;
+        let (batches, engines) = (&*batches, &*engines);
+        pipe.take(worker, &|v: usize| {
+            let snap = if barrier { 0 } else { v };
+            let batch = batches[v].as_ref().expect("in-flight compute without a batch");
+            engines[v].lock().unwrap().train(&snapshots[snap], batch)
+        })
     }
 }
 
@@ -163,11 +256,19 @@ fn fold_round_if_complete(
     Ok(true)
 }
 
-/// Pull fresh snapshots for the workers a scheduler event just released.
-/// Barrier protocols share ONE snapshot slot (all released workers compute
-/// the same round on the post-fold model); immediate protocols re-pull
-/// each released worker's own slot.
-fn pull_released(ctx: &mut RunCtx, barrier: bool, released: &[usize], snapshots: &mut [Vec<f32>]) {
+/// Pull fresh snapshots for the workers a scheduler event just released
+/// and stage their gradients on the pipeline. Barrier protocols share ONE
+/// snapshot slot (all released workers compute the same round on the
+/// post-fold model); immediate protocols re-pull each released worker's
+/// own slot.
+fn pull_and_stage(
+    ctx: &RunCtx,
+    stage: &mut ComputeStage,
+    cursors: &mut [ShardCursor],
+    barrier: bool,
+    released: &[usize],
+    snapshots: &mut [Vec<f32>],
+) {
     if barrier {
         if !released.is_empty() {
             ctx.ps.pull(0, &mut snapshots[0]);
@@ -176,6 +277,9 @@ fn pull_released(ctx: &mut RunCtx, barrier: bool, released: &[usize], snapshots:
         for &v in released {
             ctx.ps.pull(v, &mut snapshots[v]);
         }
+    }
+    for &v in released {
+        stage.enqueue(v, &mut cursors[v], ctx.train_set.as_ref());
     }
 }
 
@@ -236,6 +340,10 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
     let mut acc = DcSsgdAccumulator::new(n, ctx.cfg.lambda0 as f32);
     let mut avg = vec![0.0f32; n];
 
+    // pipelined gradient stage over the run's persistent compute pool (the
+    // same pool the sharded store fans multi-shard applies over)
+    let mut stage = ComputeStage::new(&ctx.engine, m, Arc::clone(&ctx.pool));
+
     // snapshot buffers: barrier rounds share ONE (all workers compute on
     // the same model, and the fold paths never read w_bak), immediate
     // protocols keep one per worker — so SSGD at M=16 still costs a single
@@ -246,6 +354,7 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
         if !barrier || w == 0 {
             ctx.ps.pull(w, &mut snapshots[snap(w)]);
         }
+        stage.enqueue(w, &mut cursors[w], ctx.train_set.as_ref());
     }
 
     let wall_start = std::time::Instant::now();
@@ -267,10 +376,11 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                     break;
                 }
                 let lr = ctx.lr_at(passes);
-                let batch = ctx.train_set.make_batch(&cursors[w].next_indices());
-                // the gradient is computed on the (possibly stale) snapshot
-                // worker w pulled when the protocol last admitted it
-                let (loss, grads) = ctx.engine.train(&snapshots[snap(w)], &batch)?;
+                // consume the pipelined gradient: computed on the (possibly
+                // stale) snapshot worker w pulled when the protocol last
+                // admitted it, against the batch drawn at that pull
+                debug_assert!(sched.is_computing(w), "finish for a non-computing worker");
+                let (loss, grads) = stage.take(w, &snapshots, barrier)?;
                 let rec_time = if wall { wall_start.elapsed().as_secs_f64() } else { t };
 
                 if barrier {
@@ -300,7 +410,7 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                     // one shared pull for the whole round (restarted is
                     // either empty mid-round or the full live fleet at the
                     // round boundary)
-                    pull_released(ctx, true, &restarted, &mut snapshots);
+                    pull_and_stage(ctx, &mut stage, &mut cursors, true, &restarted, &mut snapshots);
                 } else {
                     // compressed path: EF-inject + encode, then the server
                     // decodes (or applies sparse shard-locally); DC
@@ -335,13 +445,19 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                     // when ungated, plus any peers its completion (or, on a
                     // salvage drain, its death) just released
                     let released = sched.complete(w);
-                    pull_released(ctx, false, &released, &mut snapshots);
+                    pull_and_stage(ctx, &mut stage, &mut cursors, false, &released, &mut snapshots);
                 }
             }
-            SimEvent::Crash { time: t, released, .. } => {
+            SimEvent::Crash { time: t, worker: cw, released, .. } => {
                 // the scheduler already dropped (or marked for salvage) the
-                // in-flight compute and shrank the live set; a barrier round
-                // missing only the dead worker completes right here
+                // in-flight compute and shrank the live set; mirror that in
+                // the pipeline — a dropped epoch's gradient must never be
+                // consumed (a salvage drain stays: its finish still commits)
+                if !sched.is_live(cw) {
+                    stage.discard(cw);
+                }
+                // a barrier round missing only the dead worker completes
+                // right here
                 if barrier {
                     let lr = ctx.lr_at(samples as f64 / train_len);
                     let rec_time = if wall { wall_start.elapsed().as_secs_f64() } else { t };
@@ -361,7 +477,7 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                     )?;
                 }
                 // released workers pull the (post-fold) model
-                pull_released(ctx, barrier, &released, &mut snapshots);
+                pull_and_stage(ctx, &mut stage, &mut cursors, barrier, &released, &mut snapshots);
             }
             SimEvent::Join { worker: w, computing, released, .. } => {
                 // rejoin / elastic scale-up: the dead incarnation's state
@@ -373,12 +489,14 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                     ctx.compressors[w].reset();
                 }
                 // a joiner that started computing right away needs its
-                // snapshot now; a gate-blocked one (it died ahead of the
-                // fleet) is pulled via the released list when admitted
+                // snapshot (and a staged compute) now; a gate-blocked one
+                // (it died ahead of the fleet) is pulled via the released
+                // list when admitted
                 if computing {
                     ctx.ps.pull(w, &mut snapshots[snap(w)]);
+                    stage.enqueue(w, &mut cursors[w], ctx.train_set.as_ref());
                 }
-                pull_released(ctx, barrier, &released, &mut snapshots);
+                pull_and_stage(ctx, &mut stage, &mut cursors, barrier, &released, &mut snapshots);
             }
         }
     }

@@ -23,6 +23,7 @@ use crate::eval::evaluate;
 use crate::metrics::{EvalRecord, MetricsLog, TrainReport};
 use crate::ps::{NativeKernel, ParamServer, UpdateKernel};
 use crate::runtime::{start_engine, EngineHandle, XlaUpdateKernel};
+use crate::util::pool::ComputePool;
 use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -96,6 +97,10 @@ pub struct RunCtx {
     /// Lives on the context (not the driver loop) so checkpoints can
     /// capture the residuals and resume can re-seed them.
     pub compressors: Vec<WorkerCompressor>,
+    /// The run's persistent compute pool (`[runtime] threads`): one set of
+    /// worker threads serving both the sharded store's multi-shard applies
+    /// and the driver's pipelined gradient stage.
+    pub pool: Arc<ComputePool>,
 }
 
 impl RunCtx {
@@ -178,7 +183,12 @@ impl Trainer {
             UpdateBackend::Native => Box::new(NativeKernel),
             UpdateBackend::Xla => Box::new(XlaUpdateKernel::new(engine.clone())),
         };
-        let ps = Arc::new(ParamServer::from_config(&cfg, &init, kernel)?);
+        // one persistent pool per run (threads = 0 shares the process-wide
+        // auto-sized pool): the store's applies and the driver's pipelined
+        // gradient stage draw from the same lanes
+        let pool = crate::util::pool::pool_for_threads(cfg.runtime.threads);
+        let ps =
+            Arc::new(ParamServer::from_config_with_pool(&cfg, &init, kernel, Arc::clone(&pool))?);
         // one compressor (codec + EF residual + payload arena) per worker;
         // `none` builds nothing and the push path stays exactly dense
         let mut compressors: Vec<WorkerCompressor> = (0..cfg.workers)
@@ -232,6 +242,7 @@ impl Trainer {
                 test_set,
                 metrics,
                 compressors,
+                pool,
             },
         })
     }

@@ -74,6 +74,53 @@
 //! assuming a free network. With `[comm]` disabled the schedule is
 //! bit-identical to earlier builds (adding 0.0 to a duration is exact).
 //!
+//! ## Compute runtime & deterministic pipeline
+//!
+//! Host-side execution runs on a **persistent compute pool**
+//! ([`util::pool::ComputePool`], the `[runtime] threads` knob /
+//! `--threads`; `0` auto-sizes to available parallelism, `1` is fully
+//! serial): a fixed set of worker threads created once per run, with jobs
+//! fanned out as index ranges that idle lanes claim from a shared atomic
+//! counter — no per-call `thread::scope` spawn/join anywhere on the hot
+//! path. The pool serves the store's multi-shard applies
+//! ([`ps::ShardedStore::par_for_each_shard`], and therefore `store_w` and
+//! the barrier folds) and the driver's **pipelined gradient stage**
+//! ([`util::pool::GradPipeline`]).
+//!
+//! The pipeline exploits the observation (Mishchenko et al. 2022) that
+//! between a worker's pull and its finish event its gradient depends only
+//! on inputs it already holds — the snapshot it pulled and its own batch
+//! cursor — so the in-flight computations are mutually independent. The
+//! driver draws each worker's batch at pull time, queues the compute, and
+//! evaluates **all** queued gradients concurrently in one pool burst the
+//! first time a finish event demands a result. Bitwise determinism is
+//! preserved by construction:
+//!
+//! * commits happen strictly in the scheduler's event order — the pool
+//!   only changes *when* a gradient value is materialized, never which
+//!   value or when it is applied;
+//! * every gradient is a pure function of per-worker inputs frozen at
+//!   pull time, and results are keyed by worker, so lane count and claim
+//!   order are unobservable;
+//! * shard tasks own disjoint slices under their own write locks, so
+//!   multi-shard applies are order-independent f32 arithmetic;
+//! * a drop-policy crash voids an in-flight compute whose batch the
+//!   serial loop would never have drawn — the stage retains that batch
+//!   and re-uses it for the worker's first post-rejoin compute, keeping
+//!   cursor streams identical to the draw-at-commit order.
+//!
+//! `runtime.threads = 1` is the pinned serial reference: the chaos
+//! harness drives seeded fault plans through the pipelined bookkeeping at
+//! several lane counts and asserts bit-identical push traces and final
+//! model bits against the at-finish serial loop; the store's
+//! lane-invariance tests pin the apply path the same way. Bench `hotpath`
+//! measures the pool against the old scoped-spawn fan-out and writes the
+//! machine-readable perf baseline `BENCH_PR5.json` that the CI perf-smoke
+//! lane gates against. (Caveat: the PJRT backend executes all Train
+//! requests on its single engine thread, so there the flush pipelines
+//! request *issue* rather than parallelizing XLA execution — see the
+//! [`coordinator::driver`] docs.)
+//!
 //! ## Gradient compression & wire format
 //!
 //! The `[compress]` config section (`--compress` CLI flag; `none` by

@@ -49,6 +49,7 @@ fn usage() {
            --momentum F         --seed N           --shards N\n\
            --staleness-bound N  (SSP/DC-S3GD: max local-step drift)\n\
            --mode sim|threads   --backend native|xla\n\
+           --threads N          (compute-pool lanes; 0 = auto, 1 = serial)\n\
            --train-size N       --test-size N      --out DIR\n\
            --comm               (charge push/pull transfer time in the DES)\n\
            --comm-per-push F    --comm-per-mb F    (seconds, seconds/MB)\n\
@@ -120,6 +121,9 @@ fn build_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
     }
     if let Some(v) = args.usize_opt("shards")? {
         cfg.shards = v;
+    }
+    if let Some(v) = args.usize_opt("threads")? {
+        cfg.runtime.threads = v;
     }
     if let Some(v) = args.usize_opt("train-size")? {
         cfg.train_size = v;

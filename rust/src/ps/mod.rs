@@ -147,6 +147,7 @@ struct WholeScratch {
 }
 
 impl ParamServer {
+    /// Build against the process-shared compute pool (auto lane count).
     pub fn new(
         init: &[f32],
         workers: usize,
@@ -154,6 +155,29 @@ impl ParamServer {
         algo: Algorithm,
         hyper: Hyper,
         kernel: Box<dyn UpdateKernel>,
+    ) -> anyhow::Result<Self> {
+        Self::with_pool(
+            init,
+            workers,
+            shards,
+            algo,
+            hyper,
+            kernel,
+            std::sync::Arc::clone(crate::util::pool::shared()),
+        )
+    }
+
+    /// Build against an explicit compute pool (the `[runtime] threads`
+    /// knob); the pool serves multi-shard applies and `store_w`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_pool(
+        init: &[f32],
+        workers: usize,
+        shards: usize,
+        algo: Algorithm,
+        hyper: Hyper,
+        kernel: Box<dyn UpdateKernel>,
+        pool: std::sync::Arc<crate::util::pool::ComputePool>,
     ) -> anyhow::Result<Self> {
         if kernel.requires_whole_vector() && shards != 1 {
             anyhow::bail!(
@@ -165,7 +189,7 @@ impl ParamServer {
             anyhow::bail!("momentum variants are only supported by the native backend");
         }
         Ok(Self {
-            store: ShardedStore::new(init, workers, shards),
+            store: ShardedStore::with_pool(init, workers, shards, pool),
             algo,
             hyper,
             kernel,
@@ -182,10 +206,31 @@ impl ParamServer {
         init: &[f32],
         kernel: Box<dyn UpdateKernel>,
     ) -> anyhow::Result<Self> {
+        let pool = crate::util::pool::pool_for_threads(cfg.runtime.threads);
+        Self::from_config_with_pool(cfg, init, kernel, pool)
+    }
+
+    /// Like [`Self::from_config`], but sharing an already-built pool (the
+    /// trainer hands the same pool to the store and the driver's pipelined
+    /// gradient stage, so one set of threads serves the whole run).
+    pub fn from_config_with_pool(
+        cfg: &crate::config::ExperimentConfig,
+        init: &[f32],
+        kernel: Box<dyn UpdateKernel>,
+        pool: std::sync::Arc<crate::util::pool::ComputePool>,
+    ) -> anyhow::Result<Self> {
         if cfg.update_backend == UpdateBackend::Xla && !kernel.requires_whole_vector() {
             log::warn!("config requests xla backend but a native kernel was supplied");
         }
-        Self::new(init, cfg.workers, cfg.shards, cfg.algorithm, Hyper::from_config(cfg), kernel)
+        Self::with_pool(
+            init,
+            cfg.workers,
+            cfg.shards,
+            cfg.algorithm,
+            Hyper::from_config(cfg),
+            kernel,
+            pool,
+        )
     }
 
     pub fn n(&self) -> usize {

@@ -24,18 +24,27 @@
 //! bench `ps_throughput` ablates this store against the old
 //! mutex-per-shard design (DESIGN.md §6, Ablation B).
 //!
+//! Multi-shard applies ([`ShardedStore::par_for_each_shard`], which also
+//! serves `store_w` and the barrier folds) fan strided shard groups out
+//! over a persistent [`ComputePool`] — pool workers claim the groups from
+//! the pool's task counter, so no per-call threads are spawned. Shard
+//! math is independent (each task owns its shards' data exclusively under
+//! the write locks), so the result is bit-identical to the sequential
+//! order for every lane count.
+//!
 //! Lock order: a push path may hold the worker's backup lock *across*
 //! shard-lock acquisitions (bak → shard). The reverse nesting never occurs:
 //! pulls release every shard lock before touching the backup.
 
+use crate::util::pool::{self, ComputePool};
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, MutexGuard, RwLock};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
 
-/// Minimum elements of work per spawned thread for multi-shard applies
-/// (~512 KB of f32). Below this, thread spawn+join (~tens of us) dwarfs
-/// the memory-bound loop, so the apply stays sequential or uses fewer
-/// threads — the group count is sized from per-thread work, not total n.
+/// Minimum elements of work per pool lane for multi-shard applies
+/// (~512 KB of f32). Below this, even the pool's handoff latency dwarfs
+/// the memory-bound loop, so the apply stays sequential — the lane count
+/// is sized from per-lane work, not total n.
 const PAR_APPLY_MIN_PER_THREAD: usize = 1 << 17;
 
 /// State of one shard: the parameter slice plus the per-slice optimizer
@@ -65,12 +74,25 @@ pub struct ShardedStore {
     baks: Vec<Mutex<Vec<f32>>>,
     n: usize,
     workers: usize,
-    /// Thread budget for [`Self::par_for_each_shard`] (cached at build).
-    par_threads: usize,
+    /// Compute pool serving [`Self::par_for_each_shard`] / [`Self::store_w`].
+    pool: Arc<ComputePool>,
 }
 
 impl ShardedStore {
+    /// Build against the process-shared compute pool (auto lane count).
     pub fn new(init: &[f32], workers: usize, shards: usize) -> Self {
+        Self::with_pool(init, workers, shards, Arc::clone(pool::shared()))
+    }
+
+    /// Build against an explicit compute pool (the `[runtime] threads`
+    /// knob; a serial pool reproduces the sequential apply order exactly —
+    /// which every lane count does too, bitwise).
+    pub fn with_pool(
+        init: &[f32],
+        workers: usize,
+        shards: usize,
+        pool: Arc<ComputePool>,
+    ) -> Self {
         assert!(shards >= 1 && workers >= 1);
         let n = init.len();
         let shards_n = shards.min(n.max(1));
@@ -99,9 +121,7 @@ impl ShardedStore {
             })
             .collect();
         let baks = (0..workers).map(|_| Mutex::new(init.to_vec())).collect();
-        let par_threads =
-            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8);
-        Self { ranges, shards, baks, n, workers, par_threads }
+        Self { ranges, shards, baks, n, workers, pool }
     }
 
     pub fn n(&self) -> usize {
@@ -197,38 +217,30 @@ impl ShardedStore {
         }
     }
 
-    /// Apply `f` to every shard, fanning the shards out over scoped
-    /// threads when each thread gets enough work to amortize its spawn
-    /// ([`PAR_APPLY_MIN_PER_THREAD`]; capped by `available_parallelism`
-    /// and the shard count). Shard math is independent, so the result is
-    /// bit-identical to the sequential order.
+    /// Apply `f` to every shard, fanning `lanes` strided shard groups out
+    /// over the persistent compute pool when each lane gets enough work to
+    /// beat the handoff ([`PAR_APPLY_MIN_PER_THREAD`]; lanes capped by the
+    /// pool's lane count and the shard count, exactly the sizing the old
+    /// scoped-spawn fan-out used). No threads are spawned — pool workers
+    /// claim the groups from the pool's task counter. Shard math is
+    /// independent, so the result is bit-identical to the sequential order.
     pub fn par_for_each_shard<F>(&self, f: F)
     where
         F: Fn(&mut ShardData, Range<usize>) + Sync,
     {
         let s_n = self.shards.len();
-        let groups = s_n.min(self.par_threads).min(self.n / PAR_APPLY_MIN_PER_THREAD);
-        if groups <= 1 {
+        let lanes = s_n.min(self.pool.threads()).min(self.n / PAR_APPLY_MIN_PER_THREAD);
+        if lanes <= 1 {
             for i in 0..s_n {
                 self.apply_shard(i, &f);
             }
             return;
         }
-        std::thread::scope(|scope| {
-            for gi in 1..groups {
-                let f = &f;
-                scope.spawn(move || {
-                    let mut i = gi;
-                    while i < s_n {
-                        self.apply_shard(i, f);
-                        i += groups;
-                    }
-                });
-            }
-            let mut i = 0;
+        self.pool.run(lanes, &|gi| {
+            let mut i = gi;
             while i < s_n {
                 self.apply_shard(i, &f);
-                i += groups;
+                i += lanes;
             }
         });
     }
@@ -417,7 +429,7 @@ mod tests {
     #[test]
     fn par_apply_matches_sequential() {
         // par_for_each_shard must produce exactly the sequential result
-        // regardless of the per-thread-work gate (force both paths via n)
+        // regardless of the per-lane-work gate (force both paths via n)
         for n in [1024usize, 4 * PAR_APPLY_MIN_PER_THREAD + 13] {
             let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).sin()).collect();
             let g: Vec<f32> = (0..n).map(|i| (i as f32 * 0.02).cos()).collect();
@@ -434,6 +446,41 @@ mod tests {
             seq.snapshot_into(&mut a);
             par.snapshot_into(&mut b);
             assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn par_apply_is_bitwise_lane_count_invariant() {
+        // every pool size — serial, fewer lanes than shards, more lanes
+        // than shards — must produce the same bits (the [runtime] threads
+        // knob is a pure wallclock knob)
+        let n = 2 * PAR_APPLY_MIN_PER_THREAD + 7;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).sin()).collect();
+        let g: Vec<f32> = (0..n).map(|i| (i as f32 * 0.02).cos()).collect();
+        let reference = {
+            let store =
+                ShardedStore::with_pool(&init, 1, 8, Arc::new(ComputePool::new(1)));
+            store.par_for_each_shard(|s, range| {
+                crate::optim::sgd_step(&mut s.w, &g[range], 0.1);
+            });
+            let mut out = vec![0.0; n];
+            store.snapshot_into(&mut out);
+            out
+        };
+        for threads in [2usize, 4, 16] {
+            let store =
+                ShardedStore::with_pool(&init, 1, 8, Arc::new(ComputePool::new(threads)));
+            store.par_for_each_shard(|s, range| {
+                crate::optim::sgd_step(&mut s.w, &g[range], 0.1);
+            });
+            let mut out = vec![0.0; n];
+            store.snapshot_into(&mut out);
+            assert_eq!(out, reference, "threads={threads}");
+            // store_w rides the same pool path
+            store.store_w(&reference);
+            let mut back = vec![0.0; n];
+            store.snapshot_into(&mut back);
+            assert_eq!(back, reference, "store_w threads={threads}");
         }
     }
 

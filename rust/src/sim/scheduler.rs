@@ -368,6 +368,18 @@ impl Scheduler {
     pub fn is_live(&self, worker: usize) -> bool {
         self.alive[worker]
     }
+    /// Is worker `w` currently computing (a finish event is in flight for
+    /// it)? Between its pull and its finish the worker's gradient depends
+    /// only on inputs it already holds, so the set of computing workers is
+    /// exactly what the pipelined driver may evaluate concurrently
+    /// ([`crate::util::pool::GradPipeline`]).
+    pub fn is_computing(&self, worker: usize) -> bool {
+        self.state[worker] == WorkerState::Computing
+    }
+    /// The computing workers, in worker order (see [`Self::is_computing`]).
+    pub fn computing_workers(&self) -> Vec<usize> {
+        (0..self.workers).filter(|&w| self.state[w] == WorkerState::Computing).collect()
+    }
     /// Size of the live fleet right now.
     pub fn live_workers(&self) -> usize {
         self.alive.iter().filter(|&&a| a).count()
@@ -762,6 +774,31 @@ mod tests {
         let (a, _) = drive(Box::new(FullyAsync), 4, 150, 21);
         let (b, _) = drive(Box::new(StalenessBounded { bound: 1 << 40 }), 4, 150, 21);
         assert_eq!(a, b, "ungated SSP must reproduce the async schedule");
+    }
+
+    #[test]
+    fn computing_set_tracks_the_worker_lifecycle() {
+        // FullyAsync: exactly the finishing worker leaves and re-enters the
+        // computing set around each event; everyone else stays in flight.
+        let m = 4;
+        let mut sched = Scheduler::new(Box::new(FullyAsync), sampler(m, 3), 0.0);
+        let started = sched.start();
+        assert_eq!(sched.computing_workers(), started);
+        for _ in 0..50 {
+            let (_, w) = sched.next().unwrap();
+            assert!(sched.is_computing(w), "finishing worker must still be computing");
+            sched.complete(w);
+            assert_eq!(sched.computing_workers().len(), m, "async never gates");
+        }
+        // SSP s=0 gates early finishers: the computing set shrinks until
+        // the round completes
+        let mut sched =
+            Scheduler::new(Box::new(StalenessBounded { bound: 0 }), sampler(3, 5), 0.0);
+        sched.start();
+        let (_, w) = sched.next().unwrap();
+        sched.complete(w);
+        assert!(!sched.is_computing(w), "gated worker must leave the computing set");
+        assert_eq!(sched.computing_workers().len(), 2);
     }
 
     #[test]

@@ -1,0 +1,587 @@
+//! Persistent compute pool + pipelined gradient stage (the host-side
+//! compute runtime).
+//!
+//! Before this module existed every multi-shard apply paid a fresh
+//! `thread::scope` spawn/join (tens of microseconds of kernel round-trips
+//! per call) and the coordinator computed one gradient at a time. The two
+//! pieces here remove both costs without changing a single produced bit:
+//!
+//! * [`ComputePool`] — a fixed set of worker threads created **once per
+//!   run**. Jobs are index ranges `0..tasks`; idle workers claim indices
+//!   from a shared atomic counter (dynamic chunking: a slow lane never
+//!   stalls the others), and `run` returns only after every claimed index
+//!   has finished, so tasks may borrow the caller's stack. Task bodies must
+//!   write disjoint data per index; under that contract any claim order
+//!   produces bit-identical results, which is why the sharded store and the
+//!   driver can use the pool freely inside determinism-pinned paths.
+//! * [`GradPipeline`] — the deferred-compute stage the coordinator driver
+//!   uses to evaluate the gradients of *all* in-flight workers concurrently
+//!   (Mishchenko et al. 2022: in-flight computations are mutually
+//!   independent by construction). Work is enqueued per worker as soon as
+//!   its inputs exist (at pull time) and flushed in one pool burst the
+//!   first time a result is demanded; results are keyed by worker, so the
+//!   commit order — and therefore every downstream bit — is untouched.
+//!
+//! `ComputePool::new(1)` spawns nothing and runs every task inline on the
+//! caller, which is the `runtime.threads = 1` serial reference the
+//! regression tests pin multi-lane runs against.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::thread::JoinHandle;
+
+/// Lock a mutex, ignoring poisoning: pool state stays structurally valid
+/// across a propagated task panic (the panic flag carries the failure).
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Default lane count for auto-sized pools: available parallelism, capped
+/// the same way the pre-pool scoped fan-out was.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8)
+}
+
+/// The process-wide shared pool (auto-sized, built on first use). Stores
+/// and drivers that were not handed an explicit pool use this one, so a
+/// test suite creating hundreds of stores spawns one set of threads total.
+pub fn shared() -> &'static Arc<ComputePool> {
+    static SHARED: OnceLock<Arc<ComputePool>> = OnceLock::new();
+    SHARED.get_or_init(|| Arc::new(ComputePool::new(default_threads())))
+}
+
+/// Resolve a `[runtime] threads` knob: `0` = the shared auto-sized pool,
+/// `1` = a serial pool (no threads, inline execution), `n` = a dedicated
+/// pool with `n` lanes.
+pub fn pool_for_threads(threads: usize) -> Arc<ComputePool> {
+    match threads {
+        0 => Arc::clone(shared()),
+        n => Arc::new(ComputePool::new(n)),
+    }
+}
+
+/// A published job: the erased task body plus the index count. The
+/// `'static` on the task is a lie told to the type system — see the safety
+/// argument in [`ComputePool::run`].
+#[derive(Clone, Copy)]
+struct Job {
+    task: &'static (dyn Fn(usize) + Sync),
+    tasks: usize,
+}
+
+struct JobState {
+    /// Bumped once per published job; workers key adoption on a change.
+    epoch: u64,
+    /// The current job, retired (set back to `None`) before `run` returns.
+    job: Option<Job>,
+    /// Pool workers currently inside a claim loop for the published job.
+    claiming: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<JobState>,
+    /// Workers park here between jobs.
+    work_cv: Condvar,
+    /// The submitter parks here until every claimer has exited.
+    done_cv: Condvar,
+    /// Next unclaimed task index of the current job.
+    next: AtomicUsize,
+    /// First panic payload raised by a task body; `run` resumes it after
+    /// the join so the original message/location survives.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+struct PoolInner {
+    shared: Arc<Shared>,
+    /// One job at a time: concurrent `run` calls queue here.
+    submit: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Fixed-size persistent thread pool; see the module docs.
+pub struct ComputePool {
+    /// `None` = serial pool (one lane, inline execution).
+    inner: Option<PoolInner>,
+    threads: usize,
+}
+
+impl ComputePool {
+    /// Build a pool with `threads` total lanes (the submitting thread is a
+    /// lane, so `threads - 1` workers are spawned; `threads <= 1` spawns
+    /// nothing and `run` executes inline in index order).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        if threads == 1 {
+            return Self { inner: None, threads: 1 };
+        }
+        let shared = Arc::new(Shared {
+            state: Mutex::new(JobState { epoch: 0, job: None, claiming: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            next: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+        });
+        let handles = (0..threads - 1)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("compute-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning compute-pool worker")
+            })
+            .collect();
+        Self { inner: Some(PoolInner { shared, submit: Mutex::new(()), handles }), threads }
+    }
+
+    /// Total parallel lanes (including the submitting thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// True for the one-lane pool: `run` executes inline, in index order.
+    pub fn is_serial(&self) -> bool {
+        self.inner.is_none()
+    }
+
+    /// Execute `f(0), f(1), ..., f(tasks - 1)`, fanning the indices out
+    /// over the pool lanes, and return once **all** of them finished. `f`
+    /// may borrow the caller's stack. Indices are claimed dynamically in
+    /// ascending order; bodies run concurrently, so per-index effects must
+    /// be disjoint (each index owns its output). If any body panics, the
+    /// remaining claimed indices still run and the panic is re-raised here
+    /// after the join.
+    pub fn run(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if tasks == 0 {
+            return;
+        }
+        let inner = match &self.inner {
+            Some(inner) if tasks > 1 => inner,
+            _ => {
+                for i in 0..tasks {
+                    f(i);
+                }
+                return;
+            }
+        };
+        let _submit = lock_ignore_poison(&inner.submit);
+        let shared = &*inner.shared;
+        *lock_ignore_poison(&shared.panic) = None;
+        shared.next.store(0, Ordering::Relaxed);
+        // SAFETY: the erased reference is only dereferenced by claim loops
+        // that this function joins before returning — the job is retired
+        // under the state lock and the wait below blocks until `claiming`
+        // drops to zero, so no lane can touch `task` after `run` returns;
+        // the borrow therefore outlives every use despite the 'static
+        // erasure (the same argument std::thread::scope makes).
+        let task = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let job = Job { task, tasks };
+        {
+            let mut st = lock_ignore_poison(&shared.state);
+            st.epoch = st.epoch.wrapping_add(1);
+            st.job = Some(job);
+            shared.work_cv.notify_all();
+        }
+        // the submitter is a lane too
+        run_tasks(shared, job);
+        {
+            let mut st = lock_ignore_poison(&shared.state);
+            st.job = None; // no late adoption: every index is claimed by now
+            while st.claiming > 0 {
+                st = shared.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        if let Some(payload) = lock_ignore_poison(&shared.panic).take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl std::fmt::Debug for ComputePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ComputePool")
+            .field("threads", &self.threads)
+            .field("serial", &self.is_serial())
+            .finish()
+    }
+}
+
+impl Drop for ComputePool {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.take() {
+            {
+                let mut st = lock_ignore_poison(&inner.shared.state);
+                st.shutdown = true;
+                inner.shared.work_cv.notify_all();
+            }
+            for h in inner.handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Claim-and-execute loop shared by pool workers and the submitter.
+fn run_tasks(shared: &Shared, job: Job) {
+    loop {
+        let i = shared.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.tasks {
+            break;
+        }
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| (job.task)(i))) {
+            let mut slot = lock_ignore_poison(&shared.panic);
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = lock_ignore_poison(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if let Some(job) = st.job {
+                        st.claiming += 1;
+                        break job;
+                    }
+                    // epoch moved but the job already retired: keep waiting
+                }
+                st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        run_tasks(shared, job);
+        let mut st = lock_ignore_poison(&shared.state);
+        st.claiming -= 1;
+        if st.claiming == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pipelined per-worker compute stage
+// ---------------------------------------------------------------------------
+
+/// Deferred per-worker compute stage over a [`ComputePool`].
+///
+/// Workers are `enqueue`d as soon as their inputs exist; the first `take`
+/// that misses flushes **every** queued worker concurrently in one pool
+/// burst and stores the results per worker, so the caller's consumption
+/// order (the event-driven commit order) is completely decoupled from the
+/// evaluation order. With a serial pool the flush evaluates in enqueue
+/// order on the calling thread — the bit-identical reference the chaos
+/// pins compare multi-lane runs against (results are keyed by worker and
+/// each compute is a pure function of per-worker inputs, so lane count
+/// can't change any value).
+///
+/// Queue/slot state lives in reusable per-worker arenas: steady-state
+/// operation performs no allocation in the pipeline layer itself.
+pub struct GradPipeline<T> {
+    pool: Arc<ComputePool>,
+    /// Workers enqueued since the last flush, in enqueue order.
+    queued: Vec<usize>,
+    /// Computed-but-unconsumed results, one slot per worker. Mutexed so
+    /// flush tasks can write their own worker's slot concurrently;
+    /// steady-state uncontended (each task touches exactly one slot).
+    slots: Vec<Mutex<Option<T>>>,
+    /// Workers whose last compute was discarded: its inputs were never
+    /// consumed in the commit order, so the next enqueue must re-use them
+    /// (signalled through [`Self::enqueue`]'s return value).
+    retained: Vec<bool>,
+}
+
+impl<T: Send> GradPipeline<T> {
+    pub fn new(pool: Arc<ComputePool>, workers: usize) -> Self {
+        Self {
+            pool,
+            queued: Vec::with_capacity(workers),
+            slots: (0..workers).map(|_| Mutex::new(None)).collect(),
+            retained: vec![false; workers],
+        }
+    }
+
+    /// Number of workers with a compute in flight (queued or computed).
+    pub fn in_flight(&self) -> usize {
+        self.queued.len()
+            + self.slots.iter().filter(|s| lock_ignore_poison(s).is_some()).count()
+    }
+
+    /// Is a compute in flight for `worker`?
+    pub fn has(&self, worker: usize) -> bool {
+        self.queued.contains(&worker) || lock_ignore_poison(&self.slots[worker]).is_some()
+    }
+
+    /// Register `worker` for the next flush. At most one compute may be in
+    /// flight per worker (the scheduler's pull → compute → push lifecycle
+    /// guarantees the caller never violates this).
+    ///
+    /// Returns `true` when the caller must draw **fresh** inputs (batch)
+    /// for this compute, `false` when a previously [`Self::discard`]ed
+    /// compute's inputs are retained and must be re-used — in the serial
+    /// draw-at-commit order those inputs were never consumed, so drawing
+    /// again would shift the worker's whole input stream.
+    pub fn enqueue(&mut self, worker: usize) -> bool {
+        debug_assert!(!self.has(worker), "worker {worker} already has a compute in flight");
+        self.queued.push(worker);
+        !std::mem::replace(&mut self.retained[worker], false)
+    }
+
+    /// Drop `worker`'s in-flight compute (crashed epoch: it must never be
+    /// consumed); its inputs are marked retained for the next enqueue.
+    /// Returns whether a compute existed.
+    pub fn discard(&mut self, worker: usize) -> bool {
+        let existed = if lock_ignore_poison(&self.slots[worker]).take().is_some() {
+            true
+        } else if let Some(p) = self.queued.iter().position(|&v| v == worker) {
+            self.queued.remove(p);
+            true
+        } else {
+            false
+        };
+        if existed {
+            self.retained[worker] = true;
+        }
+        existed
+    }
+
+    /// Evaluate every queued worker concurrently on the pool.
+    pub fn flush<F>(&mut self, compute: &F)
+    where
+        F: Fn(usize) -> T + Sync,
+    {
+        if self.queued.is_empty() {
+            return;
+        }
+        let (queued, slots) = (&self.queued, &self.slots);
+        self.pool.run(queued.len(), &|i| {
+            let w = queued[i];
+            *lock_ignore_poison(&slots[w]) = Some(compute(w));
+        });
+        self.queued.clear();
+    }
+
+    /// Consume `worker`'s result, flushing the queue first if it has not
+    /// been evaluated yet. Panics if no compute is in flight for `worker`.
+    pub fn take<F>(&mut self, worker: usize, compute: &F) -> T
+    where
+        F: Fn(usize) -> T + Sync,
+    {
+        if lock_ignore_poison(&self.slots[worker]).is_none() {
+            self.flush(compute);
+        }
+        lock_ignore_poison(&self.slots[worker])
+            .take()
+            .expect("no compute in flight for worker")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executes_every_task_exactly_once() {
+        let pool = ComputePool::new(4);
+        assert_eq!(pool.threads(), 4);
+        assert!(!pool.is_serial());
+        let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(hits.len(), &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn serial_pool_runs_inline_in_order() {
+        let pool = ComputePool::new(1);
+        assert!(pool.is_serial());
+        let order = Mutex::new(Vec::new());
+        pool.run(10, &|i| order.lock().unwrap().push(i));
+        assert_eq!(*order.lock().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tasks_may_borrow_the_callers_stack() {
+        // the whole point of the lifetime erasure: read a stack slice,
+        // write disjoint stack outputs through per-index mutexes
+        let pool = ComputePool::new(3);
+        let input: Vec<u64> = (0..100).map(|i| i * 3).collect();
+        let out: Vec<Mutex<u64>> = (0..100).map(|_| Mutex::new(0)).collect();
+        pool.run(100, &|i| {
+            *out[i].lock().unwrap() = input[i] + 1;
+        });
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(*o.lock().unwrap(), input[i] + 1);
+        }
+    }
+
+    #[test]
+    fn many_reuses_do_not_respawn_or_wedge() {
+        let pool = ComputePool::new(4);
+        let total = AtomicUsize::new(0);
+        for round in 0..300 {
+            let tasks = 1 + round % 7;
+            pool.run(tasks, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        let expect: usize = (0..300).map(|r| 1 + r % 7).sum();
+        assert_eq!(total.load(Ordering::Relaxed), expect);
+    }
+
+    #[test]
+    fn zero_tasks_is_a_noop() {
+        let pool = ComputePool::new(2);
+        pool.run(0, &|_| panic!("must not run"));
+    }
+
+    #[test]
+    fn panic_propagates_and_the_pool_survives() {
+        let pool = ComputePool::new(3);
+        let done = AtomicUsize::new(0);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, &|i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+                done.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        let payload = r.expect_err("task panic must propagate out of run");
+        assert_eq!(
+            payload.downcast_ref::<&str>(),
+            Some(&"boom"),
+            "the original panic payload must survive the pool"
+        );
+        assert_eq!(done.load(Ordering::Relaxed), 15, "non-panicking tasks still ran");
+        // the pool remains usable after a propagated panic
+        let again = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            again.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(again.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn concurrent_submitters_serialize_without_cross_talk() {
+        let pool = Arc::new(ComputePool::new(4));
+        let mut handles = Vec::new();
+        for t in 0..3 {
+            let pool = Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || {
+                let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+                for _ in 0..50 {
+                    pool.run(hits.len(), &|i| {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::Relaxed) == 50),
+                    "submitter {t} lost or double-ran tasks"
+                );
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn pool_for_threads_resolves_the_knob() {
+        assert!(pool_for_threads(1).is_serial());
+        assert_eq!(pool_for_threads(3).threads(), 3);
+        // 0 = the shared auto-sized pool (same instance every time)
+        let a = pool_for_threads(0);
+        let b = pool_for_threads(0);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.threads() >= 1);
+    }
+
+    #[test]
+    fn pipeline_flushes_queued_workers_and_keys_results_by_worker() {
+        for threads in [1usize, 4] {
+            let mut pipe: GradPipeline<u64> =
+                GradPipeline::new(Arc::new(ComputePool::new(threads)), 5);
+            let compute = |w: usize| (w as u64) * 10 + 1;
+            assert!(pipe.enqueue(3), "first enqueue draws fresh inputs");
+            assert!(pipe.enqueue(0));
+            assert!(pipe.enqueue(4));
+            assert_eq!(pipe.in_flight(), 3);
+            assert!(pipe.has(3) && !pipe.has(1));
+            // first take flushes everything; later takes hit the slots
+            assert_eq!(pipe.take(0, &compute), 1);
+            assert_eq!(pipe.in_flight(), 2);
+            assert_eq!(pipe.take(4, &compute), 41);
+            assert_eq!(pipe.take(3, &compute), 31);
+            assert_eq!(pipe.in_flight(), 0);
+        }
+    }
+
+    #[test]
+    fn pipeline_steady_state_reuses_its_arenas() {
+        // after the first full cycle the pipeline layer allocates nothing:
+        // the queue and the per-worker slots are reusable arenas (pointer/
+        // capacity pinned, the same invariant the compressor arenas carry)
+        let workers = 6;
+        let mut pipe: GradPipeline<u64> = GradPipeline::new(Arc::new(ComputePool::new(3)), workers);
+        let compute = |w: usize| w as u64;
+        // warm one cycle
+        for w in 0..workers {
+            pipe.enqueue(w);
+        }
+        for w in 0..workers {
+            assert_eq!(pipe.take(w, &compute), w as u64);
+        }
+        let queued_ptr = pipe.queued.as_ptr();
+        let queued_cap = pipe.queued.capacity();
+        let slots_ptr = pipe.slots.as_ptr();
+        for _ in 0..50 {
+            for w in 0..workers {
+                pipe.enqueue(w);
+            }
+            for w in (0..workers).rev() {
+                assert_eq!(pipe.take(w, &compute), w as u64);
+            }
+        }
+        assert_eq!(pipe.queued.as_ptr(), queued_ptr, "queue arena reallocated");
+        assert_eq!(pipe.queued.capacity(), queued_cap, "queue arena regrew");
+        assert_eq!(pipe.slots.as_ptr(), slots_ptr, "slot arena moved");
+    }
+
+    #[test]
+    fn pipeline_discard_drops_queued_and_computed_entries() {
+        let mut pipe: GradPipeline<u64> = GradPipeline::new(Arc::new(ComputePool::new(2)), 4);
+        let compute = |w: usize| w as u64;
+        assert!(pipe.enqueue(1));
+        assert!(pipe.discard(1), "queued entry must be discardable");
+        assert!(!pipe.discard(1), "discard is idempotent");
+        assert_eq!(pipe.in_flight(), 0);
+        // the discarded compute's inputs are retained: the next enqueue
+        // must re-use them (returns false), the one after draws fresh
+        assert!(!pipe.enqueue(1), "post-discard enqueue must re-use retained inputs");
+        assert_eq!(pipe.take(1, &compute), 1);
+        assert!(pipe.enqueue(1), "consumed compute: back to fresh draws");
+        assert_eq!(pipe.take(1, &compute), 1);
+        // computed entry: enqueue two, flush via take of one, discard other
+        assert!(pipe.enqueue(2));
+        assert!(pipe.enqueue(3));
+        assert_eq!(pipe.take(2, &compute), 2);
+        assert!(pipe.has(3));
+        assert!(pipe.discard(3), "computed entry must be discardable");
+        assert!(!pipe.has(3));
+        assert!(!pipe.enqueue(3), "discarded-after-flush inputs are retained too");
+        // a worker with no in-flight compute reports false
+        assert!(!pipe.discard(0));
+    }
+}

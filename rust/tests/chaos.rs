@@ -26,7 +26,11 @@
 //!   drops; late joins bounded by the config);
 //! * identical seeds reproduce identical event streams bitwise, and a
 //!   zero-rate (inert) plan reproduces the fault-free schedule bitwise —
-//!   the "faults off == PR-3 behaviour" pin.
+//!   the "faults off == PR-3 behaviour" pin;
+//! * the pipelined gradient stage (batches drawn at pull, gradients
+//!   evaluated in pool bursts, dropped epochs discarded with their batch
+//!   retained) reproduces the at-finish serial loop bit-for-bit at every
+//!   pool lane count — the "runtime.threads is a pure wallclock knob" pin.
 
 use dc_asgd::config::{Algorithm, DelayModel};
 use dc_asgd::ps::{Hyper, NativeKernel, ParamServer};
@@ -34,6 +38,7 @@ use dc_asgd::sim::{
     BarrierSync, CommCosts, CrashPolicy, DelaySampler, FaultConfig, FaultPlan, FullyAsync,
     Protocol, Scheduler, SimEvent, StalenessBounded,
 };
+use dc_asgd::util::pool::{pool_for_threads, GradPipeline};
 use dc_asgd::util::rng::Pcg64;
 
 /// Total seeded fault plans across the suites (env-scalable for CI).
@@ -488,6 +493,201 @@ fn faults_off_schedule_is_bitwise_identical_to_pre_fault_builds() {
         assert_eq!(plain.wait_totals(), faulty.wait_totals());
         assert_eq!(faulty.fault_stats(), dc_asgd::sim::FaultStats::default());
     }
+}
+
+/// One pipelined chaos drive: the driver's deferred-compute bookkeeping
+/// (batch drawn at pull, gradients flushed in pool bursts, dropped epochs
+/// discarded with their batch retained for re-use) run against a real PS
+/// under a seeded fault plan. Returns the final model bits plus the full
+/// push trace (worker, version, staleness, gradient checksum).
+///
+/// `threads = None` selects the at-finish REFERENCE drive instead:
+/// gradients computed serially at each finish event with the batch drawn
+/// right there — exactly the pre-pipeline serial loop. Pipelined drives
+/// at any lane count must reproduce it bit-for-bit.
+fn pipelined_drive(seed: u64, threads: Option<usize>) -> (Vec<u32>, Vec<(usize, u64, u64, u32)>) {
+    let mut rng = Pcg64::new(seed);
+    let m = 2 + rng.below(6) as usize; // 2..=7 workers
+    let use_ssp = rng.below(2) == 1;
+    let s = rng.below(4);
+    let protocol: Box<dyn Protocol> = if use_ssp {
+        Box::new(StalenessBounded { bound: s })
+    } else {
+        Box::new(FullyAsync)
+    };
+    let fcfg = random_fault_config(&mut rng, m);
+    let plan = FaultPlan::from_config(&fcfg, m, seed).unwrap();
+    let delays = DelaySampler::new(random_delay_model(&mut rng), m, seed ^ 0x99);
+    let mut sched =
+        Scheduler::with_faults(protocol, delays, 0.01, CommCosts::default(), Some(plan));
+
+    let n = 64;
+    let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.07).sin()).collect();
+    let hyper = Hyper { lambda0: 0.5, ms_momentum: 0.9, momentum: 0.0, eps: 1e-7 };
+    let ps = ParamServer::new(&init, m, 3, Algorithm::DcAsgdConst, hyper, Box::new(NativeKernel))
+        .unwrap();
+
+    // deterministic synthetic gradient: a pure function of the worker's
+    // snapshot and the batch id it drew — the stand-in for engine.train
+    let synth = |snap: &[f32], batch_id: u64, worker: usize| -> Vec<f32> {
+        snap.iter()
+            .enumerate()
+            .map(|(i, &x)| {
+                (x + (batch_id as f32) * 0.01 + (worker as f32) * 0.001
+                    + (i as f32 * 0.03).cos())
+                    * 0.05
+            })
+            .collect()
+    };
+    let checksum = |g: &[f32]| -> u32 {
+        g.iter().fold(0u32, |acc, &x| acc.rotate_left(5) ^ x.to_bits())
+    };
+
+    let mut snaps: Vec<Vec<f32>> = vec![init.clone(); m];
+    let mut batch_ctr = vec![0u64; m];
+    let mut trace: Vec<(usize, u64, u64, u32)> = Vec::new();
+    let mut finishes = 0usize;
+    let mut events = 0usize;
+
+    match threads {
+        None => {
+            // reference: the pre-pipeline serial loop — pull at release,
+            // draw the batch and compute the gradient AT the finish event
+            for w in sched.start() {
+                ps.pull(w, &mut snaps[w]);
+            }
+            while events < 3000 && finishes < 250 {
+                events += 1;
+                match sched.next_event() {
+                    None => break,
+                    Some(SimEvent::Finish { worker: w, .. }) => {
+                        let bid = batch_ctr[w];
+                        batch_ctr[w] += 1;
+                        let g = synth(&snaps[w], bid, w);
+                        let out = ps.push(w, &g, 0.05);
+                        trace.push((w, out.version, out.staleness, checksum(&g)));
+                        finishes += 1;
+                        for v in sched.complete(w) {
+                            ps.pull(v, &mut snaps[v]);
+                        }
+                    }
+                    Some(SimEvent::Crash { released, .. }) => {
+                        for v in released {
+                            ps.pull(v, &mut snaps[v]);
+                        }
+                    }
+                    Some(SimEvent::Join { worker: w, computing, released, .. }) => {
+                        ps.reset_worker(w);
+                        if computing {
+                            ps.pull(w, &mut snaps[w]);
+                        }
+                        for v in released {
+                            ps.pull(v, &mut snaps[v]);
+                        }
+                    }
+                }
+            }
+        }
+        Some(threads) => {
+            // pipelined: batch drawn at pull, gradient deferred to a pool
+            // flush, dropped epochs discarded with their batch retained
+            let mut pipe: GradPipeline<Vec<f32>> = GradPipeline::new(pool_for_threads(threads), m);
+            let mut pending_bid = vec![0u64; m];
+            // exactly the driver's ComputeStage::enqueue: draw a fresh
+            // batch id only when the pipeline did not retain the inputs of
+            // a crash-dropped compute
+            let enqueue = |pipe: &mut GradPipeline<Vec<f32>>,
+                           batch_ctr: &mut [u64],
+                           pending_bid: &mut [u64],
+                           w: usize| {
+                if pipe.enqueue(w) {
+                    pending_bid[w] = batch_ctr[w];
+                    batch_ctr[w] += 1;
+                }
+            };
+            for w in sched.start() {
+                ps.pull(w, &mut snaps[w]);
+                enqueue(&mut pipe, &mut batch_ctr, &mut pending_bid, w);
+            }
+            while events < 3000 && finishes < 250 {
+                events += 1;
+                match sched.next_event() {
+                    None => break,
+                    Some(SimEvent::Finish { worker: w, .. }) => {
+                        assert!(sched.is_computing(w), "seed {seed}: finish without compute");
+                        let g = {
+                            let (snaps, pending_bid) = (&snaps, &pending_bid);
+                            pipe.take(w, &|v: usize| synth(&snaps[v], pending_bid[v], v))
+                        };
+                        let out = ps.push(w, &g, 0.05);
+                        trace.push((w, out.version, out.staleness, checksum(&g)));
+                        finishes += 1;
+                        for v in sched.complete(w) {
+                            ps.pull(v, &mut snaps[v]);
+                            enqueue(&mut pipe, &mut batch_ctr, &mut pending_bid, v);
+                        }
+                    }
+                    Some(SimEvent::Crash { worker: cw, released, .. }) => {
+                        // the driver's rule verbatim: a dropped epoch's
+                        // compute is discarded (inputs retained); a salvage
+                        // drain (still live) keeps it
+                        if !sched.is_live(cw) {
+                            pipe.discard(cw);
+                        }
+                        for v in released {
+                            ps.pull(v, &mut snaps[v]);
+                            enqueue(&mut pipe, &mut batch_ctr, &mut pending_bid, v);
+                        }
+                    }
+                    Some(SimEvent::Join { worker: w, computing, released, .. }) => {
+                        ps.reset_worker(w);
+                        if computing {
+                            ps.pull(w, &mut snaps[w]);
+                            enqueue(&mut pipe, &mut batch_ctr, &mut pending_bid, w);
+                        }
+                        for v in released {
+                            ps.pull(v, &mut snaps[v]);
+                            enqueue(&mut pipe, &mut batch_ctr, &mut pending_bid, v);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let mut model = vec![0.0f32; n];
+    ps.snapshot(&mut model);
+    (model.iter().map(|x| x.to_bits()).collect(), trace)
+}
+
+/// PR-5 pin: the pipelined gradient stage is bitwise inert. For seeded
+/// random chaos plans (crashes, salvage drains, rejoins, stragglers), the
+/// deferred-compute drive must reproduce the at-finish serial reference
+/// exactly — same push trace (worker/version/staleness/gradient bits) and
+/// same final model bits — at every pool lane count, including the
+/// `runtime.threads = 1` serial pool.
+#[test]
+fn pipelined_gradients_are_bitwise_identical_to_serial() {
+    let cases = (total_seeds() / 6).max(2);
+    let mut total_pushes = 0usize;
+    for case in 0..cases {
+        let seed = 0x91BE_3000 + case;
+        let (ref_model, ref_trace) = pipelined_drive(seed, None);
+        total_pushes += ref_trace.len();
+        for threads in [1usize, 4] {
+            let (model, trace) = pipelined_drive(seed, Some(threads));
+            assert_eq!(
+                trace, ref_trace,
+                "seed {seed} threads {threads}: push trace diverged from the serial loop"
+            );
+            assert_eq!(
+                model, ref_model,
+                "seed {seed} threads {threads}: final model bits diverged"
+            );
+        }
+    }
+    // a fleet can die out on an unlucky seed, but not on every one
+    assert!(total_pushes > 0, "no chaos case ever pushed a gradient");
 }
 
 /// Scripted churn through the public injection hooks: a crash mid-round
