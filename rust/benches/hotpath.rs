@@ -1,28 +1,42 @@
-//! Hot-path micro-benchmarks + the PR-5 machine-readable perf baseline.
+//! Hot-path micro-benchmarks + the PR-6 machine-readable perf baseline.
 //!
 //! Sections (none need compiled artifacts — this bench runs everywhere):
 //!
-//! A) update-rule kernels on the real mlp_cifar vector (860k f32),
-//! B) codec encode/decode through the word-level bit packers,
-//! C) multi-shard apply: serial vs per-call scoped-spawn (the pre-PR-5
+//! A) update-rule kernels on the real mlp_cifar vector (860k f32), each as
+//!    a scalar-reference / chunked-SIMD pair,
+//! B) fused quantized decode→compensate→apply vs the staged
+//!    decode-into-arena + scalar-step path it replaces,
+//! C) codec cells: QSGD encode (streaming accumulator vs per-field
+//!    `write_bits`), raw level packing, streaming decode, and TopK encode
+//!    (u64-key + pool-parallel vs the scalar comparator reference),
+//! D) multi-shard apply: serial vs per-call scoped-spawn (the pre-PR-5
 //!    implementation, replicated in-bench) vs the persistent compute pool,
-//! D) the ps_throughput headline cell (M=8, S=8 pull+push cycles).
+//! E) the ps_throughput headline cell (M=8, S=8 pull+push cycles).
+//!
+//! Every kernel cell also reports approximate DRAM traffic in GB/s
+//! (bytes-touched-per-call / mean time) so regressions are interpretable
+//! across machines: a cell near memory bandwidth cannot be expected to
+//! speed up further, one far below it is compute-bound.
 //!
 //! Output modes:
 //!
 //! * default — print the tables and write the headline numbers to
-//!   `BENCH_PR5.json` (repo root, `"calibrated": true`), refreshing the
-//!   committed perf baseline;
+//!   `BENCH_PR6.json` (repo root, `"calibrated": true`, plus a
+//!   `"speedups"` vs-scalar column and a `"gbps"` table), refreshing the
+//!   committed perf baseline. `BENCH_PR5.json` stays committed as the
+//!   prior (scalar-era) point in the trajectory;
 //! * `DCASGD_PERF_GATE=1` — measure, compare against the committed
-//!   `BENCH_PR5.json`, and FAIL (exit 1) on a >2x regression of any time
+//!   `BENCH_PR6.json`, and FAIL (exit 1) on a >2x regression of any time
 //!   (or >2x drop of any throughput). A baseline with
-//!   `"calibrated": false` (the checked-in placeholder before the first
-//!   real run) skips the gate loudly instead of failing on noise.
+//!   `"calibrated": false` skips the gate loudly instead of failing on
+//!   noise — but the committed baseline IS calibrated, so CI enforces.
 
 use dc_asgd::bench::{header, time_fn};
+use dc_asgd::compress::codecs::{pack_levels, pack_levels_scalar};
+use dc_asgd::compress::{decode_dc_apply, decode_dca_apply};
 use dc_asgd::compress::{GradientCodec, Qsgd, TopK, WirePayload};
 use dc_asgd::config::Algorithm;
-use dc_asgd::optim;
+use dc_asgd::optim::{self, kernels};
 use dc_asgd::ps::{Hyper, NativeKernel, ParamServer, ShardedStore};
 use dc_asgd::util::json::Json;
 use dc_asgd::util::pool::ComputePool;
@@ -36,6 +50,8 @@ const N: usize = 860_160;
 const SHARDS: usize = 8;
 /// Measurement window for the throughput cell.
 const CELL_MS: u64 = 250;
+/// QSGD quantization width used by the codec cells.
+const QBITS: u32 = 4;
 
 fn randn(seed: u64, n: usize, scale: f64) -> Vec<f32> {
     let mut rng = Pcg64::new(seed);
@@ -44,6 +60,15 @@ fn randn(seed: u64, n: usize, scale: f64) -> Vec<f32> {
 
 fn hyper() -> Hyper {
     Hyper { lambda0: 0.04, ms_momentum: 0.95, momentum: 0.0, eps: 1e-7 }
+}
+
+/// Approximate DRAM traffic of one call in GB/s.
+fn gbps(bytes_per_call: f64, secs: f64) -> f64 {
+    if secs > 0.0 {
+        bytes_per_call / secs / 1e9
+    } else {
+        0.0
+    }
 }
 
 /// Contiguous shard ranges over n elements (mirrors ShardedStore's split).
@@ -124,7 +149,7 @@ fn main() {
     let gate = std::env::var("DCASGD_PERF_GATE")
         .map(|v| !v.is_empty() && v != "0")
         .unwrap_or(false);
-    let baseline_path = std::path::Path::new("BENCH_PR5.json");
+    let baseline_path = std::path::Path::new("BENCH_PR6.json");
     // gate mode: read and validate the committed baseline BEFORE the
     // multi-minute measurement suite, so an uncalibrated placeholder (or a
     // missing file) skips instantly instead of measuring and discarding
@@ -139,7 +164,7 @@ fn main() {
         let committed = match Json::parse(&committed) {
             Ok(j) => j,
             Err(e) => {
-                eprintln!("PERF GATE FAILED: unparsable BENCH_PR5.json: {e:?}");
+                eprintln!("PERF GATE FAILED: unparsable BENCH_PR6.json: {e:?}");
                 std::process::exit(1);
             }
         };
@@ -155,56 +180,172 @@ fn main() {
         None
     };
     let mut results: Vec<(&'static str, f64)> = Vec::new();
+    let mut gbs: Vec<(&'static str, f64)> = Vec::new();
+    let nf = N as f64;
 
-    // ---- A) update-rule kernels -----------------------------------------
-    println!("# A) update-rule kernels on n={N} (f32)");
+    // ---- A) update-rule kernels: scalar reference vs chunked-SIMD --------
+    println!("# A) update-rule kernels on n={N} (f32), scalar vs chunked");
     header();
     let g = randn(1, N, 0.01);
     let bak = randn(2, N, 1.0);
     let mut w = randn(3, N, 1.0);
     let mut ms: Vec<f32> = randn(4, N, 0.01).iter().map(|x| x.abs()).collect();
-    let s_sgd = time_fn("native sgd_step", 3, 30, || {
-        optim::sgd_step(&mut w, &g, 1e-6);
+
+    let s_sgd_sc = time_fn("sgd_step scalar", 3, 30, || {
+        optim::sgd_step_scalar(&mut w, &g, 1e-6);
+    });
+    s_sgd_sc.print();
+    let s_sgd = time_fn("sgd_step chunked", 3, 30, || {
+        kernels::sgd_step_simd(&mut w, &g, 1e-6);
     });
     s_sgd.print();
-    let s_dc = time_fn("native dc_step (Eqn.10)", 3, 30, || {
-        optim::dc_step(&mut w, &g, &bak, 1e-6, 0.04);
+    let s_dc_sc = time_fn("dc_step scalar (Eqn.10)", 3, 30, || {
+        optim::dc_step_scalar(&mut w, &g, &bak, 1e-6, 0.04);
+    });
+    s_dc_sc.print();
+    let s_dc = time_fn("dc_step chunked", 3, 30, || {
+        kernels::dc_step_simd(&mut w, &g, &bak, 1e-6, 0.04);
     });
     s_dc.print();
-    let s_dca = time_fn("native dc_adaptive_step", 3, 30, || {
-        optim::dc_adaptive_step(&mut w, &g, &bak, &mut ms, 1e-6, 2.0, 0.95, 1e-7);
+    let s_dca_sc = time_fn("dc_adaptive_step scalar", 3, 30, || {
+        optim::dc_adaptive_step_scalar(&mut w, &g, &bak, &mut ms, 1e-6, 2.0, 0.95, 1e-7);
+    });
+    s_dca_sc.print();
+    let s_dca = time_fn("dc_adaptive_step chunked", 3, 30, || {
+        kernels::dc_adaptive_step_simd(&mut w, &g, &bak, &mut ms, 1e-6, 2.0, 0.95, 1e-7);
     });
     s_dca.print();
+    // bytes touched per call: w is read+written (8 B/elem), every other
+    // operand read (4 B/elem), ms read+written
+    gbs.push(("sgd_step", gbps(12.0 * nf, s_sgd.mean_s)));
+    gbs.push(("dc_step", gbps(16.0 * nf, s_dc.mean_s)));
+    gbs.push(("dca_step", gbps(24.0 * nf, s_dca.mean_s)));
+    println!(
+        "speedup vs scalar: sgd {:.2}x | dc {:.2}x | dca {:.2}x",
+        s_sgd_sc.mean_s / s_sgd.mean_s,
+        s_dc_sc.mean_s / s_dc.mean_s,
+        s_dca_sc.mean_s / s_dca.mean_s,
+    );
+    results.push(("sgd_step_scalar_s", s_sgd_sc.mean_s));
     results.push(("sgd_step_s", s_sgd.mean_s));
+    results.push(("dc_step_scalar_s", s_dc_sc.mean_s));
     results.push(("dc_step_s", s_dc.mean_s));
+    results.push(("dca_step_scalar_s", s_dca_sc.mean_s));
     results.push(("dca_step_s", s_dca.mean_s));
 
-    // ---- B) codecs through the word-level bit packers --------------------
-    println!("\n# B) codec encode/decode (word-level packing) on n={N}");
+    // ---- B) fused quantized decode→compensate→apply ----------------------
+    println!("\n# B) quantized push: staged (arena) vs fused, qsgd@{QBITS} n={N}");
     header();
-    let mut qsgd = Qsgd::new(4, Pcg64::new(7));
+    let mut qsgd = Qsgd::new(QBITS, Pcg64::new(7));
     let mut payload = WirePayload::default();
-    let s_qenc = time_fn("qsgd@4 encode (write_bits)", 2, 15, || {
+    qsgd.encode(&g, &mut payload);
+    let (qb, qnorm, qpacked) = match &payload {
+        WirePayload::Quantized { bits, norm, packed, .. } => {
+            (*bits as u32, *norm, packed.clone())
+        }
+        other => panic!("expected quantized payload, got {other:?}"),
+    };
+    let packed_bytes = qpacked.len() as f64;
+    let mut dec = vec![0.0f32; N];
+    let s_staged_dc = time_fn("staged: decode_into + dc_step scalar", 3, 30, || {
+        payload.decode_into(&mut dec);
+        optim::dc_step_scalar(&mut w, &dec, &bak, 1e-6, 0.04);
+    });
+    s_staged_dc.print();
+    let s_fused_dc = time_fn("fused: decode_dc_apply", 3, 30, || {
+        decode_dc_apply(&mut w, &bak, 0, qb, qnorm, &qpacked, 1e-6, 0.04);
+    });
+    s_fused_dc.print();
+    let s_staged_dca = time_fn("staged: decode_into + dca scalar", 3, 30, || {
+        payload.decode_into(&mut dec);
+        optim::dc_adaptive_step_scalar(&mut w, &dec, &bak, &mut ms, 1e-6, 2.0, 0.95, 1e-7);
+    });
+    s_staged_dca.print();
+    let s_fused_dca = time_fn("fused: decode_dca_apply", 3, 30, || {
+        decode_dca_apply(&mut w, &bak, &mut ms, 0, qb, qnorm, &qpacked, 1e-6, 2.0, 0.95, 1e-7);
+    });
+    s_fused_dca.print();
+    gbs.push(("fused_dc_apply", gbps(12.0 * nf + packed_bytes, s_fused_dc.mean_s)));
+    gbs.push(("fused_dca_apply", gbps(24.0 * nf + packed_bytes, s_fused_dca.mean_s)));
+    println!(
+        "fused vs staged: dc {:.2}x | dca {:.2}x",
+        s_staged_dc.mean_s / s_fused_dc.mean_s,
+        s_staged_dca.mean_s / s_fused_dca.mean_s,
+    );
+    results.push(("staged_dc_apply_s", s_staged_dc.mean_s));
+    results.push(("fused_dc_apply_s", s_fused_dc.mean_s));
+    results.push(("staged_dca_apply_s", s_staged_dca.mean_s));
+    results.push(("fused_dca_apply_s", s_fused_dca.mean_s));
+
+    // ---- C) codecs: streaming/parallel vs scalar reference ---------------
+    println!("\n# C) codec encode/decode on n={N}");
+    header();
+    // the codec fast paths dispatch on the process-global flag; the bench
+    // flips it around the scalar cells (single-threaded, restored after)
+    optim::set_simd_enabled(false);
+    let mut qsgd_sc = Qsgd::new(QBITS, Pcg64::new(7));
+    let s_qenc_sc = time_fn("qsgd@4 encode scalar (write_bits)", 2, 15, || {
+        qsgd_sc.encode(&g, &mut payload);
+    });
+    s_qenc_sc.print();
+    optim::set_simd_enabled(true);
+    let s_qenc = time_fn("qsgd@4 encode streaming packer", 2, 15, || {
         qsgd.encode(&g, &mut payload);
     });
     s_qenc.print();
-    let mut dec = vec![0.0f32; N];
-    let s_qdec = time_fn("qsgd@4 decode (dequantize_into)", 2, 15, || {
+    // raw pack cells isolate the bit-packing delta from the shared
+    // normalize/quantize work
+    let levels: Vec<u64> = {
+        let mut rng = Pcg64::new(13);
+        (0..N).map(|_| rng.next_u64() & 0xF).collect()
+    };
+    let mut packed_buf = vec![0u8; (N * QBITS as usize).div_ceil(8) + 8];
+    let s_pack_sc = time_fn("pack_levels scalar (per-field)", 2, 15, || {
+        pack_levels_scalar(&mut packed_buf, QBITS, &levels);
+    });
+    s_pack_sc.print();
+    let s_pack = time_fn("pack_levels streaming", 2, 15, || {
+        pack_levels(&mut packed_buf, QBITS, &levels);
+    });
+    s_pack.print();
+    let s_qdec = time_fn("qsgd@4 decode (streaming)", 2, 15, || {
         payload.decode_into(&mut dec);
     });
     s_qdec.print();
-    let mut topk = TopK::new(0.1);
+    let lanes = dc_asgd::util::pool::default_threads();
+    optim::set_simd_enabled(false);
+    let mut topk_sc = TopK::new(0.1);
     let mut sparse = WirePayload::default();
-    let s_topk = time_fn("topk@0.1 encode (select+sort)", 2, 15, || {
+    let s_topk_sc = time_fn("topk@0.1 encode scalar (comparator)", 2, 15, || {
+        topk_sc.encode(&g, &mut sparse);
+    });
+    s_topk_sc.print();
+    optim::set_simd_enabled(true);
+    let mut topk = TopK::new(0.1).with_pool(Arc::new(ComputePool::new(lanes)));
+    let s_topk = time_fn("topk@0.1 encode u64-key + pool", 2, 15, || {
         topk.encode(&g, &mut sparse);
     });
     s_topk.print();
+    gbs.push(("qsgd_encode", gbps(8.0 * nf + packed_bytes, s_qenc.mean_s)));
+    gbs.push(("qsgd_pack", gbps(8.0 * nf + packed_bytes, s_pack.mean_s)));
+    gbs.push(("qsgd_decode", gbps(4.0 * nf + packed_bytes, s_qdec.mean_s)));
+    gbs.push(("topk_encode", gbps(20.0 * nf, s_topk.mean_s)));
+    println!(
+        "speedup vs scalar: qsgd encode {:.2}x | pack {:.2}x | topk {:.2}x ({lanes} lanes)",
+        s_qenc_sc.mean_s / s_qenc.mean_s,
+        s_pack_sc.mean_s / s_pack.mean_s,
+        s_topk_sc.mean_s / s_topk.mean_s,
+    );
+    results.push(("qsgd_encode_scalar_s", s_qenc_sc.mean_s));
     results.push(("qsgd_encode_s", s_qenc.mean_s));
+    results.push(("qsgd_pack_scalar_s", s_pack_sc.mean_s));
+    results.push(("qsgd_pack_s", s_pack.mean_s));
     results.push(("qsgd_decode_s", s_qdec.mean_s));
+    results.push(("topk_encode_scalar_s", s_topk_sc.mean_s));
     results.push(("topk_encode_s", s_topk.mean_s));
 
-    // ---- C) multi-shard apply: serial vs scoped-spawn vs pool ------------
-    println!("\n# C) multi-shard apply (S={SHARDS}) on n={N}: serial vs scoped vs pool");
+    // ---- D) multi-shard apply: serial vs scoped-spawn vs pool ------------
+    println!("\n# D) multi-shard apply (S={SHARDS}) on n={N}: serial vs scoped vs pool");
     header();
     let init = randn(6, N, 1.0);
     let serial_store = ShardedStore::with_pool(&init, 1, SHARDS, Arc::new(ComputePool::new(1)));
@@ -214,7 +355,6 @@ fn main() {
         });
     });
     s_serial.print();
-    let lanes = dc_asgd::util::pool::default_threads();
     let ranges = shard_ranges(N, SHARDS);
     let mut shard_vecs: Vec<Vec<f32>> =
         ranges.iter().map(|r| init[r.clone()].to_vec()).collect();
@@ -240,8 +380,8 @@ fn main() {
     results.push(("apply_scoped_s", s_scoped.mean_s));
     results.push(("apply_pool_s", s_pool.mean_s));
 
-    // ---- D) ps_throughput headline cell ----------------------------------
-    println!("\n# D) ps_throughput headline: M=8 S={SHARDS} pull+push");
+    // ---- E) ps_throughput headline cell ----------------------------------
+    println!("\n# E) ps_throughput headline: M=8 S={SHARDS} pull+push");
     for algo in [Algorithm::Asgd, Algorithm::DcAsgdAdaptive] {
         let rate = throughput_cell(8, SHARDS, algo);
         println!("{} M=8 S={SHARDS}: {rate:.0} pushes/s", algo.name());
@@ -249,6 +389,11 @@ fn main() {
             Algorithm::Asgd => results.push(("ps_throughput_m8_s8_asgd_per_sec", rate)),
             _ => results.push(("ps_throughput_m8_s8_dca_per_sec", rate)),
         }
+    }
+
+    println!("\n# approximate DRAM traffic (optimized cells)");
+    for (k, v) in &gbs {
+        println!("{k:<20} {v:>8.2} GB/s");
     }
 
     // ---- baseline file / regression gate ---------------------------------
@@ -273,11 +418,21 @@ fn main() {
             failed |= regressed;
         }
         if failed {
-            eprintln!("PERF GATE FAILED: >2x regression vs committed BENCH_PR5.json");
+            eprintln!("PERF GATE FAILED: >2x regression vs committed BENCH_PR6.json");
             std::process::exit(1);
         }
         println!("perf gate passed (all metrics within 2x of the committed baseline)");
     } else {
+        let speedups: Vec<(&'static str, f64)> = vec![
+            ("sgd_step", s_sgd_sc.mean_s / s_sgd.mean_s),
+            ("dc_step", s_dc_sc.mean_s / s_dc.mean_s),
+            ("dca_step", s_dca_sc.mean_s / s_dca.mean_s),
+            ("fused_dc_apply", s_staged_dc.mean_s / s_fused_dc.mean_s),
+            ("fused_dca_apply", s_staged_dca.mean_s / s_fused_dca.mean_s),
+            ("qsgd_encode", s_qenc_sc.mean_s / s_qenc.mean_s),
+            ("qsgd_pack", s_pack_sc.mean_s / s_pack.mean_s),
+            ("topk_encode", s_topk_sc.mean_s / s_topk.mean_s),
+        ];
         let json = Json::obj(vec![
             ("bench", "hotpath".into()),
             ("calibrated", true.into()),
@@ -287,6 +442,14 @@ fn main() {
             (
                 "results",
                 Json::Obj(results.iter().map(|(k, v)| (k.to_string(), Json::Num(*v))).collect()),
+            ),
+            (
+                "speedups",
+                Json::Obj(speedups.iter().map(|(k, v)| (k.to_string(), Json::Num(*v))).collect()),
+            ),
+            (
+                "gbps",
+                Json::Obj(gbs.iter().map(|(k, v)| (k.to_string(), Json::Num(*v))).collect()),
             ),
         ]);
         match std::fs::write(baseline_path, format!("{json}\n")) {

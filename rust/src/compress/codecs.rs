@@ -6,8 +6,28 @@
 //! the encode path performs no heap allocation. Randomized codecs own a
 //! per-worker [`Pcg64`] stream: encoding is bit-deterministic given the
 //! codec's seed and call sequence.
+//!
+//! Two codecs have a fast path gated on [`crate::optim::simd_enabled`]
+//! (the same `[runtime] simd` switch as the update kernels), each pinned
+//! bit-identical to its scalar reference by tests below:
+//!
+//! * **QSGD** packs levels through a streaming word accumulator
+//!   ([`pack_levels`]) instead of per-field [`write_bits`] offset math;
+//! * **TopK** selects on packed `(|g| bits, index)` u64 keys — one integer
+//!   compare instead of a float comparator + explicit tiebreak — and can
+//!   build keys / pre-select shard-parallel on the [`ComputePool`].
+//!
+//! This module also hosts the fused decode→compensate→apply entry points
+//! ([`decode_sgd_apply`] / [`decode_dc_apply`] / [`decode_dca_apply`])
+//! used by the parameter server's quantized push path: levels are decoded
+//! block-at-a-time into a stack buffer (L1-resident) and applied with the
+//! chunked kernels, so the weight state streams through memory exactly
+//! once instead of bouncing through a densified gradient arena.
+
+use std::sync::Arc;
 
 use super::{index_bits, GradientCodec, WirePayload};
+use crate::util::pool::ComputePool;
 use crate::util::rng::Pcg64;
 
 /// `ceil(ratio * n)` clamped to `[1, n]` — the sparsifiers' kept count.
@@ -111,6 +131,68 @@ pub(crate) fn read_bits(buf: &[u8], off: usize, width: u32) -> u64 {
     v
 }
 
+/// Streaming bit writer: appends fixed-width fields to a little-endian bit
+/// stream through a u64 accumulator, flushing a 32-bit word whenever one
+/// completes. Per field this is a shift + or + compare — [`write_bits`]
+/// recomputes byte/bit offsets and does an unaligned 8-byte RMW per field.
+/// The emitted bytes are identical to per-field [`write_bits`] at
+/// ascending offsets (pinned by `streaming_pack_matches_per_field_reference`).
+pub(crate) struct BitPacker {
+    acc: u64,
+    acc_bits: u32,
+    pos: usize,
+}
+
+impl BitPacker {
+    pub(crate) fn new() -> Self {
+        Self { acc: 0, acc_bits: 0, pos: 0 }
+    }
+
+    /// Append a `width`-bit field (`width <= 16`, so the accumulator never
+    /// holds more than 47 bits before the flush check).
+    #[inline(always)]
+    pub(crate) fn push(&mut self, buf: &mut [u8], width: u32, v: u64) {
+        debug_assert!(width <= 16);
+        self.acc |= (v & ((1u64 << width) - 1)) << self.acc_bits;
+        self.acc_bits += width;
+        if self.acc_bits >= 32 {
+            buf[self.pos..self.pos + 4].copy_from_slice(&(self.acc as u32).to_le_bytes());
+            self.pos += 4;
+            self.acc >>= 32;
+            self.acc_bits -= 32;
+        }
+    }
+
+    /// Flush the remaining partial word byte-wise (high bits of a partial
+    /// final byte stay zero, matching [`write_bits`]' zero padding).
+    pub(crate) fn finish(mut self, buf: &mut [u8]) {
+        while self.acc_bits > 0 {
+            buf[self.pos] = self.acc as u8;
+            self.pos += 1;
+            self.acc >>= 8;
+            self.acc_bits = self.acc_bits.saturating_sub(8);
+        }
+    }
+}
+
+/// Pack pre-computed offset-binary levels (`width <= 16`) into a pre-zeroed
+/// buffer via the streaming accumulator. Exposed (with the scalar form)
+/// for the hotpath bench and the kernel equivalence tests.
+pub fn pack_levels(packed: &mut [u8], width: u32, levels: &[u64]) {
+    let mut p = BitPacker::new();
+    for &v in levels {
+        p.push(packed, width, v);
+    }
+    p.finish(packed);
+}
+
+/// Per-field reference packer: one [`write_bits`] call per level.
+pub fn pack_levels_scalar(packed: &mut [u8], width: u32, levels: &[u64]) {
+    for (i, &v) in levels.iter().enumerate() {
+        write_bits(packed, i * width as usize, width, v);
+    }
+}
+
 /// Dequantize a packed level stream (see [`WirePayload::Quantized`]).
 /// Streams the packed bytes through a u64 accumulator (refilled a word at
 /// a time while one fits), so the per-element work is a shift and a mask
@@ -120,31 +202,186 @@ pub(crate) fn dequantize_into(out: &mut [f32], n: usize, bits: u32, norm: f32, p
     let l = ((1u32 << (bits - 1)) - 1) as i64;
     let scale = if l > 0 { norm / l as f32 } else { 0.0 };
     let mask = (1u64 << bits) - 1;
-    let mut acc = 0u64;
-    let mut acc_bits = 0u32;
-    let mut pos = 0usize;
+    let mut cur = LevelCursor::at(packed, bits, 0);
     for o in out.iter_mut() {
-        while acc_bits < bits {
+        let level = cur.next(bits, mask) as i64 - l;
+        *o = level as f32 * scale;
+    }
+}
+
+/// Streaming cursor over a packed level stream, startable at an arbitrary
+/// element offset — the fused shard-slice decoders position one cursor per
+/// shard range. Same refill discipline as the original streaming decode
+/// (32-bit little-endian words while a full window fits, byte-wise at the
+/// stream tail), and therefore the same decoded levels at every position
+/// (`level_cursor_starts_at_arbitrary_offsets` pins mid-byte starts).
+pub(crate) struct LevelCursor<'a> {
+    packed: &'a [u8],
+    acc: u64,
+    acc_bits: u32,
+    pos: usize,
+}
+
+impl<'a> LevelCursor<'a> {
+    /// Position a cursor at element `elem` of a `bits`-wide stream.
+    pub(crate) fn at(packed: &'a [u8], bits: u32, elem: usize) -> Self {
+        let bit_off = elem * bits as usize;
+        let mut c = Self { packed, acc: 0, acc_bits: 0, pos: bit_off / 8 };
+        let skip = (bit_off % 8) as u32;
+        if skip > 0 {
+            // discard the partial byte in front of the first element
+            c.refill(skip);
+            c.acc >>= skip;
+            c.acc_bits -= skip;
+        }
+        c
+    }
+
+    #[inline(always)]
+    fn refill(&mut self, need: u32) {
+        while self.acc_bits < need {
             // acc_bits < 32 here, so a 32-bit refill always fits in the
             // accumulator; the stream tail refills byte-wise
-            if pos + 4 <= packed.len() {
+            if self.pos + 4 <= self.packed.len() {
                 let w = u32::from_le_bytes(
-                    packed[pos..pos + 4].try_into().expect("4-byte window"),
+                    self.packed[self.pos..self.pos + 4].try_into().expect("4-byte window"),
                 ) as u64;
-                acc |= w << acc_bits;
-                pos += 4;
-                acc_bits += 32;
+                self.acc |= w << self.acc_bits;
+                self.pos += 4;
+                self.acc_bits += 32;
             } else {
-                debug_assert!(pos < packed.len(), "packed stream exhausted early");
-                acc |= (packed[pos] as u64) << acc_bits;
-                pos += 1;
-                acc_bits += 8;
+                debug_assert!(self.pos < self.packed.len(), "packed stream exhausted early");
+                self.acc |= (self.packed[self.pos] as u64) << self.acc_bits;
+                self.pos += 1;
+                self.acc_bits += 8;
             }
         }
-        let level = (acc & mask) as i64 - l;
-        acc >>= bits;
-        acc_bits -= bits;
-        *o = level as f32 * scale;
+    }
+
+    /// Next raw level (callers pass `mask = (1 << bits) - 1`).
+    #[inline(always)]
+    pub(crate) fn next(&mut self, bits: u32, mask: u64) -> u64 {
+        self.refill(bits);
+        let v = self.acc & mask;
+        self.acc >>= bits;
+        self.acc_bits -= bits;
+        v
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fused decode → compensate → apply
+//
+// The quantized push path's fast lane: instead of densifying the whole
+// payload into a scratch arena and then running an update kernel over it
+// (two full passes over n-sized buffers), decode FUSE_BLOCK levels at a
+// time into a stack buffer and apply them immediately with the chunked
+// kernels. The weight / backup / MeanSquare slices stream through memory
+// exactly once, the decode buffer stays in L1, and the compensation math
+// still vectorizes. Bit-identical to decode-then-apply: the cursor decodes
+// the same level values as `dequantize_into` and the apply kernels are the
+// same elementwise ops, so the block partition is unobservable.
+
+/// Block size for the fused decoders: 2 KiB of f32 — comfortably
+/// L1-resident alongside the operand lines, large enough that the chunked
+/// apply kernels run at full width.
+const FUSE_BLOCK: usize = 512;
+
+/// Fused dequantize + SGD apply on one shard slice: `w -= lr * dq(g)`.
+/// `start` is the slice's global element offset into the packed stream.
+pub fn decode_sgd_apply(
+    w: &mut [f32],
+    start: usize,
+    bits: u32,
+    norm: f32,
+    packed: &[u8],
+    lr: f32,
+) {
+    let l = ((1u32 << (bits - 1)) - 1) as i64;
+    let scale = if l > 0 { norm / l as f32 } else { 0.0 };
+    let mask = (1u64 << bits) - 1;
+    let mut cur = LevelCursor::at(packed, bits, start);
+    let mut buf = [0.0f32; FUSE_BLOCK];
+    let mut off = 0usize;
+    while off < w.len() {
+        let m = FUSE_BLOCK.min(w.len() - off);
+        for b in buf[..m].iter_mut() {
+            *b = (cur.next(bits, mask) as i64 - l) as f32 * scale;
+        }
+        crate::optim::sgd_step(&mut w[off..off + m], &buf[..m], lr);
+        off += m;
+    }
+}
+
+/// Fused dequantize + DC-ASGD-c apply (Eqn. 10) on one shard slice.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_dc_apply(
+    w: &mut [f32],
+    w_bak: &[f32],
+    start: usize,
+    bits: u32,
+    norm: f32,
+    packed: &[u8],
+    lr: f32,
+    lam: f32,
+) {
+    debug_assert_eq!(w.len(), w_bak.len());
+    let l = ((1u32 << (bits - 1)) - 1) as i64;
+    let scale = if l > 0 { norm / l as f32 } else { 0.0 };
+    let mask = (1u64 << bits) - 1;
+    let mut cur = LevelCursor::at(packed, bits, start);
+    let mut buf = [0.0f32; FUSE_BLOCK];
+    let mut off = 0usize;
+    while off < w.len() {
+        let m = FUSE_BLOCK.min(w.len() - off);
+        for b in buf[..m].iter_mut() {
+            *b = (cur.next(bits, mask) as i64 - l) as f32 * scale;
+        }
+        crate::optim::dc_step(&mut w[off..off + m], &buf[..m], &w_bak[off..off + m], lr, lam);
+        off += m;
+    }
+}
+
+/// Fused dequantize + DC-ASGD-a apply (Eqn. 10 + 14) on one shard slice
+/// (advances the slice's MeanSquare state).
+#[allow(clippy::too_many_arguments)]
+pub fn decode_dca_apply(
+    w: &mut [f32],
+    w_bak: &[f32],
+    ms: &mut [f32],
+    start: usize,
+    bits: u32,
+    norm: f32,
+    packed: &[u8],
+    lr: f32,
+    lam0: f32,
+    m: f32,
+    eps: f32,
+) {
+    debug_assert_eq!(w.len(), w_bak.len());
+    debug_assert_eq!(w.len(), ms.len());
+    let l = ((1u32 << (bits - 1)) - 1) as i64;
+    let scale = if l > 0 { norm / l as f32 } else { 0.0 };
+    let mask = (1u64 << bits) - 1;
+    let mut cur = LevelCursor::at(packed, bits, start);
+    let mut buf = [0.0f32; FUSE_BLOCK];
+    let mut off = 0usize;
+    while off < w.len() {
+        let blk = FUSE_BLOCK.min(w.len() - off);
+        for b in buf[..blk].iter_mut() {
+            *b = (cur.next(bits, mask) as i64 - l) as f32 * scale;
+        }
+        crate::optim::dc_adaptive_step(
+            &mut w[off..off + blk],
+            &buf[..blk],
+            &w_bak[off..off + blk],
+            &mut ms[off..off + blk],
+            lr,
+            lam0,
+            m,
+            eps,
+        );
+        off += blk;
     }
 }
 
@@ -183,19 +420,71 @@ impl GradientCodec for IdentityCodec {
 // ---------------------------------------------------------------------------
 // TopK
 
+/// Fixed chunk width for the pool-parallel key build / pre-selection:
+/// independent of lane count, so the kept set never depends on `threads`
+/// (it is exact regardless — see `encode` — but fixed chunks also keep the
+/// work split deterministic).
+const TOPK_CHUNK: usize = 1 << 16;
+
+/// Shared-nothing writer handle for the pool tasks: each task writes a
+/// disjoint `TOPK_CHUNK`-aligned range and [`ComputePool::run`] joins all
+/// tasks before returning, so no two tasks alias and no reference escapes
+/// (the same contract `ShardedStore::par_for_each_shard` relies on).
+struct SyncSlicePtr(*mut u64);
+unsafe impl Sync for SyncSlicePtr {}
+
+/// Selection key: |g[i]|'s IEEE bits in the high word, bit-inverted index
+/// in the low word. For non-NaN f32, the bit pattern of |x| orders exactly
+/// like |x|, so comparing keys descending == ordering by (|g| desc, index
+/// asc) — one integer compare replaces the float comparator + explicit
+/// tiebreak, and keys are unique, so the selected set has no boundary
+/// ambiguity by construction.
+#[inline(always)]
+fn topk_key(x: f32, i: u32) -> u64 {
+    ((x.abs().to_bits() as u64) << 32) | (u32::MAX - i) as u64
+}
+
 /// Keep the `ceil(ratio * n)` largest-|value| coordinates; exact values,
 /// ascending indices. Ratio 1.0 keeps everything (exact identity).
-#[derive(Debug)]
+///
+/// Two selection paths, both producing the identical kept set (ties break
+/// by lowest index): the scalar reference (float comparator over an index
+/// permutation) and, when [`crate::optim::simd_enabled`], packed u64 keys
+/// with optional [`ComputePool`]-parallel key building + per-chunk
+/// pre-selection ([`TopK::with_pool`]).
 pub struct TopK {
     ratio: f64,
-    /// Selection scratch: index permutation partitioned by |g|.
+    /// Scalar-path selection scratch: index permutation partitioned by |g|.
     order: Vec<u32>,
+    /// Key-path scratch: one packed key per element.
+    keys: Vec<u64>,
+    /// Two-phase selection scratch: the per-chunk winners.
+    cand: Vec<u64>,
+    /// Parallel key build / pre-selection when set (and non-serial).
+    pool: Option<Arc<ComputePool>>,
+}
+
+impl std::fmt::Debug for TopK {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // manual: ComputePool carries worker handles and has no Debug
+        f.debug_struct("TopK")
+            .field("ratio", &self.ratio)
+            .field("pooled", &self.pool.is_some())
+            .finish()
+    }
 }
 
 impl TopK {
     pub fn new(ratio: f64) -> Self {
         assert!(ratio > 0.0 && ratio <= 1.0);
-        Self { ratio, order: Vec::new() }
+        Self { ratio, order: Vec::new(), keys: Vec::new(), cand: Vec::new(), pool: None }
+    }
+
+    /// Run key building and chunk pre-selection on `pool`. The kept set is
+    /// exact either way; the pool trades wallclock only.
+    pub fn with_pool(mut self, pool: Arc<ComputePool>) -> Self {
+        self.pool = Some(pool);
+        self
     }
 }
 
@@ -212,6 +501,68 @@ impl GradientCodec for TopK {
             val.extend_from_slice(g);
             return;
         }
+        if crate::optim::simd_enabled() {
+            // key path: build packed keys, select the k largest by integer
+            // compare, recover indices from the low words
+            self.keys.resize(n, 0);
+            let chunks = n.div_ceil(TOPK_CHUNK);
+            let par = match &self.pool {
+                Some(p) if !p.is_serial() && chunks > 1 => Some(Arc::clone(p)),
+                _ => None,
+            };
+            if let Some(pool) = &par {
+                let dst = SyncSlicePtr(self.keys.as_mut_ptr());
+                pool.run(chunks, &|c| {
+                    let lo = c * TOPK_CHUNK;
+                    let hi = (lo + TOPK_CHUNK).min(n);
+                    // SAFETY: task c writes only [lo, hi), ranges are
+                    // disjoint, and run() joins before returning
+                    let ks = unsafe { std::slice::from_raw_parts_mut(dst.0.add(lo), hi - lo) };
+                    for (o, j) in ks.iter_mut().zip(lo..hi) {
+                        *o = topk_key(g[j], j as u32);
+                    }
+                });
+            } else {
+                for (i, (o, &x)) in self.keys.iter_mut().zip(g).enumerate() {
+                    *o = topk_key(x, i as u32);
+                }
+            }
+            // two-phase selection when parallel and clearly profitable:
+            // per-chunk top-k (every global winner is a winner of its own
+            // chunk), then one final select over the chunks*k candidates.
+            let keys = &mut self.keys;
+            let two_phase = par.is_some() && k < TOPK_CHUNK && 2 * k * chunks <= n;
+            if two_phase {
+                let pool = par.as_ref().expect("two_phase implies a pool");
+                let dst = SyncSlicePtr(keys.as_mut_ptr());
+                pool.run(chunks, &|c| {
+                    let lo = c * TOPK_CHUNK;
+                    let hi = (lo + TOPK_CHUNK).min(n);
+                    // SAFETY: disjoint chunk ranges, joined before return
+                    let ks = unsafe { std::slice::from_raw_parts_mut(dst.0.add(lo), hi - lo) };
+                    if k < ks.len() {
+                        ks.select_nth_unstable_by(k - 1, |a, b| b.cmp(a));
+                    }
+                });
+                self.cand.clear();
+                for c in 0..chunks {
+                    let lo = c * TOPK_CHUNK;
+                    let hi = (lo + TOPK_CHUNK).min(n);
+                    self.cand.extend_from_slice(&keys[lo..(lo + k).min(hi)]);
+                }
+                if k < self.cand.len() {
+                    self.cand.select_nth_unstable_by(k - 1, |a, b| b.cmp(a));
+                }
+                idx.extend(self.cand[..k].iter().map(|&key| u32::MAX - key as u32));
+            } else {
+                keys.select_nth_unstable_by(k - 1, |a, b| b.cmp(a));
+                idx.extend(keys[..k].iter().map(|&key| u32::MAX - key as u32));
+            }
+            idx.sort_unstable();
+            val.extend(idx.iter().map(|&i| g[i as usize]));
+            return;
+        }
+        // scalar reference path
         self.order.clear();
         self.order.extend(0..n as u32);
         // partition the k largest magnitudes to the front (O(n) expected),
@@ -346,13 +697,32 @@ impl GradientCodec for Qsgd {
             return; // all-zero levels decode to zero
         }
         let l = ((1u32 << (self.bits - 1)) - 1) as f32;
-        for (i, &x) in g.iter().enumerate() {
-            let scaled = x / norm * l; // in [-l, l]
-            let lo = scaled.floor();
-            let p = scaled - lo;
-            let q = (lo as i64 + (self.rng.next_f64() < p as f64) as i64)
-                .clamp(-(l as i64), l as i64);
-            write_bits(packed, i * self.bits as usize, self.bits, (q + l as i64) as u64);
+        let li = l as i64;
+        // Same per-element quantization math and the same one-draw-per-
+        // element RNG sequence on both paths; only the level packing
+        // differs (streaming word accumulator vs per-field write_bits),
+        // and those emit identical bytes — so the payload is bit-identical
+        // either way (`simd_toggle_paths_are_bit_identical`).
+        if crate::optim::simd_enabled() {
+            let mut packer = BitPacker::new();
+            for &x in g.iter() {
+                let scaled = x / norm * l; // in [-l, l]
+                let lo = scaled.floor();
+                let p = scaled - lo;
+                let q =
+                    (lo as i64 + (self.rng.next_f64() < p as f64) as i64).clamp(-li, li);
+                packer.push(packed, self.bits, (q + li) as u64);
+            }
+            packer.finish(packed);
+        } else {
+            for (i, &x) in g.iter().enumerate() {
+                let scaled = x / norm * l; // in [-l, l]
+                let lo = scaled.floor();
+                let p = scaled - lo;
+                let q =
+                    (lo as i64 + (self.rng.next_f64() < p as f64) as i64).clamp(-li, li);
+                write_bits(packed, i * self.bits as usize, self.bits, (q + li) as u64);
+            }
         }
     }
     fn wire_bytes(&self, n: usize) -> usize {
@@ -438,6 +808,26 @@ mod tests {
     }
 
     #[test]
+    fn streaming_pack_matches_per_field_reference() {
+        // the BitPacker stream must be byte-identical to per-field
+        // write_bits at every width it supports, including partial-word
+        // tails (counts chosen to land mid-byte and mid-word)
+        let mut rng = Pcg64::new(78);
+        for width in [1u32, 3, 4, 5, 7, 8, 11, 12, 15, 16] {
+            for count in [1usize, 2, 7, 31, 32, 33, 129, 1003] {
+                let vals: Vec<u64> =
+                    (0..count).map(|_| rng.next_u64() & ((1u64 << width) - 1)).collect();
+                let nbytes = (count * width as usize + 7) / 8;
+                let mut fast = vec![0u8; nbytes];
+                let mut slow = vec![0u8; nbytes];
+                pack_levels(&mut fast, width, &vals);
+                pack_levels_scalar(&mut slow, width, &vals);
+                assert_eq!(fast, slow, "width {width} count {count}: streamed pack diverged");
+            }
+        }
+    }
+
+    #[test]
     fn streaming_dequantize_matches_per_field_reference() {
         let n = 1003; // odd length: exercises the byte-wise refill tail
         let g = grad(21, n);
@@ -461,6 +851,150 @@ mod tests {
                 .collect();
             assert_eq!(fast, slow, "bits {bits}: streaming decode diverged");
         }
+    }
+
+    #[test]
+    fn level_cursor_starts_at_arbitrary_offsets() {
+        // a cursor positioned at element e must decode the identical level
+        // sequence a from-zero reader sees — including starts that land
+        // mid-byte (every bits/offset combination below hits some)
+        let n = 1003;
+        let mut rng = Pcg64::new(79);
+        for bits in [3u32, 4, 7, 8, 12, 16] {
+            let mask = (1u64 << bits) - 1;
+            let vals: Vec<u64> = (0..n).map(|_| rng.next_u64() & mask).collect();
+            let mut packed = vec![0u8; (n * bits as usize + 7) / 8];
+            pack_levels_scalar(&mut packed, bits, &vals);
+            for start in [0usize, 1, 2, 3, 5, 8, 127, 300, 301, n - 1] {
+                let mut cur = LevelCursor::at(&packed, bits, start);
+                for (e, &v) in vals.iter().enumerate().skip(start) {
+                    assert_eq!(
+                        cur.next(bits, mask),
+                        v,
+                        "bits {bits} start {start}: wrong level at {e}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_decode_apply_matches_staged_bitwise() {
+        // decode_*_apply over shard slices (mid-stream cursor starts) must
+        // equal densify-then-kernel over the same slices, bit for bit
+        let n = 1003;
+        let g = grad(22, n);
+        let w0 = grad(23, n);
+        let bak = grad(24, n);
+        let ms0: Vec<f32> = grad(25, n).iter().map(|x| x.abs()).collect();
+        let ranges = [(0usize, 300usize), (300, 301), (301, n)];
+        for bits in [4u32, 8] {
+            let mut codec = Qsgd::new(bits, Pcg64::new(11));
+            let mut out = WirePayload::default();
+            codec.encode(&g, &mut out);
+            let (norm, packed) = match &out {
+                WirePayload::Quantized { norm, packed, .. } => (*norm, packed.clone()),
+                other => panic!("expected quantized, got {other:?}"),
+            };
+            let mut dense = vec![0.0f32; n];
+            out.decode_into(&mut dense);
+
+            let (lr, lam, lam0, m, eps) = (0.1f32, 0.7f32, 2.0f32, 0.95f32, 1e-7f32);
+
+            let mut ws = w0.clone();
+            let mut wf = w0.clone();
+            for &(lo, hi) in &ranges {
+                crate::optim::sgd_step(&mut ws[lo..hi], &dense[lo..hi], lr);
+                decode_sgd_apply(&mut wf[lo..hi], lo, bits, norm, &packed, lr);
+            }
+            assert_eq!(ws, wf, "bits {bits}: fused sgd diverged");
+
+            let mut ws = w0.clone();
+            let mut wf = w0.clone();
+            for &(lo, hi) in &ranges {
+                crate::optim::dc_step(&mut ws[lo..hi], &dense[lo..hi], &bak[lo..hi], lr, lam);
+                decode_dc_apply(&mut wf[lo..hi], &bak[lo..hi], lo, bits, norm, &packed, lr, lam);
+            }
+            assert_eq!(ws, wf, "bits {bits}: fused dc diverged");
+
+            let mut ws = w0.clone();
+            let mut wf = w0.clone();
+            let mut mss = ms0.clone();
+            let mut msf = ms0.clone();
+            for &(lo, hi) in &ranges {
+                crate::optim::dc_adaptive_step(
+                    &mut ws[lo..hi],
+                    &dense[lo..hi],
+                    &bak[lo..hi],
+                    &mut mss[lo..hi],
+                    lr,
+                    lam0,
+                    m,
+                    eps,
+                );
+                decode_dca_apply(
+                    &mut wf[lo..hi],
+                    &bak[lo..hi],
+                    &mut msf[lo..hi],
+                    lo,
+                    bits,
+                    norm,
+                    &packed,
+                    lr,
+                    lam0,
+                    m,
+                    eps,
+                );
+            }
+            assert_eq!(ws, wf, "bits {bits}: fused dca diverged");
+            assert_eq!(mss, msf, "bits {bits}: fused dca MeanSquare diverged");
+        }
+    }
+
+    #[test]
+    fn simd_toggle_paths_are_bit_identical() {
+        // the ONLY test in this binary that flips the global dispatch: the
+        // optimized and scalar codec paths must emit byte-identical
+        // payloads (other concurrently-running tests are unaffected by the
+        // flip because every dispatch target is bit-identical)
+        let n = 70_000; // > TOPK_CHUNK so the pool path engages
+        let g: Vec<f32> = (0..n)
+            .map(|i| {
+                // tie-heavy: few distinct magnitudes stress the selection
+                let mag = ((i * 37) % 5 + 1) as f32;
+                if i % 2 == 0 {
+                    mag
+                } else {
+                    -mag
+                }
+            })
+            .collect();
+
+        let encode_with = |codec: &mut dyn GradientCodec, on: bool| {
+            crate::optim::set_simd_enabled(on);
+            let mut out = WirePayload::default();
+            codec.encode(&g, &mut out);
+            crate::optim::set_simd_enabled(true);
+            out
+        };
+
+        // qsgd: fresh codecs with the same seed so the RNG streams align
+        let mut q_on = Qsgd::new(4, Pcg64::new(31));
+        let mut q_off = Qsgd::new(4, Pcg64::new(31));
+        let a = encode_with(&mut q_on, true);
+        let b = encode_with(&mut q_off, false);
+        assert_eq!(a, b, "qsgd payload differs between simd and scalar paths");
+
+        // topk: serial keys vs scalar comparator vs pool-parallel keys
+        let mut t_scalar = TopK::new(0.01);
+        let mut t_keys = TopK::new(0.01);
+        let mut t_pool =
+            TopK::new(0.01).with_pool(Arc::new(crate::util::pool::ComputePool::new(4)));
+        let a = encode_with(&mut t_scalar, false);
+        let b = encode_with(&mut t_keys, true);
+        let c = encode_with(&mut t_pool, true);
+        assert_eq!(a, b, "topk kept set differs between comparator and key paths");
+        assert_eq!(b, c, "topk kept set differs between serial and pooled key paths");
     }
 
     #[test]
@@ -504,7 +1038,8 @@ mod tests {
         // so the selection boundary falls inside a huge tie class. The
         // kept set must match a full-sort reference ordered by
         // (|g| desc, index asc) — i.e. lowest indices win inside a tie —
-        // regardless of how select_nth partitions internally.
+        // regardless of how select_nth partitions internally. Exercises
+        // the key path (simd default on); the toggle test covers scalar.
         let n = 256;
         let g: Vec<f32> = (0..n)
             .map(|i| {

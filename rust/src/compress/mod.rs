@@ -39,10 +39,14 @@
 
 pub mod codecs;
 
-pub use codecs::{IdentityCodec, Qsgd, RandK, TopK};
+pub use codecs::{
+    decode_dc_apply, decode_dca_apply, decode_sgd_apply, IdentityCodec, Qsgd, RandK, TopK,
+};
 
+use crate::util::pool::ComputePool;
 use crate::util::rng::Pcg64;
 use anyhow::bail;
+use std::sync::Arc;
 
 /// Bits needed to address an index in `[0, n)` (wire model for sparse
 /// index streams). At least 1 so the degenerate n = 1 still costs a bit.
@@ -209,7 +213,20 @@ impl WorkerCompressor {
     /// Build from config; `None` config means no compression (callers
     /// should then skip the encode path entirely).
     pub fn new(cfg: &CodecConfig, n: usize, seed: u64, worker: usize) -> Option<Self> {
-        let codec = cfg.build(seed, worker)?;
+        Self::with_pool(cfg, n, seed, worker, None)
+    }
+
+    /// Like [`WorkerCompressor::new`], additionally handing pool-capable
+    /// codecs (TopK selection) a [`ComputePool`] for shard-parallel
+    /// encoding. The encoded payload is identical with or without a pool.
+    pub fn with_pool(
+        cfg: &CodecConfig,
+        n: usize,
+        seed: u64,
+        worker: usize,
+        pool: Option<Arc<ComputePool>>,
+    ) -> Option<Self> {
+        let codec = cfg.build_with_pool(seed, worker, pool)?;
         // identity codecs never touch the EF arenas (the residual is
         // identically zero): don't pay 3n floats per worker for them
         let ef = ErrorFeedback::new(if codec.is_identity() { 0 } else { n });
@@ -323,10 +340,30 @@ impl CodecConfig {
     /// stream from `(seed, worker)` so runs are bit-reproducible and
     /// workers are decorrelated.
     pub fn build(&self, seed: u64, worker: usize) -> Option<Box<dyn GradientCodec>> {
+        self.build_with_pool(seed, worker, None)
+    }
+
+    /// [`CodecConfig::build`] with an optional [`ComputePool`] for codecs
+    /// whose encode can run shard-parallel (TopK key building and
+    /// pre-selection). Payloads are identical with or without the pool —
+    /// it trades wallclock only.
+    pub fn build_with_pool(
+        &self,
+        seed: u64,
+        worker: usize,
+        pool: Option<Arc<ComputePool>>,
+    ) -> Option<Box<dyn GradientCodec>> {
         let rng = || Pcg64::new(seed ^ 0xC0DE_C0DE).fork(worker as u64);
         match *self {
             CodecConfig::None => None,
-            CodecConfig::TopK { ratio } => Some(Box::new(TopK::new(ratio))),
+            CodecConfig::TopK { ratio } => {
+                let t = TopK::new(ratio);
+                let t = match pool {
+                    Some(p) => t.with_pool(p),
+                    None => t,
+                };
+                Some(Box::new(t))
+            }
             CodecConfig::RandK { ratio } => Some(Box::new(RandK::new(ratio, rng()))),
             CodecConfig::Qsgd { bits } => Some(Box::new(Qsgd::new(bits, rng()))),
         }

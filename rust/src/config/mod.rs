@@ -210,14 +210,21 @@ pub enum UpdateBackend {
 /// The knob trades wallclock only: every setting produces bit-identical
 /// schedules and trajectories (pinned by the chaos harness and the store
 /// lane-invariance tests).
+///
+/// `simd` dispatches the chunked-SIMD update kernels and the fused /
+/// streaming codec fast paths ([`crate::optim::set_simd_enabled`]);
+/// `false` pins the scalar reference loops. Both sides are bit-identical
+/// (the kernel property suite pins it), so this too trades wallclock only
+/// — it exists for A/B measurement and the serial reference lane in CI.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct RuntimeConfig {
     pub threads: usize,
+    pub simd: bool,
 }
 
 impl Default for RuntimeConfig {
     fn default() -> Self {
-        Self { threads: 0 }
+        Self { threads: 0, simd: true }
     }
 }
 
@@ -640,6 +647,9 @@ impl ExperimentConfig {
         if let Some(v) = get_usize("runtime.threads")? {
             cfg.runtime.threads = v;
         }
+        if let Some(v) = doc.get("runtime.simd").and_then(|v| v.as_bool()) {
+            cfg.runtime.simd = v;
+        }
         if let Some(v) = get_usize("eval.every")? {
             cfg.eval_every = v;
         }
@@ -824,6 +834,7 @@ impl ExperimentConfig {
             ),
             ("shards", self.shards.into()),
             ("runtime_threads", self.runtime.threads.into()),
+            ("runtime_simd", self.runtime.simd.into()),
             ("tag", self.tag.as_str().into()),
         ])
     }
@@ -1197,18 +1208,24 @@ mod tests {
 
     #[test]
     fn from_toml_runtime_section() {
-        // default: auto (0)
+        // default: auto (0), SIMD kernels on
         let cfg = ExperimentConfig::from_toml("workers = 2").unwrap();
-        assert_eq!(cfg.runtime, RuntimeConfig { threads: 0 });
+        assert_eq!(cfg.runtime, RuntimeConfig { threads: 0, simd: true });
         // explicit lane counts
         let cfg = ExperimentConfig::from_toml("[runtime]\nthreads = 1").unwrap();
         assert_eq!(cfg.runtime.threads, 1);
         let cfg = ExperimentConfig::from_toml("[runtime]\nthreads = 6").unwrap();
         assert_eq!(cfg.runtime.threads, 6);
+        // scalar reference lane
+        let cfg = ExperimentConfig::from_toml("[runtime]\nsimd = false").unwrap();
+        assert!(!cfg.runtime.simd);
+        assert_eq!(cfg.runtime.threads, 0);
         // absurd lane counts are rejected
         assert!(ExperimentConfig::from_toml("[runtime]\nthreads = 4096").is_err());
+        let cfg = ExperimentConfig::from_toml("[runtime]\nthreads = 6").unwrap();
         let json = cfg.to_json().to_string();
         assert!(json.contains("\"runtime_threads\""));
+        assert!(json.contains("\"runtime_simd\":true"));
     }
 
     #[test]

@@ -183,6 +183,9 @@ impl Trainer {
             UpdateBackend::Native => Box::new(NativeKernel),
             UpdateBackend::Xla => Box::new(XlaUpdateKernel::new(engine.clone())),
         };
+        // kernel dispatch for this run: chunked-SIMD vs scalar reference
+        // (bit-identical either way — the knob trades wallclock only)
+        crate::optim::set_simd_enabled(cfg.runtime.simd);
         // one persistent pool per run (threads = 0 shares the process-wide
         // auto-sized pool): the store's applies and the driver's pipelined
         // gradient stage draw from the same lanes
@@ -190,9 +193,18 @@ impl Trainer {
         let ps =
             Arc::new(ParamServer::from_config_with_pool(&cfg, &init, kernel, Arc::clone(&pool))?);
         // one compressor (codec + EF residual + payload arena) per worker;
-        // `none` builds nothing and the push path stays exactly dense
+        // `none` builds nothing and the push path stays exactly dense.
+        // TopK encodes shard-parallel on the run's compute pool.
         let mut compressors: Vec<WorkerCompressor> = (0..cfg.workers)
-            .filter_map(|w| WorkerCompressor::new(&cfg.compress, init.len(), cfg.seed, w))
+            .filter_map(|w| {
+                WorkerCompressor::with_pool(
+                    &cfg.compress,
+                    init.len(),
+                    cfg.seed,
+                    w,
+                    Some(Arc::clone(&pool)),
+                )
+            })
             .collect();
         debug_assert!(compressors.is_empty() || compressors.len() == cfg.workers);
         if !cfg.resume_from.is_empty() {

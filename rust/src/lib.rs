@@ -115,11 +115,49 @@
 //! model bits against the at-finish serial loop; the store's
 //! lane-invariance tests pin the apply path the same way. Bench `hotpath`
 //! measures the pool against the old scoped-spawn fan-out and writes the
-//! machine-readable perf baseline `BENCH_PR5.json` that the CI perf-smoke
-//! lane gates against. (Caveat: the PJRT backend executes all Train
-//! requests on its single engine thread, so there the flush pipelines
-//! request *issue* rather than parallelizing XLA execution — see the
+//! machine-readable perf baseline `BENCH_PR6.json` that the CI perf-smoke
+//! lane gates against — the baseline is **calibrated** (measured, not a
+//! placeholder), so `DCASGD_PERF_GATE=1` *fails* on a >2x regression of
+//! any cell. (Caveat: the PJRT backend executes all Train requests on its
+//! single engine thread, so there the flush pipelines request *issue*
+//! rather than parallelizing XLA execution — see the
 //! [`coordinator::driver`] docs.)
+//!
+//! ## Kernel architecture & SIMD determinism
+//!
+//! The per-element update rules run through chunked-SIMD kernels
+//! ([`optim::kernels`]): fixed 8-wide chunks via `chunks_exact` with a
+//! scalar tail, a shape the autovectorizer reliably turns into packed
+//! f32 arithmetic on stable Rust. The crucial property is that this is a
+//! pure *traversal* rewrite — every lane computes the same correctly
+//! rounded IEEE-754 expression on the same element as the scalar
+//! reference loop, and no kernel on the hot path reorders a
+//! floating-point reduction (the one hot-path reduction, QSGD's max-|g|
+//! norm, is order-independent for non-NaN input). Chunked and scalar
+//! paths are therefore **bit-identical**, which is what lets them share
+//! one dispatch flag without perturbing the crate's determinism story:
+//! `[runtime] simd` (`--simd`, on by default; the `simd` cargo feature
+//! compiles the dispatch out entirely) selects chunked kernels, fused
+//! codec paths, and pool-parallel TopK, and flipping it trades wallclock
+//! only — pinned by kernel-equivalence property tests (`tests/kernels.rs`)
+//! across tail lengths, unaligned sub-slices, and an end-to-end PS run.
+//!
+//! The shared elementwise cores (`optim::kernels::dc_comp` /
+//! `dca_comp`) are the single source of truth for Eqn. 10 and the
+//! adaptive Eqn. 14 recurrence — the staged compensate paths, the fused
+//! kernels, and the sparse kernels all inline the same expression, so the
+//! DC math cannot drift between code paths. On the server, quantized
+//! pushes take a **fused decode→compensate→apply** pass
+//! ([`compress::decode_dc_apply`] and friends): each shard seeks a
+//! bit-cursor into its slice of the packed level stream and applies in
+//! 512-element blocks, one DRAM pass over `w`/`w_bak`/`ms` instead of
+//! materializing the dense gradient (guarded by
+//! `UpdateKernel::is_native_elementwise`, so custom whole-vector kernels
+//! keep the densified path). QSGD encode/pack stream through a u64
+//! bit-accumulator flushing 32-bit words, and TopK selection goes through
+//! u64 `(|g| bits, !idx)` keys — totally ordered, so chunk-local
+//! selection on the [`util::pool::ComputePool`] merges deterministically
+//! regardless of lane count.
 //!
 //! ## Gradient compression & wire format
 //!

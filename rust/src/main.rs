@@ -50,6 +50,7 @@ fn usage() {
            --staleness-bound N  (SSP/DC-S3GD: max local-step drift)\n\
            --mode sim|threads   --backend native|xla\n\
            --threads N          (compute-pool lanes; 0 = auto, 1 = serial)\n\
+           --simd true|false    (chunked-SIMD kernels; false = scalar reference)\n\
            --train-size N       --test-size N      --out DIR\n\
            --comm               (charge push/pull transfer time in the DES)\n\
            --comm-per-push F    --comm-per-mb F    (seconds, seconds/MB)\n\
@@ -124,6 +125,9 @@ fn build_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
     }
     if let Some(v) = args.usize_opt("threads")? {
         cfg.runtime.threads = v;
+    }
+    if let Some(v) = args.str_opt("simd") {
+        cfg.runtime.simd = !(v == "false" || v == "0");
     }
     if let Some(v) = args.usize_opt("train-size")? {
         cfg.train_size = v;

@@ -1,0 +1,266 @@
+//! Chunked-SIMD update kernels + the shared elementwise cores.
+//!
+//! ## The f32 op-order contract
+//!
+//! Every update rule in this crate is **per-element independent**: element
+//! `i` of the output depends only on element `i` of each operand, and the
+//! expression tree evaluated per element is fixed (one source of truth:
+//! [`dc_comp`] / [`dca_comp`] below, shared by the fused steps, the staged
+//! `compensate_*` paths, and the sparse kernels). The vectorized kernels in
+//! this module therefore produce **bit-identical** results to the scalar
+//! reference loops:
+//!
+//! * chunking changes only the traversal *grouping*, never the per-element
+//!   operation order — elements never interact, so there is no
+//!   reassociation of f32 arithmetic anywhere;
+//! * every primitive involved (`+`, `-`, `*`, `/`, `sqrt`) is required by
+//!   IEEE 754 to be correctly rounded in both scalar and packed forms, so
+//!   a lane of a vector op returns the same bits as the scalar op.
+//!
+//! This is *not* true of reductions (a vectorized sum reassociates), which
+//! is why the only reduction on the hot path — QSGD's max-abs norm — uses
+//! `max`, whose fold is order-independent for non-NaN inputs.
+//!
+//! The kernels are written as chunked loops over fixed-size windows with
+//! scalar remainder tails ("autovectorization-friendly" rather than
+//! `std::simd`, which is not on stable). `chunks_exact` gives LLVM a
+//! compile-time trip count, so the inner loops compile to packed
+//! `mulps`/`sqrtps`/`divps` on every x86-64 target.
+//!
+//! ## Dispatch
+//!
+//! The public wrappers in [`crate::optim`] pick between these kernels and
+//! the `*_scalar` reference loops via [`simd_enabled`]: a process-global
+//! switch set from the `[runtime] simd` config knob (`--simd false` on the
+//! CLI) and compiled out entirely when the crate's `simd` cargo feature is
+//! disabled. Because both sides are bit-identical (pinned by the
+//! `tests/kernels.rs` property suite), the switch trades wallclock only —
+//! it exists for A/B measurement and as the serial reference lane in CI.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Elements per vectorized chunk: one AVX register of f32 (and exactly two
+/// SSE registers), matching the widest unit stable rustc targets by default.
+pub const LANES: usize = 8;
+
+/// Process-global kernel dispatch: `true` = chunked-SIMD kernels, `false` =
+/// scalar reference loops. Compiled to `false` permanently when the `simd`
+/// cargo feature is off.
+static SIMD_ENABLED: AtomicBool = AtomicBool::new(cfg!(feature = "simd"));
+
+/// Flip the kernel dispatch (the `[runtime] simd` knob). A no-op toward
+/// `true` when the `simd` cargo feature is compiled out. Safe to call from
+/// anywhere at any time: both dispatch targets are bit-identical, so a
+/// concurrent flip is unobservable in results.
+pub fn set_simd_enabled(on: bool) {
+    SIMD_ENABLED.store(on && cfg!(feature = "simd"), Ordering::Relaxed);
+}
+
+/// Current kernel dispatch (also gates the fused decode→apply and the
+/// streaming codec paths in [`crate::compress`]).
+pub fn simd_enabled() -> bool {
+    SIMD_ENABLED.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// shared elementwise cores
+//
+// The single source of truth for the delay-compensation math: the fused
+// steps, the staged compensate_* buffers, and the sparse kernels all
+// evaluate exactly these expression trees (so they cannot drift apart, and
+// fused == staged holds bitwise).
+
+/// One element of the constant-lambda compensated gradient (Eqn. 10):
+/// `g + lam * g^2 * (w - w_bak)`.
+#[inline(always)]
+pub fn dc_comp(gi: f32, wi: f32, bi: f32, lam: f32) -> f32 {
+    gi + lam * gi * gi * (wi - bi)
+}
+
+/// One element of the adaptive-lambda recurrence (Eqn. 10 + Eqn. 14):
+/// advances the MeanSquare state in place and returns the compensated
+/// gradient. `one_minus_m` is hoisted by the callers (`1.0 - m`) so every
+/// call site rounds it identically.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub fn dca_comp(
+    gi: f32,
+    wi: f32,
+    bi: f32,
+    msi: &mut f32,
+    lam0: f32,
+    m: f32,
+    one_minus_m: f32,
+    eps: f32,
+) -> f32 {
+    let g2 = gi * gi;
+    let ms_new = m * *msi + one_minus_m * g2;
+    *msi = ms_new;
+    let lam_t = lam0 / (ms_new + eps).sqrt();
+    gi + lam_t * g2 * (wi - bi)
+}
+
+// ---------------------------------------------------------------------------
+// chunked-SIMD kernels (scalar tails)
+
+/// Chunked [`crate::optim::sgd_step`]: `w -= lr * g`.
+pub fn sgd_step_simd(w: &mut [f32], g: &[f32], lr: f32) {
+    debug_assert_eq!(w.len(), g.len());
+    let head = w.len() - w.len() % LANES;
+    let (wv, wt) = w.split_at_mut(head);
+    let (gv, gt) = g.split_at(head);
+    for (wc, gc) in wv.chunks_exact_mut(LANES).zip(gv.chunks_exact(LANES)) {
+        for j in 0..LANES {
+            wc[j] -= lr * gc[j];
+        }
+    }
+    for (wi, gi) in wt.iter_mut().zip(gt) {
+        *wi -= lr * gi;
+    }
+}
+
+/// Chunked [`crate::optim::momentum_step`]: `v = mu*v + g; w -= lr*v`.
+pub fn momentum_step_simd(w: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, mu: f32) {
+    debug_assert_eq!(w.len(), g.len());
+    debug_assert_eq!(w.len(), v.len());
+    let head = w.len() - w.len() % LANES;
+    let (wv, wt) = w.split_at_mut(head);
+    let (vv, vt) = v.split_at_mut(head);
+    let (gv, gt) = g.split_at(head);
+    for ((wc, vc), gc) in
+        wv.chunks_exact_mut(LANES).zip(vv.chunks_exact_mut(LANES)).zip(gv.chunks_exact(LANES))
+    {
+        for j in 0..LANES {
+            vc[j] = mu * vc[j] + gc[j];
+            wc[j] -= lr * vc[j];
+        }
+    }
+    for ((wi, vi), gi) in wt.iter_mut().zip(vt.iter_mut()).zip(gt) {
+        *vi = mu * *vi + gi;
+        *wi -= lr * *vi;
+    }
+}
+
+/// Chunked [`crate::optim::dc_step`] (Eqn. 10).
+pub fn dc_step_simd(w: &mut [f32], g: &[f32], w_bak: &[f32], lr: f32, lam: f32) {
+    debug_assert_eq!(w.len(), g.len());
+    debug_assert_eq!(w.len(), w_bak.len());
+    let head = w.len() - w.len() % LANES;
+    let (wv, wt) = w.split_at_mut(head);
+    let (gv, gt) = g.split_at(head);
+    let (bv, bt) = w_bak.split_at(head);
+    for ((wc, gc), bc) in
+        wv.chunks_exact_mut(LANES).zip(gv.chunks_exact(LANES)).zip(bv.chunks_exact(LANES))
+    {
+        for j in 0..LANES {
+            wc[j] -= lr * dc_comp(gc[j], wc[j], bc[j], lam);
+        }
+    }
+    for ((wi, gi), bi) in wt.iter_mut().zip(gt).zip(bt) {
+        *wi -= lr * dc_comp(*gi, *wi, *bi, lam);
+    }
+}
+
+/// Chunked [`crate::optim::dc_adaptive_step`] (Eqn. 10 + 14). The packed
+/// `sqrtps`/`divps` this compiles to are the kernel family's biggest win:
+/// the scalar loop is latency-bound on the per-element sqrt.
+#[allow(clippy::too_many_arguments)]
+pub fn dc_adaptive_step_simd(
+    w: &mut [f32],
+    g: &[f32],
+    w_bak: &[f32],
+    ms: &mut [f32],
+    lr: f32,
+    lam0: f32,
+    m: f32,
+    eps: f32,
+) {
+    debug_assert_eq!(w.len(), g.len());
+    debug_assert_eq!(w.len(), w_bak.len());
+    debug_assert_eq!(w.len(), ms.len());
+    let one_minus_m = 1.0 - m;
+    let head = w.len() - w.len() % LANES;
+    let (wv, wt) = w.split_at_mut(head);
+    let (gv, gt) = g.split_at(head);
+    let (bv, bt) = w_bak.split_at(head);
+    let (mv, mt) = ms.split_at_mut(head);
+    for (((wc, gc), bc), mc) in wv
+        .chunks_exact_mut(LANES)
+        .zip(gv.chunks_exact(LANES))
+        .zip(bv.chunks_exact(LANES))
+        .zip(mv.chunks_exact_mut(LANES))
+    {
+        for j in 0..LANES {
+            let comp = dca_comp(gc[j], wc[j], bc[j], &mut mc[j], lam0, m, one_minus_m, eps);
+            wc[j] -= lr * comp;
+        }
+    }
+    for (((wi, gi), bi), msi) in wt.iter_mut().zip(gt).zip(bt).zip(mt.iter_mut()) {
+        let comp = dca_comp(*gi, *wi, *bi, msi, lam0, m, one_minus_m, eps);
+        *wi -= lr * comp;
+    }
+}
+
+/// Chunked [`crate::optim::compensate_into`].
+pub fn compensate_into_simd(out: &mut [f32], g: &[f32], w: &[f32], w_bak: &[f32], lam: f32) {
+    debug_assert_eq!(out.len(), g.len());
+    debug_assert_eq!(out.len(), w.len());
+    debug_assert_eq!(out.len(), w_bak.len());
+    let head = out.len() - out.len() % LANES;
+    let (ov, ot) = out.split_at_mut(head);
+    let (gv, gt) = g.split_at(head);
+    let (wv, wt) = w.split_at(head);
+    let (bv, bt) = w_bak.split_at(head);
+    for (((oc, gc), wc), bc) in ov
+        .chunks_exact_mut(LANES)
+        .zip(gv.chunks_exact(LANES))
+        .zip(wv.chunks_exact(LANES))
+        .zip(bv.chunks_exact(LANES))
+    {
+        for j in 0..LANES {
+            oc[j] = dc_comp(gc[j], wc[j], bc[j], lam);
+        }
+    }
+    for (((oi, gi), wi), bi) in ot.iter_mut().zip(gt).zip(wt).zip(bt) {
+        *oi = dc_comp(*gi, *wi, *bi, lam);
+    }
+}
+
+/// Chunked [`crate::optim::compensate_adaptive_into`] (updates `ms`).
+#[allow(clippy::too_many_arguments)]
+pub fn compensate_adaptive_into_simd(
+    out: &mut [f32],
+    g: &[f32],
+    w: &[f32],
+    w_bak: &[f32],
+    ms: &mut [f32],
+    lam0: f32,
+    m: f32,
+    eps: f32,
+) {
+    debug_assert_eq!(out.len(), g.len());
+    debug_assert_eq!(out.len(), ms.len());
+    let one_minus_m = 1.0 - m;
+    let head = out.len() - out.len() % LANES;
+    let (ov, ot) = out.split_at_mut(head);
+    let (gv, gt) = g.split_at(head);
+    let (wv, wt) = w.split_at(head);
+    let (bv, bt) = w_bak.split_at(head);
+    let (mv, mt) = ms.split_at_mut(head);
+    for ((((oc, gc), wc), bc), mc) in ov
+        .chunks_exact_mut(LANES)
+        .zip(gv.chunks_exact(LANES))
+        .zip(wv.chunks_exact(LANES))
+        .zip(bv.chunks_exact(LANES))
+        .zip(mv.chunks_exact_mut(LANES))
+    {
+        for j in 0..LANES {
+            oc[j] = dca_comp(gc[j], wc[j], bc[j], &mut mc[j], lam0, m, one_minus_m, eps);
+        }
+    }
+    for ((((oi, gi), wi), bi), msi) in
+        ot.iter_mut().zip(gt).zip(wt).zip(bt).zip(mt.iter_mut())
+    {
+        *oi = dca_comp(*gi, *wi, *bi, msi, lam0, m, one_minus_m, eps);
+    }
+}

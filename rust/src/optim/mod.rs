@@ -1,21 +1,42 @@
-//! Update rules (paper §4 + appendix H), implemented twice:
+//! Update rules (paper §4 + appendix H), implemented three ways:
 //!
-//! * **native**: fused slice loops in this module — the parameter server's
-//!   hot path (bench `ps_throughput` ablates against the XLA path),
+//! * **scalar**: the `*_scalar` reference loops in this module — one plain
+//!   per-element pass, kept as the ground truth every other implementation
+//!   is pinned against,
+//! * **simd**: the chunked-SIMD kernels in [`kernels`] — bit-identical to
+//!   the scalar loops (see the module docs there for the f32 op-order
+//!   contract) and selected by default via [`simd_enabled`],
 //! * **xla**: the AOT-compiled Pallas kernels, dispatched via
 //!   [`crate::runtime`] when `UpdateBackend::Xla` is selected.
 //!
 //! All functions operate on sub-slices so the sharded store can apply them
 //! per-shard in parallel. They are written as single fused passes: each
 //! element of every operand is touched exactly once (bytes moved =
-//! theoretical minimum), mirroring the Pallas kernels' structure.
+//! theoretical minimum), mirroring the Pallas kernels' structure. The
+//! delay-compensation math itself lives in exactly one place — the
+//! [`kernels::dc_comp`] / [`kernels::dca_comp`] elementwise cores — shared
+//! by the fused steps, the staged `compensate_*` buffers, and the sparse
+//! kernels, so the variants cannot drift apart.
 
 pub mod dcssgd;
+pub mod kernels;
 
 pub use dcssgd::DcSsgdAccumulator;
+pub use kernels::{set_simd_enabled, simd_enabled, LANES};
 
-/// Plain SGD: `w -= lr * g`.
+use kernels::{dc_comp, dca_comp};
+
+/// Plain SGD: `w -= lr * g`. Dispatches on [`simd_enabled`].
 pub fn sgd_step(w: &mut [f32], g: &[f32], lr: f32) {
+    if simd_enabled() {
+        kernels::sgd_step_simd(w, g, lr);
+    } else {
+        sgd_step_scalar(w, g, lr);
+    }
+}
+
+/// Scalar reference for [`sgd_step`].
+pub fn sgd_step_scalar(w: &mut [f32], g: &[f32], lr: f32) {
     debug_assert_eq!(w.len(), g.len());
     for (wi, gi) in w.iter_mut().zip(g) {
         *wi -= lr * gi;
@@ -24,6 +45,15 @@ pub fn sgd_step(w: &mut [f32], g: &[f32], lr: f32) {
 
 /// Heavy-ball momentum: `v = mu*v + g; w -= lr*v`.
 pub fn momentum_step(w: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, mu: f32) {
+    if simd_enabled() {
+        kernels::momentum_step_simd(w, v, g, lr, mu);
+    } else {
+        momentum_step_scalar(w, v, g, lr, mu);
+    }
+}
+
+/// Scalar reference for [`momentum_step`].
+pub fn momentum_step_scalar(w: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, mu: f32) {
     debug_assert_eq!(w.len(), g.len());
     debug_assert_eq!(w.len(), v.len());
     for ((wi, vi), gi) in w.iter_mut().zip(v.iter_mut()).zip(g) {
@@ -37,18 +67,46 @@ pub fn momentum_step(w: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, mu: f32) 
 /// `w` is the *current* global model; `w_bak` is the snapshot the worker
 /// pulled. Single fused pass.
 pub fn dc_step(w: &mut [f32], g: &[f32], w_bak: &[f32], lr: f32, lam: f32) {
+    if simd_enabled() {
+        kernels::dc_step_simd(w, g, w_bak, lr, lam);
+    } else {
+        dc_step_scalar(w, g, w_bak, lr, lam);
+    }
+}
+
+/// Scalar reference for [`dc_step`].
+pub fn dc_step_scalar(w: &mut [f32], g: &[f32], w_bak: &[f32], lr: f32, lam: f32) {
     debug_assert_eq!(w.len(), g.len());
     debug_assert_eq!(w.len(), w_bak.len());
     for ((wi, gi), bi) in w.iter_mut().zip(g).zip(w_bak) {
-        let delta = *wi - bi;
-        *wi -= lr * (gi + lam * gi * gi * delta);
+        *wi -= lr * dc_comp(*gi, *wi, *bi, lam);
     }
 }
 
 /// DC-ASGD-a (Eqn. 10 + Eqn. 14): MeanSquare-normalized lambda.
 ///
 /// `ms = m*ms + (1-m)*g⊙g; lam_t = lam0/sqrt(ms + eps)` elementwise.
+#[allow(clippy::too_many_arguments)]
 pub fn dc_adaptive_step(
+    w: &mut [f32],
+    g: &[f32],
+    w_bak: &[f32],
+    ms: &mut [f32],
+    lr: f32,
+    lam0: f32,
+    m: f32,
+    eps: f32,
+) {
+    if simd_enabled() {
+        kernels::dc_adaptive_step_simd(w, g, w_bak, ms, lr, lam0, m, eps);
+    } else {
+        dc_adaptive_step_scalar(w, g, w_bak, ms, lr, lam0, m, eps);
+    }
+}
+
+/// Scalar reference for [`dc_adaptive_step`].
+#[allow(clippy::too_many_arguments)]
+pub fn dc_adaptive_step_scalar(
     w: &mut [f32],
     g: &[f32],
     w_bak: &[f32],
@@ -63,26 +121,55 @@ pub fn dc_adaptive_step(
     debug_assert_eq!(w.len(), ms.len());
     let one_minus_m = 1.0 - m;
     for (((wi, gi), bi), msi) in w.iter_mut().zip(g).zip(w_bak).zip(ms.iter_mut()) {
-        let g2 = gi * gi;
-        let ms_new = m * *msi + one_minus_m * g2;
-        *msi = ms_new;
-        let lam_t = lam0 / (ms_new + eps).sqrt();
-        let delta = *wi - bi;
-        *wi -= lr * (gi + lam_t * g2 * delta);
+        let comp = dca_comp(*gi, *wi, *bi, msi, lam0, m, one_minus_m, eps);
+        *wi -= lr * comp;
     }
 }
 
 /// Delay-compensated gradient *without* applying it (used by DC-SSGD and by
 /// momentum composition): `out = g + lam * g⊙g⊙(w - w_bak)`.
 pub fn compensate_into(out: &mut [f32], g: &[f32], w: &[f32], w_bak: &[f32], lam: f32) {
-    debug_assert_eq!(out.len(), g.len());
-    for (((oi, gi), wi), bi) in out.iter_mut().zip(g).zip(w).zip(w_bak) {
-        *oi = gi + lam * gi * gi * (wi - bi);
+    if simd_enabled() {
+        kernels::compensate_into_simd(out, g, w, w_bak, lam);
+    } else {
+        compensate_into_scalar(out, g, w, w_bak, lam);
     }
 }
 
-/// Adaptive-lambda compensation into a buffer (updates `ms`).
+/// Scalar reference for [`compensate_into`].
+pub fn compensate_into_scalar(out: &mut [f32], g: &[f32], w: &[f32], w_bak: &[f32], lam: f32) {
+    debug_assert_eq!(out.len(), g.len());
+    for (((oi, gi), wi), bi) in out.iter_mut().zip(g).zip(w).zip(w_bak) {
+        *oi = dc_comp(*gi, *wi, *bi, lam);
+    }
+}
+
+/// Adaptive-lambda compensation into a buffer (updates `ms`). Shares the
+/// [`kernels::dca_comp`] core with [`dc_adaptive_step`], so staged
+/// compensation == fused step holds *bitwise* (previously the recurrence
+/// was duplicated in both functions and only agreed to rounding noise by
+/// inspection).
+#[allow(clippy::too_many_arguments)]
 pub fn compensate_adaptive_into(
+    out: &mut [f32],
+    g: &[f32],
+    w: &[f32],
+    w_bak: &[f32],
+    ms: &mut [f32],
+    lam0: f32,
+    m: f32,
+    eps: f32,
+) {
+    if simd_enabled() {
+        kernels::compensate_adaptive_into_simd(out, g, w, w_bak, ms, lam0, m, eps);
+    } else {
+        compensate_adaptive_into_scalar(out, g, w, w_bak, ms, lam0, m, eps);
+    }
+}
+
+/// Scalar reference for [`compensate_adaptive_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn compensate_adaptive_into_scalar(
     out: &mut [f32],
     g: &[f32],
     w: &[f32],
@@ -96,11 +183,7 @@ pub fn compensate_adaptive_into(
     for ((((oi, gi), wi), bi), msi) in
         out.iter_mut().zip(g).zip(w).zip(w_bak).zip(ms.iter_mut())
     {
-        let g2 = gi * gi;
-        let ms_new = m * *msi + one_minus_m * g2;
-        *msi = ms_new;
-        let lam_t = lam0 / (ms_new + eps).sqrt();
-        *oi = gi + lam_t * g2 * (wi - bi);
+        *oi = dca_comp(*gi, *wi, *bi, msi, lam0, m, one_minus_m, eps);
     }
 }
 
@@ -109,6 +192,8 @@ pub fn compensate_adaptive_into(
 /// Identical f32 ops (in ascending-index order) to [`sgd_step`] on the
 /// densified gradient — untouched coordinates are exactly unchanged there
 /// too (`x - lr * 0.0 == x`), so sparse and dense applies are bit-equal.
+/// The index walk is an irregular gather, so there is no SIMD variant; the
+/// per-element math is the same expression the dense kernels evaluate.
 pub fn sgd_step_sparse(w: &mut [f32], base: usize, idx: &[u32], val: &[f32], lr: f32) {
     debug_assert_eq!(idx.len(), val.len());
     for (&i, &v) in idx.iter().zip(val) {
@@ -119,7 +204,8 @@ pub fn sgd_step_sparse(w: &mut [f32], base: usize, idx: &[u32], val: &[f32], lr:
 /// Sparse DC-ASGD-c (Eqn. 10) on one shard slice: compensation against the
 /// worker's backup only at the transmitted coordinates. Bit-equal to
 /// [`dc_step`] on the densified gradient (a zero gradient element
-/// contributes `0 + lam * 0 * delta = 0` there).
+/// contributes `0 + lam * 0 * delta = 0` there). Uses the shared
+/// [`kernels::dc_comp`] core.
 pub fn dc_step_sparse(
     w: &mut [f32],
     w_bak: &[f32],
@@ -133,15 +219,16 @@ pub fn dc_step_sparse(
     debug_assert_eq!(idx.len(), val.len());
     for (&i, &v) in idx.iter().zip(val) {
         let j = i as usize - base;
-        let delta = w[j] - w_bak[j];
-        w[j] -= lr * (v + lam * v * v * delta);
+        w[j] -= lr * dc_comp(v, w[j], w_bak[j], lam);
     }
 }
 
 /// Average equal-length gradient rows into `out` (SSGD). Generic over the
 /// row type (`&[f32]`, `Vec<f32>`, ...) so callers with owned arenas don't
 /// build a vector of slice refs; the f32 accumulation order (copy row 0,
-/// add the rest, scale) is part of the repo's determinism contract.
+/// add the rest, scale) is part of the repo's determinism contract — which
+/// is also why this stays a plain loop: vectorizing across *rows* would be
+/// fine (elementwise), but the simple form is not on the PS hot path.
 pub fn average_into<G: AsRef<[f32]>>(out: &mut [f32], grads: &[G]) {
     assert!(!grads.is_empty());
     let inv = 1.0 / grads.len() as f32;
@@ -240,8 +327,11 @@ mod tests {
     }
 
     #[test]
-    fn adaptive_matches_staged_compensation() {
-        // fused dc_adaptive_step == compensate_adaptive_into + sgd_step
+    fn adaptive_matches_staged_compensation_bitwise() {
+        // fused dc_adaptive_step == compensate_adaptive_into + sgd_step.
+        // BITWISE: both evaluate the shared kernels::dca_comp core, so the
+        // staged path cannot drift from the fused one (this was previously
+        // a 1e-6-tolerance test over two hand-duplicated recurrences).
         let v = vecs(5, 200, 4);
         let (g, wb) = (&v[1], &v[2]);
         let ms0: Vec<f32> = v[3].iter().map(|x| x.abs()).collect();
@@ -256,9 +346,7 @@ mod tests {
         compensate_adaptive_into(&mut comp, g, &w_staged, wb, &mut ms_staged, 2.0, 0.95, MS_EPS);
         sgd_step(&mut w_staged, &comp, 0.1);
 
-        for (a, b) in w_fused.iter().zip(&w_staged) {
-            assert!((a - b).abs() < 1e-6);
-        }
+        assert_eq!(w_fused, w_staged);
         assert_eq!(ms_fused, ms_staged);
     }
 
@@ -286,7 +374,7 @@ mod tests {
     }
 
     #[test]
-    fn compensate_into_matches_dc_step() {
+    fn compensate_into_matches_dc_step_bitwise() {
         let v = vecs(6, 150, 3);
         let (g, wb) = (&v[1], &v[2]);
         let mut w1 = v[0].clone();
@@ -295,9 +383,38 @@ mod tests {
         compensate_into(&mut comp, g, &v[0], wb, 0.7);
         let mut w2 = v[0].clone();
         sgd_step(&mut w2, &comp, 0.1);
-        for (a, b) in w1.iter().zip(&w2) {
-            assert!((a - b).abs() < 1e-6);
-        }
+        assert_eq!(w1, w2);
+    }
+
+    #[test]
+    fn simd_kernels_match_scalar_reference_bitwise() {
+        // the exhaustive tail/offset sweep lives in tests/kernels.rs; this
+        // is the in-crate smoke version over one awkward odd length
+        let n = 1003;
+        let v = vecs(9, n, 4);
+        let (g, wb) = (&v[1], &v[2]);
+        let ms0: Vec<f32> = v[3].iter().map(|x| x.abs()).collect();
+
+        let mut ws = v[0].clone();
+        let mut wk = v[0].clone();
+        sgd_step_scalar(&mut ws, g, 0.17);
+        kernels::sgd_step_simd(&mut wk, g, 0.17);
+        assert_eq!(ws, wk);
+
+        let mut ws = v[0].clone();
+        let mut wk = v[0].clone();
+        dc_step_scalar(&mut ws, g, wb, 0.17, 1.3);
+        kernels::dc_step_simd(&mut wk, g, wb, 0.17, 1.3);
+        assert_eq!(ws, wk);
+
+        let mut ws = v[0].clone();
+        let mut wk = v[0].clone();
+        let mut mss = ms0.clone();
+        let mut msk = ms0.clone();
+        dc_adaptive_step_scalar(&mut ws, g, wb, &mut mss, 0.1, 2.0, 0.95, MS_EPS);
+        kernels::dc_adaptive_step_simd(&mut wk, g, wb, &mut msk, 0.1, 2.0, 0.95, MS_EPS);
+        assert_eq!(ws, wk);
+        assert_eq!(mss, msk);
     }
 
     #[test]

@@ -37,6 +37,15 @@ pub trait UpdateKernel: Send + Sync {
     fn requires_whole_vector(&self) -> bool {
         false
     }
+    /// True if this kernel *is* the native elementwise math bit-for-bit
+    /// (i.e. delegates to [`crate::optim`] unchanged). Gates the fused
+    /// quantized decode→compensate→apply fast path: fusing decodes levels
+    /// in blocks and applies the native rule per block, so it is only valid
+    /// when the kernel would have computed exactly the native expressions
+    /// anyway. Custom and whole-vector kernels keep the densified path.
+    fn is_native_elementwise(&self) -> bool {
+        false
+    }
     /// Sparse variants for compressed pushes ([`Self::sgd`]/[`Self::dc`]
     /// restricted to the transmitted coordinates). Defaults delegate to
     /// the fused native loops so any elementwise kernel stays consistent
@@ -83,6 +92,9 @@ impl UpdateKernel for NativeKernel {
         eps: f32,
     ) {
         optim::dc_adaptive_step(w, g, w_bak, ms, lr, lam0, m, eps);
+    }
+    fn is_native_elementwise(&self) -> bool {
+        true
     }
     fn name(&self) -> &'static str {
         "native"
@@ -387,10 +399,15 @@ impl ParamServer {
     /// result is bit-identical to pushing the densified gradient. The
     /// adaptive rule (DC-ASGD-a) decodes densely first: its MeanSquare
     /// state decays at *every* coordinate per push, transmitted or not, so
-    /// a truly sparse apply would change the math. Quantized payloads
-    /// always decode densely (into a reusable arena). Momentum and
-    /// whole-vector (XLA) backends don't compose with compression; config
-    /// validation rejects them upstream.
+    /// a truly sparse apply would change the math. Quantized payloads take
+    /// a fused decode→compensate→apply pass per shard slice when the
+    /// kernel is the native elementwise math and SIMD dispatch is on
+    /// ([`crate::compress::decode_dc_apply`] and friends — each element of
+    /// `w`/`w_bak`/`ms` is loaded exactly once, levels decode in
+    /// L1-resident blocks); otherwise they decode densely into a reusable
+    /// arena and run the normal dense push. Both routes are bit-identical.
+    /// Momentum and whole-vector (XLA) backends don't compose with
+    /// compression; config validation rejects them upstream.
     pub fn push_encoded(
         &self,
         worker: usize,
@@ -406,7 +423,13 @@ impl ParamServer {
         let h = self.hyper;
         match p {
             P::Dense(g) => self.push(worker, g, lr),
-            P::Quantized { .. } => self.push_densified(worker, p, lr),
+            P::Quantized { bits, norm, packed, .. } => {
+                if self.kernel.is_native_elementwise() && crate::optim::simd_enabled() {
+                    self.push_quantized_fused(worker, *bits as u32, *norm, packed, lr)
+                } else {
+                    self.push_densified(worker, p, lr)
+                }
+            }
             P::Sparse { idx, val, .. } => match self.algo {
                 Algorithm::DcAsgdAdaptive => self.push_densified(worker, p, lr),
                 Algorithm::Asgd
@@ -435,6 +458,69 @@ impl ParamServer {
                 }
             },
         }
+    }
+
+    /// Fused quantized push: stream the packed levels straight into the
+    /// update rule, one pass over each shard slice ([`crate::compress`]'s
+    /// `decode_*_apply` entry points). Bit-identical to densify-then-push:
+    /// the decoded values and the per-element update expressions are the
+    /// same, only the arena round-trip through DRAM is gone. Caller
+    /// guarantees the kernel is native-elementwise (checked in
+    /// [`Self::push_encoded`]); lock order matches the dense path
+    /// (`bak` → shards).
+    fn push_quantized_fused(
+        &self,
+        worker: usize,
+        bits: u32,
+        norm: f32,
+        packed: &[u8],
+        lr: f32,
+    ) -> PushOutcome {
+        let h = self.hyper;
+        match self.algo {
+            Algorithm::Asgd | Algorithm::SequentialSgd | Algorithm::SyncSgd | Algorithm::Ssp => {
+                self.store.for_each_shard(|s, range| {
+                    crate::compress::decode_sgd_apply(
+                        &mut s.w, range.start, bits, norm, packed, lr,
+                    );
+                });
+            }
+            Algorithm::DcAsgdConst | Algorithm::DcS3gd | Algorithm::DcSyncSgd => {
+                let bak = self.store.bak_lock(worker);
+                self.store.for_each_shard(|s, range| {
+                    crate::compress::decode_dc_apply(
+                        &mut s.w,
+                        &bak[range.clone()],
+                        range.start,
+                        bits,
+                        norm,
+                        packed,
+                        lr,
+                        h.lambda0,
+                    );
+                });
+            }
+            Algorithm::DcAsgdAdaptive => {
+                let bak = self.store.bak_lock(worker);
+                self.store.for_each_shard(|s, range| {
+                    let ShardData { w, ms, .. } = &mut *s;
+                    crate::compress::decode_dca_apply(
+                        w,
+                        &bak[range.clone()],
+                        ms,
+                        range.start,
+                        bits,
+                        norm,
+                        packed,
+                        lr,
+                        h.lambda0,
+                        h.ms_momentum,
+                        h.eps,
+                    );
+                });
+            }
+        }
+        self.commit(worker)
     }
 
     /// Decode a payload into the reusable dense arena and run the normal
@@ -854,6 +940,64 @@ mod tests {
         ps.snapshot(&mut a);
         dense.snapshot(&mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fused_quantized_push_matches_densified_bitwise() {
+        use crate::compress::{GradientCodec, Qsgd, WirePayload};
+        // A kernel with identical math that opts out of the fused route
+        // (is_native_elementwise = false → quantized payloads densify into
+        // the arena). NativeKernel takes the fused decode→compensate→apply
+        // pass; the two must produce bit-identical models for every rule.
+        struct Densify;
+        impl UpdateKernel for Densify {
+            fn sgd(&self, w: &mut [f32], g: &[f32], lr: f32) {
+                optim::sgd_step(w, g, lr)
+            }
+            fn dc(&self, w: &mut [f32], g: &[f32], b: &[f32], lr: f32, lam: f32) {
+                optim::dc_step(w, g, b, lr, lam)
+            }
+            fn dca(
+                &self,
+                w: &mut [f32],
+                g: &[f32],
+                b: &[f32],
+                ms: &mut [f32],
+                lr: f32,
+                l0: f32,
+                m: f32,
+                e: f32,
+            ) {
+                optim::dc_adaptive_step(w, g, b, ms, lr, l0, m, e)
+            }
+            fn name(&self) -> &'static str {
+                "densify"
+            }
+        }
+        let n = 517;
+        for algo in [Algorithm::Asgd, Algorithm::DcAsgdConst, Algorithm::DcAsgdAdaptive] {
+            let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.1).sin()).collect();
+            let fused =
+                ParamServer::new(&init, 2, 4, algo, hyper(), Box::new(NativeKernel)).unwrap();
+            let dense = ParamServer::new(&init, 2, 4, algo, hyper(), Box::new(Densify)).unwrap();
+            let mut buf = vec![0.0; n];
+            for step in 0..6u64 {
+                let worker = (step % 2) as usize;
+                fused.pull(worker, &mut buf);
+                dense.pull(worker, &mut buf);
+                let g = grad(60 + step, n);
+                let mut codec = Qsgd::new(4, crate::util::rng::Pcg64::new(step + 1));
+                let mut p = WirePayload::default();
+                codec.encode(&g, &mut p);
+                fused.push_encoded(worker, &p, 0.1);
+                dense.push_encoded(worker, &p, 0.1);
+            }
+            let mut a = vec![0.0; n];
+            let mut b = vec![0.0; n];
+            fused.snapshot(&mut a);
+            dense.snapshot(&mut b);
+            assert_eq!(a, b, "{algo:?}: fused quantized push diverged from densified");
+        }
     }
 
     #[test]

@@ -35,6 +35,13 @@
 //! Lock order: a push path may hold the worker's backup lock *across*
 //! shard-lock acquisitions (bak → shard). The reverse nesting never occurs:
 //! pulls release every shard lock before touching the backup.
+//!
+//! Because shards are contiguous ranges, the fused quantized push
+//! (`ParamServer::push_quantized_fused`) can hand each shard its slice of
+//! the packed level stream directly — `LevelCursor::at` seeks to
+//! `range.start` and the fused `decode_*_apply` kernels stream levels into
+//! the update rule in one pass over the shard's `w`/`ms` under its write
+//! lock, never materializing a dense gradient.
 
 use crate::util::pool::{self, ComputePool};
 use std::ops::Range;

@@ -1,0 +1,317 @@
+//! Bitwise kernel-equivalence property suite (tier-1).
+//!
+//! Pins the PR-6 SIMD/fused rewrite to the scalar reference loops: every
+//! chunked kernel, fused decode→apply entry point, and pool-parallel codec
+//! path must produce **bit-identical** results to its scalar reference —
+//! across remainder-tail lengths, unaligned sub-slices, shard-boundary
+//! offsets, and sparse-vs-densified applies. `assert_eq!` on f32 slices is
+//! deliberate: equality here means equal bits (no tolerance), which is what
+//! lets the `[runtime] simd` knob trade wallclock only.
+
+use dc_asgd::compress::{decode_dc_apply, decode_dca_apply, decode_sgd_apply};
+use dc_asgd::compress::{GradientCodec, Qsgd, TopK, WirePayload};
+use dc_asgd::optim::{self, kernels};
+use dc_asgd::util::pool::ComputePool;
+use dc_asgd::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// Tail-exercising lengths around the chunk width: empty, single, lane-1,
+/// lane, lane+1, 2*lane-1, 2*lane, 2*lane+1, and a large odd length.
+fn tail_lengths() -> Vec<usize> {
+    let l = kernels::LANES;
+    vec![0, 1, l - 1, l, l + 1, 2 * l - 1, 2 * l, 2 * l + 1, 1003]
+}
+
+fn randn(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect()
+}
+
+fn pos(seed: u64, n: usize) -> Vec<f32> {
+    // non-negative, for MeanSquare state
+    randn(seed, n).into_iter().map(|x| x * x).collect()
+}
+
+const LR: f32 = 0.37;
+const LAM: f32 = 0.83;
+const MU: f32 = 0.9;
+const M: f32 = 0.95;
+
+#[test]
+fn dense_kernels_bitwise_equal_across_tail_lengths() {
+    for n in tail_lengths() {
+        let g = randn(1000 + n as u64, n);
+        let w0 = randn(2000 + n as u64, n);
+        let bak = randn(3000 + n as u64, n);
+        let ms0 = pos(4000 + n as u64, n);
+        let v0 = randn(5000 + n as u64, n);
+
+        // sgd
+        let (mut a, mut b) = (w0.clone(), w0.clone());
+        optim::sgd_step_scalar(&mut a, &g, LR);
+        kernels::sgd_step_simd(&mut b, &g, LR);
+        assert_eq!(a, b, "sgd n={n}");
+
+        // momentum
+        let (mut a, mut b) = (w0.clone(), w0.clone());
+        let (mut va, mut vb) = (v0.clone(), v0.clone());
+        optim::momentum_step_scalar(&mut a, &mut va, &g, LR, MU);
+        kernels::momentum_step_simd(&mut b, &mut vb, &g, LR, MU);
+        assert_eq!(a, b, "momentum w n={n}");
+        assert_eq!(va, vb, "momentum v n={n}");
+
+        // dc
+        let (mut a, mut b) = (w0.clone(), w0.clone());
+        optim::dc_step_scalar(&mut a, &g, &bak, LR, LAM);
+        kernels::dc_step_simd(&mut b, &g, &bak, LR, LAM);
+        assert_eq!(a, b, "dc n={n}");
+
+        // dca (weights AND MeanSquare state)
+        let (mut a, mut b) = (w0.clone(), w0.clone());
+        let (mut ma, mut mb) = (ms0.clone(), ms0.clone());
+        optim::dc_adaptive_step_scalar(&mut a, &g, &bak, &mut ma, LR, LAM, M, optim::MS_EPS);
+        kernels::dc_adaptive_step_simd(&mut b, &g, &bak, &mut mb, LR, LAM, M, optim::MS_EPS);
+        assert_eq!(a, b, "dca w n={n}");
+        assert_eq!(ma, mb, "dca ms n={n}");
+
+        // compensate_into
+        let (mut oa, mut ob) = (vec![0.0f32; n], vec![0.0f32; n]);
+        optim::compensate_into_scalar(&mut oa, &g, &w0, &bak, LAM);
+        kernels::compensate_into_simd(&mut ob, &g, &w0, &bak, LAM);
+        assert_eq!(oa, ob, "compensate n={n}");
+
+        // compensate_adaptive_into
+        let (mut oa, mut ob) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let (mut ma, mut mb) = (ms0.clone(), ms0.clone());
+        optim::compensate_adaptive_into_scalar(
+            &mut oa,
+            &g,
+            &w0,
+            &bak,
+            &mut ma,
+            LAM,
+            M,
+            optim::MS_EPS,
+        );
+        kernels::compensate_adaptive_into_simd(
+            &mut ob,
+            &g,
+            &w0,
+            &bak,
+            &mut mb,
+            LAM,
+            M,
+            optim::MS_EPS,
+        );
+        assert_eq!(oa, ob, "compensate_adaptive out n={n}");
+        assert_eq!(ma, mb, "compensate_adaptive ms n={n}");
+    }
+}
+
+#[test]
+fn unaligned_subslices_bitwise_equal() {
+    // shard slices start at arbitrary offsets inside the parameter vector;
+    // the chunked kernels must not care where a slice begins
+    let n = 4 * kernels::LANES + 13;
+    let total = n + 16;
+    let g = randn(71, total);
+    let w0 = randn(72, total);
+    let bak = randn(73, total);
+    let ms0 = pos(74, total);
+    for off in 0..=9usize {
+        let r = off..off + n;
+        let (mut a, mut b) = (w0.clone(), w0.clone());
+        optim::dc_step_scalar(&mut a[r.clone()], &g[r.clone()], &bak[r.clone()], LR, LAM);
+        kernels::dc_step_simd(&mut b[r.clone()], &g[r.clone()], &bak[r.clone()], LR, LAM);
+        assert_eq!(a, b, "dc off={off}");
+
+        let (mut a, mut b) = (w0.clone(), w0.clone());
+        let (mut ma, mut mb) = (ms0.clone(), ms0.clone());
+        optim::dc_adaptive_step_scalar(
+            &mut a[r.clone()],
+            &g[r.clone()],
+            &bak[r.clone()],
+            &mut ma[r.clone()],
+            LR,
+            LAM,
+            M,
+            optim::MS_EPS,
+        );
+        kernels::dc_adaptive_step_simd(
+            &mut b[r.clone()],
+            &g[r.clone()],
+            &bak[r.clone()],
+            &mut mb[r.clone()],
+            LR,
+            LAM,
+            M,
+            optim::MS_EPS,
+        );
+        assert_eq!(a, b, "dca w off={off}");
+        assert_eq!(ma, mb, "dca ms off={off}");
+    }
+}
+
+#[test]
+fn fused_decode_apply_matches_staged_at_shard_offsets() {
+    // the fused quantized pass must equal decode-into-arena + scalar step,
+    // bitwise, for every shard slice — including slices that start at odd
+    // (non-lane, non-byte-aligned) element offsets into the level stream
+    let n = 1003usize;
+    let g = randn(81, n);
+    for bits in [4u8, 8u8] {
+        let mut codec = Qsgd::new(bits as u32, Pcg64::new(9));
+        let mut p = WirePayload::default();
+        codec.encode(&g, &mut p);
+        let mut dense = vec![0.0f32; n];
+        p.decode_into(&mut dense);
+        let (bits, norm, packed) = match &p {
+            WirePayload::Quantized { bits, norm, packed, .. } => (*bits as u32, *norm, packed),
+            other => panic!("expected quantized payload, got {other:?}"),
+        };
+        let ranges = [0..300usize, 300..301, 301..n];
+        let w0 = randn(82, n);
+        let bak = randn(83, n);
+        let ms0 = pos(84, n);
+
+        // sgd
+        let (mut wf, mut ws) = (w0.clone(), w0.clone());
+        for r in ranges.iter().cloned() {
+            decode_sgd_apply(&mut wf[r.clone()], r.start, bits, norm, packed, LR);
+            optim::sgd_step_scalar(&mut ws[r.clone()], &dense[r.clone()], LR);
+        }
+        assert_eq!(wf, ws, "fused sgd bits={bits}");
+
+        // dc
+        let (mut wf, mut ws) = (w0.clone(), w0.clone());
+        for r in ranges.iter().cloned() {
+            decode_dc_apply(&mut wf[r.clone()], &bak[r.clone()], r.start, bits, norm, packed, LR, LAM);
+            optim::dc_step_scalar(&mut ws[r.clone()], &dense[r.clone()], &bak[r.clone()], LR, LAM);
+        }
+        assert_eq!(wf, ws, "fused dc bits={bits}");
+
+        // dca (weights and MeanSquare)
+        let (mut wf, mut ws) = (w0.clone(), w0.clone());
+        let (mut mf, mut msq) = (ms0.clone(), ms0.clone());
+        for r in ranges.iter().cloned() {
+            decode_dca_apply(
+                &mut wf[r.clone()],
+                &bak[r.clone()],
+                &mut mf[r.clone()],
+                r.start,
+                bits,
+                norm,
+                packed,
+                LR,
+                LAM,
+                M,
+                optim::MS_EPS,
+            );
+            optim::dc_adaptive_step_scalar(
+                &mut ws[r.clone()],
+                &dense[r.clone()],
+                &bak[r.clone()],
+                &mut msq[r.clone()],
+                LR,
+                LAM,
+                M,
+                optim::MS_EPS,
+            );
+        }
+        assert_eq!(wf, ws, "fused dca w bits={bits}");
+        assert_eq!(mf, msq, "fused dca ms bits={bits}");
+    }
+}
+
+#[test]
+fn sparse_kernels_match_densified_apply() {
+    let n = 517usize;
+    let g = randn(91, n);
+    let w0 = randn(92, n);
+    let bak = randn(93, n);
+    let base = 100usize;
+    let idx: Vec<u32> = (0..n).filter(|i| i % 3 == 0 && *i >= base).map(|i| i as u32).collect();
+    let val: Vec<f32> = idx.iter().map(|&i| g[i as usize]).collect();
+    let mut densified = vec![0.0f32; n - base];
+    for (&i, &v) in idx.iter().zip(&val) {
+        densified[i as usize - base] = v;
+    }
+
+    let (mut a, mut b) = (w0.clone(), w0.clone());
+    optim::sgd_step_sparse(&mut a[base..], base, &idx, &val, LR);
+    optim::sgd_step_scalar(&mut b[base..], &densified, LR);
+    assert_eq!(a, b, "sparse sgd == densified");
+
+    let (mut a, mut b) = (w0.clone(), w0.clone());
+    optim::dc_step_sparse(&mut a[base..], &bak[base..], base, &idx, &val, LR, LAM);
+    // densified zeros compensate to zero (g=0 ⇒ comp=0), so the dense DC
+    // step over the window touches exactly the transmitted coordinates
+    optim::dc_step_scalar(&mut b[base..], &densified, &bak[base..], LR, LAM);
+    assert_eq!(a, b, "sparse dc == densified");
+}
+
+#[test]
+fn topk_pool_parallel_encode_matches_serial() {
+    // pool-parallel key build + two-phase selection must keep the exact
+    // payload: same kept set, same index order, same values
+    let n = 70_000usize;
+    let mut rng = Pcg64::new(11);
+    // tie-heavy magnitudes stress the (|g| desc, idx asc) ordering contract
+    let g: Vec<f32> =
+        (0..n).map(|_| [0.0f32, 0.25, -0.25, 1.5, -1.5][(rng.next_u64() % 5) as usize]).collect();
+    let mut serial = TopK::new(0.05);
+    let mut pooled = TopK::new(0.05).with_pool(Arc::new(ComputePool::new(4)));
+    let (mut ps, mut pp) = (WirePayload::default(), WirePayload::default());
+    serial.encode(&g, &mut ps);
+    pooled.encode(&g, &mut pp);
+    match (&ps, &pp) {
+        (
+            WirePayload::Sparse { n: na, idx: ia, val: va },
+            WirePayload::Sparse { n: nb, idx: ib, val: vb },
+        ) => {
+            assert_eq!(na, nb);
+            assert_eq!(ia, ib, "kept index sets differ");
+            assert_eq!(va, vb, "kept values differ");
+        }
+        other => panic!("expected sparse payloads, got {other:?}"),
+    }
+}
+
+#[test]
+fn runtime_simd_knob_is_bit_identical_end_to_end() {
+    // THE one flag-toggling test in this binary (the dispatch flag is
+    // process-global; concurrent tests above compare *_scalar / *_simd
+    // directly, so a mid-run flip cannot change any of their outcomes).
+    // A multi-step adaptive-rule PS workload with quantized pushes — the
+    // path that crosses every rewritten layer (QSGD pack, fused
+    // decode→compensate→apply, chunked dca) — must produce bit-identical
+    // models with the knob on and off.
+    use dc_asgd::config::Algorithm;
+    use dc_asgd::ps::{Hyper, NativeKernel, ParamServer};
+
+    let run = |simd: bool| -> Vec<f32> {
+        optim::set_simd_enabled(simd);
+        let n = 1003;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.1).sin()).collect();
+        let hyper = Hyper { lambda0: 0.5, ms_momentum: 0.9, momentum: 0.0, eps: optim::MS_EPS };
+        let ps = ParamServer::new(&init, 2, 4, Algorithm::DcAsgdAdaptive, hyper, Box::new(NativeKernel))
+            .unwrap();
+        let mut buf = vec![0.0f32; n];
+        for step in 0..8u64 {
+            let worker = (step % 2) as usize;
+            ps.pull(worker, &mut buf);
+            let g = randn(700 + step, n);
+            let mut codec = Qsgd::new(8, Pcg64::new(step + 1));
+            let mut p = WirePayload::default();
+            codec.encode(&g, &mut p);
+            ps.push_encoded(worker, &p, 0.05);
+        }
+        let mut out = vec![0.0f32; n];
+        ps.snapshot(&mut out);
+        out
+    };
+
+    let scalar = run(false);
+    let simd = run(true); // also restores the default dispatch
+    assert_eq!(scalar, simd, "[runtime] simd flipped the trajectory");
+}
