@@ -2,62 +2,57 @@
 //! gets *more asynchronous*?
 //!
 //! The paper's theory (Thm 5.1 / Cor 5.2) says DC-ASGD tolerates larger
-//! delays tau than ASGD. We turn that knob two ways:
+//! delays tau than ASGD. We turn that knob two ways, each a committed
+//! scenario file:
 //!
-//! 1. worker count M (tau scales with M, Fig. 2's M=4 vs M=8 effect),
-//! 2. straggler heaviness (Pareto tail alpha): heavier tails produce rare
-//!    but huge tau — the regime where delayed gradients hurt most.
+//! 1. scenarios/delay_workers.toml — worker count M (tau scales with M,
+//!    Fig. 2's M=4 vs M=8 effect),
+//! 2. scenarios/delay_tail.toml — straggler heaviness (Pareto tail
+//!    alpha): heavier tails produce rare but huge tau — the regime where
+//!    delayed gradients hurt most.
 //!
 //!     cargo run --release --example delay_sweep
 
 use dc_asgd::bench::Table;
-use dc_asgd::config::{Algorithm, DelayModel, ExperimentConfig};
-use dc_asgd::coordinator::Trainer;
+use dc_asgd::scenario::{find_scenarios_dir, run_grid, GridRun, Scenario};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = dc_asgd::find_artifacts_dir()
         .expect("artifacts/manifest.json not found — run `make artifacts` first");
+    let scenarios = find_scenarios_dir().expect("scenarios/README.md not found");
     let engine = dc_asgd::runtime::start_engine(&artifacts, "mlp_tiny", false)?;
-    let algos = [Algorithm::Asgd, Algorithm::DcAsgdConst, Algorithm::DcAsgdAdaptive];
+    let grid = |name: &str| -> anyhow::Result<Vec<GridRun>> {
+        let sc = Scenario::load(&scenarios.join(format!("{name}.toml")))?;
+        run_grid(&sc, &engine, &artifacts, |_c, _| Ok(()), |_, _, _| Vec::new())
+    };
 
     // -- sweep 1: worker count ------------------------------------------------
     let mut t1 = Table::new(&["M", "algorithm", "error(%)", "stale mean", "stale max"]);
-    for m in [2usize, 4, 8, 16] {
-        for algo in algos {
-            let mut cfg = ExperimentConfig::preset_quickstart();
-            cfg.algorithm = algo;
-            cfg.workers = m;
-            cfg.epochs = 6;
-            let r = Trainer::with_engine(cfg, engine.clone(), &artifacts)?.run()?;
-            t1.row(&[
-                m.to_string(),
-                algo.name().into(),
-                format!("{:.2}", r.final_test_error * 100.0),
-                format!("{:.2}", r.staleness_mean),
-                r.staleness_max.to_string(),
-            ]);
-        }
+    for r in &grid("delay_workers")? {
+        t1.row(&[
+            r.config.workers.to_string(),
+            r.config.algorithm.name().into(),
+            format!("{:.2}", r.report.final_test_error * 100.0),
+            format!("{:.2}", r.report.staleness_mean),
+            r.report.staleness_max.to_string(),
+        ]);
     }
     println!("\n# Degradation with worker count (uniform worker speeds)");
     t1.print();
 
     // -- sweep 2: straggler tail ---------------------------------------------
     let mut t2 = Table::new(&["pareto alpha", "algorithm", "error(%)", "stale p99"]);
-    for alpha in [3.0f64, 2.0, 1.3] {
-        for algo in algos {
-            let mut cfg = ExperimentConfig::preset_quickstart();
-            cfg.algorithm = algo;
-            cfg.workers = 8;
-            cfg.epochs = 6;
-            cfg.delay = DelayModel::Pareto { scale: 1.0, alpha };
-            let r = Trainer::with_engine(cfg, engine.clone(), &artifacts)?.run()?;
-            t2.row(&[
-                format!("{alpha}"),
-                algo.name().into(),
-                format!("{:.2}", r.final_test_error * 100.0),
-                format!("{:.0}", r.staleness_p99),
-            ]);
-        }
+    for r in &grid("delay_tail")? {
+        let alpha = match r.config.delay {
+            dc_asgd::config::DelayModel::Pareto { alpha, .. } => alpha,
+            _ => f64::NAN,
+        };
+        t2.row(&[
+            format!("{alpha}"),
+            r.config.algorithm.name().into(),
+            format!("{:.2}", r.report.final_test_error * 100.0),
+            format!("{:.0}", r.report.staleness_p99),
+        ]);
     }
     println!("\n# Degradation with straggler heaviness (M=8, Pareto compute times)");
     t2.print();

@@ -1,22 +1,42 @@
 //! Fault injection in one picture: the same workload on a healthy fleet
-//! and on a churny one (crashes + restarts + post-recovery stragglers),
-//! for plain ASGD vs DC-ASGD-a.
+//! and on churny ones (crashes + restarts + post-recovery stragglers).
 //!
 //! Churn amplifies gradient staleness — a straggling worker holds its
 //! snapshot while peers push past it — which is exactly what delay
 //! compensation (Eqn. 10) corrects. Expect the ASGD loss to degrade with
 //! churn while DC-ASGD-a holds close to its healthy-fleet loss.
 //!
+//! The grid is the committed scenarios/fault_churn.toml — the same file
+//! the bench runs — with the bench's coupling rule applied in the tweak
+//! hook (straggle stream scales with the swept crash rate; crash_rate = 0
+//! keeps `[faults]` fully off).
+//!
 //!     cargo run --release --example fault_churn
 
 use dc_asgd::bench::Table;
-use dc_asgd::config::{Algorithm, ExperimentConfig};
-use dc_asgd::coordinator::Trainer;
+use dc_asgd::scenario::{find_scenarios_dir, run_grid, Scenario};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = dc_asgd::find_artifacts_dir()
         .expect("artifacts/manifest.json not found — run `make artifacts` first");
+    let scenarios = find_scenarios_dir().expect("scenarios/README.md not found");
+    let sc = Scenario::load(&scenarios.join("fault_churn.toml"))?;
     let engine = dc_asgd::runtime::start_engine(&artifacts, "mlp_tiny", false)?;
+
+    let runs = run_grid(
+        &sc,
+        &engine,
+        &artifacts,
+        |cfg, _case| {
+            if cfg.faults.crash_rate == 0.0 {
+                cfg.faults = Default::default();
+            } else {
+                cfg.faults.straggler_rate = cfg.faults.crash_rate;
+            }
+            Ok(())
+        },
+        |_case, _cfg, _report| Vec::new(),
+    )?;
 
     let mut table = Table::new(&[
         "algo",
@@ -28,33 +48,17 @@ fn main() -> anyhow::Result<()> {
         "stale(mean)",
         "time(s)",
     ]);
-    for algo in [Algorithm::Asgd, Algorithm::DcAsgdAdaptive] {
-        for &churn in &[0.0f64, 0.1] {
-            let mut cfg = ExperimentConfig::preset_quickstart();
-            cfg.algorithm = algo;
-            cfg.workers = 8;
-            cfg.epochs = 4;
-            if churn > 0.0 {
-                cfg.faults.enabled = true;
-                cfg.faults.crash_rate = churn;
-                cfg.faults.restart_mean = 3.0;
-                cfg.faults.departure_prob = 0.0; // crashes always restart
-                cfg.faults.straggler_rate = churn;
-                cfg.faults.straggler_factor = 5.0;
-                cfg.faults.straggler_duration = 5.0;
-            }
-            let report = Trainer::with_engine(cfg, engine.clone(), &artifacts)?.run()?;
-            table.row(&[
-                algo.name().into(),
-                format!("{churn}"),
-                format!("{:.4}", report.final_train_loss),
-                format!("{:.2}", report.final_test_error * 100.0),
-                report.faults.crashes.to_string(),
-                report.faults.restarts.to_string(),
-                format!("{:.2}", report.staleness_mean),
-                format!("{:.1}", report.total_time),
-            ]);
-        }
+    for r in &runs {
+        table.row(&[
+            r.config.algorithm.name().into(),
+            format!("{}", r.config.faults.crash_rate),
+            format!("{:.4}", r.report.final_train_loss),
+            format!("{:.2}", r.report.final_test_error * 100.0),
+            r.report.faults.crashes.to_string(),
+            r.report.faults.restarts.to_string(),
+            format!("{:.2}", r.report.staleness_mean),
+            format!("{:.1}", r.report.total_time),
+        ]);
     }
     table.print();
     println!(

@@ -7,40 +7,42 @@
 //! paper's delay compensation on the same schedule to claw the accuracy
 //! back.
 //!
+//! The grid is the committed scenarios/ssp_spectrum.toml — the same file
+//! the bench runs — expanded and driven through
+//! [`dc_asgd::scenario::run_grid`].
+//!
 //!     cargo run --release --example ssp_spectrum
 
 use dc_asgd::bench::Table;
-use dc_asgd::config::{Algorithm, DelayModel, ExperimentConfig};
-use dc_asgd::coordinator::Trainer;
+use dc_asgd::scenario::{find_scenarios_dir, run_grid, Scenario};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = dc_asgd::find_artifacts_dir()
         .expect("artifacts/manifest.json not found — run `make artifacts` first");
+    let scenarios = find_scenarios_dir().expect("scenarios/README.md not found");
+    let sc = Scenario::load(&scenarios.join("ssp_spectrum.toml"))?;
     let engine = dc_asgd::runtime::start_engine(&artifacts, "mlp_tiny", false)?;
+
+    let runs = run_grid(
+        &sc,
+        &engine,
+        &artifacts,
+        |_cfg, _case| Ok(()),
+        |_case, _cfg, _report| Vec::new(),
+    )?;
 
     let mut table =
         Table::new(&["algorithm", "s", "error(%)", "time(s)", "stale mean", "wait(s)"]);
-    for algo in [Algorithm::Ssp, Algorithm::DcS3gd] {
-        for s in [0usize, 1, 4, 16] {
-            let mut cfg = ExperimentConfig::preset_quickstart();
-            cfg.algorithm = algo;
-            cfg.workers = 8;
-            cfg.epochs = 4;
-            cfg.staleness_bound = s;
-            // a straggly fleet makes the barrier<->staleness tradeoff visible
-            cfg.delay =
-                DelayModel::Heterogeneous { mean: 1.0, speeds: vec![1.0, 1.6], jitter: 0.2 };
-            let (report, log) =
-                Trainer::with_engine(cfg, engine.clone(), &artifacts)?.run_logged()?;
-            table.row(&[
-                algo.name().into(),
-                s.to_string(),
-                format!("{:.2}", report.final_test_error * 100.0),
-                format!("{:.1}", report.total_time),
-                format!("{:.2}", report.staleness_mean),
-                format!("{:.1}", log.wait_total()),
-            ]);
-        }
+    for r in &runs {
+        let s = r.config.staleness_bound;
+        table.row(&[
+            r.config.algorithm.name().into(),
+            if s >= usize::MAX / 2 { "inf".to_string() } else { s.to_string() },
+            format!("{:.2}", r.report.final_test_error * 100.0),
+            format!("{:.1}", r.report.total_time),
+            format!("{:.2}", r.report.staleness_mean),
+            format!("{:.1}", r.report.wait_total),
+        ]);
     }
     table.print();
     println!("\nExpect: time(s) falls and staleness rises with s;");

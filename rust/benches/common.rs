@@ -71,6 +71,27 @@ pub fn as_sequential(mut cfg: ExperimentConfig) -> ExperimentConfig {
     cfg
 }
 
+/// Locate the committed scenario corpus (panics with a pointer when absent
+/// — the corpus ships with the repo, so this only fires on odd CWDs).
+pub fn scenarios_dir() -> PathBuf {
+    dc_asgd::scenario::find_scenarios_dir()
+        .expect("scenarios/README.md not found — run from inside the repo")
+}
+
+/// Load `scenarios/<name>.toml` from the committed corpus.
+pub fn load_scenario(name: &str) -> dc_asgd::scenario::Scenario {
+    let path = scenarios_dir().join(format!("{name}.toml"));
+    dc_asgd::scenario::Scenario::load(&path)
+        .unwrap_or_else(|e| panic!("loading {}: {e:#}", path.display()))
+}
+
+/// Standard `DCASGD_BENCH_SCALE` rescaling for scenario-driven benches:
+/// scenario files carry the scale-1 budget; the tweak hook multiplies it.
+pub fn apply_scale(cfg: &mut ExperimentConfig) {
+    cfg.epochs = scaled(cfg.epochs);
+    cfg.train_size = scaled(cfg.train_size);
+}
+
 /// Format an error-rate cell.
 pub fn pct(x: f32) -> String {
     format!("{:.2}", x * 100.0)

@@ -6,10 +6,9 @@
 //! encoded wire size under the `[comm]` model, so codec choice trades
 //! bytes-on-wire (and virtual wallclock) against final loss.
 //!
-//! Output: runs/bench/compression_sweep.jsonl — one JSON row per
-//! (codec, algorithm, delay model) with upload/total bytes on the wire,
-//! virtual wallclock, and final train/test loss — plus the aligned table
-//! and the acceptance gates on stdout:
+//! The grid lives in scenarios/compression_sweep.toml (compound codec
+//! specs like "topk@0.1" make the codec a single sweep axis); this binary
+//! adds the per-case upload-byte accounting and the acceptance gates:
 //!
 //! * topk@0.1 vs dense (asgd, M=8, uniform): >= 5x fewer upload bytes AND
 //!   strictly lower virtual wallclock;
@@ -21,35 +20,9 @@ mod common;
 use common::*;
 use dc_asgd::bench::Table;
 use dc_asgd::compress::CodecConfig;
-use dc_asgd::config::{Algorithm, DelayModel, ExperimentConfig};
-use dc_asgd::coordinator::Trainer;
-use dc_asgd::sim::CommModel;
+use dc_asgd::config::Algorithm;
+use dc_asgd::scenario::run_grid;
 use dc_asgd::util::json::Json;
-use std::io::Write;
-
-fn base() -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::preset_quickstart();
-    cfg.workers = 8;
-    cfg.epochs = scaled(6);
-    cfg.train_size = scaled(2_048);
-    cfg.test_size = 512;
-    // a deliberately slow wire (vs the ~1s mean compute) so transfer time
-    // is a first-order term and compression visibly moves the wallclock
-    cfg.comm.enabled = true;
-    cfg.comm.model = CommModel { per_push: 1e-4, per_mb: 0.25 };
-    cfg
-}
-
-struct Row {
-    codec: CodecConfig,
-    algo: Algorithm,
-    delay: &'static str,
-    upload_bytes: u64,
-    total_bytes: u64,
-    time: f64,
-    train_loss: f32,
-    test_error: f32,
-}
 
 fn main() {
     banner(
@@ -59,20 +32,28 @@ fn main() {
     let Some(engine) = engine_or_skip("mlp_tiny", false) else {
         return; // no artifacts: smoke-run mode (CI) skips loudly
     };
-    let codecs = [
-        CodecConfig::None,
-        CodecConfig::TopK { ratio: 0.25 },
-        CodecConfig::TopK { ratio: 0.1 },
-        CodecConfig::TopK { ratio: 0.01 },
-        CodecConfig::RandK { ratio: 0.1 },
-        CodecConfig::Qsgd { bits: 8 },
-        CodecConfig::Qsgd { bits: 4 },
-    ];
-    let delays: [(&'static str, DelayModel); 2] = [
-        ("uniform", DelayModel::Uniform { mean: 1.0, jitter: 0.3 }),
-        ("pareto", DelayModel::Pareto { scale: 0.8, alpha: 2.5 }),
-    ];
-    let mut rows: Vec<Row> = Vec::new();
+    let sc = load_scenario("compression_sweep");
+    // upload share from the fixed-rate codec size (one encoded gradient
+    // per step); total wire bytes come from the scheduler via the report
+    let n = engine.n_padded();
+    let upload_bytes =
+        |cfg: &dc_asgd::config::ExperimentConfig, report: &dc_asgd::metrics::TrainReport| {
+            report.total_steps * cfg.compress.wire_bytes(n) as u64
+        };
+    let runs = run_grid(
+        &sc,
+        &engine,
+        &artifacts_dir(),
+        |cfg, _case| {
+            apply_scale(cfg);
+            Ok(())
+        },
+        |_case, cfg, report| {
+            vec![("upload_bytes".to_string(), Json::from(upload_bytes(cfg, report) as i64))]
+        },
+    )
+    .unwrap_or_else(|e| panic!("scenario compression_sweep failed: {e:#}"));
+
     let mut table = Table::new(&[
         "codec",
         "algo",
@@ -83,105 +64,55 @@ fn main() {
         "loss",
         "err(%)",
     ]);
-
-    for &(delay_name, ref delay) in &delays {
-        for algo in [Algorithm::Asgd, Algorithm::DcAsgdAdaptive] {
-            for &codec in &codecs {
-                let mut cfg = base();
-                cfg.algorithm = algo;
-                cfg.delay = delay.clone();
-                cfg.compress = codec;
-                let label = format!("{codec} {} {delay_name}", algo.name());
-                let (report, log) = Trainer::with_engine(cfg.clone(), engine.clone(), &artifacts_dir())
-                    .and_then(|t| t.run_logged())
-                    .unwrap_or_else(|e| panic!("case {label} failed: {e:#}"));
-                // total wire bytes from the scheduler; upload share from the
-                // fixed-rate codec size (one encoded gradient per step)
-                let n = engine.n_padded();
-                let upload_bytes = report.total_steps * cfg.compress.wire_bytes(n) as u64;
-                eprintln!(
-                    "[case] {label}: time={:.1}s wire={:.1}MB loss={:.4}",
-                    report.total_time,
-                    log.comm_bytes() as f64 / 1e6,
-                    report.final_train_loss
-                );
-                table.row(&[
-                    codec.to_string(),
-                    algo.name().into(),
-                    delay_name.into(),
-                    format!("{:.2}", upload_bytes as f64 / 1e6),
-                    format!("{:.2}", log.comm_bytes() as f64 / 1e6),
-                    format!("{:.1}", report.total_time),
-                    format!("{:.4}", report.final_train_loss),
-                    pct(report.final_test_error),
-                ]);
-                rows.push(Row {
-                    codec,
-                    algo,
-                    delay: delay_name,
-                    upload_bytes,
-                    total_bytes: log.comm_bytes(),
-                    time: report.total_time,
-                    train_loss: report.final_train_loss,
-                    test_error: report.final_test_error,
-                });
-            }
-        }
-    }
-
-    let path = dc_asgd::bench::bench_out_dir().join("compression_sweep.jsonl");
-    let mut f = std::io::BufWriter::new(std::fs::File::create(&path).expect("jsonl out"));
-    for r in &rows {
-        let (ratio, bits) = match r.codec {
-            CodecConfig::TopK { ratio } | CodecConfig::RandK { ratio } => (ratio, 0i64),
-            CodecConfig::Qsgd { bits } => (0.0, bits as i64),
-            CodecConfig::None => (0.0, 0),
-        };
-        let row = Json::obj(vec![
-            ("bench", "compression_sweep".into()),
-            ("codec", r.codec.name().into()),
-            ("ratio", ratio.into()),
-            ("bits", bits.into()),
-            ("algorithm", r.algo.name().into()),
-            ("delay_model", r.delay.into()),
-            ("upload_bytes", (r.upload_bytes as i64).into()),
-            ("wire_bytes_total", (r.total_bytes as i64).into()),
-            ("total_time", r.time.into()),
-            ("final_train_loss", (r.train_loss as f64).into()),
-            ("final_test_error", (r.test_error as f64).into()),
+    for r in &runs {
+        table.row(&[
+            r.config.compress.to_string(),
+            r.config.algorithm.name().into(),
+            r.config.delay.name().into(),
+            format!("{:.2}", upload_bytes(&r.config, &r.report) as f64 / 1e6),
+            format!("{:.2}", r.report.comm_bytes as f64 / 1e6),
+            format!("{:.1}", r.report.total_time),
+            format!("{:.4}", r.report.final_train_loss),
+            pct(r.report.final_test_error),
         ]);
-        writeln!(f, "{row}").expect("jsonl write");
     }
-    drop(f);
     println!();
     table.print();
-    println!("rows: {}", path.display());
 
     // acceptance gates (printed, like ps_throughput's >= 2x gate)
-    let find = |codec: CodecConfig, algo: Algorithm, delay: &'static str| {
-        rows.iter()
-            .find(|r| r.codec == codec && r.algo == algo && r.delay == delay)
+    let find = |codec: CodecConfig, algo: Algorithm, delay: &str| {
+        runs.iter()
+            .find(|r| {
+                r.config.compress == codec
+                    && r.config.algorithm == algo
+                    && r.config.delay.name() == delay
+            })
             .expect("sweep cell missing")
     };
     let dense = find(CodecConfig::None, Algorithm::Asgd, "uniform");
     let topk = find(CodecConfig::TopK { ratio: 0.1 }, Algorithm::Asgd, "uniform");
-    let byte_ratio = dense.upload_bytes as f64 / topk.upload_bytes as f64;
+    let dense_up = upload_bytes(&dense.config, &dense.report);
+    let topk_up = upload_bytes(&topk.config, &topk.report);
+    let byte_ratio = dense_up as f64 / topk_up as f64;
     println!(
         "acceptance (asgd, M=8, uniform): topk@0.1 upload bytes {:.2}x below dense \
          [target >= 5x], wallclock {:.1}s vs dense {:.1}s [target: strictly lower]",
-        byte_ratio, topk.time, dense.time
+        byte_ratio, topk.report.total_time, dense.report.total_time
     );
     assert!(byte_ratio >= 5.0, "upload-byte reduction {byte_ratio:.2}x below the 5x gate");
-    assert!(topk.time < dense.time, "compressed wallclock not below dense");
+    assert!(
+        topk.report.total_time < dense.report.total_time,
+        "compressed wallclock not below dense"
+    );
     let dc_dense = find(CodecConfig::None, Algorithm::DcAsgdAdaptive, "uniform");
     let dc_topk = find(CodecConfig::TopK { ratio: 0.1 }, Algorithm::DcAsgdAdaptive, "uniform");
     println!(
         "acceptance (dc-asgd-a + EF, topk@0.1): final loss {:.4} vs dense {:.4} \
          [target: within 10%]",
-        dc_topk.train_loss, dc_dense.train_loss
+        dc_topk.report.final_train_loss, dc_dense.report.final_train_loss
     );
     assert!(
-        dc_topk.train_loss <= dc_dense.train_loss * 1.10 + 1e-3,
+        dc_topk.report.final_train_loss <= dc_dense.report.final_train_loss * 1.10 + 1e-3,
         "EF compression drifted more than 10% off the dense final loss"
     );
     engine.shutdown();

@@ -3,16 +3,16 @@
 //! The regime where delayed gradients actually bite in production is not a
 //! healthy fleet — it is crash/restart churn plus degraded (straggling)
 //! nodes, exactly the "arbitrary delays" setting of Mishchenko et al. and
-//! Zhou et al. (PAPERS.md). This bench sweeps a churn knob that scales
-//! both the crash rate and the post-recovery straggle stream, and shows
-//! the paper's claim extends there: delay compensation (DC-ASGD-a) holds
-//! its loss advantage over plain ASGD as churn grows, because the stale
-//! pushes that churn amplifies are precisely what Eqn. 10 corrects.
+//! Zhou et al. (PAPERS.md). The grid lives in scenarios/fault_churn.toml;
+//! this binary's tweak hook supplies the one relation the static grid
+//! cannot express — the straggle stream scales with the swept crash rate
+//! (recovering nodes run slow), and crash_rate = 0 turns `[faults]` fully
+//! off so the healthy rows stay bit-identical to a no-faults build.
 //!
 //! Output: runs/bench/fault_churn.jsonl — one JSON row per
 //! (crash_rate, algorithm) with final train loss / test error, the fault
-//! counters (crashes, restarts, dropped pushes), and virtual wallclock —
-//! plus the aligned table and the acceptance gate on stdout:
+//! counters, and virtual wallclock — plus the aligned table and the
+//! acceptance gate on stdout:
 //!
 //! * at the highest churn setting, dc-asgd-a must finish with a strictly
 //!   lower final train loss than asgd (M = 8, CIFAR-like quickstart).
@@ -20,50 +20,8 @@
 mod common;
 
 use common::*;
-use dc_asgd::config::{Algorithm, ExperimentConfig};
-use dc_asgd::coordinator::Trainer;
-use dc_asgd::util::json::Json;
-use std::io::Write;
-
-/// Churn levels: expected crashes per worker per simulated second. The
-/// straggle stream scales with the same knob (recovering nodes run slow).
-const CHURN: [f64; 4] = [0.0, 0.02, 0.06, 0.12];
-
-fn base(churn: f64) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::preset_quickstart();
-    cfg.workers = 8;
-    cfg.epochs = scaled(6);
-    cfg.train_size = scaled(2_048);
-    cfg.test_size = 512;
-    cfg.staleness_bound = 4;
-    if churn > 0.0 {
-        cfg.faults.enabled = true;
-        cfg.faults.crash_rate = churn;
-        cfg.faults.restart_mean = 3.0;
-        // keep the fleet size stable so loss comparisons stay apples-to-
-        // apples: crashes always restart, churn never shrinks M
-        cfg.faults.departure_prob = 0.0;
-        cfg.faults.straggler_rate = churn;
-        cfg.faults.straggler_factor = 5.0;
-        cfg.faults.straggler_duration = 5.0;
-    }
-    cfg
-}
-
-struct Row {
-    churn: f64,
-    algo: Algorithm,
-    train_loss: f32,
-    test_error: f32,
-    crashes: u64,
-    restarts: u64,
-    dropped: u64,
-    straggles: u64,
-    stale_mean: f64,
-    stale_max: u64,
-    time: f64,
-    steps: u64,
-}
+use dc_asgd::config::Algorithm;
+use dc_asgd::scenario::run_grid;
 
 fn main() {
     banner(
@@ -73,8 +31,27 @@ fn main() {
     let Some(engine) = engine_or_skip("mlp_tiny", false) else {
         return; // no artifacts: smoke-run mode (CI) skips loudly
     };
-    let algos = [Algorithm::Asgd, Algorithm::DcAsgdAdaptive, Algorithm::Ssp];
-    let mut rows: Vec<Row> = Vec::new();
+    let sc = load_scenario("fault_churn");
+    let runs = run_grid(
+        &sc,
+        &engine,
+        &artifacts_dir(),
+        |cfg, _case| {
+            apply_scale(cfg);
+            if cfg.faults.crash_rate == 0.0 {
+                // healthy fleet: no fault code path executes at all
+                cfg.faults = Default::default();
+            } else {
+                // recovering nodes run slow: straggle stream scales with
+                // the same churn knob
+                cfg.faults.straggler_rate = cfg.faults.crash_rate;
+            }
+            Ok(())
+        },
+        |_case, _cfg, _report| Vec::new(),
+    )
+    .unwrap_or_else(|e| panic!("scenario fault_churn failed: {e:#}"));
+
     let mut table = dc_asgd::bench::Table::new(&[
         "churn",
         "algo",
@@ -86,90 +63,40 @@ fn main() {
         "stale(mean/max)",
         "time(s)",
     ]);
-    for &churn in &CHURN {
-        for &algo in &algos {
-            let mut cfg = base(churn);
-            cfg.algorithm = algo;
-            let label = format!("{} churn={churn}", algo.name());
-            let (report, _log) = Trainer::with_engine(cfg, engine.clone(), &artifacts_dir())
-                .and_then(|t| t.run_logged())
-                .unwrap_or_else(|e| panic!("case {label} failed: {e:#}"));
-            eprintln!(
-                "[case] {label}: loss={:.4} err={:.2}% crashes={} stale_mean={:.2}",
-                report.final_train_loss,
-                report.final_test_error * 100.0,
-                report.faults.crashes,
-                report.staleness_mean
-            );
-            table.row(&[
-                format!("{churn}"),
-                algo.name().into(),
-                format!("{:.4}", report.final_train_loss),
-                pct(report.final_test_error),
-                report.faults.crashes.to_string(),
-                report.faults.restarts.to_string(),
-                report.faults.dropped_inflight.to_string(),
-                format!("{:.2}/{}", report.staleness_mean, report.staleness_max),
-                format!("{:.1}", report.total_time),
-            ]);
-            rows.push(Row {
-                churn,
-                algo,
-                train_loss: report.final_train_loss,
-                test_error: report.final_test_error,
-                crashes: report.faults.crashes,
-                restarts: report.faults.restarts,
-                dropped: report.faults.dropped_inflight,
-                straggles: report.faults.straggle_events,
-                stale_mean: report.staleness_mean,
-                stale_max: report.staleness_max,
-                time: report.total_time,
-                steps: report.total_steps,
-            });
-        }
-    }
-
-    let path = dc_asgd::bench::bench_out_dir().join("fault_churn.jsonl");
-    let mut f = std::io::BufWriter::new(std::fs::File::create(&path).expect("jsonl out"));
-    for r in &rows {
-        let row = Json::obj(vec![
-            ("bench", "fault_churn".into()),
-            ("crash_rate", r.churn.into()),
-            ("algorithm", r.algo.name().into()),
-            ("workers", 8i64.into()),
-            ("final_train_loss", (r.train_loss as f64).into()),
-            ("final_test_error", (r.test_error as f64).into()),
-            ("crashes", (r.crashes as i64).into()),
-            ("restarts", (r.restarts as i64).into()),
-            ("dropped_inflight", (r.dropped as i64).into()),
-            ("straggle_events", (r.straggles as i64).into()),
-            ("staleness_mean", r.stale_mean.into()),
-            ("staleness_max", (r.stale_max as i64).into()),
-            ("total_time", r.time.into()),
-            ("total_steps", (r.steps as i64).into()),
+    for r in &runs {
+        table.row(&[
+            format!("{}", r.config.faults.crash_rate),
+            r.config.algorithm.name().into(),
+            format!("{:.4}", r.report.final_train_loss),
+            pct(r.report.final_test_error),
+            r.report.faults.crashes.to_string(),
+            r.report.faults.restarts.to_string(),
+            r.report.faults.dropped_inflight.to_string(),
+            format!("{:.2}/{}", r.report.staleness_mean, r.report.staleness_max),
+            format!("{:.1}", r.report.total_time),
         ]);
-        writeln!(f, "{row}").expect("jsonl write");
     }
-    drop(f);
     println!();
     table.print();
-    println!("rows: {}", path.display());
 
     // sanity: churn actually happened at every nonzero level
-    for r in rows.iter().filter(|r| r.churn > 0.0) {
+    for r in runs.iter().filter(|r| r.config.faults.crash_rate > 0.0) {
         assert!(
-            r.crashes > 0,
+            r.report.faults.crashes > 0,
             "churn {} produced no crashes for {} — knob inert?",
-            r.churn,
-            r.algo.name()
+            r.config.faults.crash_rate,
+            r.config.algorithm.name()
         );
     }
 
     // acceptance gate: DC's advantage survives (grows) under maximum churn
-    let max_churn = CHURN[CHURN.len() - 1];
+    let max_churn = runs
+        .iter()
+        .map(|r| r.config.faults.crash_rate)
+        .fold(0.0f64, f64::max);
     let find = |algo: Algorithm| {
-        rows.iter()
-            .find(|r| r.algo == algo && r.churn == max_churn)
+        runs.iter()
+            .find(|r| r.config.algorithm == algo && r.config.faults.crash_rate == max_churn)
             .expect("sweep cell missing")
     };
     let asgd = find(Algorithm::Asgd);
@@ -177,13 +104,13 @@ fn main() {
     println!(
         "acceptance (M=8, churn {max_churn}): dc-asgd-a final loss {:.4} vs asgd {:.4} \
          [target: strictly lower]",
-        dc.train_loss, asgd.train_loss
+        dc.report.final_train_loss, asgd.report.final_train_loss
     );
     assert!(
-        dc.train_loss < asgd.train_loss,
+        dc.report.final_train_loss < asgd.report.final_train_loss,
         "dc-asgd-a ({}) did not beat asgd ({}) at the highest churn",
-        dc.train_loss,
-        asgd.train_loss
+        dc.report.final_train_loss,
+        asgd.report.final_train_loss
     );
     engine.shutdown();
 }

@@ -3,23 +3,25 @@
 //! Paper: lambda too large introduces variance and misdirects the update
 //! (worse than ASGD, can diverge); lambda -> 0 degrades to plain ASGD; a
 //! middle value is best. The resulting error-vs-lambda curve is U-shaped.
+//!
+//! The grid lives in scenarios/fig5_lambda.toml; the lambda = 0 reference
+//! row (exactly ASGD) is run from the same scenario base, and the tweak
+//! hook rescales the epoch budget under DCASGD_BENCH_SCALE.
 
 mod common;
 
 use common::*;
 use dc_asgd::bench::Table;
 use dc_asgd::config::{Algorithm, ExperimentConfig};
+use dc_asgd::scenario::run_grid;
 
-fn base() -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::preset_cifar();
-    cfg.train_size = scaled(8_192);
-    cfg.test_size = 2_048;
-    cfg.epochs = scaled(10);
-    cfg.lr.decay_epochs = vec![scaled(10) * 2 / 3];
+/// Rescale the scenario's scale-1 budget and derive the schedule knobs
+/// that track it (decay point at 2/3 of training, eval twice per run).
+fn rescale(cfg: &mut ExperimentConfig) {
+    apply_scale(cfg);
+    cfg.lr.decay_epochs = vec![(cfg.epochs * 2 / 3).max(1)];
     cfg.eval_every = (cfg.epochs / 2).max(1);
-    cfg.workers = 8;
-    cfg.out_dir = "runs/bench/fig5".into();
-    cfg
+    cfg.tag = format!("lam{}", cfg.lambda0);
 }
 
 fn main() {
@@ -28,32 +30,46 @@ fn main() {
         "U-shape: lambda→0 degrades to ASGD; too-large lambda hurts or diverges",
     );
     let engine = engine_for("mlp_cifar", false);
+    let artifacts = artifacts_dir();
+    let sc = load_scenario("fig5_lambda");
     let mut table = Table::new(&["algorithm", "lambda0", "error(%)", "note"]);
     let mut csv = Table::new(&["algorithm", "lambda0", "error"]);
 
-    // lambda0 = 0 is exactly ASGD — the reference row
-    let mut asgd = base();
+    // lambda0 = 0 is exactly ASGD — the reference row, from the same base
+    let mut asgd = sc.base().expect("scenario base");
     asgd.algorithm = Algorithm::Asgd;
+    rescale(&mut asgd);
+    asgd.tag = "lam0".into();
     let r0 = run_case(asgd, &engine);
     for name in ["dc-asgd-c", "dc-asgd-a"] {
         table.row(&[name.into(), "0 (=asgd)".into(), pct(r0.final_test_error), "reference".into()]);
         csv.row(&[name.into(), "0".into(), format!("{}", r0.final_test_error)]);
     }
 
-    for (algo, lambdas) in [
-        (Algorithm::DcAsgdConst, vec![0.25, 1.0, 4.0, 16.0, 64.0]),
-        (Algorithm::DcAsgdAdaptive, vec![0.25, 1.0, 4.0, 16.0, 64.0]),
-    ] {
+    let runs = run_grid(
+        &sc,
+        &engine,
+        &artifacts,
+        |cfg, _case| {
+            rescale(cfg);
+            Ok(())
+        },
+        |_case, _cfg, _report| Vec::new(),
+    )
+    .unwrap_or_else(|e| panic!("scenario fig5_lambda failed: {e:#}"));
+
+    for algo in [Algorithm::DcAsgdConst, Algorithm::DcAsgdAdaptive] {
         let mut errs = vec![];
-        for &lam in &lambdas {
-            let mut cfg = base();
-            cfg.algorithm = algo;
-            cfg.lambda0 = lam;
-            cfg.tag = format!("lam{lam}");
-            let r = run_case(cfg, &engine);
-            errs.push(r.final_test_error);
-            table.row(&[algo.name().into(), lam.to_string(), pct(r.final_test_error), String::new()]);
-            csv.row(&[algo.name().into(), lam.to_string(), format!("{}", r.final_test_error)]);
+        for r in runs.iter().filter(|r| r.config.algorithm == algo) {
+            let lam = r.config.lambda0;
+            errs.push(r.report.final_test_error);
+            table.row(&[
+                algo.name().into(),
+                lam.to_string(),
+                pct(r.report.final_test_error),
+                String::new(),
+            ]);
+            csv.row(&[algo.name().into(), lam.to_string(), format!("{}", r.report.final_test_error)]);
         }
         // report the U-shape: is some middle lambda better than both ends?
         let best = errs.iter().cloned().fold(f32::INFINITY, f32::min);

@@ -30,6 +30,11 @@
 //!   (or >2x drop of any throughput). A baseline with
 //!   `"calibrated": false` skips the gate loudly instead of failing on
 //!   noise — but the committed baseline IS calibrated, so CI enforces.
+//!
+//! Both baseline files carry a `"host"` provenance block (core count,
+//! `quiet_box` flag, caveat note): absolute timings only transfer between
+//! comparable quiet boxes, so the gate prints the block on failure and
+//! fresh writes stamp it with `quiet_box: false` until a human verifies.
 
 use dc_asgd::bench::{header, time_fn};
 use dc_asgd::compress::codecs::{pack_levels, pack_levels_scalar};
@@ -419,6 +424,12 @@ fn main() {
         }
         if failed {
             eprintln!("PERF GATE FAILED: >2x regression vs committed BENCH_PR6.json");
+            eprintln!(
+                "baseline host provenance: {} — a mismatched or noisy box (CI \
+                 shared runners!) regresses the *measurement*, not the code; \
+                 compare `cores` and `quiet_box` before trusting this failure",
+                committed.get("host")
+            );
             std::process::exit(1);
         }
         println!("perf gate passed (all metrics within 2x of the committed baseline)");
@@ -433,9 +444,24 @@ fn main() {
             ("qsgd_pack", s_pack_sc.mean_s / s_pack.mean_s),
             ("topk_encode", s_topk_sc.mean_s / s_topk.mean_s),
         ];
+        let host_cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         let json = Json::obj(vec![
             ("bench", "hotpath".into()),
             ("calibrated", true.into()),
+            (
+                "host",
+                Json::obj(vec![
+                    ("cores", (host_cores as i64).into()),
+                    ("quiet_box", false.into()),
+                    (
+                        "note",
+                        "freshly measured — timings are only comparable across runs on a \
+                         quiet box with the same core count; verify and flip quiet_box to \
+                         true before committing as the calibrated baseline"
+                            .into(),
+                    ),
+                ]),
+            ),
             ("n", N.into()),
             ("shards", SHARDS.into()),
             ("lanes", dc_asgd::util::pool::default_threads().into()),

@@ -6,30 +6,20 @@
 //! delay-compensated update, so the sweep shows where compensation buys
 //! back the accuracy SSP gives up.
 //!
-//! Output: runs/bench/ssp_spectrum.jsonl — one JSON row per (algorithm, s)
-//! with final error, total simulated time, staleness stats, and gate-wait
-//! totals — plus the usual aligned table on stdout.
+//! The grid lives in scenarios/ssp_spectrum.toml (the spectrum) and
+//! scenarios/ssp_spectrum_refs.toml (the SSGD/ASGD endpoint references);
+//! this binary just drives them through [`dc_asgd::scenario::run_grid`].
+//!
+//! Output: runs/bench/ssp_spectrum.jsonl + ssp_spectrum_refs.jsonl — one
+//! JSON row per (algorithm, s) with final error, total simulated time,
+//! staleness stats/histogram, and gate-wait totals — plus the usual
+//! aligned table on stdout.
 
 mod common;
 
 use common::*;
 use dc_asgd::bench::Table;
-use dc_asgd::config::{Algorithm, DelayModel, ExperimentConfig};
-use dc_asgd::coordinator::Trainer;
-use dc_asgd::util::json::Json;
-use std::io::Write;
-
-fn base() -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::preset_quickstart();
-    cfg.workers = 8;
-    cfg.epochs = scaled(6);
-    cfg.train_size = scaled(2_048);
-    cfg.test_size = 512;
-    // heterogeneous fleet: stragglers make the barrier expensive, which is
-    // exactly the regime where the s knob matters
-    cfg.delay = DelayModel::Heterogeneous { mean: 1.0, speeds: vec![1.0, 1.5], jitter: 0.25 };
-    cfg
-}
+use dc_asgd::scenario::{run_grid, GridRun};
 
 fn main() {
     banner(
@@ -37,7 +27,7 @@ fn main() {
         "wallclock falls and staleness rises with s; DC-S3GD recovers accuracy at large s",
     );
     let engine = engine_for("mlp_tiny", false);
-    let bounds = [0usize, 1, 2, 4, 8, usize::MAX / 2];
+    let artifacts = artifacts_dir();
     let mut table = Table::new(&[
         "algorithm",
         "s",
@@ -47,62 +37,41 @@ fn main() {
         "stale(max)",
         "wait(s)",
     ]);
-    let mut rows: Vec<Json> = Vec::new();
-
-    let mut run_case_logged = |algo: Algorithm, bound: usize| {
-        let mut cfg = base();
-        cfg.algorithm = algo;
-        cfg.staleness_bound = bound;
-        let label = format!("{} s={bound}", algo.name());
-        let (report, log) = Trainer::with_engine(cfg, engine.clone(), &artifacts_dir())
-            .and_then(|t| t.run_logged())
-            .unwrap_or_else(|e| panic!("case {label} failed: {e:#}"));
-        let s_label =
-            if bound >= usize::MAX / 2 { "inf".to_string() } else { bound.to_string() };
-        table.row(&[
-            algo.name().into(),
-            s_label.clone(),
-            pct(report.final_test_error),
-            format!("{:.1}", report.total_time),
-            format!("{:.2}", report.staleness_mean),
-            report.staleness_max.to_string(),
-            format!("{:.1}", log.wait_total()),
-        ]);
-        rows.push(Json::obj(vec![
-            ("algorithm", algo.name().into()),
-            ("staleness_bound", s_label.into()),
-            ("final_test_error", (report.final_test_error as f64).into()),
-            ("total_time", report.total_time.into()),
-            ("staleness_mean", report.staleness_mean.into()),
-            ("staleness_p99", report.staleness_p99.into()),
-            ("staleness_max", (report.staleness_max as i64).into()),
-            ("wait_total", log.wait_total().into()),
-            (
-                "staleness_hist",
-                Json::arr(log.staleness_histogram(64).iter().map(|&c| Json::from(c as i64))),
-            ),
-        ]));
+    let mut add_rows = |runs: &[GridRun]| {
+        for run in runs {
+            let bound = run.config.staleness_bound;
+            let s_label =
+                if bound >= usize::MAX / 2 { "inf".to_string() } else { bound.to_string() };
+            table.row(&[
+                run.config.algorithm.name().into(),
+                s_label,
+                pct(run.report.final_test_error),
+                format!("{:.1}", run.report.total_time),
+                format!("{:.2}", run.report.staleness_mean),
+                run.report.staleness_max.to_string(),
+                format!("{:.1}", run.report.wait_total),
+            ]);
+        }
     };
 
-    // the spectrum itself, plus the endpoints' dedicated protocols as
-    // references (SSGD for s=0, ASGD for s=inf)
-    run_case_logged(Algorithm::SyncSgd, 0);
-    for &s in &bounds {
-        run_case_logged(Algorithm::Ssp, s);
+    for name in ["ssp_spectrum", "ssp_spectrum_refs"] {
+        let sc = load_scenario(name);
+        let runs = run_grid(
+            &sc,
+            &engine,
+            &artifacts,
+            |cfg, _case| {
+                apply_scale(cfg);
+                Ok(())
+            },
+            |_case, _cfg, _report| Vec::new(),
+        )
+        .unwrap_or_else(|e| panic!("scenario {name} failed: {e:#}"));
+        add_rows(&runs);
     }
-    for &s in &bounds {
-        run_case_logged(Algorithm::DcS3gd, s);
-    }
-    run_case_logged(Algorithm::Asgd, 0);
 
-    let path = dc_asgd::bench::bench_out_dir().join("ssp_spectrum.jsonl");
-    let mut f = std::io::BufWriter::new(std::fs::File::create(&path).expect("jsonl out"));
-    for row in &rows {
-        writeln!(f, "{row}").expect("jsonl write");
-    }
-    drop(f);
     println!();
     table.print();
-    println!("rows: {} (plot error & time vs s per algorithm)", path.display());
+    println!("(plot error & time vs s per algorithm from the jsonl rows)");
     engine.shutdown();
 }

@@ -1,0 +1,1751 @@
+//! The knob manifest: every experiment knob declared once, with a stable
+//! id, type, bounds, default, and help text — plus the cross-knob rejection
+//! rules. This is the single source of truth that the TOML loader, the CLI
+//! overlay, the scenario expander, and `dcasgd validate` all derive from.
+//!
+//! A knob has two spellings of the same stable id:
+//!
+//! * JSON-pointer style: `/train/lr` (scenario `[overrides]` / `[sweep]`)
+//! * dotted TOML style:  `train.lr`  (config files, `[section] key = v`)
+//!
+//! [`find`] accepts either. Apply order is *manifest order*, not document
+//! order: [`apply_doc`] sorts the document's keys by their manifest index
+//! before applying, so order-sensitive pairs (codec before ratio, delay
+//! model before its parameters, explicit `enabled` after the auto-enabling
+//! parameter knobs) behave identically however the file is arranged.
+//!
+//! Validation is split the same way the old hand-rolled checks were:
+//!
+//! * per-knob [`Bounds`] (range + finiteness), checked through the knob's
+//!   getter so model-dependent knobs (e.g. `sim.delay.jitter`) are only
+//!   checked when applicable;
+//! * cross-knob [`Rule`]s, each carrying the *pinned* message fragment and
+//!   a canonical TOML example that must trip it — [`rejection_cases`]
+//!   enumerates bounds violations + rules + parse-level rejections, so the
+//!   rejected-combination matrix test iterates the manifest instead of a
+//!   hand-maintained list.
+
+use super::toml::{Doc, Value};
+use super::{Algorithm, CommConfig, DatasetKind, DelayModel, ExecMode, ExperimentConfig, UpdateBackend};
+use crate::compress::CodecConfig;
+use crate::util::cli::Args;
+use anyhow::bail;
+use std::sync::OnceLock;
+
+/// Knob value type (drives CLI parsing and the `knobs` table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ty {
+    Str,
+    Bool,
+    USize,
+    U64,
+    F64,
+    /// Closed vocabulary; the setter owns the (pinned) rejection message.
+    Enum(&'static [&'static str]),
+    USizeList,
+    F64List,
+}
+
+impl Ty {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Ty::Str => "string",
+            Ty::Bool => "bool",
+            Ty::USize => "usize",
+            Ty::U64 => "u64",
+            Ty::F64 => "f64",
+            Ty::Enum(_) => "enum",
+            Ty::USizeList => "[usize]",
+            Ty::F64List => "[f64]",
+        }
+    }
+}
+
+/// Numeric range constraint with its pinned rejection message. Non-finite
+/// values never pass.
+#[derive(Clone, Copy, Debug)]
+pub struct Bounds {
+    pub lo: f64,
+    pub lo_excl: bool,
+    pub hi: f64,
+    pub hi_excl: bool,
+    pub msg: &'static str,
+}
+
+impl Bounds {
+    pub fn admits(&self, x: f64) -> bool {
+        x.is_finite()
+            && (if self.lo_excl { x > self.lo } else { x >= self.lo })
+            && (if self.hi_excl { x < self.hi } else { x <= self.hi })
+    }
+
+    /// A value violating the bounds, for the generated rejection matrix.
+    /// Prefers the high edge (stays a valid non-negative literal for usize
+    /// knobs); unbounded-above knobs violate the low edge.
+    pub fn violation(&self) -> f64 {
+        if self.hi.is_finite() {
+            if self.hi_excl {
+                self.hi
+            } else {
+                self.hi + 1.0
+            }
+        } else if self.lo_excl {
+            self.lo
+        } else {
+            self.lo - 1.0
+        }
+    }
+
+    /// Human-readable interval, for the `knobs` table.
+    pub fn describe(&self) -> String {
+        let lo_b = if self.lo_excl { '(' } else { '[' };
+        let hi_b = if self.hi_excl { ')' } else { ']' };
+        let side = |x: f64| {
+            if x == f64::INFINITY {
+                "inf".to_string()
+            } else if x == f64::NEG_INFINITY {
+                "-inf".to_string()
+            } else {
+                format!("{x}")
+            }
+        };
+        format!("{lo_b}{}, {}{hi_b}", side(self.lo), side(self.hi))
+    }
+}
+
+/// One declared knob. `get` returns `None` when the knob does not apply to
+/// the current config (e.g. `sim.delay.scale` on a non-Pareto model), which
+/// also skips its bounds check. `set` applies a parsed TOML value.
+pub struct Knob {
+    /// JSON-pointer-style stable id (`/train/lr`).
+    pub id: &'static str,
+    /// Dotted TOML key (`train.lr`).
+    pub toml_key: &'static str,
+    /// CLI flag (`--lr`), when one exists.
+    pub cli: Option<&'static str>,
+    pub ty: Ty,
+    pub bounds: Option<Bounds>,
+    /// Default value, as the `knobs` table prints it.
+    pub default: &'static str,
+    pub help: &'static str,
+    /// TOML prefix that makes a generated bounds-violation example land on
+    /// this knob (e.g. selecting the pareto model before `sim.delay.scale`).
+    pub ctx: &'static str,
+    pub get: fn(&ExperimentConfig) -> Option<Value>,
+    pub set: fn(&mut ExperimentConfig, &Value) -> anyhow::Result<()>,
+}
+
+/// One cross-knob rejection rule: the check, its pinned message fragment,
+/// and a canonical TOML example that must trip it.
+pub struct Rule {
+    pub id: &'static str,
+    /// Pinned fragment the rejection message must contain.
+    pub needle: &'static str,
+    /// TOML document that must be rejected with `needle`.
+    pub example: &'static str,
+    pub check: fn(&ExperimentConfig) -> anyhow::Result<()>,
+}
+
+/// Parse-level rejections (bad vocabulary / bad types / unknown keys):
+/// `(toml, pinned message fragment)`. These fail before a config exists, so
+/// they are cases rather than `Rule`s.
+pub const PARSE_CASES: &[(&str, &str)] = &[
+    ("algorithm = \"bogus\"", "unknown algorithm"),
+    ("dataset = \"bogus\"", "unknown dataset"),
+    ("exec_mode = \"warp\"", "unknown exec_mode"),
+    ("update_backend = \"tpu\"", "unknown update_backend"),
+    ("[sim.delay]\nmodel = \"warp\"", "unknown delay model"),
+    ("[comm]\nmodel = \"warp\"", "unknown comm model"),
+    ("[faults]\npolicy = \"explode\"", "unknown crash policy"),
+    ("[compress]\ncodec = \"warp\"", "unknown codec"),
+    ("preset = \"bogus\"", "unknown preset"),
+    ("bogus_knob = 1", "unknown config key"),
+    ("workers = \"many\"", "must be a non-negative integer"),
+    ("[train]\nlr = \"fast\"", "must be a number"),
+    ("[sim.delay]\nmodel = \"constant\"\njitter = 0.5", "applies to the uniform/heterogeneous delay models"),
+    ("[sim.delay]\nmodel = \"uniform\"\nscale = 2.0", "applies to the pareto delay model"),
+    ("[sim.delay]\nmodel = \"uniform\"\nspeeds = [1.0, 2.0]", "applies to the heterogeneous delay model"),
+    ("[compress]\nratio = 0.5", "requires a topk/randk codec"),
+    ("[compress]\nbits = 4", "requires the qsgd codec"),
+];
+
+// ------------------------------------------------------------ typed helpers
+
+fn want_f64(key: &str, v: &Value) -> anyhow::Result<f64> {
+    v.as_f64().ok_or_else(|| anyhow::anyhow!("{key} must be a number"))
+}
+
+fn want_usize(key: &str, v: &Value) -> anyhow::Result<usize> {
+    v.as_usize().ok_or_else(|| anyhow::anyhow!("{key} must be a non-negative integer"))
+}
+
+fn want_str<'v>(key: &str, v: &'v Value) -> anyhow::Result<&'v str> {
+    v.as_str().ok_or_else(|| anyhow::anyhow!("{key} must be a string"))
+}
+
+fn want_bool(key: &str, v: &Value) -> anyhow::Result<bool> {
+    v.as_bool().ok_or_else(|| anyhow::anyhow!("{key} must be a boolean"))
+}
+
+const UNBOUNDED: f64 = f64::INFINITY;
+
+fn bounds(lo: f64, lo_excl: bool, hi: f64, hi_excl: bool, msg: &'static str) -> Option<Bounds> {
+    Some(Bounds { lo, lo_excl, hi, hi_excl, msg })
+}
+
+// --------------------------------------------------------------- the knobs
+
+/// The manifest, in apply order. Declaration order is load-bearing:
+/// `*.enabled` knobs come after the parameter knobs of their section (so an
+/// explicit `enabled` always has the last word over auto-enabling
+/// parameters), `compress.codec` before its parameter knobs, and
+/// `sim.delay.model` before the model parameters.
+pub fn knobs() -> &'static [Knob] {
+    static KNOBS: OnceLock<Vec<Knob>> = OnceLock::new();
+    KNOBS.get_or_init(build_knobs)
+}
+
+#[allow(clippy::too_many_lines)]
+fn build_knobs() -> Vec<Knob> {
+    vec![
+        Knob {
+            id: "/model",
+            toml_key: "model",
+            cli: Some("model"),
+            ty: Ty::Str,
+            bounds: None,
+            default: "mlp_cifar",
+            help: "AOT artifact/model name from the manifest",
+            ctx: "",
+            get: |c| Some(Value::Str(c.model.clone())),
+            set: |c, v| {
+                c.model = want_str("model", v)?.to_string();
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/dataset",
+            toml_key: "dataset",
+            cli: None,
+            ty: Ty::Enum(&["cifar-like", "imagenet-like", "lm-corpus"]),
+            bounds: None,
+            default: "cifar-like",
+            help: "synthetic dataset family",
+            ctx: "",
+            get: |c| Some(Value::Str(c.dataset.name().to_string())),
+            set: |c, v| {
+                c.dataset = DatasetKind::parse(want_str("dataset", v)?)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/algorithm",
+            toml_key: "algorithm",
+            cli: Some("algo"),
+            ty: Ty::Enum(&["sgd", "ssgd", "dc-ssgd", "asgd", "dc-asgd-c", "dc-asgd-a", "ssp", "dc-s3gd"]),
+            bounds: None,
+            default: "asgd",
+            help: "update rule / parallelization protocol",
+            ctx: "",
+            get: |c| Some(Value::Str(c.algorithm.name().to_string())),
+            set: |c, v| {
+                c.algorithm = Algorithm::parse(want_str("algorithm", v)?)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/workers",
+            toml_key: "workers",
+            cli: Some("workers"),
+            ty: Ty::USize,
+            bounds: bounds(1.0, false, UNBOUNDED, false, "workers must be >= 1"),
+            default: "4",
+            help: "number of local workers M",
+            ctx: "",
+            get: |c| Some(Value::Int(c.workers as i64)),
+            set: |c, v| {
+                c.workers = want_usize("workers", v)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/epochs",
+            toml_key: "epochs",
+            cli: Some("epochs"),
+            ty: Ty::USize,
+            bounds: None,
+            default: "10",
+            help: "training epochs (0 = step-capped via max_steps)",
+            ctx: "",
+            get: |c| Some(Value::Int(c.epochs as i64)),
+            set: |c, v| {
+                c.epochs = want_usize("epochs", v)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/max_steps",
+            toml_key: "max_steps",
+            cli: Some("max-steps"),
+            ty: Ty::USize,
+            bounds: None,
+            default: "0",
+            help: "hard cap on global update steps (0 = no cap)",
+            ctx: "",
+            get: |c| Some(Value::Int(c.max_steps as i64)),
+            set: |c, v| {
+                c.max_steps = want_usize("max_steps", v)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/data/train_size",
+            toml_key: "data.train_size",
+            cli: Some("train-size"),
+            ty: Ty::USize,
+            bounds: bounds(1.0, false, UNBOUNDED, false, "train/test sizes must be positive"),
+            default: "4096",
+            help: "training-set size",
+            ctx: "",
+            get: |c| Some(Value::Int(c.train_size as i64)),
+            set: |c, v| {
+                c.train_size = want_usize("data.train_size", v)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/data/test_size",
+            toml_key: "data.test_size",
+            cli: Some("test-size"),
+            ty: Ty::USize,
+            bounds: bounds(1.0, false, UNBOUNDED, false, "train/test sizes must be positive"),
+            default: "1024",
+            help: "test-set size",
+            ctx: "",
+            get: |c| Some(Value::Int(c.test_size as i64)),
+            set: |c, v| {
+                c.test_size = want_usize("data.test_size", v)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/train/lr",
+            toml_key: "train.lr",
+            cli: Some("lr"),
+            ty: Ty::F64,
+            bounds: bounds(0.0, true, UNBOUNDED, false, "lr must be positive"),
+            default: "0.1",
+            help: "base learning rate",
+            ctx: "",
+            get: |c| Some(Value::Float(c.lr.base)),
+            set: |c, v| {
+                c.lr.base = want_f64("train.lr", v)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/train/decay_epochs",
+            toml_key: "train.decay_epochs",
+            cli: None,
+            ty: Ty::USizeList,
+            bounds: None,
+            default: "[]",
+            help: "epochs at which lr decays by decay_factor",
+            ctx: "",
+            get: |c| {
+                Some(Value::Array(c.lr.decay_epochs.iter().map(|&e| Value::Int(e as i64)).collect()))
+            },
+            set: |c, v| {
+                let items = match v {
+                    Value::Array(a) => a,
+                    _ => bail!("train.decay_epochs must be an array"),
+                };
+                c.lr.decay_epochs = items
+                    .iter()
+                    .map(|v| {
+                        v.as_usize()
+                            .ok_or_else(|| anyhow::anyhow!("decay_epochs entries must be integers"))
+                    })
+                    .collect::<anyhow::Result<_>>()?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/train/decay_factor",
+            toml_key: "train.decay_factor",
+            cli: None,
+            ty: Ty::F64,
+            bounds: None,
+            default: "0.1",
+            help: "lr multiplier at each decay epoch",
+            ctx: "",
+            get: |c| Some(Value::Float(c.lr.decay_factor)),
+            set: |c, v| {
+                c.lr.decay_factor = want_f64("train.decay_factor", v)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/train/lambda0",
+            toml_key: "train.lambda0",
+            cli: Some("lambda0"),
+            ty: Ty::F64,
+            bounds: bounds(0.0, false, UNBOUNDED, false, "lambda0 must be >= 0"),
+            default: "0.04",
+            help: "delay-compensation strength lambda_0",
+            ctx: "",
+            get: |c| Some(Value::Float(c.lambda0)),
+            set: |c, v| {
+                c.lambda0 = want_f64("train.lambda0", v)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/train/ms_momentum",
+            toml_key: "train.ms_momentum",
+            cli: Some("ms-momentum"),
+            ty: Ty::F64,
+            bounds: bounds(0.0, false, 1.0, true, "ms_momentum must be in [0, 1)"),
+            default: "0.95",
+            help: "MeanSquare moving-average constant m (DC-ASGD-a)",
+            ctx: "",
+            get: |c| Some(Value::Float(c.ms_momentum)),
+            set: |c, v| {
+                c.ms_momentum = want_f64("train.ms_momentum", v)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/train/momentum",
+            toml_key: "train.momentum",
+            cli: Some("momentum"),
+            ty: Ty::F64,
+            bounds: bounds(0.0, false, 1.0, true, "momentum must be in [0, 1)"),
+            default: "0",
+            help: "classical momentum mu (0 = plain SGD)",
+            ctx: "",
+            get: |c| Some(Value::Float(c.momentum)),
+            set: |c, v| {
+                c.momentum = want_f64("train.momentum", v)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/staleness_bound",
+            toml_key: "staleness_bound",
+            cli: Some("staleness-bound"),
+            ty: Ty::USize,
+            bounds: None,
+            default: "4",
+            help: "SSP staleness bound s (SSP / DC-S3GD)",
+            ctx: "",
+            get: |c| Some(Value::Int(c.staleness_bound as i64)),
+            set: |c, v| {
+                c.staleness_bound = want_usize("staleness_bound", v)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/seed",
+            toml_key: "seed",
+            cli: Some("seed"),
+            ty: Ty::U64,
+            bounds: None,
+            default: "17",
+            help: "experiment seed (data, init, schedules)",
+            ctx: "",
+            get: |c| Some(Value::Int(c.seed as i64)),
+            set: |c, v| {
+                c.seed = v.as_i64().ok_or_else(|| anyhow::anyhow!("seed must be an integer"))? as u64;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/exec_mode",
+            toml_key: "exec_mode",
+            cli: Some("mode"),
+            ty: Ty::Enum(&["sim", "threads"]),
+            bounds: None,
+            default: "sim",
+            help: "event-driven simulator vs real OS threads",
+            ctx: "",
+            get: |c| {
+                Some(Value::Str(
+                    match c.exec_mode {
+                        ExecMode::SimulatedTime => "sim",
+                        ExecMode::Threads => "threads",
+                    }
+                    .to_string(),
+                ))
+            },
+            set: |c, v| {
+                c.exec_mode = match want_str("exec_mode", v)? {
+                    "threads" => ExecMode::Threads,
+                    "sim" | "simulated" => ExecMode::SimulatedTime,
+                    other => bail!("unknown exec_mode {other:?}"),
+                };
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/update_backend",
+            toml_key: "update_backend",
+            cli: Some("backend"),
+            ty: Ty::Enum(&["native", "xla"]),
+            bounds: None,
+            default: "native",
+            help: "update kernels: native rust loops or AOT XLA artifact",
+            ctx: "",
+            get: |c| {
+                Some(Value::Str(
+                    match c.update_backend {
+                        UpdateBackend::Native => "native",
+                        UpdateBackend::Xla => "xla",
+                    }
+                    .to_string(),
+                ))
+            },
+            set: |c, v| {
+                c.update_backend = match want_str("update_backend", v)? {
+                    "native" => UpdateBackend::Native,
+                    "xla" => UpdateBackend::Xla,
+                    other => bail!("unknown update_backend {other:?}"),
+                };
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/shards",
+            toml_key: "shards",
+            cli: Some("shards"),
+            ty: Ty::USize,
+            bounds: bounds(1.0, false, UNBOUNDED, false, "shards must be >= 1"),
+            default: "1",
+            help: "parameter-store lock shards",
+            ctx: "",
+            get: |c| Some(Value::Int(c.shards as i64)),
+            set: |c, v| {
+                c.shards = want_usize("shards", v)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/runtime/threads",
+            toml_key: "runtime.threads",
+            cli: Some("threads"),
+            ty: Ty::USize,
+            bounds: bounds(0.0, false, 1024.0, false, "runtime.threads must be <= 1024 (0 = auto)"),
+            default: "0",
+            help: "compute-pool lanes (0 = auto, 1 = serial)",
+            ctx: "",
+            get: |c| Some(Value::Int(c.runtime.threads as i64)),
+            set: |c, v| {
+                c.runtime.threads = want_usize("runtime.threads", v)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/runtime/simd",
+            toml_key: "runtime.simd",
+            cli: Some("simd"),
+            ty: Ty::Bool,
+            bounds: None,
+            default: "true",
+            help: "chunked-SIMD kernels (false = scalar reference)",
+            ctx: "",
+            get: |c| Some(Value::Bool(c.runtime.simd)),
+            set: |c, v| {
+                c.runtime.simd = want_bool("runtime.simd", v)?;
+                Ok(())
+            },
+        },
+        // delay model before its parameters: the model switch keeps the
+        // current mean/jitter, then explicit parameter knobs refine it
+        Knob {
+            id: "/sim/delay/model",
+            toml_key: "sim.delay.model",
+            cli: Some("delay-model"),
+            ty: Ty::Enum(&["constant", "uniform", "exponential", "pareto", "heterogeneous"]),
+            bounds: None,
+            default: "uniform",
+            help: "worker compute-time distribution",
+            ctx: "",
+            get: |c| Some(Value::Str(c.delay.name().to_string())),
+            set: |c, v| {
+                let mean = match &c.delay {
+                    DelayModel::Pareto { scale, .. } => *scale,
+                    m => m.mean(),
+                };
+                let jitter = match &c.delay {
+                    DelayModel::Uniform { jitter, .. }
+                    | DelayModel::Heterogeneous { jitter, .. } => *jitter,
+                    _ => 0.3,
+                };
+                c.delay = match want_str("sim.delay.model", v)? {
+                    "constant" => DelayModel::Constant { mean },
+                    "uniform" => DelayModel::Uniform { mean, jitter },
+                    "exponential" => DelayModel::Exponential { mean },
+                    "pareto" => DelayModel::Pareto { scale: mean, alpha: 2.5 },
+                    "heterogeneous" => {
+                        let speeds = match &c.delay {
+                            DelayModel::Heterogeneous { speeds, .. } => speeds.clone(),
+                            _ => vec![1.0],
+                        };
+                        DelayModel::Heterogeneous { mean, speeds, jitter }
+                    }
+                    other => bail!("unknown delay model {other:?}"),
+                };
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/sim/delay/mean",
+            toml_key: "sim.delay.mean",
+            cli: Some("delay-mean"),
+            ty: Ty::F64,
+            bounds: bounds(0.0, true, UNBOUNDED, false, "delay mean must be positive"),
+            default: "1.0",
+            help: "mean compute time (pareto: sets the scale)",
+            ctx: "",
+            get: |c| match &c.delay {
+                DelayModel::Constant { mean }
+                | DelayModel::Uniform { mean, .. }
+                | DelayModel::Exponential { mean }
+                | DelayModel::Heterogeneous { mean, .. } => Some(Value::Float(*mean)),
+                DelayModel::Pareto { .. } => None,
+            },
+            set: |c, v| {
+                let x = want_f64("sim.delay.mean", v)?;
+                match &mut c.delay {
+                    DelayModel::Constant { mean }
+                    | DelayModel::Uniform { mean, .. }
+                    | DelayModel::Exponential { mean }
+                    | DelayModel::Heterogeneous { mean, .. } => *mean = x,
+                    DelayModel::Pareto { scale, .. } => *scale = x,
+                }
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/sim/delay/jitter",
+            toml_key: "sim.delay.jitter",
+            cli: Some("delay-jitter"),
+            ty: Ty::F64,
+            bounds: bounds(0.0, false, 1.0, true, "jitter must be in [0, 1)"),
+            default: "0.3",
+            help: "uniform/heterogeneous spread around the mean",
+            ctx: "",
+            get: |c| match &c.delay {
+                DelayModel::Uniform { jitter, .. } | DelayModel::Heterogeneous { jitter, .. } => {
+                    Some(Value::Float(*jitter))
+                }
+                _ => None,
+            },
+            set: |c, v| {
+                let x = want_f64("sim.delay.jitter", v)?;
+                match &mut c.delay {
+                    DelayModel::Uniform { jitter, .. }
+                    | DelayModel::Heterogeneous { jitter, .. } => *jitter = x,
+                    _ => bail!(
+                        "sim.delay.jitter applies to the uniform/heterogeneous delay models, \
+                         not {}",
+                        c.delay.name()
+                    ),
+                }
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/sim/delay/scale",
+            toml_key: "sim.delay.scale",
+            cli: Some("delay-scale"),
+            ty: Ty::F64,
+            bounds: bounds(0.0, true, UNBOUNDED, false, "pareto scale/alpha must be positive"),
+            default: "1.0",
+            help: "pareto scale (typical compute time)",
+            ctx: "sim.delay.model = \"pareto\"\n",
+            get: |c| match &c.delay {
+                DelayModel::Pareto { scale, .. } => Some(Value::Float(*scale)),
+                _ => None,
+            },
+            set: |c, v| {
+                let x = want_f64("sim.delay.scale", v)?;
+                match &mut c.delay {
+                    DelayModel::Pareto { scale, .. } => *scale = x,
+                    _ => bail!(
+                        "sim.delay.scale applies to the pareto delay model, not {}",
+                        c.delay.name()
+                    ),
+                }
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/sim/delay/alpha",
+            toml_key: "sim.delay.alpha",
+            cli: Some("delay-alpha"),
+            ty: Ty::F64,
+            bounds: bounds(0.0, true, UNBOUNDED, false, "pareto scale/alpha must be positive"),
+            default: "2.5",
+            help: "pareto tail index (lower = heavier stragglers)",
+            ctx: "sim.delay.model = \"pareto\"\n",
+            get: |c| match &c.delay {
+                DelayModel::Pareto { alpha, .. } => Some(Value::Float(*alpha)),
+                _ => None,
+            },
+            set: |c, v| {
+                let x = want_f64("sim.delay.alpha", v)?;
+                match &mut c.delay {
+                    DelayModel::Pareto { alpha, .. } => *alpha = x,
+                    _ => bail!(
+                        "sim.delay.alpha applies to the pareto delay model, not {}",
+                        c.delay.name()
+                    ),
+                }
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/sim/delay/speeds",
+            toml_key: "sim.delay.speeds",
+            cli: None,
+            ty: Ty::F64List,
+            bounds: None,
+            default: "[1.0]",
+            help: "heterogeneous per-worker speed multipliers",
+            ctx: "",
+            get: |c| match &c.delay {
+                DelayModel::Heterogeneous { speeds, .. } => {
+                    Some(Value::Array(speeds.iter().map(|&s| Value::Float(s)).collect()))
+                }
+                _ => None,
+            },
+            set: |c, v| {
+                let items = match v {
+                    Value::Array(a) => a,
+                    _ => bail!("sim.delay.speeds must be an array"),
+                };
+                let parsed = items
+                    .iter()
+                    .map(|v| v.as_f64().ok_or_else(|| anyhow::anyhow!("speeds must be numbers")))
+                    .collect::<anyhow::Result<Vec<_>>>()?;
+                match &mut c.delay {
+                    DelayModel::Heterogeneous { speeds, .. } => *speeds = parsed,
+                    _ => bail!(
+                        "sim.delay.speeds applies to the heterogeneous delay model, not {}",
+                        c.delay.name()
+                    ),
+                }
+                Ok(())
+            },
+        },
+        // [comm]: presets and cost parameters auto-enable; explicit
+        // `enabled` is declared after them so it always has the last word
+        Knob {
+            id: "/comm/model",
+            toml_key: "comm.model",
+            cli: None,
+            ty: Ty::Enum(&["off", "infiniband", "ethernet"]),
+            bounds: None,
+            default: "off",
+            help: "communication-cost preset (selects + enables)",
+            ctx: "",
+            get: |c| {
+                Some(Value::Str(
+                    if !c.comm.enabled { "off" } else { "custom" }.to_string(),
+                ))
+            },
+            set: |c, v| {
+                c.comm = match want_str("comm.model", v)? {
+                    "off" | "none" => CommConfig::default(),
+                    "infiniband" => {
+                        CommConfig::from_model(crate::sim::CommModel::infiniband_like(), true)
+                    }
+                    "ethernet" => {
+                        CommConfig::from_model(crate::sim::CommModel::ethernet_like(), true)
+                    }
+                    other => bail!("unknown comm model {other:?} (off|infiniband|ethernet)"),
+                };
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/comm/per_push",
+            toml_key: "comm.per_push",
+            cli: Some("comm-per-push"),
+            ty: Ty::F64,
+            bounds: bounds(0.0, false, UNBOUNDED, false, "comm per_push/per_mb must be finite and >= 0"),
+            default: "per sim::CommModel::infiniband_like",
+            help: "seconds charged per push/pull (enables [comm])",
+            ctx: "",
+            get: |c| Some(Value::Float(c.comm.model.per_push)),
+            set: |c, v| {
+                c.comm.model.per_push = want_f64("comm.per_push", v)?;
+                c.comm.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/comm/per_mb",
+            toml_key: "comm.per_mb",
+            cli: Some("comm-per-mb"),
+            ty: Ty::F64,
+            bounds: bounds(0.0, false, UNBOUNDED, false, "comm per_push/per_mb must be finite and >= 0"),
+            default: "per sim::CommModel::infiniband_like",
+            help: "seconds charged per MB on the wire (enables [comm])",
+            ctx: "",
+            get: |c| Some(Value::Float(c.comm.model.per_mb)),
+            set: |c, v| {
+                c.comm.model.per_mb = want_f64("comm.per_mb", v)?;
+                c.comm.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/comm/enabled",
+            toml_key: "comm.enabled",
+            cli: None,
+            ty: Ty::Bool,
+            bounds: None,
+            default: "false",
+            help: "charge transfer time in the DES (explicit key wins)",
+            ctx: "",
+            get: |c| Some(Value::Bool(c.comm.enabled)),
+            set: |c, v| {
+                c.comm.enabled = want_bool("comm.enabled", v)?;
+                Ok(())
+            },
+        },
+        // [faults]: same auto-enable convention as [comm]
+        Knob {
+            id: "/faults/crash_rate",
+            toml_key: "faults.crash_rate",
+            cli: Some("fault-crash-rate"),
+            ty: Ty::F64,
+            bounds: None,
+            default: "0.02",
+            help: "Poisson crashes per worker per sim second (enables [faults])",
+            ctx: "",
+            get: |c| Some(Value::Float(c.faults.crash_rate)),
+            set: |c, v| {
+                c.faults.crash_rate = want_f64("faults.crash_rate", v)?;
+                c.faults.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/faults/restart_mean",
+            toml_key: "faults.restart_mean",
+            cli: Some("fault-restart-mean"),
+            ty: Ty::F64,
+            bounds: None,
+            default: "5.0",
+            help: "mean restart delay in sim seconds (enables [faults])",
+            ctx: "",
+            get: |c| Some(Value::Float(c.faults.restart_mean)),
+            set: |c, v| {
+                c.faults.restart_mean = want_f64("faults.restart_mean", v)?;
+                c.faults.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/faults/departure_prob",
+            toml_key: "faults.departure_prob",
+            cli: Some("fault-departure-prob"),
+            ty: Ty::F64,
+            bounds: None,
+            default: "0.1",
+            help: "P(crash is a permanent departure) (enables [faults])",
+            ctx: "",
+            get: |c| Some(Value::Float(c.faults.departure_prob)),
+            set: |c, v| {
+                c.faults.departure_prob = want_f64("faults.departure_prob", v)?;
+                c.faults.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/faults/straggler_rate",
+            toml_key: "faults.straggler_rate",
+            cli: Some("fault-straggler-rate"),
+            ty: Ty::F64,
+            bounds: None,
+            default: "0",
+            help: "straggle windows per worker per sim second (enables [faults])",
+            ctx: "",
+            get: |c| Some(Value::Float(c.faults.straggler_rate)),
+            set: |c, v| {
+                c.faults.straggler_rate = want_f64("faults.straggler_rate", v)?;
+                c.faults.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/faults/straggler_factor",
+            toml_key: "faults.straggler_factor",
+            cli: Some("fault-straggler-factor"),
+            ty: Ty::F64,
+            bounds: None,
+            default: "4.0",
+            help: "compute-time multiplier inside a straggle window",
+            ctx: "",
+            get: |c| Some(Value::Float(c.faults.straggler_factor)),
+            set: |c, v| {
+                c.faults.straggler_factor = want_f64("faults.straggler_factor", v)?;
+                c.faults.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/faults/straggler_duration",
+            toml_key: "faults.straggler_duration",
+            cli: Some("fault-straggler-duration"),
+            ty: Ty::F64,
+            bounds: None,
+            default: "5.0",
+            help: "mean straggle-window length in sim seconds",
+            ctx: "",
+            get: |c| Some(Value::Float(c.faults.straggler_duration)),
+            set: |c, v| {
+                c.faults.straggler_duration = want_f64("faults.straggler_duration", v)?;
+                c.faults.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/faults/late_join",
+            toml_key: "faults.late_join",
+            cli: Some("fault-late-join"),
+            ty: Ty::USize,
+            bounds: None,
+            default: "0",
+            help: "workers absent at t = 0 that join later (enables [faults])",
+            ctx: "",
+            get: |c| Some(Value::Int(c.faults.late_join as i64)),
+            set: |c, v| {
+                c.faults.late_join = want_usize("faults.late_join", v)?;
+                c.faults.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/faults/late_join_by",
+            toml_key: "faults.late_join_by",
+            cli: Some("fault-late-join-by"),
+            ty: Ty::F64,
+            bounds: None,
+            default: "10.0",
+            help: "late joiners arrive uniformly within (0, late_join_by]",
+            ctx: "",
+            get: |c| Some(Value::Float(c.faults.late_join_by)),
+            set: |c, v| {
+                c.faults.late_join_by = want_f64("faults.late_join_by", v)?;
+                c.faults.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/faults/policy",
+            toml_key: "faults.policy",
+            cli: Some("fault-policy"),
+            ty: Ty::Enum(&["drop", "salvage"]),
+            bounds: None,
+            default: "drop",
+            help: "in-flight gradient on crash (enables [faults])",
+            ctx: "",
+            get: |c| Some(Value::Str(c.faults.policy.name().to_string())),
+            set: |c, v| {
+                c.faults.policy = crate::sim::CrashPolicy::parse(want_str("faults.policy", v)?)?;
+                c.faults.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/faults/seed",
+            toml_key: "faults.seed",
+            cli: Some("fault-seed"),
+            ty: Ty::U64,
+            bounds: None,
+            default: "0",
+            help: "fault-stream seed (0 = derive from /seed)",
+            ctx: "",
+            get: |c| Some(Value::Int(c.faults.seed as i64)),
+            set: |c, v| {
+                c.faults.seed = v
+                    .as_i64()
+                    .ok_or_else(|| anyhow::anyhow!("faults.seed must be an integer"))?
+                    as u64;
+                c.faults.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/faults/enabled",
+            toml_key: "faults.enabled",
+            cli: None,
+            ty: Ty::Bool,
+            bounds: None,
+            default: "false",
+            help: "inject faults into the DES (explicit key wins)",
+            ctx: "",
+            get: |c| Some(Value::Bool(c.faults.enabled)),
+            set: |c, v| {
+                c.faults.enabled = want_bool("faults.enabled", v)?;
+                Ok(())
+            },
+        },
+        // [compress]: codec before its parameter knobs; a codec switch
+        // keeps a tuned ratio/bits (matching the old --compress semantics),
+        // and "topk@0.25"-style compound specs serve single-axis sweeps
+        Knob {
+            id: "/compress/codec",
+            toml_key: "compress.codec",
+            cli: Some("compress"),
+            ty: Ty::Enum(&["none", "topk", "randk", "qsgd"]),
+            bounds: None,
+            default: "none",
+            help: "gradient codec (accepts name@param, e.g. topk@0.25, qsgd@4)",
+            ctx: "",
+            get: |c| Some(Value::Str(c.compress.name().to_string())),
+            set: |c, v| {
+                let spec = want_str("compress.codec", v)?;
+                let (name, param) = match spec.split_once('@') {
+                    Some((n, p)) => {
+                        let x: f64 = p.parse().map_err(|_| {
+                            anyhow::anyhow!("bad codec parameter in {spec:?} (name@param)")
+                        })?;
+                        (n, Some(x))
+                    }
+                    None => (spec, None),
+                };
+                let cur_ratio = match c.compress {
+                    CodecConfig::TopK { ratio } | CodecConfig::RandK { ratio } => ratio,
+                    _ => 0.1,
+                };
+                let cur_bits = match c.compress {
+                    CodecConfig::Qsgd { bits } => bits,
+                    _ => 8,
+                };
+                let (ratio, bits) = match (name, param) {
+                    (_, None) => (cur_ratio, cur_bits),
+                    ("topk" | "top-k" | "randk" | "rand-k", Some(x)) => (x, cur_bits),
+                    ("qsgd", Some(x)) => {
+                        let b = (x as i64).try_into().map_err(|_| {
+                            anyhow::anyhow!("bad qsgd bit width in {spec:?}")
+                        })?;
+                        (cur_ratio, b)
+                    }
+                    (other, Some(_)) => bail!("codec {other:?} takes no @param"),
+                };
+                c.compress = CodecConfig::parse(name, ratio, bits)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/compress/ratio",
+            toml_key: "compress.ratio",
+            cli: Some("topk-ratio"),
+            ty: Ty::F64,
+            bounds: None,
+            default: "0.1",
+            help: "topk/randk kept fraction",
+            ctx: "",
+            get: |c| match c.compress {
+                CodecConfig::TopK { ratio } | CodecConfig::RandK { ratio } => {
+                    Some(Value::Float(ratio))
+                }
+                _ => None,
+            },
+            set: |c, v| {
+                let x = want_f64("compress.ratio", v)?;
+                match &mut c.compress {
+                    CodecConfig::TopK { ratio } | CodecConfig::RandK { ratio } => *ratio = x,
+                    _ => bail!("compress.ratio requires a topk/randk codec"),
+                }
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/compress/bits",
+            toml_key: "compress.bits",
+            cli: Some("quant-bits"),
+            ty: Ty::USize,
+            bounds: None,
+            default: "8",
+            help: "qsgd bits per element (32 = exact)",
+            ctx: "",
+            get: |c| match c.compress {
+                CodecConfig::Qsgd { bits } => Some(Value::Int(bits as i64)),
+                _ => None,
+            },
+            set: |c, v| {
+                let b = want_usize("compress.bits", v)?;
+                let b = u32::try_from(b)
+                    .map_err(|_| anyhow::anyhow!("compress.bits {b} out of range"))?;
+                match &mut c.compress {
+                    CodecConfig::Qsgd { bits } => *bits = b,
+                    _ => bail!("compress.bits requires the qsgd codec"),
+                }
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/eval/every",
+            toml_key: "eval.every",
+            cli: None,
+            ty: Ty::USize,
+            bounds: None,
+            default: "1",
+            help: "evaluate every N effective epochs",
+            ctx: "",
+            get: |c| Some(Value::Int(c.eval_every as i64)),
+            set: |c, v| {
+                c.eval_every = want_usize("eval.every", v)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/eval/every_steps",
+            toml_key: "eval.every_steps",
+            cli: None,
+            ty: Ty::USize,
+            bounds: None,
+            default: "0",
+            help: "also evaluate every N global steps (0 = off)",
+            ctx: "",
+            get: |c| Some(Value::Int(c.eval_every_steps as i64)),
+            set: |c, v| {
+                c.eval_every_steps = want_usize("eval.every_steps", v)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/eval/batches",
+            toml_key: "eval.batches",
+            cli: None,
+            ty: Ty::USize,
+            bounds: None,
+            default: "0",
+            help: "cap on evaluation batches (0 = full test set)",
+            ctx: "",
+            get: |c| Some(Value::Int(c.eval_batches as i64)),
+            set: |c, v| {
+                c.eval_batches = want_usize("eval.batches", v)?;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/out_dir",
+            toml_key: "out_dir",
+            cli: Some("out"),
+            ty: Ty::Str,
+            bounds: None,
+            default: "\"\"",
+            help: "metrics output dir (empty = don't write)",
+            ctx: "",
+            get: |c| Some(Value::Str(c.out_dir.clone())),
+            set: |c, v| {
+                c.out_dir = want_str("out_dir", v)?.to_string();
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/checkpoint_out",
+            toml_key: "checkpoint_out",
+            cli: Some("save-checkpoint"),
+            ty: Ty::Str,
+            bounds: None,
+            default: "\"\"",
+            help: "save a final PS checkpoint here (empty = don't)",
+            ctx: "",
+            get: |c| Some(Value::Str(c.checkpoint_out.clone())),
+            set: |c, v| {
+                c.checkpoint_out = want_str("checkpoint_out", v)?.to_string();
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/resume_from",
+            toml_key: "resume_from",
+            cli: Some("resume"),
+            ty: Ty::Str,
+            bounds: None,
+            default: "\"\"",
+            help: "resume from a checkpoint file (empty = fresh init)",
+            ctx: "",
+            get: |c| Some(Value::Str(c.resume_from.clone())),
+            set: |c, v| {
+                c.resume_from = want_str("resume_from", v)?.to_string();
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/tag",
+            toml_key: "tag",
+            cli: Some("tag"),
+            ty: Ty::Str,
+            bounds: None,
+            default: "\"\"",
+            help: "extra label for metrics files",
+            ctx: "",
+            get: |c| Some(Value::Str(c.tag.clone())),
+            set: |c, v| {
+                c.tag = want_str("tag", v)?.to_string();
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/verbose",
+            toml_key: "verbose",
+            cli: Some("verbose"),
+            ty: Ty::Bool,
+            bounds: None,
+            default: "false",
+            help: "per-eval progress lines",
+            ctx: "",
+            get: |c| Some(Value::Bool(c.verbose)),
+            set: |c, v| {
+                c.verbose = want_bool("verbose", v)?;
+                Ok(())
+            },
+        },
+    ]
+}
+
+// --------------------------------------------------------------- the rules
+
+/// Cross-knob rejection rules, each with its pinned message fragment and a
+/// canonical TOML example. [`check`] runs them in order after the bounds.
+pub fn rules() -> &'static [Rule] {
+    static RULES: OnceLock<Vec<Rule>> = OnceLock::new();
+    RULES.get_or_init(build_rules)
+}
+
+fn build_rules() -> Vec<Rule> {
+    let faults_domain: fn(&ExperimentConfig) -> anyhow::Result<()> =
+        |c| c.faults.validate(c.workers);
+    let codec_domain: fn(&ExperimentConfig) -> anyhow::Result<()> = |c| c.compress.validate();
+    let compress_barrier: fn(&ExperimentConfig) -> anyhow::Result<()> = |c| {
+        if !c.compress.is_none()
+            && matches!(c.algorithm, Algorithm::SyncSgd | Algorithm::DcSyncSgd)
+        {
+            bail!(
+                "{} folds dense gradients at the barrier: compression requires an \
+                 immediate-commit protocol (asgd/dc-asgd-*/ssp/dc-s3gd/sgd)",
+                c.algorithm.name()
+            );
+        }
+        Ok(())
+    };
+    let ssp_threads: fn(&ExperimentConfig) -> anyhow::Result<()> = |c| {
+        if c.algorithm.is_staleness_bounded() && c.exec_mode == ExecMode::Threads {
+            bail!(
+                "{} runs under the event-driven scheduler: set exec_mode = sim",
+                c.algorithm.name()
+            );
+        }
+        Ok(())
+    };
+    vec![
+        Rule {
+            id: "seq-workers",
+            needle: "sequential SGD requires workers = 1",
+            example: "algorithm = \"sgd\"\nworkers = 4",
+            check: |c| {
+                if c.algorithm == Algorithm::SequentialSgd && c.workers != 1 {
+                    bail!("sequential SGD requires workers = 1 (got {})", c.workers);
+                }
+                Ok(())
+            },
+        },
+        Rule {
+            id: "step-budget",
+            needle: "one of epochs / max_steps must be positive",
+            example: "epochs = 0",
+            check: |c| {
+                if c.epochs == 0 && c.max_steps == 0 {
+                    bail!("one of epochs / max_steps must be positive");
+                }
+                Ok(())
+            },
+        },
+        Rule {
+            id: "ssp-threads",
+            needle: "event-driven scheduler",
+            example: "algorithm = \"ssp\"\nexec_mode = \"threads\"",
+            check: ssp_threads,
+        },
+        Rule {
+            id: "dc-s3gd-threads",
+            needle: "event-driven scheduler",
+            example: "algorithm = \"dc-s3gd\"\nexec_mode = \"threads\"",
+            check: ssp_threads,
+        },
+        Rule {
+            id: "comm-threads",
+            needle: "event-driven scheduler",
+            example: "exec_mode = \"threads\"\n[comm]\nenabled = true",
+            check: |c| {
+                if c.comm.enabled && c.exec_mode == ExecMode::Threads {
+                    bail!(
+                        "comm cost model runs under the event-driven scheduler: \
+                         set exec_mode = sim"
+                    );
+                }
+                Ok(())
+            },
+        },
+        Rule {
+            id: "faults-threads",
+            needle: "fault injection runs under the event-driven scheduler",
+            example: "exec_mode = \"threads\"\n[faults]\nenabled = true",
+            check: |c| {
+                if c.faults.enabled && c.exec_mode == ExecMode::Threads {
+                    bail!(
+                        "fault injection runs under the event-driven scheduler: \
+                         set exec_mode = sim"
+                    );
+                }
+                Ok(())
+            },
+        },
+        Rule {
+            id: "compress-barrier-ssgd",
+            needle: "folds dense gradients",
+            example: "algorithm = \"ssgd\"\n[compress]\ncodec = \"topk\"",
+            check: compress_barrier,
+        },
+        Rule {
+            id: "compress-barrier-dc-ssgd",
+            needle: "folds dense gradients",
+            example: "algorithm = \"dc-ssgd\"\n[compress]\ncodec = \"qsgd\"",
+            check: compress_barrier,
+        },
+        Rule {
+            id: "compress-momentum",
+            needle: "momentum does not compose",
+            example: "[train]\nmomentum = 0.9\n[compress]\ncodec = \"topk\"",
+            check: |c| {
+                if !c.compress.is_none() && c.momentum > 0.0 {
+                    bail!("momentum does not compose with gradient compression");
+                }
+                Ok(())
+            },
+        },
+        Rule {
+            id: "compress-xla",
+            needle: "native update backend",
+            example: "update_backend = \"xla\"\nshards = 1\n[compress]\ncodec = \"topk\"",
+            check: |c| {
+                if !c.compress.is_none() && c.update_backend == UpdateBackend::Xla {
+                    bail!("compression requires the native update backend");
+                }
+                Ok(())
+            },
+        },
+        Rule {
+            id: "compress-threads",
+            needle: "event-driven scheduler",
+            example: "exec_mode = \"threads\"\n[compress]\ncodec = \"topk\"",
+            check: |c| {
+                if !c.compress.is_none() && c.exec_mode == ExecMode::Threads {
+                    bail!(
+                        "compression runs under the event-driven scheduler: set exec_mode = sim"
+                    );
+                }
+                Ok(())
+            },
+        },
+        Rule {
+            id: "faults-crash-rate",
+            needle: "crash_rate must be finite and >= 0",
+            example: "[faults]\ncrash_rate = -0.1",
+            check: faults_domain,
+        },
+        Rule {
+            id: "faults-restart-mean",
+            needle: "restart_mean must be finite and > 0",
+            example: "[faults]\nrestart_mean = 0.0",
+            check: faults_domain,
+        },
+        Rule {
+            id: "faults-departure-prob",
+            needle: "departure_prob must be in [0, 1]",
+            example: "[faults]\ndeparture_prob = 1.5",
+            check: faults_domain,
+        },
+        Rule {
+            id: "faults-straggler-rate",
+            needle: "straggler_rate must be finite and >= 0",
+            example: "[faults]\nstraggler_rate = -0.1",
+            check: faults_domain,
+        },
+        Rule {
+            id: "faults-straggler-factor",
+            needle: "straggler_factor must be >= 1",
+            example: "[faults]\nstraggler_rate = 0.1\nstraggler_factor = 0.5",
+            check: faults_domain,
+        },
+        Rule {
+            id: "faults-straggler-duration",
+            needle: "straggler_duration must be finite and > 0",
+            example: "[faults]\nstraggler_rate = 0.1\nstraggler_duration = 0.0",
+            check: faults_domain,
+        },
+        Rule {
+            id: "faults-late-join",
+            needle: "at least one worker must be present at t = 0",
+            example: "workers = 4\n[faults]\nlate_join = 4",
+            check: faults_domain,
+        },
+        Rule {
+            id: "faults-late-join-by",
+            needle: "late_join_by must be finite and > 0",
+            example: "workers = 4\n[faults]\nlate_join = 1\nlate_join_by = 0.0",
+            check: faults_domain,
+        },
+        Rule {
+            id: "compress-ratio-domain",
+            needle: "ratio must be in (0, 1]",
+            example: "[compress]\ncodec = \"topk\"\nratio = 0.0",
+            check: codec_domain,
+        },
+        Rule {
+            id: "compress-bits-domain",
+            needle: "qsgd bits must be in [3, 16]",
+            example: "[compress]\ncodec = \"qsgd\"\nbits = 2",
+            check: codec_domain,
+        },
+    ]
+}
+
+// ---------------------------------------------------------------- plumbing
+
+/// Normalize a key: `/train/lr` (pointer) and `train.lr` (dotted) are the
+/// same knob.
+fn normalize(key: &str) -> String {
+    match key.strip_prefix('/') {
+        Some(rest) => rest.replace('/', "."),
+        None => key.to_string(),
+    }
+}
+
+/// Look up a knob by pointer id or dotted TOML key.
+pub fn find(key: &str) -> Option<&'static Knob> {
+    find_indexed(key).map(|(_, k)| k)
+}
+
+/// Like [`find`], also returning the knob's manifest index (apply order).
+pub fn find_indexed(key: &str) -> Option<(usize, &'static Knob)> {
+    let norm = normalize(key);
+    knobs().iter().enumerate().find(|(_, k)| k.toml_key == norm)
+}
+
+/// Apply every entry of a parsed TOML document (except `preset`, which the
+/// caller resolves into the base config first). Unknown keys are rejected;
+/// entries apply in manifest order regardless of document order.
+pub fn apply_doc(cfg: &mut ExperimentConfig, doc: &Doc) -> anyhow::Result<()> {
+    let mut hits: Vec<(usize, &Knob, &Value)> = Vec::new();
+    for key in doc.keys() {
+        if key == "preset" {
+            continue;
+        }
+        let val = doc.get(key).expect("key from doc.keys()");
+        match find_indexed(key) {
+            Some((i, k)) => hits.push((i, k, val)),
+            None => bail!("unknown config key {key:?} (see `dcasgd knobs` for the manifest)"),
+        }
+    }
+    hits.sort_by_key(|(i, _, _)| *i);
+    for (_, k, v) in hits {
+        (k.set)(cfg, v)?;
+    }
+    Ok(())
+}
+
+/// Apply `(key, value)` pairs (scenario overrides / sweep cells), in
+/// manifest order. Keys may use either spelling.
+pub fn apply_pairs(cfg: &mut ExperimentConfig, pairs: &[(String, Value)]) -> anyhow::Result<()> {
+    let mut hits: Vec<(usize, &Knob, &Value)> = Vec::new();
+    for (key, val) in pairs {
+        match find_indexed(key) {
+            Some((i, k)) => hits.push((i, k, val)),
+            None => bail!("unknown config key {key:?} (see `dcasgd knobs` for the manifest)"),
+        }
+    }
+    hits.sort_by_key(|(i, _, _)| *i);
+    for (_, k, v) in hits {
+        (k.set)(cfg, v)?;
+    }
+    Ok(())
+}
+
+/// Parse a CLI string into a knob's value type.
+fn parse_cli_value(k: &Knob, flag: &str, raw: &str) -> anyhow::Result<Value> {
+    let invalid = |expect: &str| anyhow::anyhow!("invalid value for --{flag}: {raw:?} ({expect})");
+    Ok(match k.ty {
+        Ty::Str | Ty::Enum(_) => Value::Str(raw.to_string()),
+        Ty::Bool => match raw {
+            "true" | "1" => Value::Bool(true),
+            "false" | "0" => Value::Bool(false),
+            _ => return Err(invalid("true|false")),
+        },
+        Ty::F64 => Value::Float(raw.parse::<f64>().map_err(|_| invalid("float"))?),
+        Ty::USize => Value::Int(raw.parse::<usize>().map_err(|_| invalid("usize"))? as i64),
+        // u64 -> i64 round-trips through two's complement losslessly
+        Ty::U64 => Value::Int(raw.parse::<u64>().map_err(|_| invalid("u64"))? as i64),
+        Ty::USizeList => Value::Array(
+            raw.split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<usize>()
+                        .map(|v| Value::Int(v as i64))
+                        .map_err(|_| invalid("comma-separated usize list"))
+                })
+                .collect::<anyhow::Result<_>>()?,
+        ),
+        Ty::F64List => Value::Array(
+            raw.split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<f64>()
+                        .map(Value::Float)
+                        .map_err(|_| invalid("comma-separated float list"))
+                })
+                .collect::<anyhow::Result<_>>()?,
+        ),
+    })
+}
+
+/// Overlay CLI flags onto a config: every knob with a `cli` name, plus the
+/// historical special cases (`--comm` / `--faults` bare enables, the
+/// sequential-SGD worker fixup, compress codec/ratio/bits inheritance, and
+/// `--verbose` being sticky-OR with the config file).
+pub fn overlay_cli(cfg: &mut ExperimentConfig, args: &Args) -> anyhow::Result<()> {
+    for k in knobs() {
+        let Some(flag) = k.cli else { continue };
+        // handled below with their historical interplay semantics
+        if matches!(flag, "compress" | "topk-ratio" | "quant-bits" | "verbose") {
+            continue;
+        }
+        let Some(raw) = args.str_opt(flag) else { continue };
+        let val = parse_cli_value(k, flag, &raw)?;
+        (k.set)(cfg, &val)?;
+        // `--workers N` on a sequential-SGD base means "go parallel"
+        if flag == "workers" && cfg.algorithm == Algorithm::SequentialSgd && cfg.workers > 1 {
+            cfg.algorithm = Algorithm::Asgd;
+        }
+    }
+    if cfg.algorithm == Algorithm::SequentialSgd {
+        cfg.workers = 1;
+    }
+    if args.flag("comm") {
+        cfg.comm.enabled = true;
+    }
+    if args.flag("faults") {
+        cfg.faults.enabled = true;
+    }
+    // gradient compression: --compress picks the codec; the knob flags
+    // refine whichever codec is selected (CLI, scenario, or config file)
+    let topk_ratio = args
+        .str_opt("topk-ratio")
+        .map(|r| r.parse::<f64>().map_err(|_| anyhow::anyhow!("invalid value for --topk-ratio: {r:?} (float)")))
+        .transpose()?;
+    let quant_bits = args
+        .str_opt("quant-bits")
+        .map(|b| -> anyhow::Result<u32> {
+            b.parse::<usize>()
+                .ok()
+                .and_then(|v| u32::try_from(v).ok())
+                .ok_or_else(|| anyhow::anyhow!("--quant-bits {b} out of range"))
+        })
+        .transpose()?;
+    if let Some(c) = args.str_opt("compress") {
+        let cur_ratio = match cfg.compress {
+            CodecConfig::TopK { ratio } | CodecConfig::RandK { ratio } => ratio,
+            _ => 0.1,
+        };
+        let cur_bits = match cfg.compress {
+            CodecConfig::Qsgd { bits } => bits,
+            _ => 8,
+        };
+        cfg.compress = CodecConfig::parse(
+            &c,
+            topk_ratio.unwrap_or(cur_ratio),
+            quant_bits.unwrap_or(cur_bits),
+        )?;
+    } else {
+        if let Some(r) = topk_ratio {
+            if let CodecConfig::TopK { ratio } | CodecConfig::RandK { ratio } = &mut cfg.compress {
+                *ratio = r;
+            }
+        }
+        if let Some(b) = quant_bits {
+            if let CodecConfig::Qsgd { bits } = &mut cfg.compress {
+                *bits = b;
+            }
+        }
+    }
+    cfg.verbose = cfg.verbose || args.flag("verbose");
+    Ok(())
+}
+
+/// Full pre-flight validation: per-knob bounds (through the getters, so
+/// model-dependent knobs are only checked when applicable), then the
+/// cross-knob rules. This *is* `ExperimentConfig::validate`.
+pub fn check(cfg: &ExperimentConfig) -> anyhow::Result<()> {
+    for k in knobs() {
+        let (Some(b), Some(v)) = (&k.bounds, (k.get)(cfg)) else { continue };
+        let x = v.as_f64().unwrap_or(f64::NAN);
+        if !b.admits(x) {
+            bail!("{}", b.msg);
+        }
+    }
+    for r in rules() {
+        (r.check)(cfg)?;
+    }
+    Ok(())
+}
+
+/// One entry of the generated rejected-combination matrix.
+pub struct RejectionCase {
+    /// TOML document that must be rejected.
+    pub toml: String,
+    /// Pinned fragment the rejection message must contain.
+    pub needle: &'static str,
+}
+
+/// The full rejected-combination matrix, generated from the manifest:
+/// one bounds violation per bounded knob, every rule's canonical example,
+/// and the parse-level cases. The matrix test iterates this, so a new knob
+/// or rule is covered automatically.
+pub fn rejection_cases() -> Vec<RejectionCase> {
+    let mut out = Vec::new();
+    for k in knobs() {
+        let Some(b) = &k.bounds else { continue };
+        let v = b.violation();
+        let lit = match k.ty {
+            Ty::USize | Ty::U64 => format!("{}", v as i64),
+            _ => format!("{v:?}"),
+        };
+        out.push(RejectionCase {
+            toml: format!("{}{} = {}", k.ctx, k.toml_key, lit),
+            needle: b.msg,
+        });
+    }
+    for r in rules() {
+        out.push(RejectionCase { toml: r.example.to_string(), needle: r.needle });
+    }
+    for (toml, needle) in PARSE_CASES {
+        out.push(RejectionCase { toml: toml.to_string(), needle });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_ids_are_unique_and_consistent() {
+        let mut seen = std::collections::BTreeSet::new();
+        let mut cli_seen = std::collections::BTreeSet::new();
+        for k in knobs() {
+            assert!(k.id.starts_with('/'), "{} must be a pointer id", k.id);
+            assert_eq!(normalize(k.id), k.toml_key, "{}: id/toml_key mismatch", k.id);
+            assert!(seen.insert(k.id), "duplicate knob id {}", k.id);
+            if let Some(cli) = k.cli {
+                assert!(cli_seen.insert(cli), "duplicate CLI flag --{cli}");
+            }
+        }
+    }
+
+    #[test]
+    fn find_accepts_both_spellings() {
+        assert!(find("/train/lr").is_some());
+        assert!(find("train.lr").is_some());
+        assert_eq!(find("/train/lr").unwrap().toml_key, find("train.lr").unwrap().toml_key);
+        assert!(find("/no/such/knob").is_none());
+    }
+
+    #[test]
+    fn getters_round_trip_defaults() {
+        // every knob that applies to the default config must read back a
+        // value whose bounds admit it
+        let cfg = ExperimentConfig::default();
+        for k in knobs() {
+            if let (Some(b), Some(v)) = (&k.bounds, (k.get)(&cfg)) {
+                let x = v.as_f64().unwrap();
+                assert!(b.admits(x), "{}: default {x} violates its own bounds", k.id);
+            }
+        }
+    }
+
+    #[test]
+    fn set_get_round_trip() {
+        let mut cfg = ExperimentConfig::default();
+        let k = find("/train/lr").unwrap();
+        (k.set)(&mut cfg, &Value::Float(0.25)).unwrap();
+        assert_eq!((k.get)(&cfg), Some(Value::Float(0.25)));
+        let k = find("/workers").unwrap();
+        (k.set)(&mut cfg, &Value::Int(8)).unwrap();
+        assert_eq!((k.get)(&cfg), Some(Value::Int(8)));
+    }
+
+    #[test]
+    fn apply_order_is_manifest_order_not_document_order() {
+        // enabled=false written BEFORE the auto-enabling parameter must
+        // still win (manifest declares `enabled` last in its section)
+        let doc = Doc::parse("[comm]\nenabled = false\nper_push = 2e-4").unwrap();
+        let mut cfg = ExperimentConfig::default();
+        apply_doc(&mut cfg, &doc).unwrap();
+        assert!(!cfg.comm.enabled);
+        assert_eq!(cfg.comm.model.per_push, 2e-4);
+
+        // ratio before codec also works: codec applies first
+        let doc = Doc::parse("[compress]\nratio = 0.25\ncodec = \"topk\"").unwrap();
+        let mut cfg = ExperimentConfig::default();
+        apply_doc(&mut cfg, &doc).unwrap();
+        assert_eq!(cfg.compress, CodecConfig::TopK { ratio: 0.25 });
+    }
+
+    #[test]
+    fn compound_codec_specs() {
+        let mut cfg = ExperimentConfig::default();
+        let k = find("/compress/codec").unwrap();
+        (k.set)(&mut cfg, &Value::Str("topk@0.25".into())).unwrap();
+        assert_eq!(cfg.compress, CodecConfig::TopK { ratio: 0.25 });
+        (k.set)(&mut cfg, &Value::Str("qsgd@4".into())).unwrap();
+        assert_eq!(cfg.compress, CodecConfig::Qsgd { bits: 4 });
+        // a plain codec switch inherits the tuned parameter
+        (k.set)(&mut cfg, &Value::Str("qsgd".into())).unwrap();
+        assert_eq!(cfg.compress, CodecConfig::Qsgd { bits: 4 });
+        assert!((k.set)(&mut cfg, &Value::Str("none@1".into())).is_err());
+    }
+
+    #[test]
+    fn every_rejection_case_rejects_with_its_needle() {
+        // the real matrix test lives in config::tests; this one pins that
+        // the generator itself is self-consistent
+        for case in rejection_cases() {
+            let err = ExperimentConfig::from_toml(&case.toml)
+                .expect_err(&format!("must reject: {}", case.toml))
+                .to_string();
+            assert!(
+                err.contains(case.needle),
+                "{:?}: error {err:?} lacks {:?}",
+                case.toml,
+                case.needle
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected() {
+        let err = ExperimentConfig::from_toml("bogus = 1").unwrap_err().to_string();
+        assert!(err.contains("unknown config key"), "{err}");
+        let err = ExperimentConfig::from_toml("[train]\nbogus = 1").unwrap_err().to_string();
+        assert!(err.contains("train.bogus"), "{err}");
+    }
+}

@@ -65,14 +65,18 @@ impl fmt::Display for TomlError {
 impl std::error::Error for TomlError {}
 
 /// Parsed document: flat `"section.key"` (or bare `"key"`) → value map.
+/// `order` records document (insertion) order of the flattened keys, which
+/// scenario sweep axes rely on for a deterministic grid nesting.
 #[derive(Debug, Clone, Default)]
 pub struct Doc {
     pub entries: BTreeMap<String, Value>,
+    pub order: Vec<String>,
 }
 
 impl Doc {
     pub fn parse(src: &str) -> Result<Doc, TomlError> {
         let mut entries = BTreeMap::new();
+        let mut order = Vec::new();
         let mut section = String::new();
         for (lineno, raw) in src.lines().enumerate() {
             let line = strip_comment(raw).trim();
@@ -90,7 +94,14 @@ impl Doc {
                 continue;
             }
             let (key, val) = line.split_once('=').ok_or_else(|| err("expected key = value"))?;
+            // keys may be quoted ("/train/lr" = 0.5 — the JSON-pointer
+            // style scenario overrides use this)
             let key = key.trim();
+            let key = key
+                .strip_prefix('"')
+                .and_then(|k| k.strip_suffix('"'))
+                .unwrap_or(key)
+                .trim();
             if key.is_empty() {
                 return Err(err("empty key"));
             }
@@ -99,8 +110,9 @@ impl Doc {
             if entries.insert(full.clone(), value).is_some() {
                 return Err(err(&format!("duplicate key {full}")));
             }
+            order.push(full);
         }
-        Ok(Doc { entries })
+        Ok(Doc { entries, order })
     }
 
     pub fn get(&self, key: &str) -> Option<&Value> {
@@ -109,6 +121,12 @@ impl Doc {
 
     pub fn keys(&self) -> impl Iterator<Item = &String> {
         self.entries.keys()
+    }
+
+    /// Keys in document order (the BTreeMap iteration order is sorted;
+    /// sweep-axis nesting wants the order the file declares).
+    pub fn ordered_keys(&self) -> impl Iterator<Item = &String> {
+        self.order.iter()
     }
 }
 
@@ -231,6 +249,20 @@ mod tests {
         assert_eq!(doc.get("a").unwrap().as_i64(), Some(-7));
         assert_eq!(doc.get("b").unwrap().as_f64(), Some(-0.25));
         assert_eq!(doc.get("a").unwrap().as_usize(), None);
+    }
+
+    #[test]
+    fn quoted_keys_and_document_order() {
+        let doc = Doc::parse(
+            "[overrides]\n\"/train/lr\" = 0.5\n/workers = 8\nplain = 1",
+        )
+        .unwrap();
+        assert_eq!(doc.get("overrides./train/lr").unwrap().as_f64(), Some(0.5));
+        assert_eq!(doc.get("overrides./workers").unwrap().as_i64(), Some(8));
+        let order: Vec<&String> = doc.ordered_keys().collect();
+        assert_eq!(order[0], "overrides./train/lr");
+        assert_eq!(order[1], "overrides./workers");
+        assert_eq!(order[2], "overrides.plain");
     }
 
     #[test]

@@ -232,6 +232,31 @@
 //! `fault_churn` sweeps crash-rate × {asgd, dc-asgd-a, ssp} and shows
 //! DC-ASGD-a holding its loss advantage as churn amplifies staleness.
 //!
+//! ## Scenario files & pre-flight validation
+//!
+//! Every experiment knob — id, type, bounds, default, CLI flag, and the
+//! cross-knob rejection rules — is declared exactly once in the
+//! [`config::manifest`]. The TOML loader, the CLI overlay, and
+//! [`config::ExperimentConfig::validate`] are all derived from it, so a
+//! knob admits the same values and rejects with the same pinned message no
+//! matter which layer set it. `dcasgd knobs` prints the manifest.
+//!
+//! Precedence is **CLI > scenario override > TOML/preset base > default**:
+//! the base config comes from a preset or TOML file, a scenario's
+//! `[overrides]`/`[sweep]` sections rewrite it knob-by-knob, and CLI flags
+//! are overlaid last. Each layer goes through the same manifest setters,
+//! which is why a run launched via `--scenario` is bitwise identical to
+//! the equivalent CLI/TOML run (pinned by `tests/integration.rs`).
+//!
+//! A *scenario* file (`scenarios/*.toml`, see [`scenario`]) declares a
+//! base config plus JSON-pointer-style overrides and sweep axes, and
+//! expands into a validated run grid: `dcasgd train --scenario f.toml
+//! --case N` runs one cell, [`scenario::run_grid`] drives whole grids for
+//! benches/examples with one shared JSONL emitter, and `dcasgd validate
+//! scenarios/ --strict` pre-flights the committed corpus in CI — every
+//! case is checked against the manifest bounds and the rejection matrix
+//! before anything runs.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -253,6 +278,7 @@ pub mod metrics;
 pub mod optim;
 pub mod ps;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod theory;
 pub mod util;

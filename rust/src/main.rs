@@ -1,20 +1,26 @@
 //! `dcasgd` — launcher CLI for the DC-ASGD training framework.
 //!
 //! Subcommands:
-//!   train   run one experiment (preset/config file + flag overrides)
-//!   sweep   run an algorithm x workers grid and print a paper-style table
-//!   info    list AOT artifacts and their shapes
+//!   train     run one experiment (preset/config/scenario + flag overrides)
+//!   sweep     run an algorithm x workers grid and print a paper-style table
+//!   validate  pre-flight scenario/config files against the knob manifest
+//!   knobs     print the knob manifest (ids, bounds, defaults, rules)
+//!   info      list AOT artifacts and their shapes
 //!
 //! Examples:
 //!   dcasgd train --preset quickstart --algo dc-asgd-a --workers 8
-//!   dcasgd train --config configs/cifar.toml --algo asgd
+//!   dcasgd train --scenario scenarios/fig5_lambda.toml --case 3
 //!   dcasgd sweep --preset cifar --algos asgd,dc-asgd-a --workers 4,8
-//!   dcasgd info
+//!   dcasgd validate scenarios/ --strict
+//!
+//! Precedence: CLI flags > scenario overrides/sweep cell > TOML/preset base
+//! > built-in defaults — every layer goes through the same manifest setters.
 
 use dc_asgd::bench::Table;
-use dc_asgd::config::{Algorithm, ExecMode, ExperimentConfig, UpdateBackend};
+use dc_asgd::config::{manifest, Algorithm, ExecMode, ExperimentConfig};
 use dc_asgd::coordinator::Trainer;
 use dc_asgd::runtime::Manifest;
+use dc_asgd::scenario::{collect_toml_files, validate_file, Scenario};
 use dc_asgd::util::cli::Args;
 
 fn main() {
@@ -23,6 +29,8 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("eval") => cmd_eval(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("knobs") => cmd_knobs(&args),
         Some("info") => cmd_info(&args),
         Some(other) => {
             eprintln!("unknown subcommand {other:?}");
@@ -39,10 +47,11 @@ fn main() {
 
 fn usage() {
     eprintln!(
-        "usage: dcasgd <train|sweep|eval|info> [options]\n\
+        "usage: dcasgd <train|sweep|eval|validate|knobs|info> [options]\n\
          common options:\n\
            --preset quickstart|cifar|imagenet|lm   base config\n\
            --config PATH                           TOML config file\n\
+           --scenario PATH      --case N           run one expanded scenario case\n\
            --algo sgd|ssgd|dc-ssgd|asgd|dc-asgd-c|dc-asgd-a|ssp|dc-s3gd\n\
            --workers N          --epochs N         --max-steps N\n\
            --lr F               --lambda0 F        --ms-momentum F\n\
@@ -65,203 +74,134 @@ fn usage() {
            --fault-seed N       (0 = derive from --seed)\n\
            --tag NAME           --verbose\n\
          sweep options:\n\
-           --algos a,b,c        --workers-list 1,4,8"
+           --algos a,b,c        --workers-list 1,4,8\n\
+         validate: dcasgd validate [PATH ...] [--strict]\n\
+           pre-flights scenario/config TOML (default: the scenarios/ corpus);\n\
+           --strict also fails on warnings (CI mode)\n\
+         knobs: print the full knob manifest and cross-knob rules"
     );
 }
 
+/// Resolve the base config (scenario case XOR config file XOR preset),
+/// overlay CLI flags through the knob manifest, validate. Precedence:
+/// CLI > scenario override/cell > TOML/preset base > default.
 fn build_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
-    let mut cfg = if let Some(path) = args.str_opt("config") {
-        ExperimentConfig::from_file(std::path::Path::new(&path))?
+    let mut cfg = if let Some(path) = args.str_opt("scenario") {
+        if args.str_opt("config").is_some() || args.str_opt("preset").is_some() {
+            anyhow::bail!("--scenario already carries a base config; drop --config/--preset");
+        }
+        let sc = Scenario::load(std::path::Path::new(&path))?;
+        let ex = sc.expand()?;
+        let want = args.usize_opt("case")?.unwrap_or(0);
+        let case = ex.cases.iter().find(|c| c.index == want).ok_or_else(|| {
+            anyhow::anyhow!(
+                "scenario {:?} has no runnable case {want} ({} of its grid cells run; \
+                 `dcasgd validate {path}` lists the expansion)",
+                sc.name,
+                ex.cases.len()
+            )
+        })?;
+        eprintln!("[scenario] {} case {}: {}", sc.name, case.index, case.label);
+        case.config.clone()
     } else {
-        match args.str_or("preset", "quickstart").as_str() {
-            "quickstart" => ExperimentConfig::preset_quickstart(),
-            "cifar" => ExperimentConfig::preset_cifar(),
-            "imagenet" => ExperimentConfig::preset_imagenet(),
-            "lm" => ExperimentConfig::preset_lm("lm_medium"),
-            other => anyhow::bail!("unknown preset {other:?}"),
+        if args.usize_opt("case")?.is_some() {
+            anyhow::bail!("--case requires --scenario");
+        }
+        if let Some(path) = args.str_opt("config") {
+            ExperimentConfig::from_file(std::path::Path::new(&path))?
+        } else {
+            ExperimentConfig::base_for_preset(Some(&args.str_or("preset", "quickstart")))?
         }
     };
-    if let Some(a) = args.str_opt("algo") {
-        cfg.algorithm = Algorithm::parse(&a)?;
-    }
-    if let Some(m) = args.str_opt("model") {
-        cfg.model = m;
-    }
-    if let Some(w) = args.usize_opt("workers")? {
-        cfg.workers = w;
-        if cfg.algorithm == Algorithm::SequentialSgd && w > 1 {
-            cfg.algorithm = Algorithm::Asgd;
-        }
-    }
-    if cfg.algorithm == Algorithm::SequentialSgd {
-        cfg.workers = 1;
-    }
-    if let Some(e) = args.usize_opt("epochs")? {
-        cfg.epochs = e;
-    }
-    if let Some(s) = args.usize_opt("max-steps")? {
-        cfg.max_steps = s;
-    }
-    if let Some(v) = args.f64_opt("lr")? {
-        cfg.lr.base = v;
-    }
-    if let Some(v) = args.f64_opt("lambda0")? {
-        cfg.lambda0 = v;
-    }
-    if let Some(v) = args.usize_opt("staleness-bound")? {
-        cfg.staleness_bound = v;
-    }
-    if let Some(v) = args.f64_opt("ms-momentum")? {
-        cfg.ms_momentum = v;
-    }
-    if let Some(v) = args.f64_opt("momentum")? {
-        cfg.momentum = v;
-    }
-    if let Some(v) = args.usize_opt("seed")? {
-        cfg.seed = v as u64;
-    }
-    if let Some(v) = args.usize_opt("shards")? {
-        cfg.shards = v;
-    }
-    if let Some(v) = args.usize_opt("threads")? {
-        cfg.runtime.threads = v;
-    }
-    if let Some(v) = args.str_opt("simd") {
-        cfg.runtime.simd = !(v == "false" || v == "0");
-    }
-    if let Some(v) = args.usize_opt("train-size")? {
-        cfg.train_size = v;
-    }
-    if let Some(v) = args.usize_opt("test-size")? {
-        cfg.test_size = v;
-    }
-    if let Some(v) = args.str_opt("mode") {
-        cfg.exec_mode = match v.as_str() {
-            "sim" => ExecMode::SimulatedTime,
-            "threads" => ExecMode::Threads,
-            other => anyhow::bail!("unknown mode {other:?}"),
-        };
-    }
-    if let Some(v) = args.str_opt("backend") {
-        cfg.update_backend = match v.as_str() {
-            "native" => UpdateBackend::Native,
-            "xla" => UpdateBackend::Xla,
-            other => anyhow::bail!("unknown backend {other:?}"),
-        };
-    }
-    if args.flag("comm") {
-        cfg.comm.enabled = true;
-    }
-    if let Some(v) = args.f64_opt("comm-per-push")? {
-        cfg.comm.model.per_push = v;
-        cfg.comm.enabled = true;
-    }
-    if let Some(v) = args.f64_opt("comm-per-mb")? {
-        cfg.comm.model.per_mb = v;
-        cfg.comm.enabled = true;
-    }
-    // fault injection: --faults enables the defaults; any --fault-* knob
-    // both sets its value and enables the section (like --comm-per-*)
-    if args.flag("faults") {
-        cfg.faults.enabled = true;
-    }
-    if let Some(v) = args.f64_opt("fault-crash-rate")? {
-        cfg.faults.crash_rate = v;
-        cfg.faults.enabled = true;
-    }
-    if let Some(v) = args.f64_opt("fault-restart-mean")? {
-        cfg.faults.restart_mean = v;
-        cfg.faults.enabled = true;
-    }
-    if let Some(v) = args.f64_opt("fault-departure-prob")? {
-        cfg.faults.departure_prob = v;
-        cfg.faults.enabled = true;
-    }
-    if let Some(v) = args.f64_opt("fault-straggler-rate")? {
-        cfg.faults.straggler_rate = v;
-        cfg.faults.enabled = true;
-    }
-    if let Some(v) = args.f64_opt("fault-straggler-factor")? {
-        cfg.faults.straggler_factor = v;
-        cfg.faults.enabled = true;
-    }
-    if let Some(v) = args.f64_opt("fault-straggler-duration")? {
-        cfg.faults.straggler_duration = v;
-        cfg.faults.enabled = true;
-    }
-    if let Some(v) = args.usize_opt("fault-late-join")? {
-        cfg.faults.late_join = v;
-        cfg.faults.enabled = true;
-    }
-    if let Some(v) = args.f64_opt("fault-late-join-by")? {
-        cfg.faults.late_join_by = v;
-        cfg.faults.enabled = true;
-    }
-    if let Some(v) = args.str_opt("fault-policy") {
-        cfg.faults.policy = dc_asgd::sim::CrashPolicy::parse(&v)?;
-        cfg.faults.enabled = true;
-    }
-    if let Some(v) = args.usize_opt("fault-seed")? {
-        cfg.faults.seed = v as u64;
-        cfg.faults.enabled = true;
-    }
-    // gradient compression: --compress picks the codec; the knob flags
-    // refine whichever codec is selected (here or in the config file)
-    let topk_ratio = args.f64_opt("topk-ratio")?;
-    // checked conversion: a wrapping `as u32` could alias an out-of-range
-    // value onto a valid bit width before validation sees it
-    let quant_bits = match args.usize_opt("quant-bits")? {
-        Some(b) => Some(
-            u32::try_from(b).map_err(|_| anyhow::anyhow!("--quant-bits {b} out of range"))?,
-        ),
-        None => None,
-    };
-    use dc_asgd::compress::CodecConfig;
-    if let Some(c) = args.str_opt("compress") {
-        // knob fallbacks inherit from whatever the config file selected,
-        // so `--config exp.toml --compress randk` keeps a tuned ratio
-        // instead of silently reverting to the built-in defaults
-        let cur_ratio = match cfg.compress {
-            CodecConfig::TopK { ratio } | CodecConfig::RandK { ratio } => ratio,
-            _ => 0.1,
-        };
-        let cur_bits = match cfg.compress {
-            CodecConfig::Qsgd { bits } => bits,
-            _ => 8,
-        };
-        cfg.compress = CodecConfig::parse(
-            &c,
-            topk_ratio.unwrap_or(cur_ratio),
-            quant_bits.unwrap_or(cur_bits),
-        )?;
-    } else {
-        if let Some(r) = topk_ratio {
-            if let CodecConfig::TopK { ratio } | CodecConfig::RandK { ratio } = &mut cfg.compress
-            {
-                *ratio = r;
-            }
-        }
-        if let Some(b) = quant_bits {
-            if let CodecConfig::Qsgd { bits } = &mut cfg.compress {
-                *bits = b;
-            }
-        }
-    }
-    if let Some(v) = args.str_opt("out") {
-        cfg.out_dir = v;
-    }
-    if let Some(v) = args.str_opt("save-checkpoint") {
-        cfg.checkpoint_out = v;
-    }
-    if let Some(v) = args.str_opt("resume") {
-        cfg.resume_from = v;
-    }
-    if let Some(v) = args.str_opt("tag") {
-        cfg.tag = v;
-    }
-    cfg.verbose = cfg.verbose || args.flag("verbose");
+    manifest::overlay_cli(&mut cfg, args)?;
     cfg.validate()?;
     Ok(cfg)
+}
+
+fn cmd_validate(args: &Args) -> i32 {
+    let strict = args.flag("strict");
+    if let Err(e) = args.finish() {
+        eprintln!("error: {e}");
+        return 2;
+    }
+    let given: Vec<&str> = args.positional()[1..].iter().map(|s| s.as_str()).collect();
+    let corpus;
+    let paths: Vec<&str> = if given.is_empty() {
+        match dc_asgd::scenario::find_scenarios_dir() {
+            Some(d) => {
+                corpus = d;
+                vec![corpus.to_str().unwrap_or("scenarios")]
+            }
+            None => {
+                eprintln!("error: no paths given and no scenarios/ corpus found");
+                return 2;
+            }
+        }
+    } else {
+        given
+    };
+    let files = match collect_toml_files(&paths) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 2;
+        }
+    };
+    let mut failed = 0usize;
+    for f in &files {
+        let rep = validate_file(f);
+        let status = if !rep.errors.is_empty() {
+            "FAIL"
+        } else if !rep.warnings.is_empty() {
+            "warn"
+        } else {
+            "ok"
+        };
+        println!("{status:>4}  {}  {}", rep.path.display(), rep.summary);
+        for w in &rep.warnings {
+            println!("      warning: {w}");
+        }
+        for e in &rep.errors {
+            println!("      error: {e}");
+        }
+        if !rep.ok(strict) {
+            failed += 1;
+        }
+    }
+    if failed > 0 {
+        eprintln!(
+            "{failed}/{} file(s) failed{}",
+            files.len(),
+            if strict { " (strict)" } else { "" }
+        );
+        1
+    } else {
+        0
+    }
+}
+
+fn cmd_knobs(args: &Args) -> i32 {
+    if let Err(e) = args.finish() {
+        eprintln!("error: {e}");
+        return 2;
+    }
+    let mut t = Table::new(&["id", "type", "bounds", "default", "cli", "help"]);
+    for k in manifest::knobs() {
+        t.row(&[
+            k.id.to_string(),
+            k.ty.name().to_string(),
+            k.bounds.map(|b| b.describe()).unwrap_or_else(|| "-".into()),
+            k.default.to_string(),
+            k.cli.map(|c| format!("--{c}")).unwrap_or_else(|| "-".into()),
+            k.help.to_string(),
+        ]);
+    }
+    t.print();
+    println!("\ncross-knob rules (rejection message fragments are pinned):");
+    for r in manifest::rules() {
+        println!("  {:<28} {}", r.id, r.needle);
+    }
+    0
 }
 
 fn cmd_train(args: &Args) -> i32 {

@@ -1,0 +1,727 @@
+//! Scenario files: declarative experiment grids over the knob manifest.
+//!
+//! A scenario is a TOML file with three sections:
+//!
+//! ```toml
+//! [scenario]
+//! name = "ssp_spectrum"                   # required; should match the file stem
+//! description = "sweep the staleness bound"
+//! preset = "quickstart"                   # base config: a preset ...
+//! # config = "base.toml"                  # ... XOR a config file (path
+//! #                                       #     relative to the scenario file)
+//! # skip_invalid = true                   # drop (and record) grid cells the
+//! #                                       #     manifest rejects, instead of failing
+//!
+//! [overrides]                             # applied on top of the base, every case
+//! "/workers" = 8
+//! "/epochs" = 6
+//!
+//! [sweep]                                 # one axis per knob; full cross product
+//! "/algorithm" = ["ssp", "dc-s3gd"]
+//! "/staleness_bound" = [0, 1, 4, 16]
+//! ```
+//!
+//! Knob keys accept both spellings from the manifest: JSON-pointer
+//! (`"/train/lr"`) and dotted (`train.lr`). Axes nest in **document order**
+//! with the first axis outermost, so the grid order is stable and
+//! plot-friendly. Every case is a full [`ExperimentConfig`] built as
+//! base → overrides → sweep cell, validated through [`manifest::check`] —
+//! exactly the same code path as a TOML or CLI run, which is what makes a
+//! `--scenario` run bitwise identical to the equivalent hand-rolled one.
+//!
+//! [`run_grid`] is the shared bench/example driver: expand, run each case
+//! against a shared engine, and emit one JSONL row per case into
+//! `runs/bench/<name>.jsonl` (scenario + cell values + the full
+//! [`TrainReport`] fields, plus caller extras). `dcasgd validate` pre-flights
+//! scenario files (and plain config files) through [`validate_file`].
+
+use crate::config::manifest;
+use crate::config::toml::{Doc, Value};
+use crate::config::ExperimentConfig;
+use crate::metrics::TrainReport;
+use crate::util::json::Json;
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Hard cap on the number of cases one scenario may expand to.
+pub const MAX_CASES: usize = 4096;
+
+/// One sweep axis: a knob id and the values it takes.
+#[derive(Clone, Debug)]
+pub struct Axis {
+    /// Knob key as written in the file (pointer or dotted spelling).
+    pub key: String,
+    pub values: Vec<Value>,
+}
+
+/// A parsed scenario file (not yet expanded).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub description: String,
+    /// Base config: a named preset ...
+    pub preset: Option<String>,
+    /// ... XOR a TOML config file, relative to `dir`.
+    pub config: Option<String>,
+    /// Drop (and record) grid cells the manifest rejects instead of failing.
+    pub skip_invalid: bool,
+    /// `(knob key, value)` pairs applied to the base for every case.
+    pub overrides: Vec<(String, Value)>,
+    /// Sweep axes in document order; the first axis is outermost.
+    pub axes: Vec<Axis>,
+    /// Directory the scenario was loaded from (resolves `config`).
+    pub dir: PathBuf,
+}
+
+/// One expanded grid cell: a fully built, validated config.
+#[derive(Clone, Debug)]
+pub struct Case {
+    /// Grid position (stable even when other cells are skipped).
+    pub index: usize,
+    /// Human label, e.g. `algorithm=ssp staleness_bound=4`.
+    pub label: String,
+    /// The sweep cell that produced this case, one entry per axis.
+    pub cells: Vec<(String, Value)>,
+    pub config: ExperimentConfig,
+}
+
+/// Result of expanding a scenario into its run grid.
+#[derive(Clone, Debug)]
+pub struct Expansion {
+    pub cases: Vec<Case>,
+    /// `(label, rejection)` for cells dropped under `skip_invalid`.
+    pub skipped: Vec<(String, String)>,
+}
+
+impl Scenario {
+    /// Load and parse a scenario file.
+    pub fn load(path: &Path) -> anyhow::Result<Scenario> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario {}", path.display()))?;
+        let dir = path.parent().unwrap_or_else(|| Path::new(".")).to_path_buf();
+        Self::parse(&src, &dir).with_context(|| format!("scenario {}", path.display()))
+    }
+
+    /// Parse scenario TOML; `dir` resolves a relative `config` base path.
+    pub fn parse(src: &str, dir: &Path) -> anyhow::Result<Scenario> {
+        let doc = Doc::parse(src).map_err(anyhow::Error::from)?;
+        Self::from_doc(&doc, dir)
+    }
+
+    pub fn from_doc(doc: &Doc, dir: &Path) -> anyhow::Result<Scenario> {
+        let mut name = None;
+        let mut description = String::new();
+        let mut preset = None;
+        let mut config = None;
+        let mut skip_invalid = false;
+        let mut overrides: Vec<(String, Value)> = Vec::new();
+        let mut axes: Vec<Axis> = Vec::new();
+        // reject two spellings (or duplicates) of the same knob per section
+        let mut override_knobs = BTreeMap::new();
+        let mut axis_knobs = BTreeMap::new();
+
+        for key in doc.ordered_keys() {
+            let val = doc.get(key).expect("key from ordered_keys");
+            if let Some(field) = key.strip_prefix("scenario.") {
+                match field {
+                    "name" => {
+                        name = Some(want_str(key, val)?.to_string());
+                    }
+                    "description" => description = want_str(key, val)?.to_string(),
+                    "preset" => preset = Some(want_str(key, val)?.to_string()),
+                    "config" => config = Some(want_str(key, val)?.to_string()),
+                    "skip_invalid" => {
+                        skip_invalid = val
+                            .as_bool()
+                            .ok_or_else(|| anyhow::anyhow!("{key} must be a boolean"))?;
+                    }
+                    other => bail!(
+                        "unknown [scenario] field {other:?} \
+                         (name|description|preset|config|skip_invalid)"
+                    ),
+                }
+            } else if let Some(knob) = key.strip_prefix("overrides.") {
+                let (idx, k) = find_knob(knob, "[overrides]")?;
+                if let Some(prev) = override_knobs.insert(idx, knob.to_string()) {
+                    bail!("[overrides] lists knob {} twice ({prev:?} and {knob:?})", k.id);
+                }
+                overrides.push((knob.to_string(), val.clone()));
+            } else if let Some(knob) = key.strip_prefix("sweep.") {
+                let (idx, k) = find_knob(knob, "[sweep]")?;
+                if let Some(prev) = axis_knobs.insert(idx, knob.to_string()) {
+                    bail!("[sweep] lists knob {} twice ({prev:?} and {knob:?})", k.id);
+                }
+                let values = match val {
+                    Value::Array(items) if !items.is_empty() => items.clone(),
+                    Value::Array(_) => bail!("[sweep] axis {knob:?} is empty"),
+                    _ => bail!("[sweep] axis {knob:?} must be an array of values"),
+                };
+                axes.push(Axis { key: knob.to_string(), values });
+            } else {
+                bail!(
+                    "scenario files contain only [scenario], [overrides], and [sweep] \
+                     sections (found {key:?})"
+                );
+            }
+        }
+
+        let Some(name) = name else { bail!("missing required [scenario] name") };
+        if preset.is_some() && config.is_some() {
+            bail!("scenario {name:?} declares both preset and config — pick one base");
+        }
+        let total: usize = axes.iter().map(|a| a.values.len()).product();
+        if total > MAX_CASES {
+            bail!("scenario {name:?} expands to {total} cases (cap {MAX_CASES})");
+        }
+        Ok(Scenario {
+            name,
+            description,
+            preset,
+            config,
+            skip_invalid,
+            overrides,
+            axes,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// The base config: preset/config file + `[overrides]`, *not* yet
+    /// validated — a sweep cell may complete it; cases validate in
+    /// [`Scenario::expand`].
+    pub fn base(&self) -> anyhow::Result<ExperimentConfig> {
+        let mut cfg = match &self.config {
+            Some(rel) => {
+                let path = self.dir.join(rel);
+                let src = std::fs::read_to_string(&path)
+                    .with_context(|| format!("scenario base config {}", path.display()))?;
+                let doc = Doc::parse(&src).map_err(anyhow::Error::from)?;
+                let mut cfg = ExperimentConfig::base_for_preset(
+                    doc.get("preset").and_then(|v| v.as_str()),
+                )?;
+                manifest::apply_doc(&mut cfg, &doc)?;
+                cfg
+            }
+            None => ExperimentConfig::base_for_preset(self.preset.as_deref())?,
+        };
+        manifest::apply_pairs(&mut cfg, &self.overrides)
+            .with_context(|| format!("scenario {:?} [overrides]", self.name))?;
+        Ok(cfg)
+    }
+
+    /// Expand the sweep axes into the full run grid (first axis outermost).
+    /// Every case is validated; invalid cells fail the expansion unless
+    /// `skip_invalid` is set, in which case they are recorded in `skipped`.
+    pub fn expand(&self) -> anyhow::Result<Expansion> {
+        let base = self.base()?;
+        let total: usize = self.axes.iter().map(|a| a.values.len()).product();
+        let mut cases = Vec::with_capacity(total);
+        let mut skipped = Vec::new();
+        for i in 0..total {
+            let mut cells = Vec::with_capacity(self.axes.len());
+            let mut stride = total;
+            for ax in &self.axes {
+                stride /= ax.values.len();
+                let idx = (i / stride) % ax.values.len();
+                cells.push((ax.key.clone(), ax.values[idx].clone()));
+            }
+            let label = if cells.is_empty() {
+                self.name.clone()
+            } else {
+                cells
+                    .iter()
+                    .map(|(k, v)| format!("{}={}", short_key(k), fmt_value(v)))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            };
+            let mut cfg = base.clone();
+            let built =
+                manifest::apply_pairs(&mut cfg, &cells).and_then(|()| cfg.validate());
+            match built {
+                Ok(()) => cases.push(Case { index: i, label, cells, config: cfg }),
+                Err(e) if self.skip_invalid => skipped.push((label, format!("{e:#}"))),
+                Err(e) => {
+                    return Err(e.context(format!(
+                        "scenario {:?} case {i} ({label})",
+                        self.name
+                    )))
+                }
+            }
+        }
+        if cases.is_empty() {
+            bail!(
+                "scenario {:?}: every case was rejected ({} skipped)",
+                self.name,
+                skipped.len()
+            );
+        }
+        Ok(Expansion { cases, skipped })
+    }
+}
+
+fn want_str<'v>(key: &str, v: &'v Value) -> anyhow::Result<&'v str> {
+    v.as_str().ok_or_else(|| anyhow::anyhow!("{key} must be a string"))
+}
+
+fn find_knob(key: &str, section: &str) -> anyhow::Result<(usize, &'static manifest::Knob)> {
+    manifest::find_indexed(key).ok_or_else(|| {
+        anyhow::anyhow!("unknown knob {key:?} in {section} (see `dcasgd knobs` for the manifest)")
+    })
+}
+
+/// Last path segment of a knob key (`/sim/delay/model` → `model`): the
+/// short column name used in case labels and JSONL rows.
+pub fn short_key(key: &str) -> String {
+    let norm = key.trim_start_matches('/').replace('/', ".");
+    norm.rsplit('.').next().unwrap_or(&norm).to_string()
+}
+
+/// Display form of a TOML value for case labels.
+pub fn fmt_value(v: &Value) -> String {
+    match v {
+        Value::Str(s) => s.clone(),
+        Value::Int(i) => i.to_string(),
+        Value::Float(f) => format!("{f}"),
+        Value::Bool(b) => b.to_string(),
+        Value::Array(items) => {
+            format!("[{}]", items.iter().map(fmt_value).collect::<Vec<_>>().join(","))
+        }
+    }
+}
+
+/// JSON form of a TOML value for JSONL rows.
+pub fn value_to_json(v: &Value) -> Json {
+    match v {
+        Value::Str(s) => Json::Str(s.clone()),
+        Value::Int(i) => Json::Num(*i as f64),
+        Value::Float(f) => Json::Num(*f),
+        Value::Bool(b) => Json::Bool(*b),
+        Value::Array(items) => Json::Arr(items.iter().map(value_to_json).collect()),
+    }
+}
+
+// --------------------------------------------------------------- locating
+
+/// Locate the committed `scenarios/` corpus: `$DCASGD_SCENARIOS`, else walk
+/// up from the current directory looking for `scenarios/README.md` (the
+/// same discipline as [`crate::find_artifacts_dir`]).
+pub fn find_scenarios_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("DCASGD_SCENARIOS") {
+        let p = PathBuf::from(p);
+        if p.is_dir() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join("scenarios");
+        if cand.join("README.md").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+// ------------------------------------------------------ pre-flight checks
+
+/// `dcasgd validate` result for one file.
+#[derive(Clone, Debug)]
+pub struct FileReport {
+    pub path: PathBuf,
+    /// One-line description of what validated (`scenario x: N cases`).
+    pub summary: String,
+    pub errors: Vec<String>,
+    pub warnings: Vec<String>,
+}
+
+impl FileReport {
+    /// Clean under the given strictness (`--strict` promotes warnings).
+    pub fn ok(&self, strict: bool) -> bool {
+        self.errors.is_empty() && (!strict || self.warnings.is_empty())
+    }
+}
+
+/// Pre-flight one TOML file: a scenario (any `[scenario]` section) expands
+/// and validates every case; anything else validates as a plain config.
+pub fn validate_file(path: &Path) -> FileReport {
+    let mut rep = FileReport {
+        path: path.to_path_buf(),
+        summary: String::new(),
+        errors: Vec::new(),
+        warnings: Vec::new(),
+    };
+    let src = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => {
+            rep.errors.push(format!("unreadable: {e}"));
+            return rep;
+        }
+    };
+    let doc = match Doc::parse(&src) {
+        Ok(d) => d,
+        Err(e) => {
+            rep.errors.push(e.to_string());
+            return rep;
+        }
+    };
+    if doc.keys().any(|k| k.starts_with("scenario.")) {
+        let dir = path.parent().unwrap_or_else(|| Path::new("."));
+        let sc = match Scenario::from_doc(&doc, dir) {
+            Ok(sc) => sc,
+            Err(e) => {
+                rep.errors.push(format!("{e:#}"));
+                return rep;
+            }
+        };
+        let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("");
+        if sc.name != stem {
+            rep.warnings
+                .push(format!("scenario name {:?} != file stem {stem:?}", sc.name));
+        }
+        match sc.expand() {
+            Ok(ex) => {
+                rep.summary = format!(
+                    "scenario {:?}: {} case(s){}",
+                    sc.name,
+                    ex.cases.len(),
+                    if ex.skipped.is_empty() {
+                        String::new()
+                    } else {
+                        format!(", {} skipped", ex.skipped.len())
+                    }
+                );
+                if sc.skip_invalid && ex.skipped.is_empty() {
+                    rep.warnings.push(
+                        "skip_invalid = true but no case was skipped (drop the flag?)"
+                            .to_string(),
+                    );
+                }
+            }
+            Err(e) => rep.errors.push(format!("{e:#}")),
+        }
+    } else {
+        match ExperimentConfig::from_toml(&src) {
+            Ok(_) => rep.summary = "config".to_string(),
+            Err(e) => rep.errors.push(format!("{e:#}")),
+        }
+    }
+    rep
+}
+
+/// Expand `validate` arguments into the `.toml` files to check: files pass
+/// through, directories contribute their `*.toml` entries (sorted).
+pub fn collect_toml_files(paths: &[&str]) -> anyhow::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for p in paths {
+        let path = Path::new(p);
+        if path.is_dir() {
+            let mut entries: Vec<PathBuf> = std::fs::read_dir(path)
+                .with_context(|| format!("listing {p}"))?
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("toml"))
+                .collect();
+            entries.sort();
+            out.extend(entries);
+        } else if path.is_file() {
+            out.push(path.to_path_buf());
+        } else {
+            bail!("no such file or directory: {p}");
+        }
+    }
+    if out.is_empty() {
+        bail!("no .toml files to validate under {paths:?}");
+    }
+    Ok(out)
+}
+
+// -------------------------------------------------------- the grid driver
+
+/// One completed grid case: the cell, its config, and the run's report.
+pub struct GridRun {
+    pub index: usize,
+    pub label: String,
+    pub cells: Vec<(String, Value)>,
+    pub config: ExperimentConfig,
+    pub report: TrainReport,
+}
+
+/// Run a scenario's whole grid against a shared engine and write one JSONL
+/// row per case to `runs/bench/<name>.jsonl` — the shared sweep driver for
+/// benches and examples.
+///
+/// * `tweak` adjusts each case config before the run (scale knobs, coupled
+///   parameters the grid cannot express); the config is re-validated after.
+/// * `extra` contributes additional JSONL fields per completed case.
+///
+/// Rows carry `scenario`, `case`, `case_index`, each sweep cell under its
+/// [`short_key`], every [`TrainReport::to_json`] field, then the extras.
+pub fn run_grid<T, X>(
+    sc: &Scenario,
+    engine: &crate::runtime::EngineHandle,
+    artifacts: &Path,
+    mut tweak: T,
+    mut extra: X,
+) -> anyhow::Result<Vec<GridRun>>
+where
+    T: FnMut(&mut ExperimentConfig, &Case) -> anyhow::Result<()>,
+    X: FnMut(&Case, &ExperimentConfig, &TrainReport) -> Vec<(String, Json)>,
+{
+    use std::io::Write;
+    let ex = sc.expand()?;
+    for (label, why) in &ex.skipped {
+        eprintln!("[skip] {label}: {why}");
+    }
+    let path = crate::bench::bench_out_dir().join(format!("{}.jsonl", sc.name));
+    let mut out = std::io::BufWriter::new(
+        std::fs::File::create(&path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    let mut runs = Vec::with_capacity(ex.cases.len());
+    for case in ex.cases {
+        let mut cfg = case.config.clone();
+        tweak(&mut cfg, &case)?;
+        cfg.validate()
+            .with_context(|| format!("case {} after tweak", case.label))?;
+        let t0 = std::time::Instant::now();
+        let report = crate::coordinator::Trainer::with_engine(
+            cfg.clone(),
+            engine.clone(),
+            artifacts,
+        )
+        .and_then(|t| t.run())
+        .with_context(|| format!("case {} failed", case.label))?;
+        eprintln!(
+            "[case] {}: err={:.2}% loss={:.4} time(sim)={:.1} wall={:.1}s",
+            case.label,
+            report.final_test_error * 100.0,
+            report.final_train_loss,
+            report.total_time,
+            t0.elapsed().as_secs_f64()
+        );
+        let mut row = match report.to_json() {
+            Json::Obj(m) => m,
+            _ => BTreeMap::new(),
+        };
+        row.insert("scenario".to_string(), Json::Str(sc.name.clone()));
+        row.insert("case".to_string(), Json::Str(case.label.clone()));
+        row.insert("case_index".to_string(), Json::Num(case.index as f64));
+        for (key, v) in &case.cells {
+            row.insert(short_key(key), value_to_json(v));
+        }
+        for (k, v) in extra(&case, &cfg, &report) {
+            row.insert(k, v);
+        }
+        writeln!(out, "{}", Json::Obj(row)).context("jsonl write")?;
+        runs.push(GridRun {
+            index: case.index,
+            label: case.label,
+            cells: case.cells,
+            config: cfg,
+            report,
+        });
+    }
+    drop(out);
+    eprintln!("rows: {}", path.display());
+    Ok(runs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algorithm;
+
+    fn sc(src: &str) -> Scenario {
+        Scenario::parse(src, Path::new(".")).unwrap()
+    }
+
+    #[test]
+    fn parses_and_expands_a_grid_first_axis_outermost() {
+        let s = sc(r#"
+            [scenario]
+            name = "demo"
+            description = "two axes"
+            preset = "quickstart"
+            [overrides]
+            "/workers" = 8
+            [sweep]
+            "/algorithm" = ["asgd", "dc-asgd-a"]
+            "/train/lambda0" = [0.25, 1.0, 4.0]
+        "#);
+        assert_eq!(s.axes.len(), 2);
+        let ex = s.expand().unwrap();
+        assert_eq!(ex.cases.len(), 6);
+        assert!(ex.skipped.is_empty());
+        // first axis outermost: algorithm changes every 3 cases
+        for (i, case) in ex.cases.iter().enumerate() {
+            assert_eq!(case.index, i);
+            let want_algo =
+                if i < 3 { Algorithm::Asgd } else { Algorithm::DcAsgdAdaptive };
+            assert_eq!(case.config.algorithm, want_algo, "case {i}");
+            assert_eq!(case.config.workers, 8);
+            let lam = [0.25, 1.0, 4.0][i % 3];
+            assert_eq!(case.config.lambda0, lam);
+        }
+        assert_eq!(ex.cases[0].label, "algorithm=asgd lambda0=0.25");
+    }
+
+    #[test]
+    fn overrides_accept_both_spellings_and_axes_beat_overrides() {
+        let s = sc(r#"
+            [scenario]
+            name = "demo"
+            [overrides]
+            workers = 4
+            "/train/lambda0" = 9.0
+            [sweep]
+            "/train/lambda0" = [1.0, 2.0]
+        "#);
+        let ex = s.expand().unwrap();
+        assert_eq!(ex.cases.len(), 2);
+        assert_eq!(ex.cases[0].config.workers, 4);
+        // the swept knob wins over its override
+        assert_eq!(ex.cases[0].config.lambda0, 1.0);
+        assert_eq!(ex.cases[1].config.lambda0, 2.0);
+    }
+
+    #[test]
+    fn skip_invalid_records_rejections_with_pinned_messages() {
+        let s = sc(r#"
+            [scenario]
+            name = "demo"
+            skip_invalid = true
+            [overrides]
+            "/compress/codec" = "topk@0.1"
+            [sweep]
+            "/algorithm" = ["asgd", "ssgd"]
+        "#);
+        let ex = s.expand().unwrap();
+        assert_eq!(ex.cases.len(), 1);
+        assert_eq!(ex.cases[0].config.algorithm, Algorithm::Asgd);
+        assert_eq!(ex.skipped.len(), 1);
+        assert!(ex.skipped[0].1.contains("folds dense gradients"), "{}", ex.skipped[0].1);
+        // without the flag, the same grid is an error carrying the case label
+        let strict = sc(r#"
+            [scenario]
+            name = "demo"
+            [overrides]
+            "/compress/codec" = "topk@0.1"
+            [sweep]
+            "/algorithm" = ["asgd", "ssgd"]
+        "#);
+        let err = format!("{:#}", strict.expand().unwrap_err());
+        assert!(err.contains("algorithm=ssgd"), "{err}");
+    }
+
+    #[test]
+    fn empty_sweep_means_one_case() {
+        let s = sc("[scenario]\nname = \"solo\"\n[overrides]\n\"/epochs\" = 1");
+        let ex = s.expand().unwrap();
+        assert_eq!(ex.cases.len(), 1);
+        assert_eq!(ex.cases[0].label, "solo");
+        assert_eq!(ex.cases[0].config.epochs, 1);
+    }
+
+    #[test]
+    fn bad_files_are_rejected_with_useful_messages() {
+        let cases: &[(&str, &str)] = &[
+            ("[overrides]\n\"/workers\" = 4", "missing required [scenario] name"),
+            (
+                "[scenario]\nname = \"x\"\npreset = \"cifar\"\nconfig = \"b.toml\"",
+                "both preset and config",
+            ),
+            ("[scenario]\nname = \"x\"\n[overrides]\n\"/bogus\" = 1", "unknown knob"),
+            ("[scenario]\nname = \"x\"\n[sweep]\n\"/workers\" = 4", "must be an array"),
+            ("[scenario]\nname = \"x\"\n[sweep]\n\"/workers\" = []", "is empty"),
+            ("[scenario]\nname = \"x\"\nbogus = 1", "unknown [scenario] field"),
+            ("[scenario]\nname = \"x\"\n[other]\nkey = 1", "only [scenario]"),
+            (
+                "[scenario]\nname = \"x\"\n[sweep]\n\"/workers\" = [1]\nworkers = [2]",
+                "twice",
+            ),
+            ("[scenario]\nname = \"x\"\npreset = \"bogus\"", "unknown preset"),
+        ];
+        for (src, needle) in cases {
+            let err = Scenario::parse(src, Path::new("."))
+                .map(|s| s.expand().map(|_| ()))
+                .and_then(|r| r)
+                .expect_err(&format!("must reject: {src}"));
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "{src:?}: {msg:?} lacks {needle:?}");
+        }
+    }
+
+    #[test]
+    fn config_file_base_resolves_relative_to_scenario_dir() {
+        let dir = std::env::temp_dir().join(format!("dcasgd_sc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("base.toml"), "workers = 6\n[train]\nlambda0 = 1.0\n")
+            .unwrap();
+        let src = r#"
+            [scenario]
+            name = "filebase"
+            config = "base.toml"
+            [overrides]
+            "/train/lambda0" = 2.0
+        "#;
+        let s = Scenario::parse(src, &dir).unwrap();
+        let ex = s.expand().unwrap();
+        assert_eq!(ex.cases[0].config.workers, 6);
+        // scenario override beats the TOML base
+        assert_eq!(ex.cases[0].config.lambda0, 2.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn validate_file_reports_scenarios_and_configs() {
+        let dir = std::env::temp_dir().join(format!("dcasgd_vf_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ok = dir.join("grid.toml");
+        std::fs::write(
+            &ok,
+            "[scenario]\nname = \"grid\"\n[sweep]\n\"/workers\" = [2, 4]\n",
+        )
+        .unwrap();
+        let rep = validate_file(&ok);
+        assert!(rep.ok(true), "{:?} {:?}", rep.errors, rep.warnings);
+        assert!(rep.summary.contains("2 case(s)"), "{}", rep.summary);
+
+        // name/stem mismatch is a warning: strict rejects, lenient accepts
+        let misnamed = dir.join("other.toml");
+        std::fs::write(
+            &misnamed,
+            "[scenario]\nname = \"grid\"\n[sweep]\n\"/workers\" = [2]\n",
+        )
+        .unwrap();
+        let rep = validate_file(&misnamed);
+        assert!(rep.ok(false) && !rep.ok(true));
+
+        // a plain config validates through the manifest path
+        let cfg = dir.join("plain.toml");
+        std::fs::write(&cfg, "workers = 4\n").unwrap();
+        assert!(validate_file(&cfg).ok(true));
+        let bad = dir.join("bad.toml");
+        std::fs::write(&bad, "workers = 0\n").unwrap();
+        let rep = validate_file(&bad);
+        assert!(!rep.ok(false));
+        assert!(rep.errors[0].contains("workers must be >= 1"), "{:?}", rep.errors);
+
+        let files = collect_toml_files(&[dir.to_str().unwrap()]).unwrap();
+        assert_eq!(files.len(), 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn short_keys_and_value_formatting() {
+        assert_eq!(short_key("/sim/delay/model"), "model");
+        assert_eq!(short_key("train.lambda0"), "lambda0");
+        assert_eq!(short_key("/workers"), "workers");
+        assert_eq!(fmt_value(&Value::Str("topk@0.1".into())), "topk@0.1");
+        assert_eq!(fmt_value(&Value::Float(0.25)), "0.25");
+        assert_eq!(
+            fmt_value(&Value::Array(vec![Value::Int(1), Value::Int(2)])),
+            "[1,2]"
+        );
+        assert_eq!(value_to_json(&Value::Bool(true)), Json::Bool(true));
+    }
+}

@@ -883,3 +883,200 @@ fn resume_from_checkpoint_config_path() {
     assert!(Trainer::new(bad).is_err());
     std::fs::remove_file(&path).ok();
 }
+
+// ---------------------------------------------------------------- scenarios
+
+/// A scenario case's config must equal the config an equivalent flat TOML
+/// produces — the manifest is the single source of truth for both paths.
+#[test]
+fn scenario_case_matches_equivalent_toml_config() {
+    let src = r#"
+[scenario]
+name = "equiv"
+preset = "quickstart"
+
+[overrides]
+"/workers" = 8
+"/compress/codec" = "topk@0.25"
+
+[sweep]
+"/algorithm" = ["dc-asgd-a"]
+"/staleness_bound" = [3]
+"#;
+    let sc = dc_asgd::scenario::Scenario::parse(src, std::path::Path::new(".")).unwrap();
+    let ex = sc.expand().unwrap();
+    assert_eq!(ex.cases.len(), 1);
+    assert!(ex.skipped.is_empty());
+
+    let toml = r#"
+preset = "quickstart"
+workers = 8
+algorithm = "dc-asgd-a"
+staleness_bound = 3
+
+[compress]
+codec = "topk@0.25"
+"#;
+    let from_toml = ExperimentConfig::from_toml(toml).unwrap();
+    assert_eq!(ex.cases[0].config, from_toml);
+}
+
+/// Layer precedence, pinned end to end on one knob (/train/lambda0):
+/// CLI flag > scenario override > TOML base file > built-in default.
+#[test]
+fn cli_over_scenario_over_toml_over_default_precedence() {
+    use dc_asgd::config::manifest;
+    use dc_asgd::util::cli::Args;
+
+    // layer 0: built-in default
+    assert_eq!(ExperimentConfig::default().lambda0, 0.04);
+
+    let dir = std::env::temp_dir().join(format!("dcasgd_prec_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("base.toml"),
+        "preset = \"quickstart\"\n\n[train]\nlambda0 = 1.0\n",
+    )
+    .unwrap();
+
+    // layer 1: TOML base beats the default
+    let base = ExperimentConfig::from_file(&dir.join("base.toml")).unwrap();
+    assert_eq!(base.lambda0, 1.0);
+
+    // layer 2: scenario override beats the TOML base
+    let src = r#"
+[scenario]
+name = "prec"
+config = "base.toml"
+
+[overrides]
+"/train/lambda0" = 2.0
+"#;
+    let sc = dc_asgd::scenario::Scenario::parse(src, &dir).unwrap();
+    let ex = sc.expand().unwrap();
+    let mut cfg = ex.cases[0].config.clone();
+    assert_eq!(cfg.lambda0, 2.0);
+
+    // layer 3: CLI flag beats the scenario override
+    let args = Args::parse(["--lambda0".to_string(), "3.0".to_string()]);
+    manifest::overlay_cli(&mut cfg, &args).unwrap();
+    cfg.validate().unwrap();
+    assert_eq!(cfg.lambda0, 3.0);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A run driven through a scenario file must be bitwise identical to the
+/// same knobs applied via the CLI overlay: identical reports AND identical
+/// checkpoint bytes (weights, backups, MeanSquare, velocity).
+#[test]
+fn scenario_run_bitwise_identical_to_cli_run() {
+    let dir = require_artifacts!();
+    let tmp = std::env::temp_dir().join(format!("dcasgd_scrun_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+
+    let src = r#"
+[scenario]
+name = "pin"
+preset = "quickstart"
+
+[overrides]
+"/workers" = 2
+"/epochs" = 2
+"/data/train_size" = 512
+"/data/test_size" = 256
+
+[sweep]
+"/algorithm" = ["dc-asgd-a"]
+"#;
+    let sc = dc_asgd::scenario::Scenario::parse(src, &tmp).unwrap();
+    let ex = sc.expand().unwrap();
+    let mut a = ex.cases[0].config.clone();
+
+    let mut b = ExperimentConfig::base_for_preset(Some("quickstart")).unwrap();
+    let args = dc_asgd::util::cli::Args::parse(
+        ["--workers", "2", "--epochs", "2", "--train-size", "512", "--test-size", "256",
+         "--algo", "dc-asgd-a"]
+            .iter()
+            .map(|s| s.to_string()),
+    );
+    dc_asgd::config::manifest::overlay_cli(&mut b, &args).unwrap();
+    b.validate().unwrap();
+    assert_eq!(a, b, "scenario-built config differs from the CLI-built one");
+
+    let ck_a = tmp.join("a.ckpt");
+    let ck_b = tmp.join("b.ckpt");
+    a.checkpoint_out = ck_a.to_string_lossy().into_owned();
+    b.checkpoint_out = ck_b.to_string_lossy().into_owned();
+
+    let engine = start_engine(&dir, "mlp_tiny", false).unwrap();
+    let ra = Trainer::with_engine(a, engine.clone(), &dir).unwrap().run().unwrap();
+    let rb = Trainer::with_engine(b, engine.clone(), &dir).unwrap().run().unwrap();
+    engine.shutdown();
+
+    // every report field except host wall time must match exactly
+    assert_eq!(ra.total_steps, rb.total_steps);
+    assert_eq!(ra.final_test_error, rb.final_test_error);
+    assert_eq!(ra.final_test_loss, rb.final_test_loss);
+    assert_eq!(ra.best_test_error, rb.best_test_error);
+    assert_eq!(ra.final_train_loss, rb.final_train_loss);
+    assert_eq!(ra.total_time, rb.total_time);
+    assert_eq!(ra.staleness_mean, rb.staleness_mean);
+    assert_eq!(ra.staleness_hist, rb.staleness_hist);
+    assert_eq!(ra.comm_bytes, rb.comm_bytes);
+
+    let bytes_a = std::fs::read(&ck_a).unwrap();
+    let bytes_b = std::fs::read(&ck_b).unwrap();
+    assert_eq!(bytes_a, bytes_b, "scenario vs CLI run produced different checkpoint bytes");
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+/// Every committed scenario file must pass `dcasgd validate --strict` and
+/// expand to the advertised grid; this is the corpus the benches drive.
+#[test]
+fn committed_scenario_corpus_validates_strict() {
+    let corpus = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios");
+    let files = dc_asgd::scenario::collect_toml_files(&[corpus]).unwrap();
+    assert!(files.len() >= 8, "scenario corpus shrank: {} file(s)", files.len());
+    let mut cases = std::collections::BTreeMap::new();
+    for f in &files {
+        let rep = dc_asgd::scenario::validate_file(f);
+        assert!(
+            rep.ok(true),
+            "{}: errors={:?} warnings={:?}",
+            f.display(),
+            rep.errors,
+            rep.warnings
+        );
+        let sc = dc_asgd::scenario::Scenario::load(f).unwrap();
+        cases.insert(sc.name.clone(), sc.expand().unwrap().cases.len());
+    }
+    assert_eq!(cases["ssp_spectrum"], 12);
+    assert_eq!(cases["fault_churn"], 12);
+    assert_eq!(cases["fig5_lambda"], 10);
+    assert_eq!(cases["delay_workers"], 12);
+}
+
+/// The whole rejection matrix, driven through the pre-flight validator:
+/// every manifest rule's canonical bad TOML must fail with its pinned
+/// message fragment.
+#[test]
+fn validate_rejects_every_matrix_entry_with_pinned_message() {
+    let dir = std::env::temp_dir().join(format!("dcasgd_matrix_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cases = dc_asgd::config::manifest::rejection_cases();
+    assert!(!cases.is_empty());
+    for (i, case) in cases.iter().enumerate() {
+        let path = dir.join(format!("case_{i}.toml"));
+        std::fs::write(&path, &case.toml).unwrap();
+        let rep = dc_asgd::scenario::validate_file(&path);
+        assert!(!rep.ok(false), "matrix case {i} was accepted:\n{}", case.toml);
+        assert!(
+            rep.errors.iter().any(|e| e.contains(case.needle)),
+            "matrix case {i}: errors {:?} lack pinned fragment {:?}",
+            rep.errors,
+            case.needle
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
