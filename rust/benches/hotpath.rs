@@ -11,7 +11,11 @@
 //!    (u64-key + pool-parallel vs the scalar comparator reference),
 //! D) multi-shard apply: serial vs per-call scoped-spawn (the pre-PR-5
 //!    implementation, replicated in-bench) vs the persistent compute pool,
-//! E) the ps_throughput headline cell (M=8, S=8 pull+push cycles).
+//! E) the ps_throughput headline cell (M=8, S=8 pull+push cycles),
+//! F) disabled profiling spans: the sgd kernel wrapped in a trace-off
+//!    span vs its bare twin, plus the raw per-span cost — under
+//!    `DCASGD_PERF_GATE=1` the per-span cost is held to an absolute
+//!    25 ns bound (trace off must be unmeasurable).
 //!
 //! Every kernel cell also reports approximate DRAM traffic in GB/s
 //! (bytes-touched-per-call / mean time) so regressions are interpretable
@@ -43,6 +47,7 @@ use dc_asgd::compress::{GradientCodec, Qsgd, TopK, WirePayload};
 use dc_asgd::config::Algorithm;
 use dc_asgd::optim::{self, kernels};
 use dc_asgd::ps::{Hyper, NativeKernel, ParamServer, ShardedStore};
+use dc_asgd::trace::profile;
 use dc_asgd::util::json::Json;
 use dc_asgd::util::pool::ComputePool;
 use dc_asgd::util::rng::Pcg64;
@@ -396,6 +401,36 @@ fn main() {
         }
     }
 
+    // ---- F) disabled-span overhead (trace off must cost nothing) ---------
+    // The PR-8 observability layer wraps the hot paths above in profiling
+    // spans; with `[trace]` off (the default) a span is one relaxed atomic
+    // load returning None. These cells pin that claim: the spanned kernel
+    // cell against its bare twin from section A, and the raw per-span cost.
+    println!("\n# F) profiling spans: disabled-span cost on the hot path");
+    header();
+    profile::set_enabled(false);
+    let s_sgd_spanned = time_fn("sgd_step chunked + disabled span", 3, 30, || {
+        let _s = profile::span(profile::Subsystem::FusedApply);
+        kernels::sgd_step_simd(&mut w, &g, 1e-6);
+    });
+    s_sgd_spanned.print();
+    const SPANS: usize = 1_000_000;
+    let s_span_off = time_fn("disabled span x1e6 (bare)", 3, 10, || {
+        for _ in 0..SPANS {
+            std::hint::black_box(profile::span(std::hint::black_box(
+                profile::Subsystem::PoolJob,
+            )));
+        }
+    });
+    s_span_off.print();
+    let ns_per_span = s_span_off.mean_s * 1e9 / SPANS as f64;
+    println!(
+        "disabled span: {ns_per_span:.2} ns/span | spanned vs bare sgd_step: {:.3}x",
+        s_sgd_spanned.mean_s / s_sgd.mean_s,
+    );
+    results.push(("sgd_step_spanned_s", s_sgd_spanned.mean_s));
+    results.push(("trace_span_disabled_s", s_span_off.mean_s));
+
     println!("\n# approximate DRAM traffic (optimized cells)");
     for (k, v) in &gbs {
         println!("{k:<20} {v:>8.2} GB/s");
@@ -404,6 +439,19 @@ fn main() {
     // ---- baseline file / regression gate ---------------------------------
     if let Some(committed) = gate_baseline {
         let mut failed = false;
+        // absolute bound, not baseline-relative: a disabled span is one
+        // relaxed atomic load (~1-2 ns); 25 ns leaves >10x headroom for a
+        // noisy shared runner while still catching any accidental lock,
+        // syscall, or clock read sneaking onto the trace-off path
+        if ns_per_span > 25.0 {
+            eprintln!(
+                "PERF GATE FAILED: disabled trace span costs {ns_per_span:.1} ns/span \
+                 (bound 25 ns) — the trace-off hot path is supposed to be unmeasurable"
+            );
+            failed = true;
+        } else {
+            println!("gate trace_span_disabled: {ns_per_span:.2} ns/span (bound 25 ns) -> ok");
+        }
         for (key, fresh) in &results {
             let base = committed.get("results").get(key).as_f64().unwrap_or(0.0);
             if base <= 0.0 || !base.is_finite() {

@@ -103,6 +103,7 @@ impl WirePayload {
 
     /// Decode into a dense vector (overwrites `out` entirely).
     pub fn decode_into(&self, out: &mut [f32]) {
+        let _p = crate::trace::profile::span(crate::trace::profile::Subsystem::CodecDecode);
         assert_eq!(out.len(), self.len(), "decode length mismatch");
         match self {
             WirePayload::Dense(v) => out.copy_from_slice(v),
@@ -236,6 +237,7 @@ impl WorkerCompressor {
     /// EF-inject + encode `g`; the returned payload borrows this worker's
     /// arena and is valid until the next `compress` call.
     pub fn compress(&mut self, g: &[f32]) -> &WirePayload {
+        let _p = crate::trace::profile::span(crate::trace::profile::Subsystem::CodecEncode);
         self.ef.step(self.codec.as_mut(), g, &mut self.payload);
         &self.payload
     }

@@ -1090,6 +1090,87 @@ fn build_knobs() -> Vec<Knob> {
                 Ok(())
             },
         },
+        // [trace]: parameter knobs auto-enable the section; the explicit
+        // `enabled` knob is declared last so it always has the final word
+        Knob {
+            id: "/trace/sample_every",
+            toml_key: "trace.sample_every",
+            cli: Some("trace-sample-every"),
+            ty: Ty::USize,
+            bounds: bounds(1.0, false, UNBOUNDED, false, "trace.sample_every must be >= 1"),
+            default: "10",
+            help: "time-series sampling cadence in steps (enables [trace])",
+            ctx: "",
+            get: |c| Some(Value::Int(c.trace.sample_every as i64)),
+            set: |c, v| {
+                c.trace.sample_every = want_usize("trace.sample_every", v)?;
+                c.trace.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/trace/events",
+            toml_key: "trace.events",
+            cli: Some("trace-events"),
+            ty: Ty::Bool,
+            bounds: None,
+            default: "true",
+            help: "emit structured event JSONL (enables [trace])",
+            ctx: "",
+            get: |c| Some(Value::Bool(c.trace.events)),
+            set: |c, v| {
+                c.trace.events = want_bool("trace.events", v)?;
+                c.trace.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/trace/profile",
+            toml_key: "trace.profile",
+            cli: Some("trace-profile"),
+            ty: Ty::Bool,
+            bounds: None,
+            default: "true",
+            help: "collect subsystem span histograms (enables [trace])",
+            ctx: "",
+            get: |c| Some(Value::Bool(c.trace.profile)),
+            set: |c, v| {
+                c.trace.profile = want_bool("trace.profile", v)?;
+                c.trace.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/trace/chrome_trace",
+            toml_key: "trace.chrome_trace",
+            cli: Some("trace-chrome"),
+            ty: Ty::Bool,
+            bounds: None,
+            default: "true",
+            help: "also write Chrome trace-event JSON (enables [trace])",
+            ctx: "",
+            get: |c| Some(Value::Bool(c.trace.chrome_trace)),
+            set: |c, v| {
+                c.trace.chrome_trace = want_bool("trace.chrome_trace", v)?;
+                c.trace.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/trace/enabled",
+            toml_key: "trace.enabled",
+            cli: None,
+            ty: Ty::Bool,
+            bounds: None,
+            default: "false",
+            help: "run-trace observability layer (explicit key wins)",
+            ctx: "",
+            get: |c| Some(Value::Bool(c.trace.enabled)),
+            set: |c, v| {
+                c.trace.enabled = want_bool("trace.enabled", v)?;
+                Ok(())
+            },
+        },
         Knob {
             id: "/eval/every",
             toml_key: "eval.every",
@@ -1305,6 +1386,20 @@ fn build_rules() -> Vec<Rule> {
                     bail!(
                         "fault injection runs under the event-driven scheduler: \
                          set exec_mode = sim"
+                    );
+                }
+                Ok(())
+            },
+        },
+        Rule {
+            id: "trace-threads",
+            needle: "event-driven scheduler",
+            example: "exec_mode = \"threads\"\n[trace]\nenabled = true",
+            check: |c| {
+                if c.trace.enabled && c.exec_mode == ExecMode::Threads {
+                    bail!(
+                        "run tracing records virtual time under the event-driven \
+                         scheduler: set exec_mode = sim"
                     );
                 }
                 Ok(())
@@ -1545,6 +1640,9 @@ pub fn overlay_cli(cfg: &mut ExperimentConfig, args: &Args) -> anyhow::Result<()
     }
     if args.flag("faults") {
         cfg.faults.enabled = true;
+    }
+    if args.flag("trace") {
+        cfg.trace.enabled = true;
     }
     // gradient compression: --compress picks the codec; the knob flags
     // refine whichever codec is selected (CLI, scenario, or config file)

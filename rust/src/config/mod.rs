@@ -195,6 +195,32 @@ impl Default for CommConfig {
     }
 }
 
+/// Run-trace observability layer (`[trace]` section). When enabled, the
+/// scheduler and driver emit structured events (JSONL + Chrome trace-event
+/// JSON), subsystem profilers collect span histograms, and the driver
+/// snapshots time-series telemetry every `sample_every` steps. Off by
+/// default and bitwise-inert: trace-on vs trace-off runs produce identical
+/// `TrainReport`s and checkpoint bytes (pinned by `tests/trace.rs`) —
+/// tracing observes, never perturbs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceConfig {
+    pub enabled: bool,
+    /// Time-series sampling cadence in global steps.
+    pub sample_every: usize,
+    /// Emit structured scheduler/driver events (`*.trace.jsonl`).
+    pub events: bool,
+    /// Collect per-subsystem span histograms into the summary JSON.
+    pub profile: bool,
+    /// Also write Chrome trace-event format (`*.trace.json`, Perfetto).
+    pub chrome_trace: bool,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self { enabled: false, sample_every: 10, events: true, profile: true, chrome_trace: true }
+    }
+}
+
 /// How the server applies updates: pure-rust loops (fast path) or the
 /// AOT-compiled XLA/Pallas update artifact (ablation A).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -304,6 +330,8 @@ pub struct ExperimentConfig {
     pub update_backend: UpdateBackend,
     /// Host compute runtime (`[runtime]`; `threads = 0` auto-sizes).
     pub runtime: RuntimeConfig,
+    /// Run-trace observability (`[trace]`; off by default — bitwise-inert).
+    pub trace: TraceConfig,
     /// Parameter-store lock shards.
     pub shards: usize,
     /// Evaluate on the test set every `eval_every` effective epochs.
@@ -348,6 +376,7 @@ impl Default for ExperimentConfig {
             compress: crate::compress::CodecConfig::None,
             update_backend: UpdateBackend::Native,
             runtime: RuntimeConfig::default(),
+            trace: TraceConfig::default(),
             shards: 1,
             eval_every: 1,
             eval_every_steps: 0,
@@ -530,6 +559,8 @@ impl ExperimentConfig {
             ("shards", self.shards.into()),
             ("runtime_threads", self.runtime.threads.into()),
             ("runtime_simd", self.runtime.simd.into()),
+            ("trace_enabled", self.trace.enabled.into()),
+            ("trace_sample_every", self.trace.sample_every.into()),
             ("tag", self.tag.as_str().into()),
         ])
     }
@@ -827,6 +858,48 @@ mod tests {
         let json = cfg.to_json().to_string();
         assert!(json.contains("\"faults_enabled\""));
         assert!(json.contains("\"fault_policy\""));
+    }
+
+    #[test]
+    fn from_toml_trace_section() {
+        // default: off, inert
+        let cfg = ExperimentConfig::from_toml("workers = 2").unwrap();
+        assert!(!cfg.trace.enabled);
+        assert_eq!(cfg.trace, TraceConfig::default());
+
+        // enable with custom parameters
+        let cfg = ExperimentConfig::from_toml(
+            "[trace]\nenabled = true\nsample_every = 5\nchrome_trace = false",
+        )
+        .unwrap();
+        assert!(cfg.trace.enabled);
+        assert_eq!(cfg.trace.sample_every, 5);
+        assert!(cfg.trace.events);
+        assert!(cfg.trace.profile);
+        assert!(!cfg.trace.chrome_trace);
+
+        // setting a parameter activates the section (same semantics as the
+        // [comm]/[faults] sections) ...
+        let cfg = ExperimentConfig::from_toml("[trace]\nsample_every = 25").unwrap();
+        assert!(cfg.trace.enabled);
+        assert_eq!(cfg.trace.sample_every, 25);
+        // ... but an explicit `enabled` key always wins
+        let cfg =
+            ExperimentConfig::from_toml("[trace]\nsample_every = 25\nenabled = false").unwrap();
+        assert!(!cfg.trace.enabled);
+        assert_eq!(cfg.trace.sample_every, 25);
+
+        // rejected: zero cadence, threads-mode tracing (events carry
+        // virtual time, so only the event-driven scheduler emits them)
+        assert!(ExperimentConfig::from_toml("[trace]\nsample_every = 0").is_err());
+        assert!(ExperimentConfig::from_toml(
+            "exec_mode = \"threads\"\n[trace]\nenabled = true"
+        )
+        .is_err());
+
+        let json = cfg.to_json().to_string();
+        assert!(json.contains("\"trace_enabled\""));
+        assert!(json.contains("\"trace_sample_every\""));
     }
 
     /// Exhaustive rejected-combination matrix: every illegal combination

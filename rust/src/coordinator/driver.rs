@@ -73,6 +73,7 @@ use crate::sim::{
     BarrierSync, CommCosts, CommitMode, DelaySampler, FaultPlan, FullyAsync, Protocol, Scheduler,
     SimEvent, StalenessBounded,
 };
+use crate::trace::{EventKind, RunTrace, TraceOut};
 use crate::util::pool::{ComputePool, GradPipeline};
 use anyhow::Result;
 use std::sync::{Arc, Mutex};
@@ -139,6 +140,12 @@ impl ComputeStage {
     /// drop-policy crash); the pipeline retains its inputs for re-use.
     fn discard(&mut self, worker: usize) {
         self.pipe.discard(worker);
+    }
+
+    /// If a take for `worker` would flush the pipeline (its result is not
+    /// evaluated yet), the number of queued computes that burst covers.
+    fn flush_pending(&self, worker: usize) -> Option<usize> {
+        (!self.pipe.is_ready(worker)).then(|| self.pipe.queued_len())
     }
 
     /// Consume worker `w`'s gradient, flushing every queued compute
@@ -261,6 +268,7 @@ fn fold_round_if_complete(
 /// snapshot slot (all released workers compute the same round on the
 /// post-fold model); immediate protocols re-pull each released worker's
 /// own slot.
+#[allow(clippy::too_many_arguments)]
 fn pull_and_stage(
     ctx: &RunCtx,
     stage: &mut ComputeStage,
@@ -268,6 +276,8 @@ fn pull_and_stage(
     barrier: bool,
     released: &[usize],
     snapshots: &mut [Vec<f32>],
+    trace: &mut Option<RunTrace>,
+    t: f64,
 ) {
     if barrier {
         if !released.is_empty() {
@@ -280,6 +290,37 @@ fn pull_and_stage(
     }
     for &v in released {
         stage.enqueue(v, &mut cursors[v], ctx.train_set.as_ref());
+        if let Some(tr) = trace.as_mut() {
+            tr.buf.emit(EventKind::Pull, t, Some(v), None, None, None);
+            tr.buf.emit(EventKind::PipelineEnqueue, t, Some(v), None, None, None);
+        }
+    }
+}
+
+/// Close a telemetry window at a `/trace/sample_every` step boundary: one
+/// time-series row plus one `ShardVersion` counter event per PS shard.
+fn sample_point(tr: &mut RunTrace, ctx: &RunCtx, sched: &Scheduler, step: u64, t: f64) {
+    if step == 0 || step % tr.sample_every as u64 != 0 {
+        return;
+    }
+    tr.sample(
+        step,
+        t,
+        ctx.metrics.loss_ema().unwrap_or(f64::NAN),
+        sched.live_workers(),
+        sched.comm_bytes_total(),
+        sched.queue_depth(),
+    );
+    let store = ctx.ps.store();
+    for s in 0..store.num_shards() {
+        tr.buf.emit(
+            EventKind::ShardVersion,
+            t,
+            Some(s),
+            None,
+            None,
+            Some(store.shard_version(s) as f64),
+        );
     }
 }
 
@@ -331,6 +372,17 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
         comm,
         faults,
     );
+    // run tracing ([trace]): the scheduler records lifecycle events into
+    // its own buffer, the driver records pulls/commits/pipeline activity
+    // and periodic telemetry here. All emission sites observe decisions
+    // already made, so trace-on runs are bit-identical to trace-off
+    // (pinned by tests/trace.rs).
+    let mut trace: Option<RunTrace> = if ctx.cfg.trace.enabled {
+        sched.enable_trace();
+        Some(RunTrace::new(&ctx.cfg.trace))
+    } else {
+        None
+    };
     let barrier = sched.commit_mode() == CommitMode::Barrier;
     debug_assert!(
         !barrier || !compressed,
@@ -355,6 +407,10 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
             ctx.ps.pull(w, &mut snapshots[snap(w)]);
         }
         stage.enqueue(w, &mut cursors[w], ctx.train_set.as_ref());
+        if let Some(tr) = trace.as_mut() {
+            tr.buf.emit(EventKind::Pull, 0.0, Some(w), None, None, None);
+            tr.buf.emit(EventKind::PipelineEnqueue, 0.0, Some(w), None, None, None);
+        }
     }
 
     let wall_start = std::time::Instant::now();
@@ -380,6 +436,11 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                 // stale) snapshot worker w pulled when the protocol last
                 // admitted it, against the batch drawn at that pull
                 debug_assert!(sched.is_computing(w), "finish for a non-computing worker");
+                if let Some(tr) = trace.as_mut() {
+                    if let Some(nq) = stage.flush_pending(w) {
+                        tr.buf.emit(EventKind::PipelineFlush, t, Some(w), None, None, Some(nq as f64));
+                    }
+                }
                 let (loss, grads) = stage.take(w, &snapshots, barrier)?;
                 let rec_time = if wall { wall_start.elapsed().as_secs_f64() } else { t };
 
@@ -392,8 +453,9 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                     round.grads[w] = grads;
                     round.loss[w] = loss;
                     round.filled[w] = true;
+                    let n_fill = round.filled.iter().filter(|&&f| f).count();
                     let restarted = sched.complete(w);
-                    fold_round_if_complete(
+                    let folded = fold_round_if_complete(
                         ctx,
                         &sched,
                         &mut round,
@@ -407,10 +469,33 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                         lr,
                         rec_time,
                     )?;
+                    if folded {
+                        if let Some(tr) = trace.as_mut() {
+                            tr.observe_commit(0);
+                            tr.buf.emit(
+                                EventKind::BarrierRelease,
+                                t,
+                                None,
+                                Some(step - 1),
+                                None,
+                                Some(n_fill as f64),
+                            );
+                            sample_point(tr, ctx, &sched, step, t);
+                        }
+                    }
                     // one shared pull for the whole round (restarted is
                     // either empty mid-round or the full live fleet at the
                     // round boundary)
-                    pull_and_stage(ctx, &mut stage, &mut cursors, true, &restarted, &mut snapshots);
+                    pull_and_stage(
+                        ctx,
+                        &mut stage,
+                        &mut cursors,
+                        true,
+                        &restarted,
+                        &mut snapshots,
+                        &mut trace,
+                        t,
+                    );
                 } else {
                     // compressed path: EF-inject + encode, then the server
                     // decodes (or applies sparse shard-locally); DC
@@ -422,6 +507,17 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                     } else {
                         ctx.ps.push(w, &grads, lr)
                     };
+                    if let Some(tr) = trace.as_mut() {
+                        tr.observe_commit(outcome.staleness);
+                        tr.buf.emit(
+                            EventKind::PushCommit,
+                            t,
+                            Some(w),
+                            Some(step),
+                            Some(outcome.staleness),
+                            Some(loss as f64),
+                        );
+                    }
                     samples += ctx.batch_size as u64;
                     let passes_now = samples as f64 / train_len;
                     ctx.metrics.record_step(StepRecord {
@@ -441,11 +537,23 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                         ctx.run_eval(step - 1, passes_now, rec_time)?;
                     }
                     prev_passes = passes_now;
+                    if let Some(tr) = trace.as_mut() {
+                        sample_point(tr, ctx, &sched, step, t);
+                    }
                     // the protocol decides who re-pulls: always `w` itself
                     // when ungated, plus any peers its completion (or, on a
                     // salvage drain, its death) just released
                     let released = sched.complete(w);
-                    pull_and_stage(ctx, &mut stage, &mut cursors, false, &released, &mut snapshots);
+                    pull_and_stage(
+                        ctx,
+                        &mut stage,
+                        &mut cursors,
+                        false,
+                        &released,
+                        &mut snapshots,
+                        &mut trace,
+                        t,
+                    );
                 }
             }
             SimEvent::Crash { time: t, worker: cw, released, .. } => {
@@ -461,7 +569,8 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                 if barrier {
                     let lr = ctx.lr_at(samples as f64 / train_len);
                     let rec_time = if wall { wall_start.elapsed().as_secs_f64() } else { t };
-                    fold_round_if_complete(
+                    let n_fill = round.filled.iter().filter(|&&f| f).count();
+                    let folded = fold_round_if_complete(
                         ctx,
                         &sched,
                         &mut round,
@@ -475,11 +584,34 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                         lr,
                         rec_time,
                     )?;
+                    if folded {
+                        if let Some(tr) = trace.as_mut() {
+                            tr.observe_commit(0);
+                            tr.buf.emit(
+                                EventKind::BarrierRelease,
+                                t,
+                                None,
+                                Some(step - 1),
+                                None,
+                                Some(n_fill as f64),
+                            );
+                            sample_point(tr, ctx, &sched, step, t);
+                        }
+                    }
                 }
                 // released workers pull the (post-fold) model
-                pull_and_stage(ctx, &mut stage, &mut cursors, barrier, &released, &mut snapshots);
+                pull_and_stage(
+                    ctx,
+                    &mut stage,
+                    &mut cursors,
+                    barrier,
+                    &released,
+                    &mut snapshots,
+                    &mut trace,
+                    t,
+                );
             }
-            SimEvent::Join { worker: w, computing, released, .. } => {
+            SimEvent::Join { time: t, worker: w, computing, released } => {
                 // rejoin / elastic scale-up: the dead incarnation's state
                 // must not leak into the new epoch — refresh w_bak(m) (so
                 // DC compensates against a live snapshot) and zero the EF
@@ -495,12 +627,31 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                 if computing {
                     ctx.ps.pull(w, &mut snapshots[snap(w)]);
                     stage.enqueue(w, &mut cursors[w], ctx.train_set.as_ref());
+                    if let Some(tr) = trace.as_mut() {
+                        tr.buf.emit(EventKind::Pull, t, Some(w), None, None, None);
+                        tr.buf.emit(EventKind::PipelineEnqueue, t, Some(w), None, None, None);
+                    }
                 }
-                pull_and_stage(ctx, &mut stage, &mut cursors, barrier, &released, &mut snapshots);
+                pull_and_stage(
+                    ctx,
+                    &mut stage,
+                    &mut cursors,
+                    barrier,
+                    &released,
+                    &mut snapshots,
+                    &mut trace,
+                    t,
+                );
             }
         }
     }
     ctx.metrics.set_comm_bytes(sched.comm_bytes_total());
     ctx.metrics.set_fault_stats(sched.fault_stats());
+    // hand the merged event stream + telemetry rows to the trainer for
+    // artifact writing (the scheduler's buffer drains here)
+    if let Some(mut tr) = trace {
+        let events = crate::trace::merge_events(vec![tr.buf.drain(), sched.drain_trace()]);
+        ctx.trace_out = Some(TraceOut { events, rows: std::mem::take(&mut tr.rows) });
+    }
     Ok(())
 }

@@ -101,6 +101,10 @@ pub struct RunCtx {
     /// worker threads serving both the sharded store's multi-shard applies
     /// and the driver's pipelined gradient stage.
     pub pool: Arc<ComputePool>,
+    /// Filled by the event-driven driver when `[trace]` is enabled: the
+    /// merged run-trace event stream and telemetry rows, written as
+    /// artifacts by [`Trainer::run_logged`]. `None` with tracing off.
+    pub trace_out: Option<crate::trace::TraceOut>,
 }
 
 impl RunCtx {
@@ -255,6 +259,7 @@ impl Trainer {
                 metrics,
                 compressors,
                 pool,
+                trace_out: None,
             },
         })
     }
@@ -274,6 +279,14 @@ impl Trainer {
     /// and eval curves directly instead of re-parsing CSV output.
     pub fn run_logged(mut self) -> Result<(TrainReport, MetricsLog)> {
         let algo = self.ctx.cfg.algorithm;
+        // subsystem profiling rides the process-global span registry: arm
+        // it per run (and disarm for untraced runs, so a traced run in the
+        // same process never leaks spans into a later one)
+        let profiling = self.ctx.cfg.trace.enabled && self.ctx.cfg.trace.profile;
+        crate::trace::profile::set_enabled(profiling);
+        if profiling {
+            crate::trace::profile::reset();
+        }
         match (algo, self.ctx.cfg.exec_mode) {
             (Algorithm::SequentialSgd, _) => sequential::run(&mut self.ctx)?,
             (Algorithm::SyncSgd | Algorithm::DcSyncSgd, mode) => {
@@ -307,6 +320,22 @@ impl Trainer {
                 );
             }
             ck.save(std::path::Path::new(&self.ctx.cfg.checkpoint_out))?;
+            // stamp the capture on the run trace at the final virtual time
+            if let Some(out) = self.ctx.trace_out.as_mut() {
+                let t = out.events.last().map(|e| e.t).unwrap_or(0.0);
+                out.events.push(crate::trace::TraceEvent {
+                    kind: crate::trace::EventKind::Checkpoint,
+                    t,
+                    wall: 0.0,
+                    worker: None,
+                    epoch: None,
+                    tau: None,
+                    value: None,
+                });
+            }
+        }
+        if profiling {
+            crate::trace::profile::set_enabled(false);
         }
         if !self.ctx.cfg.out_dir.is_empty() {
             let name = if self.ctx.cfg.tag.is_empty() {
@@ -314,12 +343,34 @@ impl Trainer {
             } else {
                 self.ctx.cfg.tag.clone()
             };
-            crate::metrics::write_run(
-                std::path::Path::new(&self.ctx.cfg.out_dir),
+            let dir = std::path::Path::new(&self.ctx.cfg.out_dir);
+            let profile = profiling.then(crate::trace::profile::snapshot_json);
+            crate::metrics::write_run_full(
+                dir,
                 &name,
                 &self.ctx.metrics,
                 &self.ctx.cfg.to_json(),
+                profile,
             )?;
+            if let Some(out) = &self.ctx.trace_out {
+                std::fs::create_dir_all(dir)?;
+                if self.ctx.cfg.trace.events {
+                    std::fs::write(
+                        dir.join(format!("{name}.trace.jsonl")),
+                        crate::trace::events_to_jsonl(&out.events),
+                    )?;
+                }
+                if self.ctx.cfg.trace.chrome_trace {
+                    std::fs::write(
+                        dir.join(format!("{name}.trace.json")),
+                        crate::trace::chrome::render(&out.events).to_string(),
+                    )?;
+                }
+                std::fs::write(
+                    dir.join(format!("{name}.timeseries.csv")),
+                    crate::trace::rows_to_csv(&out.rows),
+                )?;
+            }
         }
         Ok((report, self.ctx.metrics))
     }

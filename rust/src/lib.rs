@@ -29,16 +29,16 @@
 //! The paper's comparison is a spectrum of synchronization protocols; each
 //! maps to a [`sim::Protocol`] plus an update rule on the server:
 //!
-//! | algorithm        | protocol                        | update rule on push      |
-//! |------------------|---------------------------------|--------------------------|
-//! | `sgd` (M=1)      | [`sim::FullyAsync`], one worker | plain SGD                |
-//! | `ssgd`           | [`sim::BarrierSync`]            | sum of M gradients/round |
-//! | `dc-ssgd`        | [`sim::BarrierSync`]            | appendix-H DC fold/round |
-//! | `ssp` (bound s)  | [`sim::StalenessBounded`]       | plain SGD                |
-//! | `dc-s3gd` (s)    | [`sim::StalenessBounded`]       | DC vs `w_bak` (Eqn. 10)  |
-//! | `asgd`           | [`sim::FullyAsync`]             | plain SGD                |
-//! | `dc-asgd-c`      | [`sim::FullyAsync`]             | DC, constant lambda      |
-//! | `dc-asgd-a`      | [`sim::FullyAsync`]             | DC, adaptive lambda      |
+//! | algorithm        | protocol                        | update rule on push      | trace gate events (`[trace]`)   |
+//! |------------------|---------------------------------|--------------------------|---------------------------------|
+//! | `sgd` (M=1)      | [`sim::FullyAsync`], one worker | plain SGD                | commits only (ungated)          |
+//! | `ssgd`           | [`sim::BarrierSync`]            | sum of M gradients/round | gate-wait spans + barrier folds |
+//! | `dc-ssgd`        | [`sim::BarrierSync`]            | appendix-H DC fold/round | gate-wait spans + barrier folds |
+//! | `ssp` (bound s)  | [`sim::StalenessBounded`]       | plain SGD                | gate-wait spans, commits w/ τ   |
+//! | `dc-s3gd` (s)    | [`sim::StalenessBounded`]       | DC vs `w_bak` (Eqn. 10)  | gate-wait spans, commits w/ τ   |
+//! | `asgd`           | [`sim::FullyAsync`]             | plain SGD                | commits w/ τ (no gate waits)    |
+//! | `dc-asgd-c`      | [`sim::FullyAsync`]             | DC, constant lambda      | commits w/ τ (no gate waits)    |
+//! | `dc-asgd-a`      | [`sim::FullyAsync`]             | DC, adaptive lambda      | commits w/ τ (no gate waits)    |
 //!
 //! SSP's `staleness_bound` sweeps the whole axis: `s = 0` reproduces the
 //! SSGD round structure, `s -> inf` reproduces ASGD bit-for-bit (bench
@@ -257,6 +257,48 @@
 //! case is checked against the manifest bounds and the rejection matrix
 //! before anything runs.
 //!
+//! ## Observability
+//!
+//! The `[trace]` config section (`--trace` CLI; off by default) turns on
+//! the run-trace layer ([`trace`]), three data planes written next to the
+//! metrics bundle under `out_dir`:
+//!
+//! * **Structured events** (`<tag>.trace.jsonl`): typed records from the
+//!   scheduler (gate waits, crashes, restarts, joins, departures,
+//!   straggles) and the driver (pulls, push commits with τ, barrier
+//!   folds, pipeline enqueue/flush, checkpoints), each carrying virtual
+//!   time, wall time, worker id, epoch, and τ. The same stream renders as
+//!   Chrome trace-event format (`<tag>.trace.json`): open it at
+//!   <https://ui.perfetto.dev> (or `chrome://tracing`) for one track per
+//!   worker, a counter track per PS shard, and a driver track —
+//!   timestamps are the **virtual** clock in µs, i.e. the simulated
+//!   schedule itself.
+//! * **Subsystem profiles**: RAII span timers around PS shard-lock
+//!   acquisition, pool job execution, codec encode/decode, and the fused
+//!   apply ([`trace::profile`]); per-subsystem count/total/mean/max and a
+//!   log2 histogram land in a `profile` block of `<tag>.summary.json`
+//!   (`schema_version` 2).
+//! * **Time series** (`<tag>.timeseries.csv`): every
+//!   `trace.sample_every` steps the driver snapshots loss EMA, live
+//!   workers, windowed staleness (n/mean/max), comm-bytes delta, and
+//!   event-queue depth.
+//!
+//! `dcasgd report <run-dir>` digests the written artifacts (phase
+//! breakdown, slowest spans, staleness/loss sparklines) with no model or
+//! replay needed. Knobs: `trace.enabled`, `trace.sample_every`
+//! (`--trace-sample-every`), `trace.events` (`--trace-events`),
+//! `trace.profile` (`--trace-profile`), `trace.chrome_trace`
+//! (`--trace-chrome`); setting any parameter knob auto-enables the
+//! section, an explicit `enabled = false` wins, and `exec_mode = threads`
+//! rejects tracing (virtual-time records need the event-driven
+//! scheduler).
+//!
+//! The layer is **bitwise-inert**: every emission site observes a
+//! decision already made, so trace-on and trace-off runs produce
+//! identical `TrainReport`s and checkpoint bytes — pinned by
+//! `tests/trace.rs` at both the scheduler level and the full-run level,
+//! and the disabled-span cost is pinned unmeasurable by bench `hotpath`.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -281,6 +323,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod sim;
 pub mod theory;
+pub mod trace;
 pub mod util;
 
 pub mod bench;

@@ -6,12 +6,14 @@
 //!   validate  pre-flight scenario/config files against the knob manifest
 //!   knobs     print the knob manifest (ids, bounds, defaults, rules)
 //!   info      list AOT artifacts and their shapes
+//!   report    digest the written artifacts of a run directory
 //!
 //! Examples:
 //!   dcasgd train --preset quickstart --algo dc-asgd-a --workers 8
 //!   dcasgd train --scenario scenarios/fig5_lambda.toml --case 3
 //!   dcasgd sweep --preset cifar --algos asgd,dc-asgd-a --workers 4,8
 //!   dcasgd validate scenarios/ --strict
+//!   dcasgd report runs/
 //!
 //! Precedence: CLI flags > scenario overrides/sweep cell > TOML/preset base
 //! > built-in defaults — every layer goes through the same manifest setters.
@@ -32,6 +34,7 @@ fn main() {
         Some("validate") => cmd_validate(&args),
         Some("knobs") => cmd_knobs(&args),
         Some("info") => cmd_info(&args),
+        Some("report") => cmd_report(&args),
         Some(other) => {
             eprintln!("unknown subcommand {other:?}");
             usage();
@@ -47,7 +50,7 @@ fn main() {
 
 fn usage() {
     eprintln!(
-        "usage: dcasgd <train|sweep|eval|validate|knobs|info> [options]\n\
+        "usage: dcasgd <train|sweep|eval|validate|knobs|info|report> [options]\n\
          common options:\n\
            --preset quickstart|cifar|imagenet|lm   base config\n\
            --config PATH                           TOML config file\n\
@@ -72,12 +75,17 @@ fn usage() {
            --fault-late-join N  --fault-late-join-by F\n\
            --fault-policy drop|salvage             in-flight gradient on crash\n\
            --fault-seed N       (0 = derive from --seed)\n\
+           --trace              (record run-trace artifacts: events, profile, telemetry)\n\
+           --trace-sample-every N  telemetry cadence in steps (default 10)\n\
+           --trace-events true|false  --trace-profile true|false  --trace-chrome true|false\n\
            --tag NAME           --verbose\n\
          sweep options:\n\
            --algos a,b,c        --workers-list 1,4,8\n\
          validate: dcasgd validate [PATH ...] [--strict]\n\
            pre-flights scenario/config TOML (default: the scenarios/ corpus);\n\
            --strict also fails on warnings (CI mode)\n\
+         report: dcasgd report RUN_DIR\n\
+           digest the written run artifacts (summary, profile, trace, telemetry)\n\
          knobs: print the full knob manifest and cross-knob rules"
     );
 }
@@ -360,6 +368,31 @@ fn cmd_eval(args: &Args) -> i32 {
     };
     match run() {
         Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_report(args: &Args) -> i32 {
+    if let Err(e) = args.finish() {
+        eprintln!("error: {e}");
+        return 2;
+    }
+    let pos = args.positional();
+    let dir = match pos.get(1) {
+        Some(d) => std::path::PathBuf::from(d),
+        None => {
+            eprintln!("usage: dcasgd report RUN_DIR");
+            return 2;
+        }
+    };
+    match dc_asgd::trace::report::render_digest(&dir) {
+        Ok(digest) => {
+            print!("{digest}");
+            0
+        }
         Err(e) => {
             eprintln!("error: {e:#}");
             1

@@ -42,6 +42,11 @@ pub struct EvalRecord {
 /// last bucket (query-time caps fold further down from here).
 const STALE_TRACK_CAP: usize = 1024;
 
+/// Smoothing constant of the downsampling-proof running loss EMA: each
+/// step contributes 2%, so the EMA spans roughly the last ~50 updates —
+/// matching the window the old tail-average used at `keep_every = 1`.
+const LOSS_EMA_BETA: f64 = 0.98;
+
 /// Collected metrics of one training run.
 #[derive(Debug)]
 pub struct MetricsLog {
@@ -60,6 +65,13 @@ pub struct MetricsLog {
     /// Exact running maximum staleness (the folded tail would otherwise
     /// clamp heavy-tail outliers to the cap).
     stale_max: u64,
+    /// Exact count of recorded steps, accumulated before downsampling —
+    /// `steps.last().step + 1` undercounts whenever `keep_every > 1`
+    /// drops the final records.
+    step_count: u64,
+    /// Downsampling-proof running loss EMA (see [`LOSS_EMA_BETA`]); NaN
+    /// until the first step lands.
+    loss_ema: f64,
     /// Total modelled bytes on the wire (encoded gradient uploads + dense
     /// model downloads), reported by the scheduler at end of run. Zero in
     /// threads mode (no wire model there).
@@ -86,6 +98,8 @@ impl MetricsLog {
             wait_accum: 0.0,
             stale_counts: Vec::new(),
             stale_max: 0,
+            step_count: 0,
+            loss_ema: f64::NAN,
             comm_bytes: 0,
             fault_stats: FaultStats::default(),
         }
@@ -112,9 +126,15 @@ impl MetricsLog {
     }
 
     pub fn record_step(&mut self, r: StepRecord) {
-        // wait/staleness aggregates must cover every step, not the
-        // downsampled curve, or keep_every silently shrinks them
+        // wait/staleness/count/loss aggregates must cover every step, not
+        // the downsampled curve, or keep_every silently skews them
+        self.step_count += 1;
         self.wait_accum += r.wait;
+        self.loss_ema = if self.loss_ema.is_nan() {
+            r.loss as f64
+        } else {
+            self.loss_ema * LOSS_EMA_BETA + r.loss as f64 * (1.0 - LOSS_EMA_BETA)
+        };
         self.stale_max = self.stale_max.max(r.staleness);
         let tau = (r.staleness as usize).min(STALE_TRACK_CAP);
         if tau >= self.stale_counts.len() {
@@ -123,6 +143,20 @@ impl MetricsLog {
         self.stale_counts[tau] += 1;
         if r.step % self.keep_every == 0 {
             self.steps.push(r);
+        }
+    }
+
+    /// Exact number of recorded steps (immune to `keep_every`).
+    pub fn step_count(&self) -> u64 {
+        self.step_count
+    }
+
+    /// Downsampling-proof running loss EMA; `None` before the first step.
+    pub fn loss_ema(&self) -> Option<f64> {
+        if self.loss_ema.is_nan() {
+            None
+        } else {
+            Some(self.loss_ema)
         }
     }
 
@@ -232,11 +266,11 @@ impl MetricsLog {
             .map(|e| e.test_error)
             .fold(f32::INFINITY, f32::min);
         TrainReport {
-            total_steps: self.steps.last().map(|r| r.step + 1).unwrap_or(0),
+            total_steps: self.step_count,
             final_test_error: last.map(|e| e.test_error).unwrap_or(f32::NAN),
             final_test_loss: last.map(|e| e.test_loss).unwrap_or(f32::NAN),
             best_test_error: if best.is_finite() { best } else { f32::NAN },
-            final_train_loss: self.recent_loss(50).unwrap_or(f32::NAN),
+            final_train_loss: self.loss_ema().map(|l| l as f32).unwrap_or(f32::NAN),
             total_time: self
                 .evals
                 .last()
@@ -259,10 +293,17 @@ impl MetricsLog {
 /// Summary of a completed run (what benches tabulate).
 #[derive(Clone, Debug)]
 pub struct TrainReport {
+    /// Exact number of global update steps, counted before `keep_every`
+    /// downsampling (deriving it from the last *kept* record's index
+    /// undercounted whenever the tail was dropped).
     pub total_steps: u64,
     pub final_test_error: f32,
     pub final_test_loss: f32,
     pub best_test_error: f32,
+    /// Running EMA of the training loss over ALL steps (2% per update,
+    /// ~50-step window), accumulated before downsampling. Earlier builds
+    /// averaged the last 50 *kept* records, which under `keep_every > 1`
+    /// silently widened the window by the downsampling factor.
     pub final_train_loss: f32,
     /// Simulated (or wall) seconds at the end of training.
     pub total_time: f64,
@@ -315,6 +356,12 @@ impl TrainReport {
     }
 }
 
+/// Summary-JSON format version, so downstream tooling (`dcasgd report`)
+/// can detect drift instead of guessing. Bump on breaking shape changes.
+/// v2 added `schema_version` itself and the optional per-subsystem
+/// `profile` block.
+pub const SUMMARY_SCHEMA_VERSION: i64 = 2;
+
 /// Write a metrics bundle (steps CSV, evals CSV, summary JSON) under
 /// `dir` with the given run name.
 pub fn write_run(
@@ -323,13 +370,30 @@ pub fn write_run(
     log: &MetricsLog,
     config_json: &Json,
 ) -> std::io::Result<()> {
+    write_run_full(dir, name, log, config_json, None)
+}
+
+/// [`write_run`] plus an optional per-subsystem profile block (from
+/// [`crate::trace::profile::snapshot_json`]) in the summary JSON.
+pub fn write_run_full(
+    dir: &Path,
+    name: &str,
+    log: &MetricsLog,
+    config_json: &Json,
+    profile: Option<Json>,
+) -> std::io::Result<()> {
     std::fs::create_dir_all(dir)?;
     log.write_steps_csv(&dir.join(format!("{name}.steps.csv")))?;
     log.write_evals_csv(&dir.join(format!("{name}.evals.csv")))?;
-    let summary = Json::obj(vec![
+    let mut fields = vec![
+        ("schema_version", SUMMARY_SCHEMA_VERSION.into()),
         ("config", config_json.clone()),
         ("report", log.report().to_json()),
-    ]);
+    ];
+    if let Some(p) = profile {
+        fields.push(("profile", p));
+    }
+    let summary = Json::obj(fields);
     std::fs::write(dir.join(format!("{name}.summary.json")), summary.to_string())
 }
 
@@ -419,6 +483,54 @@ mod tests {
         // aggregates must cover all 20 steps, not the kept 5
         assert!((log.wait_total() - 20.0 * 0.5).abs() < 1e-9);
         assert_eq!(log.staleness_histogram(8), vec![0, 20]);
+        // the exact counter: `steps.last().step + 1` would report 17 here
+        assert_eq!(log.step_count(), 20);
+        assert_eq!(log.report().total_steps, 20);
+    }
+
+    #[test]
+    fn loss_ema_is_downsampling_proof() {
+        // identical step streams through keep_every 1 and 4 must agree on
+        // the EMA bit-for-bit (it accumulates before the downsample filter)
+        let mut full = MetricsLog::new(1);
+        let mut sampled = MetricsLog::new(4);
+        for i in 0..40u64 {
+            let r = StepRecord {
+                step: i,
+                worker: 0,
+                passes: 0.0,
+                time: 0.0,
+                loss: 3.0 - i as f32 * 0.05,
+                lr: 0.1,
+                staleness: 0,
+                wait: 0.0,
+            };
+            full.record_step(r);
+            sampled.record_step(r);
+        }
+        let (a, b) = (full.loss_ema().unwrap(), sampled.loss_ema().unwrap());
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert_eq!(
+            full.report().final_train_loss.to_bits(),
+            sampled.report().final_train_loss.to_bits()
+        );
+        // a constant loss stream converges to exactly that loss
+        let mut flat = MetricsLog::new(1);
+        for i in 0..10u64 {
+            flat.record_step(StepRecord {
+                step: i,
+                worker: 0,
+                passes: 0.0,
+                time: 0.0,
+                loss: 1.25,
+                lr: 0.1,
+                staleness: 0,
+                wait: 0.0,
+            });
+        }
+        assert!((flat.report().final_train_loss - 1.25).abs() < 1e-6);
+        // and an empty log has no EMA
+        assert!(MetricsLog::new(1).loss_ema().is_none());
     }
 
     #[test]
@@ -432,6 +544,14 @@ mod tests {
         let summary = std::fs::read_to_string(dir.join("t.summary.json")).unwrap();
         let json = Json::parse(&summary).unwrap();
         assert_eq!(json.get("report").get("total_steps").as_i64(), Some(10));
+        assert_eq!(json.get("schema_version").as_i64(), Some(SUMMARY_SCHEMA_VERSION));
+        // no profile block unless one is passed
+        assert_eq!(json.get("profile"), &Json::Null);
+        let profile = Json::arr(vec![Json::obj(vec![("subsystem", "shard_lock".into())])]);
+        write_run_full(&dir, "tp", &log, &Json::obj(vec![]), Some(profile)).unwrap();
+        let summary = std::fs::read_to_string(dir.join("tp.summary.json")).unwrap();
+        let json = Json::parse(&summary).unwrap();
+        assert!(json.get("profile").as_arr().is_some());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -476,6 +476,7 @@ impl ParamServer {
         packed: &[u8],
         lr: f32,
     ) -> PushOutcome {
+        let _p = crate::trace::profile::span(crate::trace::profile::Subsystem::FusedApply);
         let h = self.hyper;
         match self.algo {
             Algorithm::Asgd | Algorithm::SequentialSgd | Algorithm::SyncSgd | Algorithm::Ssp => {

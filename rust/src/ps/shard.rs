@@ -181,7 +181,10 @@ impl ShardedStore {
     /// version counter.
     pub fn for_each_shard<F: FnMut(&mut ShardData, Range<usize>)>(&self, mut f: F) {
         for (range, shard) in self.ranges.iter().zip(&self.shards) {
-            let mut s = shard.data.write().unwrap();
+            let mut s = {
+                let _p = crate::trace::profile::span(crate::trace::profile::Subsystem::ShardLock);
+                shard.data.write().unwrap()
+            };
             f(&mut s, range.clone());
             shard.version.fetch_add(1, Ordering::Release);
         }
@@ -207,7 +210,11 @@ impl ShardedStore {
             }
             let hi = lo + idx[lo..].partition_point(|&i| (i as usize) < range.end);
             if hi > lo {
-                let mut s = shard.data.write().unwrap();
+                let mut s = {
+                    let _p =
+                        crate::trace::profile::span(crate::trace::profile::Subsystem::ShardLock);
+                    shard.data.write().unwrap()
+                };
                 f(&mut s, range.clone(), &idx[lo..hi], &val[lo..hi]);
                 shard.version.fetch_add(1, Ordering::Release);
                 lo = hi;
@@ -253,7 +260,10 @@ impl ShardedStore {
     }
 
     fn apply_shard<F: Fn(&mut ShardData, Range<usize>)>(&self, i: usize, f: &F) {
-        let mut s = self.shards[i].data.write().unwrap();
+        let mut s = {
+            let _p = crate::trace::profile::span(crate::trace::profile::Subsystem::ShardLock);
+            self.shards[i].data.write().unwrap()
+        };
         f(&mut s, self.ranges[i].clone());
         self.shards[i].version.fetch_add(1, Ordering::Release);
     }

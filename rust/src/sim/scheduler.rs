@@ -70,6 +70,7 @@
 use super::delay::{CommCosts, DelaySampler};
 use super::faults::{CrashPolicy, FaultPlan, FaultStats};
 use super::EventQueue;
+use crate::trace::{EventBuf, EventKind, TraceEvent};
 
 /// How finished gradients become global steps.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -256,6 +257,10 @@ pub struct Scheduler {
     slow_until: Vec<f64>,
     slow_factor: Vec<f64>,
     stats: FaultStats,
+    /// Structured event buffer (`[trace]`). `None` (the default) keeps
+    /// every emission site a single branch; emissions only record
+    /// decisions already made, so the schedule is bitwise unaffected.
+    trace: Option<EventBuf>,
 }
 
 impl Scheduler {
@@ -324,6 +329,7 @@ impl Scheduler {
             slow_until: vec![0.0; workers],
             slow_factor: vec![1.0; workers],
             stats: FaultStats::default(),
+            trace: None,
         }
     }
 
@@ -391,6 +397,30 @@ impl Scheduler {
     /// Lifecycle counters (all zero without fault activity).
     pub fn fault_stats(&self) -> FaultStats {
         self.stats
+    }
+    /// Install a trace event buffer ([`crate::trace`]): lifecycle events
+    /// (gate waits, crashes, joins, departures, straggles) are recorded
+    /// from here on. Emission counts reconcile 1:1 with [`FaultStats`]
+    /// (pinned by `tests/trace.rs`).
+    pub fn enable_trace(&mut self) {
+        self.trace = Some(EventBuf::new());
+    }
+    /// Drain buffered trace events (empty when tracing is off).
+    pub fn drain_trace(&mut self) -> Vec<TraceEvent> {
+        self.trace.as_mut().map(EventBuf::drain).unwrap_or_default()
+    }
+    /// Pending events in the virtual-time queue (telemetry sample).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Record a lifecycle event at the current virtual time (no-op with
+    /// tracing off).
+    fn emit(&mut self, kind: EventKind, t: f64, worker: usize, value: Option<f64>) {
+        let epoch = self.epoch[worker] as u64;
+        if let Some(buf) = &mut self.trace {
+            buf.emit(kind, t, Some(worker), Some(epoch), None, value);
+        }
     }
 
     /// Launch every t=0 worker (no protocol can gate clock-0 starts) and
@@ -497,6 +527,7 @@ impl Scheduler {
         self.clocks[worker] += 1;
         if self.dying[worker] {
             self.stats.salvaged_inflight += 1;
+            self.emit(EventKind::InflightSalvaged, now, worker, None);
             let restart = self.pending_restart[worker].take().unwrap_or(None);
             return self.kill(worker, restart);
         }
@@ -548,6 +579,24 @@ impl Scheduler {
                 let waited = now - self.blocked_since[v];
                 self.step_wait[v] = waited;
                 self.wait_total[v] += waited;
+                // emit the gate-wait span only once its extent is known:
+                // a zero wait (e.g. FullyAsync) produces no span at all,
+                // and Begin/End always pair up (merge_events re-sorts the
+                // back-dated Begin into virtual-time order)
+                if waited > 0.0 {
+                    let epoch = Some(self.epoch[v] as u64);
+                    if let Some(buf) = &mut self.trace {
+                        buf.emit(
+                            EventKind::GateWaitBegin,
+                            now - waited,
+                            Some(v),
+                            epoch,
+                            None,
+                            None,
+                        );
+                        buf.emit(EventKind::GateWaitEnd, now, Some(v), epoch, None, Some(waited));
+                    }
+                }
                 self.state[v] = WorkerState::Computing;
                 let d = self.sample_delay(v);
                 // turnaround = server update cost + gradient upload for the
@@ -575,6 +624,7 @@ impl Scheduler {
             None => {
                 self.stats.departures += 1;
                 self.departed[worker] = true;
+                self.emit(EventKind::Depart, self.queue.now(), worker, None);
             }
         }
         self.release_gated()
@@ -587,6 +637,8 @@ impl Scheduler {
         self.stats.crashes += 1;
         let restart = self.faults.as_mut().and_then(|p| p.restart_delay(worker));
         let policy = self.faults.as_ref().map_or(CrashPolicy::Drop, |p| p.policy());
+        let will_restart = if restart.is_some() { 1.0 } else { 0.0 };
+        self.emit(EventKind::Crash, time, worker, Some(will_restart));
         let computing = self.state[worker] == WorkerState::Computing;
         let released = if computing && policy == CrashPolicy::Salvage {
             // graceful drain: the in-flight compute will finish and commit;
@@ -599,6 +651,7 @@ impl Scheduler {
                 // kill -9: the in-flight finish now belongs to a dead epoch
                 self.epoch[worker] = self.epoch[worker].wrapping_add(1);
                 self.stats.dropped_inflight += 1;
+                self.emit(EventKind::InflightDropped, time, worker, None);
             }
             self.kill(worker, restart)
         };
@@ -609,8 +662,10 @@ impl Scheduler {
         if self.late_join_pending[worker] {
             self.late_join_pending[worker] = false;
             self.stats.late_joins += 1;
+            self.emit(EventKind::Join, time, worker, None);
         } else {
             self.stats.restarts += 1;
+            self.emit(EventKind::Restart, time, worker, None);
         }
         self.alive[worker] = true;
         self.departed[worker] = false;
@@ -666,6 +721,16 @@ impl Scheduler {
             self.slow_factor[worker] = factor;
             self.slow_until[worker] = now + dur;
             self.stats.straggle_events += 1;
+            if let Some(buf) = &mut self.trace {
+                buf.emit(
+                    EventKind::Straggle,
+                    now,
+                    Some(worker),
+                    Some(self.epoch[worker] as u64),
+                    None,
+                    Some(factor),
+                );
+            }
             if let Some(tn) = p.next_straggle_in(worker) {
                 self.queue.schedule_in(tn, Ev::Straggle { worker });
             }

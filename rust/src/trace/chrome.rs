@@ -1,0 +1,214 @@
+//! Chrome trace-event serialization: renders a merged event stream as a
+//! `trace.json` loadable in Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing`.
+//!
+//! Track layout:
+//!
+//! * pid 1 `workers` — one thread per worker. Gate waits render as
+//!   balanced `B`/`E` span pairs; commits, crashes, joins, departures,
+//!   straggles, and pipeline events render as instants (`i`).
+//! * pid 2 `ps` — one counter track (`C`) per parameter-server shard,
+//!   fed by the periodic `ShardVersion` samples.
+//! * pid 3 `driver` — worker-less events (barrier folds, checkpoints).
+//!
+//! Timestamps are **virtual time** in microseconds (the DES clock), so
+//! the rendered timeline is the simulated schedule, not host wall time.
+//! Output invariants (pinned by the golden test in `tests/trace.rs`):
+//! every `B` has a matching `E` (open spans are closed at the final
+//! timestamp) and events are sorted by non-decreasing `ts`.
+
+use super::{EventKind, TraceEvent};
+use crate::util::json::Json;
+
+const PID_WORKERS: i64 = 1;
+const PID_PS: i64 = 2;
+const PID_DRIVER: i64 = 3;
+
+fn us(t: f64) -> f64 {
+    t * 1e6
+}
+
+struct ChromeEv {
+    ts: f64,
+    json: Json,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ev(
+    name: &str,
+    ph: &str,
+    ts: f64,
+    pid: i64,
+    tid: i64,
+    scope: Option<&str>,
+    args: Vec<(&str, Json)>,
+) -> ChromeEv {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("name", name.into()),
+        ("ph", ph.into()),
+        ("ts", ts.into()),
+        ("pid", pid.into()),
+        ("tid", tid.into()),
+        ("cat", "dcasgd".into()),
+    ];
+    if let Some(s) = scope {
+        fields.push(("s", s.into()));
+    }
+    if !args.is_empty() {
+        fields.push(("args", Json::obj(args)));
+    }
+    ChromeEv { ts, json: Json::obj(fields) }
+}
+
+fn meta(name: &str, pid: i64, tid: Option<i64>, label: String) -> ChromeEv {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("name", name.into()),
+        ("ph", "M".into()),
+        ("ts", 0.0.into()),
+        ("pid", pid.into()),
+    ];
+    if let Some(t) = tid {
+        fields.push(("tid", t.into()));
+    }
+    fields.push(("args", Json::obj(vec![("name", Json::Str(label))])));
+    ChromeEv { ts: 0.0, json: Json::obj(fields) }
+}
+
+/// Render the merged event stream as a Chrome trace-event document.
+pub fn render(events: &[TraceEvent]) -> Json {
+    let mut out: Vec<ChromeEv> = Vec::with_capacity(events.len() + 16);
+    let mut workers_seen: Vec<usize> = Vec::new();
+    let mut shards_seen: Vec<usize> = Vec::new();
+    // workers with an open gate-wait span (Perfetto requires balanced B/E)
+    let mut open_wait: Vec<usize> = Vec::new();
+    let mut max_ts: f64 = 0.0;
+
+    for e in events {
+        let ts = us(e.t);
+        max_ts = max_ts.max(ts);
+        if let Some(w) = e.worker {
+            if e.kind != EventKind::ShardVersion && !workers_seen.contains(&w) {
+                workers_seen.push(w);
+            }
+        }
+        let tid = e.worker.unwrap_or(0) as i64;
+        let mut args: Vec<(&str, Json)> = Vec::new();
+        if let Some(tau) = e.tau {
+            args.push(("tau", (tau as i64).into()));
+        }
+        if let Some(ep) = e.epoch {
+            args.push(("epoch", (ep as i64).into()));
+        }
+        if let Some(v) = e.value {
+            args.push(("value", v.into()));
+        }
+        match e.kind {
+            EventKind::GateWaitBegin => {
+                let w = e.worker.unwrap_or(0);
+                // a second Begin without an End would unbalance the track
+                if !open_wait.contains(&w) {
+                    open_wait.push(w);
+                    out.push(ev("gate_wait", "B", ts, PID_WORKERS, tid, None, args));
+                }
+            }
+            EventKind::GateWaitEnd => {
+                let w = e.worker.unwrap_or(0);
+                if let Some(i) = open_wait.iter().position(|&ow| ow == w) {
+                    open_wait.swap_remove(i);
+                    out.push(ev("gate_wait", "E", ts, PID_WORKERS, tid, None, args));
+                }
+            }
+            EventKind::ShardVersion => {
+                let shard = e.worker.unwrap_or(0);
+                if !shards_seen.contains(&shard) {
+                    shards_seen.push(shard);
+                }
+                out.push(ev(
+                    "shard_version",
+                    "C",
+                    ts,
+                    PID_PS,
+                    shard as i64,
+                    None,
+                    vec![("version", e.value.unwrap_or(0.0).into())],
+                ));
+            }
+            EventKind::BarrierRelease | EventKind::Checkpoint => {
+                out.push(ev(e.kind.name(), "i", ts, PID_DRIVER, 0, Some("p"), args));
+            }
+            _ => {
+                out.push(ev(e.kind.name(), "i", ts, PID_WORKERS, tid, Some("t"), args));
+            }
+        }
+    }
+
+    // close any still-open gate waits so every B has its E
+    for &w in &open_wait {
+        out.push(ev("gate_wait", "E", max_ts, PID_WORKERS, w as i64, None, vec![]));
+    }
+
+    // metadata first (ts 0), then events in timestamp order
+    let mut all: Vec<ChromeEv> = Vec::with_capacity(out.len() + 8);
+    all.push(meta("process_name", PID_WORKERS, None, "workers".into()));
+    all.push(meta("process_name", PID_PS, None, "ps".into()));
+    all.push(meta("process_name", PID_DRIVER, None, "driver".into()));
+    workers_seen.sort_unstable();
+    for w in workers_seen {
+        all.push(meta("thread_name", PID_WORKERS, Some(w as i64), format!("worker {w}")));
+    }
+    shards_seen.sort_unstable();
+    for s in shards_seen {
+        all.push(meta("thread_name", PID_PS, Some(s as i64), format!("shard {s}")));
+    }
+    all.extend(out);
+    all.sort_by(|a, b| a.ts.partial_cmp(&b.ts).unwrap_or(std::cmp::Ordering::Equal));
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(all.into_iter().map(|e| e.json).collect())),
+        ("displayTimeUnit", "ms".into()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(kind: EventKind, t: f64, worker: Option<usize>, value: Option<f64>) -> TraceEvent {
+        TraceEvent { kind, t, wall: 0.0, worker, epoch: None, tau: None, value }
+    }
+
+    #[test]
+    fn spans_balance_and_timestamps_are_monotone() {
+        let events = vec![
+            mk(EventKind::Pull, 0.0, Some(0), None),
+            mk(EventKind::GateWaitBegin, 1.0, Some(0), None),
+            mk(EventKind::GateWaitEnd, 1.5, Some(0), Some(0.5)),
+            mk(EventKind::PushCommit, 1.5, Some(0), None),
+            // worker 1 never gets released: render() must close the span
+            mk(EventKind::GateWaitBegin, 2.0, Some(1), None),
+            mk(EventKind::ShardVersion, 2.5, Some(0), Some(7.0)),
+        ];
+        let doc = render(&events);
+        let s = doc.to_string();
+        let parsed = Json::parse(&s).unwrap();
+        let evs = parsed.get("traceEvents").as_arr().unwrap();
+        let mut last_ts = f64::NEG_INFINITY;
+        let mut depth = 0i64;
+        for e in evs {
+            let ts = e.get("ts").as_f64().unwrap();
+            assert!(ts >= last_ts, "timestamps must be non-decreasing");
+            last_ts = ts;
+            match e.get("ph").as_str() {
+                Some("B") => depth += 1,
+                Some("E") => {
+                    depth -= 1;
+                    assert!(depth >= 0, "E without matching B");
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(depth, 0, "unbalanced B/E pairs");
+        assert!(s.contains("\"shard_version\""));
+        assert!(s.contains("\"displayTimeUnit\""));
+    }
+}

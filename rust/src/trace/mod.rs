@@ -1,0 +1,413 @@
+//! Run-trace observability: structured event tracing, subsystem profiling,
+//! and time-series telemetry (`[trace]` section).
+//!
+//! The layer is off by default and **bitwise-inert**: enabling it changes
+//! no schedule decision, no RNG draw, and no floating-point operation, so
+//! trace-on and trace-off runs produce identical `TrainReport`s and
+//! checkpoint bytes (pinned by `tests/trace.rs`). Tracing observes, never
+//! perturbs.
+//!
+//! Three data planes, all buffered per producer with no locks on the hot
+//! path:
+//!
+//! * **Events** ([`TraceEvent`]): typed records from the scheduler (gate
+//!   waits, crashes, joins, departures, straggles) and the driver (pulls,
+//!   push commits, barrier releases, pipeline enqueue/flush, checkpoints),
+//!   each carrying virtual time, wall time, worker id, epoch, and τ.
+//!   Written as JSONL (`*.trace.jsonl`) and Chrome trace-event format
+//!   (`*.trace.json`, loadable in Perfetto / `chrome://tracing` — see
+//!   [`chrome`]).
+//! * **Profiling** ([`profile`]): RAII span guards around PS shard-lock
+//!   acquisition, pool job execution, codec encode/decode, and fused-apply
+//!   slices; u64 monotonic-clock deltas folded into per-subsystem
+//!   histograms (atomics only, zero steady-state allocation) surfaced in
+//!   the summary JSON.
+//! * **Time series** ([`TimeseriesRow`]): every `/trace/sample_every`
+//!   steps the driver snapshots loss EMA, live-worker count, staleness
+//!   deltas, comm-bytes rate, and event-queue depth into
+//!   `*.timeseries.csv`.
+//!
+//! `dcasgd report <run-dir>` ([`report`]) renders a human-readable digest
+//! from the written artifacts.
+
+pub mod chrome;
+pub mod profile;
+pub mod report;
+
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// What happened. The scheduler-side kinds reconcile 1:1 with
+/// [`crate::sim::FaultStats`] counters (pinned by `tests/trace.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Driver staged a model pull for a worker.
+    Pull,
+    /// A gradient was committed to the PS (τ in `tau`, global step in
+    /// `epoch`).
+    PushCommit,
+    /// Worker finished compute and is waiting on its protocol gate.
+    GateWaitBegin,
+    /// Worker's gate released (`value` = simulated seconds waited).
+    GateWaitEnd,
+    /// A synchronous round folded at the barrier (`value` = fold size).
+    BarrierRelease,
+    /// Worker crashed (`value` = 1.0 if it will restart, 0.0 if the crash
+    /// is permanent under the departure draw).
+    Crash,
+    /// A crashed worker's in-flight gradient was discarded (drop policy).
+    InflightDropped,
+    /// A crashed worker's in-flight gradient landed anyway (salvage).
+    InflightSalvaged,
+    /// Worker rejoined after a crash.
+    Restart,
+    /// A cold worker joined late (elastic membership).
+    Join,
+    /// Worker left permanently.
+    Depart,
+    /// A straggle window began (`value` = slowdown factor).
+    Straggle,
+    /// Driver enqueued a gradient evaluation into the pipeline.
+    PipelineEnqueue,
+    /// The pipeline flushed (a commit arrived before its evaluation).
+    PipelineFlush,
+    /// A checkpoint was captured.
+    Checkpoint,
+    /// PS shard version counter sample (`worker` = shard index,
+    /// `value` = version); rendered as a Perfetto counter track.
+    ShardVersion,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Pull => "pull",
+            EventKind::PushCommit => "push_commit",
+            EventKind::GateWaitBegin => "gate_wait_begin",
+            EventKind::GateWaitEnd => "gate_wait_end",
+            EventKind::BarrierRelease => "barrier_release",
+            EventKind::Crash => "crash",
+            EventKind::InflightDropped => "inflight_dropped",
+            EventKind::InflightSalvaged => "inflight_salvaged",
+            EventKind::Restart => "restart",
+            EventKind::Join => "join",
+            EventKind::Depart => "depart",
+            EventKind::Straggle => "straggle",
+            EventKind::PipelineEnqueue => "pipeline_enqueue",
+            EventKind::PipelineFlush => "pipeline_flush",
+            EventKind::Checkpoint => "checkpoint",
+            EventKind::ShardVersion => "shard_version",
+        }
+    }
+}
+
+/// One structured trace record.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub kind: EventKind,
+    /// Virtual (simulated) seconds.
+    pub t: f64,
+    /// Wall-clock seconds since the producer's buffer was created.
+    pub wall: f64,
+    pub worker: Option<usize>,
+    /// Context-dependent counter: global step for `PushCommit`, the
+    /// worker's membership epoch for fault events.
+    pub epoch: Option<u64>,
+    /// Staleness τ, where the event carries one.
+    pub tau: Option<u64>,
+    /// Kind-specific payload (see [`EventKind`] docs).
+    pub value: Option<f64>,
+}
+
+impl TraceEvent {
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("kind", self.kind.name().into()),
+            ("t", self.t.into()),
+            ("wall", self.wall.into()),
+        ];
+        if let Some(w) = self.worker {
+            fields.push(("worker", (w as i64).into()));
+        }
+        if let Some(e) = self.epoch {
+            fields.push(("epoch", (e as i64).into()));
+        }
+        if let Some(tau) = self.tau {
+            fields.push(("tau", (tau as i64).into()));
+        }
+        if let Some(v) = self.value {
+            fields.push(("value", v.into()));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Per-producer event buffer: a plain `Vec` push per event, no locks, no
+/// cross-thread sharing (the DES and the driver are each single-producer).
+#[derive(Debug)]
+pub struct EventBuf {
+    start: Instant,
+    events: Vec<TraceEvent>,
+}
+
+impl EventBuf {
+    pub fn new() -> Self {
+        Self { start: Instant::now(), events: Vec::with_capacity(1024) }
+    }
+
+    /// Wall-clock seconds since this buffer was created.
+    pub fn wall(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn push(&mut self, mut ev: TraceEvent) {
+        ev.wall = self.wall();
+        self.events.push(ev);
+    }
+
+    /// Convenience emit without pre-filling the wall stamp.
+    #[allow(clippy::too_many_arguments)]
+    pub fn emit(
+        &mut self,
+        kind: EventKind,
+        t: f64,
+        worker: Option<usize>,
+        epoch: Option<u64>,
+        tau: Option<u64>,
+        value: Option<f64>,
+    ) {
+        self.push(TraceEvent { kind, t, wall: 0.0, worker, epoch, tau, value });
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn drain(&mut self) -> Vec<TraceEvent> {
+        std::mem::take(&mut self.events)
+    }
+}
+
+impl Default for EventBuf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One periodic telemetry sample (a `*.timeseries.csv` row).
+#[derive(Clone, Copy, Debug)]
+pub struct TimeseriesRow {
+    /// Global step at the sample point.
+    pub step: u64,
+    /// Virtual (simulated) seconds.
+    pub t: f64,
+    /// Wall seconds since the run started.
+    pub wall: f64,
+    /// Downsampling-proof running loss EMA (see `MetricsLog::loss_ema`).
+    pub loss_ema: f64,
+    pub live_workers: usize,
+    /// Number of commits since the previous sample.
+    pub stale_n: u64,
+    /// Mean τ over the window.
+    pub stale_mean: f64,
+    /// Max τ over the window.
+    pub stale_max: u64,
+    /// Comm bytes transferred since the previous sample.
+    pub comm_bytes_delta: u64,
+    /// Scheduler event-queue depth at the sample point.
+    pub queue_depth: usize,
+}
+
+pub const TIMESERIES_HEADER: &str =
+    "step,time,wall_secs,loss_ema,live_workers,stale_n,stale_mean,stale_max,comm_bytes_delta,queue_depth";
+
+impl TimeseriesRow {
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{:.6},{:.6},{:.6},{},{},{:.4},{},{},{}",
+            self.step,
+            self.t,
+            self.wall,
+            self.loss_ema,
+            self.live_workers,
+            self.stale_n,
+            self.stale_mean,
+            self.stale_max,
+            self.comm_bytes_delta,
+            self.queue_depth
+        )
+    }
+}
+
+/// Driver-side trace state for one run: the driver's own event buffer,
+/// the collected time-series rows, and the inter-sample accumulators.
+#[derive(Debug)]
+pub struct RunTrace {
+    pub events: bool,
+    pub chrome: bool,
+    pub sample_every: usize,
+    pub buf: EventBuf,
+    pub rows: Vec<TimeseriesRow>,
+    // window accumulators (reset at each sample)
+    win_stale_n: u64,
+    win_stale_sum: u64,
+    win_stale_max: u64,
+    last_comm_bytes: u64,
+}
+
+impl RunTrace {
+    pub fn new(cfg: &crate::config::TraceConfig) -> Self {
+        Self {
+            events: cfg.events,
+            chrome: cfg.chrome_trace,
+            sample_every: cfg.sample_every.max(1),
+            buf: EventBuf::new(),
+            rows: Vec::new(),
+            win_stale_n: 0,
+            win_stale_sum: 0,
+            win_stale_max: 0,
+            last_comm_bytes: 0,
+        }
+    }
+
+    /// Fold one committed step's τ into the current sampling window.
+    pub fn observe_commit(&mut self, tau: u64) {
+        self.win_stale_n += 1;
+        self.win_stale_sum += tau;
+        self.win_stale_max = self.win_stale_max.max(tau);
+    }
+
+    /// Close the current window into a row.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sample(
+        &mut self,
+        step: u64,
+        t: f64,
+        loss_ema: f64,
+        live_workers: usize,
+        comm_bytes_total: u64,
+        queue_depth: usize,
+    ) {
+        let stale_mean = if self.win_stale_n > 0 {
+            self.win_stale_sum as f64 / self.win_stale_n as f64
+        } else {
+            0.0
+        };
+        self.rows.push(TimeseriesRow {
+            step,
+            t,
+            wall: self.buf.wall(),
+            loss_ema,
+            live_workers,
+            stale_n: self.win_stale_n,
+            stale_mean,
+            stale_max: self.win_stale_max,
+            comm_bytes_delta: comm_bytes_total.saturating_sub(self.last_comm_bytes),
+            queue_depth,
+        });
+        self.win_stale_n = 0;
+        self.win_stale_sum = 0;
+        self.win_stale_max = 0;
+        self.last_comm_bytes = comm_bytes_total;
+    }
+}
+
+/// What a traced run hands back to the trainer for artifact writing: the
+/// merged (driver + scheduler) event stream and the time-series rows.
+#[derive(Debug, Default)]
+pub struct TraceOut {
+    pub events: Vec<TraceEvent>,
+    pub rows: Vec<TimeseriesRow>,
+}
+
+/// Merge event streams (driver + scheduler) into virtual-time order.
+/// The sort is stable, so same-timestamp events keep producer order.
+pub fn merge_events(mut streams: Vec<Vec<TraceEvent>>) -> Vec<TraceEvent> {
+    let mut all: Vec<TraceEvent> = streams.iter_mut().flat_map(std::mem::take).collect();
+    all.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap_or(std::cmp::Ordering::Equal));
+    all
+}
+
+/// Serialize events as JSON Lines (one record per line).
+pub fn events_to_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::with_capacity(events.len() * 96);
+    for ev in events {
+        out.push_str(&ev.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Serialize time-series rows as CSV (header + one row per sample).
+pub fn rows_to_csv(rows: &[TimeseriesRow]) -> String {
+    let mut out = String::with_capacity(rows.len() * 64 + 96);
+    out.push_str(TIMESERIES_HEADER);
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.to_csv());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_json_has_kind_and_time() {
+        let mut buf = EventBuf::new();
+        buf.emit(EventKind::PushCommit, 1.25, Some(3), Some(7), Some(2), None);
+        let evs = buf.drain();
+        assert_eq!(evs.len(), 1);
+        let j = evs[0].to_json().to_string();
+        assert!(j.contains("\"kind\":\"push_commit\""), "{j}");
+        assert!(j.contains("\"worker\":3"), "{j}");
+        assert!(j.contains("\"tau\":2"), "{j}");
+        assert!(evs[0].wall >= 0.0);
+    }
+
+    #[test]
+    fn merge_orders_by_virtual_time() {
+        let mk = |t: f64, kind| TraceEvent {
+            kind,
+            t,
+            wall: 0.0,
+            worker: None,
+            epoch: None,
+            tau: None,
+            value: None,
+        };
+        let a = vec![mk(0.5, EventKind::Pull), mk(2.0, EventKind::PushCommit)];
+        let b = vec![mk(1.0, EventKind::Crash)];
+        let merged = merge_events(vec![a, b]);
+        let ts: Vec<f64> = merged.iter().map(|e| e.t).collect();
+        assert_eq!(ts, vec![0.5, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn timeseries_window_accumulates_and_resets() {
+        let cfg = crate::config::TraceConfig { enabled: true, ..Default::default() };
+        let mut rt = RunTrace::new(&cfg);
+        rt.observe_commit(2);
+        rt.observe_commit(4);
+        rt.sample(10, 1.0, 0.5, 4, 1000, 3);
+        rt.observe_commit(0);
+        rt.sample(20, 2.0, 0.4, 3, 1500, 2);
+        assert_eq!(rt.rows.len(), 2);
+        assert_eq!(rt.rows[0].stale_n, 2);
+        assert!((rt.rows[0].stale_mean - 3.0).abs() < 1e-12);
+        assert_eq!(rt.rows[0].stale_max, 4);
+        assert_eq!(rt.rows[0].comm_bytes_delta, 1000);
+        assert_eq!(rt.rows[1].stale_n, 1);
+        assert_eq!(rt.rows[1].stale_max, 0);
+        assert_eq!(rt.rows[1].comm_bytes_delta, 500);
+        let csv = rows_to_csv(&rt.rows);
+        assert!(csv.starts_with(TIMESERIES_HEADER));
+        assert_eq!(csv.lines().count(), 3);
+    }
+}

@@ -1,0 +1,336 @@
+//! `dcasgd report <run-dir>`: render a human-readable digest from the
+//! artifacts a traced run writes (`*.summary.json`, `*.timeseries.csv`,
+//! `*.trace.jsonl`, `*.trace.json`).
+//!
+//! The digest is derived purely from files on disk — no artifacts, no
+//! model, no replay — so it works on any machine the run dir was copied
+//! to. Unknown summary schema versions are flagged instead of guessed at
+//! (`schema_version` landed in v2 for exactly this).
+
+use crate::metrics::SUMMARY_SCHEMA_VERSION;
+use crate::util::json::Json;
+use anyhow::{bail, Context};
+use std::fmt::Write as _;
+use std::path::Path;
+
+const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+/// Render `values` as a fixed-width unicode sparkline.
+pub fn sparkline(values: &[f64], width: usize) -> String {
+    if values.is_empty() || width == 0 {
+        return String::new();
+    }
+    // downsample by bucket-mean to at most `width` columns
+    let cols: Vec<f64> = if values.len() <= width {
+        values.to_vec()
+    } else {
+        (0..width)
+            .map(|i| {
+                let lo = i * values.len() / width;
+                let hi = ((i + 1) * values.len() / width).max(lo + 1);
+                values[lo..hi].iter().sum::<f64>() / (hi - lo) as f64
+            })
+            .collect()
+    };
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in &cols {
+        if v.is_finite() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    if !lo.is_finite() {
+        return String::new();
+    }
+    let span = (hi - lo).max(f64::MIN_POSITIVE);
+    cols.iter()
+        .map(|&v| {
+            if !v.is_finite() {
+                return ' ';
+            }
+            let idx = ((v - lo) / span * (SPARK.len() - 1) as f64).round() as usize;
+            SPARK[idx.min(SPARK.len() - 1)]
+        })
+        .collect()
+}
+
+fn human_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.1}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// One parsed timeseries column set (only the digest's columns).
+struct Timeseries {
+    loss_ema: Vec<f64>,
+    stale_mean: Vec<f64>,
+    rows: usize,
+}
+
+fn parse_timeseries(src: &str) -> Option<Timeseries> {
+    let mut lines = src.lines();
+    let header: Vec<&str> = lines.next()?.split(',').collect();
+    let col = |name: &str| header.iter().position(|h| *h == name);
+    let (li, si) = (col("loss_ema")?, col("stale_mean")?);
+    let mut ts = Timeseries { loss_ema: Vec::new(), stale_mean: Vec::new(), rows: 0 };
+    for line in lines {
+        let cells: Vec<&str> = line.split(',').collect();
+        if cells.len() != header.len() {
+            continue;
+        }
+        ts.rows += 1;
+        ts.loss_ema.push(cells[li].parse().unwrap_or(f64::NAN));
+        ts.stale_mean.push(cells[si].parse().unwrap_or(f64::NAN));
+    }
+    Some(ts)
+}
+
+fn digest_profile(out: &mut String, profile: &Json) {
+    let Some(rows) = profile.as_arr() else { return };
+    let total: f64 = rows
+        .iter()
+        .map(|r| r.get("total_ns").as_f64().unwrap_or(0.0))
+        .sum();
+    let mut spans: Vec<(&Json, f64)> = rows
+        .iter()
+        .map(|r| (r, r.get("total_ns").as_f64().unwrap_or(0.0)))
+        .collect();
+    let _ = writeln!(out, "  phase breakdown (profiled spans):");
+    let _ = writeln!(
+        out,
+        "    {:<14} {:>10} {:>10} {:>10} {:>10} {:>7}",
+        "subsystem", "count", "total", "mean", "max", "share"
+    );
+    for r in rows {
+        let count = r.get("count").as_f64().unwrap_or(0.0);
+        let tot = r.get("total_ns").as_f64().unwrap_or(0.0);
+        let _ = writeln!(
+            out,
+            "    {:<14} {:>10} {:>10} {:>10} {:>10} {:>6.1}%",
+            r.get("subsystem").as_str().unwrap_or("?"),
+            count as u64,
+            human_ns(tot),
+            human_ns(r.get("mean_ns").as_f64().unwrap_or(0.0)),
+            human_ns(r.get("max_ns").as_f64().unwrap_or(0.0)),
+            if total > 0.0 { tot / total * 100.0 } else { 0.0 },
+        );
+    }
+    // top-k slowest spans (by single-span max duration)
+    spans.sort_by(|a, b| {
+        let (ma, mb) = (
+            a.0.get("max_ns").as_f64().unwrap_or(0.0),
+            b.0.get("max_ns").as_f64().unwrap_or(0.0),
+        );
+        mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let _ = writeln!(out, "  slowest spans:");
+    for (i, (r, _)) in spans.iter().take(3).enumerate() {
+        let _ = writeln!(
+            out,
+            "    {}. {:<14} max {}",
+            i + 1,
+            r.get("subsystem").as_str().unwrap_or("?"),
+            human_ns(r.get("max_ns").as_f64().unwrap_or(0.0)),
+        );
+    }
+}
+
+fn digest_one(out: &mut String, dir: &Path, base: &str) -> anyhow::Result<()> {
+    let summary_path = dir.join(format!("{base}.summary.json"));
+    let src = std::fs::read_to_string(&summary_path)
+        .with_context(|| format!("reading {}", summary_path.display()))?;
+    let summary = Json::parse(&src)
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", summary_path.display()))?;
+
+    let _ = writeln!(out, "run: {base}");
+    match summary.get("schema_version").as_i64() {
+        Some(v) if v == SUMMARY_SCHEMA_VERSION => {}
+        Some(v) => {
+            let _ = writeln!(
+                out,
+                "  ! schema_version {v} (this build reads v{SUMMARY_SCHEMA_VERSION}); \
+                 fields may be missing"
+            );
+        }
+        None => {
+            let _ = writeln!(out, "  ! pre-v2 summary (no schema_version)");
+        }
+    }
+
+    let rep = summary.get("report");
+    let cfg = summary.get("config");
+    if let (Some(algo), Some(workers)) =
+        (cfg.get("algorithm").as_str(), cfg.get("workers").as_i64())
+    {
+        let _ = writeln!(out, "  config: {algo}, {workers} workers");
+    }
+    let _ = writeln!(
+        out,
+        "  steps: {}  sim time: {:.2}s  wall: {:.2}s",
+        rep.get("total_steps").as_i64().unwrap_or(0),
+        rep.get("total_time").as_f64().unwrap_or(0.0),
+        rep.get("wall_secs").as_f64().unwrap_or(0.0),
+    );
+    let _ = writeln!(
+        out,
+        "  train loss (EMA): {:.4}  test error: {:.4}",
+        rep.get("final_train_loss").as_f64().unwrap_or(f64::NAN),
+        rep.get("final_test_error").as_f64().unwrap_or(f64::NAN),
+    );
+    let _ = writeln!(
+        out,
+        "  staleness: mean {:.2}  p99 {:.0}  max {}   gate wait: {:.2}s   comm: {} bytes",
+        rep.get("staleness_mean").as_f64().unwrap_or(0.0),
+        rep.get("staleness_p99").as_f64().unwrap_or(0.0),
+        rep.get("staleness_max").as_i64().unwrap_or(0),
+        rep.get("wait_total").as_f64().unwrap_or(0.0),
+        rep.get("comm_bytes").as_i64().unwrap_or(0),
+    );
+    let crashes = rep.get("crashes").as_i64().unwrap_or(0);
+    if crashes > 0 || rep.get("late_joins").as_i64().unwrap_or(0) > 0 {
+        let _ = writeln!(
+            out,
+            "  faults: {} crashes, {} restarts, {} departures, {} late joins, \
+             {} dropped / {} salvaged in-flight, {} straggles",
+            crashes,
+            rep.get("restarts").as_i64().unwrap_or(0),
+            rep.get("departures").as_i64().unwrap_or(0),
+            rep.get("late_joins").as_i64().unwrap_or(0),
+            rep.get("dropped_inflight").as_i64().unwrap_or(0),
+            rep.get("salvaged_inflight").as_i64().unwrap_or(0),
+            rep.get("straggle_events").as_i64().unwrap_or(0),
+        );
+    }
+
+    if summary.get("profile").as_arr().is_some() {
+        digest_profile(out, summary.get("profile"));
+    }
+
+    if let Ok(csv) = std::fs::read_to_string(dir.join(format!("{base}.timeseries.csv"))) {
+        if let Some(ts) = parse_timeseries(&csv) {
+            let _ = writeln!(out, "  timeseries: {} samples", ts.rows);
+            let _ = writeln!(out, "    staleness over time: {}", sparkline(&ts.stale_mean, 60));
+            let _ = writeln!(out, "    loss EMA over time:  {}", sparkline(&ts.loss_ema, 60));
+        }
+    }
+
+    if let Ok(jsonl) = std::fs::read_to_string(dir.join(format!("{base}.trace.jsonl"))) {
+        let _ = writeln!(out, "  events: {} (trace.jsonl)", jsonl.lines().count());
+    }
+    let chrome_path = dir.join(format!("{base}.trace.json"));
+    if let Ok(chrome) = std::fs::read_to_string(&chrome_path) {
+        let doc = Json::parse(&chrome)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", chrome_path.display()))?;
+        let n = doc.get("traceEvents").as_arr().map(|a| a.len()).unwrap_or(0);
+        let _ = writeln!(out, "  chrome trace: {n} records (load {base}.trace.json in Perfetto)");
+    }
+    Ok(())
+}
+
+/// Render the digest for every run (`*.summary.json`) found in `dir`.
+pub fn render_digest(dir: &Path) -> anyhow::Result<String> {
+    let mut bases: Vec<String> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading run dir {}", dir.display()))?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| {
+            e.file_name()
+                .to_str()?
+                .strip_suffix(".summary.json")
+                .map(str::to_string)
+        })
+        .collect();
+    if bases.is_empty() {
+        bail!("no *.summary.json found in {}", dir.display());
+    }
+    bases.sort();
+    let mut out = String::new();
+    for base in &bases {
+        digest_one(&mut out, dir, base)?;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparkline_shapes() {
+        assert_eq!(sparkline(&[], 10), "");
+        let s = sparkline(&[0.0, 1.0, 2.0, 3.0], 10);
+        assert_eq!(s.chars().count(), 4);
+        assert!(s.starts_with('▁') && s.ends_with('█'), "{s}");
+        // downsampling to a fixed width
+        let long: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        assert_eq!(sparkline(&long, 60).chars().count(), 60);
+        // a flat series renders at the low band without dividing by zero
+        let flat = sparkline(&[2.0, 2.0, 2.0], 10);
+        assert_eq!(flat.chars().count(), 3);
+    }
+
+    #[test]
+    fn digest_renders_from_written_artifacts() {
+        let dir = std::env::temp_dir().join(format!("dcasgd_report_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // minimal summary + timeseries, as write_run_full lays them out
+        let summary = Json::obj(vec![
+            ("schema_version", SUMMARY_SCHEMA_VERSION.into()),
+            ("config", Json::obj(vec![("algorithm", "asgd".into()), ("workers", 4i64.into())])),
+            (
+                "report",
+                Json::obj(vec![
+                    ("total_steps", 100i64.into()),
+                    ("total_time", 12.5.into()),
+                    ("wall_secs", 0.2.into()),
+                    ("final_train_loss", 0.7.into()),
+                    ("final_test_error", 0.25.into()),
+                    ("staleness_mean", 1.5.into()),
+                    ("staleness_p99", 4.0.into()),
+                    ("staleness_max", 6i64.into()),
+                    ("wait_total", 0.0.into()),
+                    ("comm_bytes", 0i64.into()),
+                    ("crashes", 2i64.into()),
+                    ("restarts", 1i64.into()),
+                    ("departures", 1i64.into()),
+                    ("late_joins", 0i64.into()),
+                    ("dropped_inflight", 1i64.into()),
+                    ("salvaged_inflight", 0i64.into()),
+                    ("straggle_events", 0i64.into()),
+                ]),
+            ),
+            (
+                "profile",
+                Json::arr(vec![Json::obj(vec![
+                    ("subsystem", "shard_lock".into()),
+                    ("count", 10i64.into()),
+                    ("total_ns", 5000i64.into()),
+                    ("mean_ns", 500.0.into()),
+                    ("max_ns", 900i64.into()),
+                ])]),
+            ),
+        ]);
+        std::fs::write(dir.join("run.summary.json"), summary.to_string()).unwrap();
+        std::fs::write(
+            dir.join("run.timeseries.csv"),
+            format!("{}\n10,1.0,0.1,1.5,4,10,1.2,3,100,2\n", crate::trace::TIMESERIES_HEADER),
+        )
+        .unwrap();
+        let digest = render_digest(&dir).unwrap();
+        assert!(digest.contains("run: run"), "{digest}");
+        assert!(digest.contains("steps: 100"), "{digest}");
+        assert!(digest.contains("shard_lock"), "{digest}");
+        assert!(digest.contains("2 crashes"), "{digest}");
+        assert!(digest.contains("staleness over time"), "{digest}");
+        // empty dir errors
+        let empty = dir.join("empty");
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(render_digest(&empty).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -160,6 +160,8 @@ impl ComputePool {
             Some(inner) if tasks > 1 => inner,
             _ => {
                 for i in 0..tasks {
+                    let _prof =
+                        crate::trace::profile::span(crate::trace::profile::Subsystem::PoolJob);
                     f(i);
                 }
                 return;
@@ -231,6 +233,7 @@ fn run_tasks(shared: &Shared, job: Job) {
         if i >= job.tasks {
             break;
         }
+        let _prof = crate::trace::profile::span(crate::trace::profile::Subsystem::PoolJob);
         if let Err(payload) = catch_unwind(AssertUnwindSafe(|| (job.task)(i))) {
             let mut slot = lock_ignore_poison(&shared.panic);
             if slot.is_none() {
@@ -320,6 +323,16 @@ impl<T: Send> GradPipeline<T> {
     /// Is a compute in flight for `worker`?
     pub fn has(&self, worker: usize) -> bool {
         self.queued.contains(&worker) || lock_ignore_poison(&self.slots[worker]).is_some()
+    }
+
+    /// Queued-but-unevaluated computes (what the next flush will burst).
+    pub fn queued_len(&self) -> usize {
+        self.queued.len()
+    }
+
+    /// Is `worker`'s result already evaluated (a take would not flush)?
+    pub fn is_ready(&self, worker: usize) -> bool {
+        lock_ignore_poison(&self.slots[worker]).is_some()
     }
 
     /// Register `worker` for the next flush. At most one compute may be in

@@ -1,0 +1,315 @@
+//! Run-trace observability pins (`[trace]`, PR 8).
+//!
+//! Three layers of guarantees:
+//!
+//! * **Bitwise inertness** — enabling tracing must not change a single
+//!   schedule decision or produced bit. Pinned twice: at the scheduler
+//!   level (same seed, same fault plan, traced vs untraced → identical
+//!   event streams and fault counters; artifact-free) and at the full-run
+//!   level (trace-on vs trace-off → field-identical `TrainReport`s and
+//!   byte-identical checkpoints across the protocol matrix; skips without
+//!   compiled PJRT artifacts, like `integration.rs`).
+//! * **Event ↔ counter reconciliation** — every `FaultStats` counter has a
+//!   1:1 event kind; a seeded chaos plan's drained event stream must count
+//!   out to exactly the scheduler's own statistics.
+//! * **Chrome golden** — a real traced stream renders to a trace-event
+//!   document with non-decreasing timestamps and balanced `B`/`E` pairs
+//!   (what Perfetto requires to load the file at all).
+
+use dc_asgd::config::{Algorithm, DelayModel, ExperimentConfig};
+use dc_asgd::coordinator::Trainer;
+use dc_asgd::sim::{
+    CommCosts, CrashPolicy, DelaySampler, FaultConfig, FaultPlan, FullyAsync, Protocol, Scheduler,
+    SimEvent, StalenessBounded,
+};
+use dc_asgd::trace::{EventKind, TraceEvent};
+use dc_asgd::util::json::Json;
+
+fn churn_faults(seed: u64, policy: CrashPolicy) -> FaultConfig {
+    FaultConfig {
+        enabled: true,
+        crash_rate: 0.08,
+        restart_mean: 2.0,
+        departure_prob: 0.2,
+        straggler_rate: 0.05,
+        straggler_factor: 3.0,
+        straggler_duration: 2.0,
+        late_join: 1,
+        late_join_by: 4.0,
+        policy,
+        seed,
+    }
+}
+
+/// Drive a scheduler to exhaustion (bounded), calling `complete` on every
+/// finish — the minimal driver contract. Returns a schedule fingerprint:
+/// one `(kind-tag, time-bits, worker)` triple per observable event.
+fn drive(sched: &mut Scheduler, max_events: usize) -> Vec<(u8, u64, usize)> {
+    let mut fp = Vec::new();
+    for _ in 0..max_events {
+        match sched.next_event() {
+            None => break,
+            Some(SimEvent::Finish { time, worker }) => {
+                fp.push((0u8, time.to_bits(), worker));
+                sched.complete(worker);
+            }
+            Some(SimEvent::Crash { time, worker, .. }) => {
+                fp.push((1u8, time.to_bits(), worker));
+            }
+            Some(SimEvent::Join { time, worker, .. }) => {
+                fp.push((2u8, time.to_bits(), worker));
+            }
+        }
+    }
+    fp
+}
+
+fn churn_scheduler(seed: u64, policy: CrashPolicy, protocol: Box<dyn Protocol>) -> Scheduler {
+    let m = 5;
+    let plan = FaultPlan::from_config(&churn_faults(seed, policy), m, seed);
+    assert!(plan.is_some(), "churn fault config must build a plan");
+    let delays = DelaySampler::new(DelayModel::Uniform { mean: 1.0, jitter: 0.4 }, m, seed ^ 0x77);
+    Scheduler::with_faults(protocol, delays, 0.01, CommCosts::default(), plan)
+}
+
+/// Scheduler-level inertness: tracing must not perturb one schedule bit.
+#[test]
+fn traced_scheduler_reproduces_untraced_schedule_bitwise() {
+    for seed in [3u64, 11, 42] {
+        for policy in [CrashPolicy::Drop, CrashPolicy::Salvage] {
+            let mut plain = churn_scheduler(seed, policy, Box::new(FullyAsync));
+            let mut traced = churn_scheduler(seed, policy, Box::new(FullyAsync));
+            traced.enable_trace();
+            assert_eq!(plain.start(), traced.start());
+            let fp_plain = drive(&mut plain, 2000);
+            let fp_traced = drive(&mut traced, 2000);
+            assert_eq!(
+                fp_plain, fp_traced,
+                "seed {seed} {policy:?}: tracing perturbed the schedule"
+            );
+            assert_eq!(plain.fault_stats(), traced.fault_stats());
+            assert!(!traced.drain_trace().is_empty(), "traced run produced no events");
+            assert!(plain.drain_trace().is_empty(), "untraced scheduler buffered events");
+        }
+    }
+}
+
+fn count(events: &[TraceEvent], kind: EventKind) -> u64 {
+    events.iter().filter(|e| e.kind == kind).count() as u64
+}
+
+/// Every `FaultStats` counter reconciles 1:1 with a traced event kind.
+#[test]
+fn event_stream_reconciles_with_fault_stats_exactly() {
+    for seed in [1u64, 7, 19, 23] {
+        for policy in [CrashPolicy::Drop, CrashPolicy::Salvage] {
+            let mut sched = churn_scheduler(seed, policy, Box::new(FullyAsync));
+            sched.enable_trace();
+            sched.start();
+            drive(&mut sched, 2500);
+            let stats = sched.fault_stats();
+            let events = sched.drain_trace();
+            let ctx = format!("seed {seed} {policy:?}");
+            assert_eq!(count(&events, EventKind::Crash), stats.crashes, "{ctx}: crashes");
+            assert_eq!(
+                count(&events, EventKind::InflightDropped),
+                stats.dropped_inflight,
+                "{ctx}: dropped"
+            );
+            assert_eq!(
+                count(&events, EventKind::InflightSalvaged),
+                stats.salvaged_inflight,
+                "{ctx}: salvaged"
+            );
+            assert_eq!(count(&events, EventKind::Depart), stats.departures, "{ctx}: departures");
+            assert_eq!(count(&events, EventKind::Restart), stats.restarts, "{ctx}: restarts");
+            assert_eq!(count(&events, EventKind::Join), stats.late_joins, "{ctx}: late joins");
+            assert_eq!(
+                count(&events, EventKind::Straggle),
+                stats.straggle_events,
+                "{ctx}: straggles"
+            );
+            // the policy split is exclusive: Drop never salvages, Salvage
+            // never drops
+            match policy {
+                CrashPolicy::Drop => assert_eq!(count(&events, EventKind::InflightSalvaged), 0),
+                CrashPolicy::Salvage => assert_eq!(count(&events, EventKind::InflightDropped), 0),
+            }
+        }
+    }
+}
+
+/// Gate waits emit as Begin/End pairs with the back-dated Begin preceding
+/// its End by exactly the recorded wait.
+#[test]
+fn gate_wait_spans_pair_up_and_match_waits() {
+    // SSP bound 0 over a churning fleet: plenty of gate waits
+    let mut sched = churn_scheduler(5, CrashPolicy::Drop, Box::new(StalenessBounded { bound: 0 }));
+    sched.enable_trace();
+    sched.start();
+    drive(&mut sched, 2500);
+    let events = sched.drain_trace();
+    let begins = count(&events, EventKind::GateWaitBegin);
+    let ends = count(&events, EventKind::GateWaitEnd);
+    assert!(begins > 0, "SSP(0) under churn produced no gate waits");
+    assert_eq!(begins, ends, "unpaired gate-wait events");
+    // each End carries the wait; its Begin sits wait seconds earlier
+    let mut open: Vec<(usize, f64)> = Vec::new();
+    for e in &events {
+        match e.kind {
+            EventKind::GateWaitBegin => open.push((e.worker.unwrap(), e.t)),
+            EventKind::GateWaitEnd => {
+                let w = e.worker.unwrap();
+                let i = open
+                    .iter()
+                    .position(|&(ow, _)| ow == w)
+                    .unwrap_or_else(|| panic!("end without begin for worker {w}"));
+                let (_, t0) = open.swap_remove(i);
+                let waited = e.value.expect("gate-wait end without a wait value");
+                assert!(
+                    (e.t - t0 - waited).abs() < 1e-9,
+                    "span extent {} != recorded wait {waited}",
+                    e.t - t0
+                );
+            }
+            _ => {}
+        }
+    }
+    assert!(open.is_empty());
+}
+
+/// Chrome golden: a REAL traced stream renders to a loadable document —
+/// valid JSON, non-decreasing `ts`, balanced `B`/`E` pairs per track.
+#[test]
+fn chrome_trace_from_real_stream_is_loadable() {
+    let mut sched = churn_scheduler(9, CrashPolicy::Salvage, Box::new(StalenessBounded { bound: 1 }));
+    sched.enable_trace();
+    sched.start();
+    drive(&mut sched, 2500);
+    let events = dc_asgd::trace::merge_events(vec![sched.drain_trace()]);
+    assert!(!events.is_empty());
+    // merge_events must deliver virtual-time order even with back-dated
+    // gate-wait Begins
+    for pair in events.windows(2) {
+        assert!(pair[0].t <= pair[1].t, "merged stream out of order");
+    }
+    let doc = dc_asgd::trace::chrome::render(&events).to_string();
+    let parsed = Json::parse(&doc).expect("chrome trace is not valid JSON");
+    let recs = parsed.get("traceEvents").as_arr().expect("no traceEvents array");
+    assert!(recs.len() >= events.len(), "events were dropped in rendering");
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut depth = 0i64;
+    for r in recs {
+        let ts = r.get("ts").as_f64().expect("record without ts");
+        assert!(ts >= last_ts, "ts regressed: {last_ts} -> {ts}");
+        last_ts = ts;
+        match r.get("ph").as_str() {
+            Some("B") => depth += 1,
+            Some("E") => {
+                depth -= 1;
+                assert!(depth >= 0, "E without matching B");
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(depth, 0, "unbalanced B/E pairs");
+}
+
+// ---- full-run inertness (needs compiled PJRT artifacts) -----------------
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = dc_asgd::find_artifacts_dir();
+    if dir.is_none() {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+    }
+    dir
+}
+
+fn churn_cfg(algo: Algorithm) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset_quickstart();
+    cfg.algorithm = algo;
+    cfg.workers = 4;
+    cfg.staleness_bound = 2;
+    cfg.epochs = 2;
+    cfg.train_size = 512;
+    cfg.test_size = 256;
+    cfg.eval_every = 1;
+    cfg.seed = 12345;
+    cfg.faults = churn_faults(0, CrashPolicy::Drop);
+    cfg.faults.departure_prob = 0.0; // keep the fleet alive for the run
+    cfg
+}
+
+/// Trace-on vs trace-off: field-identical reports, byte-identical
+/// checkpoints, across the protocol matrix, under fault churn — plus the
+/// promised artifacts (Perfetto-loadable trace, >= steps/sample_every
+/// telemetry rows, profile block in the summary).
+#[test]
+fn traced_runs_are_bit_identical_and_write_artifacts() {
+    if artifacts().is_none() {
+        return;
+    }
+    let tmp = std::env::temp_dir().join(format!("dcasgd_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    for algo in [Algorithm::Asgd, Algorithm::DcAsgdConst, Algorithm::SyncSgd, Algorithm::Ssp] {
+        let tag = format!("{algo:?}").to_lowercase();
+
+        let mut off = churn_cfg(algo);
+        off.checkpoint_out = tmp.join(format!("{tag}_off.ck")).to_string_lossy().into_owned();
+        let off_report = Trainer::new(off).unwrap().run().unwrap();
+
+        let mut on = churn_cfg(algo);
+        on.trace.enabled = true;
+        on.trace.sample_every = 5;
+        on.checkpoint_out = tmp.join(format!("{tag}_on.ck")).to_string_lossy().into_owned();
+        on.out_dir = tmp.to_string_lossy().into_owned();
+        on.tag = tag.clone();
+        let on_report = Trainer::new(on).unwrap().run().unwrap();
+
+        // every report field except host wallclock must match exactly
+        assert_eq!(off_report.total_steps, on_report.total_steps, "{tag}");
+        assert_eq!(off_report.final_train_loss, on_report.final_train_loss, "{tag}");
+        assert_eq!(off_report.final_test_loss, on_report.final_test_loss, "{tag}");
+        assert_eq!(off_report.final_test_error, on_report.final_test_error, "{tag}");
+        assert_eq!(off_report.best_test_error, on_report.best_test_error, "{tag}");
+        assert_eq!(off_report.total_time, on_report.total_time, "{tag}");
+        assert_eq!(off_report.passes, on_report.passes, "{tag}");
+        assert_eq!(off_report.staleness_mean, on_report.staleness_mean, "{tag}");
+        assert_eq!(off_report.staleness_p99, on_report.staleness_p99, "{tag}");
+        assert_eq!(off_report.staleness_max, on_report.staleness_max, "{tag}");
+        assert_eq!(off_report.wait_total, on_report.wait_total, "{tag}");
+        assert_eq!(off_report.comm_bytes, on_report.comm_bytes, "{tag}");
+        assert_eq!(off_report.faults, on_report.faults, "{tag}");
+        assert_eq!(off_report.staleness_hist, on_report.staleness_hist, "{tag}");
+
+        // checkpoints must be byte-identical
+        let ck_off = std::fs::read(tmp.join(format!("{tag}_off.ck"))).unwrap();
+        let ck_on = std::fs::read(tmp.join(format!("{tag}_on.ck"))).unwrap();
+        assert_eq!(ck_off, ck_on, "{tag}: tracing changed checkpoint bytes");
+
+        // promised artifacts: Perfetto-loadable chrome trace
+        let chrome = std::fs::read_to_string(tmp.join(format!("{tag}.trace.json"))).unwrap();
+        let doc = Json::parse(&chrome).unwrap();
+        assert!(!doc.get("traceEvents").as_arr().unwrap().is_empty(), "{tag}");
+        // >= total_steps / sample_every telemetry rows
+        let csv = std::fs::read_to_string(tmp.join(format!("{tag}.timeseries.csv"))).unwrap();
+        let rows = csv.lines().count().saturating_sub(1) as u64;
+        assert!(
+            rows >= on_report.total_steps / 5,
+            "{tag}: {rows} telemetry rows < {} steps / 5",
+            on_report.total_steps
+        );
+        // per-subsystem profile block in the summary JSON
+        let summary =
+            std::fs::read_to_string(tmp.join(format!("{tag}.summary.json"))).unwrap();
+        let sj = Json::parse(&summary).unwrap();
+        assert!(sj.get("profile").as_arr().is_some(), "{tag}: no profile block");
+        // structured events present
+        let jsonl = std::fs::read_to_string(tmp.join(format!("{tag}.trace.jsonl"))).unwrap();
+        assert!(jsonl.lines().count() > 0, "{tag}");
+        // and the digest renders
+        let digest = dc_asgd::trace::report::render_digest(&tmp).unwrap();
+        assert!(digest.contains(&format!("run: {tag}")), "{digest}");
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}
