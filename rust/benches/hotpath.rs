@@ -37,8 +37,14 @@
 //!
 //! Both baseline files carry a `"host"` provenance block (core count,
 //! `quiet_box` flag, caveat note): absolute timings only transfer between
-//! comparable quiet boxes, so the gate prints the block on failure and
-//! fresh writes stamp it with `quiet_box: false` until a human verifies.
+//! comparable quiet boxes. Gate mode therefore checks the block BEFORE
+//! measuring — a core-count mismatch with the measuring host, or a
+//! baseline whose `quiet_box` nobody flipped to true, skips the gate
+//! loudly (with re-calibration instructions) instead of failing on noise
+//! or passing vacuously; fresh writes stamp `quiet_box: false` until a
+//! human verifies. Individual result cells set to 0 in the committed
+//! baseline mean "algorithm changed since calibration — awaiting
+//! re-measurement"; the gate names and skips them.
 
 use dc_asgd::bench::{header, time_fn};
 use dc_asgd::compress::codecs::{pack_levels, pack_levels_scalar};
@@ -182,6 +188,26 @@ fn main() {
             eprintln!(
                 "PERF GATE SKIPPED: committed baseline is uncalibrated (placeholder) — \
                  run `cargo bench --bench hotpath` on a quiet machine and commit the result"
+            );
+            return;
+        }
+        // Host-class check: absolute timings only transfer between
+        // comparable quiet boxes. A core-count mismatch (or a baseline
+        // measured on a box nobody vouched for) means a gate failure would
+        // indict the *measurement*, not the code — skip LOUDLY instead of
+        // failing on noise or passing vacuously.
+        let host = committed.get("host");
+        let base_cores = host.get("cores").as_i64().unwrap_or(0);
+        let base_quiet = host.get("quiet_box").as_bool().unwrap_or(false);
+        let here_cores =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as i64;
+        if base_cores != here_cores || !base_quiet {
+            eprintln!(
+                "PERF GATE SKIPPED (host class mismatch): baseline measured on \
+                 {base_cores} core(s), quiet_box={base_quiet}; this host has \
+                 {here_cores} core(s). Absolute timings do not transfer across host \
+                 classes — re-calibrate with `cargo bench --bench hotpath` on a quiet \
+                 box of this class, verify, and commit the refreshed BENCH_PR6.json."
             );
             return;
         }

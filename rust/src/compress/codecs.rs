@@ -668,6 +668,25 @@ impl Qsgd {
     }
 }
 
+/// SplitMix64 finalizer — the per-element mixing step of QSGD's
+/// counter-based rounding hash.
+#[inline(always)]
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Uniform `[0, 1)` rounding draw for element `i` under encode key `key`:
+/// a pure function of `(key, i)`, so the quantize loop carries no RNG
+/// state from one element to the next (53-bit mantissa fill, the same
+/// convention as [`Pcg64::next_f64`]).
+#[inline(always)]
+fn rounding_draw(key: u64, i: u64) -> f64 {
+    (mix64(key ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15)) >> 11) as f64
+        * (1.0 / (1u64 << 53) as f64)
+}
+
 impl GradientCodec for Qsgd {
     fn name(&self) -> &'static str {
         "qsgd"
@@ -698,19 +717,22 @@ impl GradientCodec for Qsgd {
         }
         let l = ((1u32 << (self.bits - 1)) - 1) as f32;
         let li = l as i64;
-        // Same per-element quantization math and the same one-draw-per-
-        // element RNG sequence on both paths; only the level packing
-        // differs (streaming word accumulator vs per-field write_bits),
-        // and those emit identical bytes — so the payload is bit-identical
-        // either way (`simd_toggle_paths_are_bit_identical`).
+        // Counter-based stochastic rounding: ONE key per encode from the
+        // codec's stream, then [`rounding_draw`] hashes `(key, i)` for each
+        // element. Iterations carry no RNG state between them — the old
+        // `rng.next_f64()`-per-element chain serialized the whole quantize
+        // loop and cost the streaming path its vectorization — and both
+        // packing paths consume the identical draw sequence, so the payload
+        // is bit-identical either way (`simd_toggle_paths_are_bit_identical`).
+        let key = self.rng.next_u64();
         if crate::optim::simd_enabled() {
             let mut packer = BitPacker::new();
-            for &x in g.iter() {
+            for (i, &x) in g.iter().enumerate() {
                 let scaled = x / norm * l; // in [-l, l]
                 let lo = scaled.floor();
                 let p = scaled - lo;
-                let q =
-                    (lo as i64 + (self.rng.next_f64() < p as f64) as i64).clamp(-li, li);
+                let q = (lo as i64 + (rounding_draw(key, i as u64) < p as f64) as i64)
+                    .clamp(-li, li);
                 packer.push(packed, self.bits, (q + li) as u64);
             }
             packer.finish(packed);
@@ -719,8 +741,8 @@ impl GradientCodec for Qsgd {
                 let scaled = x / norm * l; // in [-l, l]
                 let lo = scaled.floor();
                 let p = scaled - lo;
-                let q =
-                    (lo as i64 + (self.rng.next_f64() < p as f64) as i64).clamp(-li, li);
+                let q = (lo as i64 + (rounding_draw(key, i as u64) < p as f64) as i64)
+                    .clamp(-li, li);
                 write_bits(packed, i * self.bits as usize, self.bits, (q + li) as u64);
             }
         }
@@ -1158,6 +1180,22 @@ mod tests {
         for (i, (&m, &x)) in mean.iter().zip(&g).enumerate() {
             assert!((m - x as f64).abs() < tol, "elem {i}: mean {m} vs {x} (tol {tol})");
         }
+    }
+
+    #[test]
+    fn qsgd_counter_rng_is_deterministic_per_seed_and_fresh_per_encode() {
+        // one rounding key per encode: same seed + call sequence must
+        // reproduce the payload exactly, while successive encodes of the
+        // same gradient draw fresh keys and move the stochastic levels
+        let g = grad(30, 777);
+        let mut a = Qsgd::new(4, Pcg64::new(55));
+        let mut b = Qsgd::new(4, Pcg64::new(55));
+        let (mut oa, mut ob) = (WirePayload::default(), WirePayload::default());
+        a.encode(&g, &mut oa);
+        b.encode(&g, &mut ob);
+        assert_eq!(oa, ob, "same seed + call sequence must give identical payloads");
+        b.encode(&g, &mut ob);
+        assert_ne!(oa, ob, "successive encodes reused the rounding key");
     }
 
     #[test]

@@ -242,7 +242,7 @@ fn build_knobs() -> Vec<Knob> {
             id: "/algorithm",
             toml_key: "algorithm",
             cli: Some("algo"),
-            ty: Ty::Enum(&["sgd", "ssgd", "dc-ssgd", "asgd", "dc-asgd-c", "dc-asgd-a", "ssp", "dc-s3gd"]),
+            ty: Ty::Enum(&["sgd", "ssgd", "dc-ssgd", "asgd", "dc-asgd-c", "dc-asgd-a", "ssp", "dc-s3gd", "hier-ssgd"]),
             bounds: None,
             default: "asgd",
             help: "update rule / parallelization protocol",
@@ -816,6 +816,135 @@ fn build_knobs() -> Vec<Knob> {
                 Ok(())
             },
         },
+        // [topology]: racks + multi-PS placement; same auto-enable
+        // convention as [comm], explicit `enabled` declared last
+        Knob {
+            id: "/topology/ps_nodes",
+            toml_key: "topology.ps_nodes",
+            cli: Some("ps-nodes"),
+            ty: Ty::USize,
+            bounds: bounds(1.0, false, 1024.0, false, "topology.ps_nodes must be in [1, 1024]"),
+            default: "1",
+            help: "logical PS nodes shards are placed across (enables [topology])",
+            ctx: "",
+            get: |c| Some(Value::Int(c.topology.ps_nodes as i64)),
+            set: |c, v| {
+                c.topology.ps_nodes = want_usize("topology.ps_nodes", v)?;
+                c.topology.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/topology/racks",
+            toml_key: "topology.racks",
+            cli: Some("racks"),
+            ty: Ty::USize,
+            bounds: bounds(1.0, false, 256.0, false, "topology.racks must be in [1, 256]"),
+            default: "1",
+            help: "racks workers/PS nodes stripe over (enables [topology])",
+            ctx: "",
+            get: |c| Some(Value::Int(c.topology.racks as i64)),
+            set: |c, v| {
+                c.topology.racks = want_usize("topology.racks", v)?;
+                c.topology.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/topology/rack_per_push",
+            toml_key: "topology.rack_per_push",
+            cli: Some("rack-per-push"),
+            ty: Ty::F64,
+            bounds: bounds(0.0, false, UNBOUNDED, false, "topology link costs must be finite and >= 0"),
+            default: "per sim::CommModel::infiniband_like",
+            help: "rack-local link: seconds per transfer (enables [topology])",
+            ctx: "",
+            get: |c| Some(Value::Float(c.topology.rack_model.per_push)),
+            set: |c, v| {
+                c.topology.rack_model.per_push = want_f64("topology.rack_per_push", v)?;
+                c.topology.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/topology/rack_per_mb",
+            toml_key: "topology.rack_per_mb",
+            cli: Some("rack-per-mb"),
+            ty: Ty::F64,
+            bounds: bounds(0.0, false, UNBOUNDED, false, "topology link costs must be finite and >= 0"),
+            default: "per sim::CommModel::infiniband_like",
+            help: "rack-local link: seconds per MB (enables [topology])",
+            ctx: "",
+            get: |c| Some(Value::Float(c.topology.rack_model.per_mb)),
+            set: |c, v| {
+                c.topology.rack_model.per_mb = want_f64("topology.rack_per_mb", v)?;
+                c.topology.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/topology/cross_per_push",
+            toml_key: "topology.cross_per_push",
+            cli: Some("cross-per-push"),
+            ty: Ty::F64,
+            bounds: bounds(0.0, false, UNBOUNDED, false, "topology link costs must be finite and >= 0"),
+            default: "per sim::CommModel::ethernet_like",
+            help: "cross-rack uplink: seconds per transfer (enables [topology])",
+            ctx: "",
+            get: |c| Some(Value::Float(c.topology.cross_model.per_push)),
+            set: |c, v| {
+                c.topology.cross_model.per_push = want_f64("topology.cross_per_push", v)?;
+                c.topology.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/topology/cross_per_mb",
+            toml_key: "topology.cross_per_mb",
+            cli: Some("cross-per-mb"),
+            ty: Ty::F64,
+            bounds: bounds(0.0, false, UNBOUNDED, false, "topology link costs must be finite and >= 0"),
+            default: "per sim::CommModel::ethernet_like",
+            help: "cross-rack uplink: seconds per MB (enables [topology])",
+            ctx: "",
+            get: |c| Some(Value::Float(c.topology.cross_model.per_mb)),
+            set: |c, v| {
+                c.topology.cross_model.per_mb = want_f64("topology.cross_per_mb", v)?;
+                c.topology.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/topology/hierarchical",
+            toml_key: "topology.hierarchical",
+            cli: Some("hierarchical"),
+            ty: Ty::Bool,
+            bounds: None,
+            default: "false",
+            help: "two-level rack-reducer aggregation (enables [topology])",
+            ctx: "",
+            get: |c| Some(Value::Bool(c.topology.hierarchical)),
+            set: |c, v| {
+                c.topology.hierarchical = want_bool("topology.hierarchical", v)?;
+                c.topology.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/topology/enabled",
+            toml_key: "topology.enabled",
+            cli: None,
+            ty: Ty::Bool,
+            bounds: None,
+            default: "false",
+            help: "topology-aware comm + PS placement (explicit key wins)",
+            ctx: "",
+            get: |c| Some(Value::Bool(c.topology.enabled)),
+            set: |c, v| {
+                c.topology.enabled = want_bool("topology.enabled", v)?;
+                Ok(())
+            },
+        },
         // [faults]: same auto-enable convention as [comm]
         Knob {
             id: "/faults/crash_rate",
@@ -1309,7 +1438,10 @@ fn build_rules() -> Vec<Rule> {
     let codec_domain: fn(&ExperimentConfig) -> anyhow::Result<()> = |c| c.compress.validate();
     let compress_barrier: fn(&ExperimentConfig) -> anyhow::Result<()> = |c| {
         if !c.compress.is_none()
-            && matches!(c.algorithm, Algorithm::SyncSgd | Algorithm::DcSyncSgd)
+            && matches!(
+                c.algorithm,
+                Algorithm::SyncSgd | Algorithm::DcSyncSgd | Algorithm::HierSsgd
+            )
         {
             bail!(
                 "{} folds dense gradients at the barrier: compression requires an \
@@ -1416,6 +1548,81 @@ fn build_rules() -> Vec<Rule> {
             needle: "folds dense gradients",
             example: "algorithm = \"dc-ssgd\"\n[compress]\ncodec = \"qsgd\"",
             check: compress_barrier,
+        },
+        Rule {
+            id: "compress-barrier-hier-ssgd",
+            needle: "folds dense gradients",
+            example: "algorithm = \"hier-ssgd\"\n[compress]\ncodec = \"topk\"",
+            check: compress_barrier,
+        },
+        Rule {
+            id: "hier-ssgd-threads",
+            needle: "event-driven scheduler",
+            example: "algorithm = \"hier-ssgd\"\nexec_mode = \"threads\"",
+            check: |c| {
+                if c.algorithm == Algorithm::HierSsgd && c.exec_mode == ExecMode::Threads {
+                    bail!(
+                        "hier-ssgd folds rack partials under the event-driven \
+                         scheduler: set exec_mode = sim"
+                    );
+                }
+                Ok(())
+            },
+        },
+        Rule {
+            id: "topology-threads",
+            needle: "event-driven scheduler",
+            example: "exec_mode = \"threads\"\n[topology]\nenabled = true",
+            check: |c| {
+                if c.topology.enabled && c.exec_mode == ExecMode::Threads {
+                    bail!(
+                        "fleet topology runs under the event-driven scheduler: \
+                         set exec_mode = sim"
+                    );
+                }
+                Ok(())
+            },
+        },
+        Rule {
+            id: "topology-comm-overlap",
+            needle: "at most one of [comm] and [topology]",
+            example: "[comm]\nenabled = true\n[topology]\nenabled = true",
+            check: |c| {
+                if c.topology.enabled && c.comm.enabled {
+                    bail!(
+                        "enable at most one of [comm] and [topology]: the topology \
+                         model derives per-worker transfer charges itself"
+                    );
+                }
+                Ok(())
+            },
+        },
+        Rule {
+            id: "topology-hier-barrier",
+            needle: "hierarchical aggregation folds at a barrier",
+            example: "algorithm = \"asgd\"\nworkers = 4\n[topology]\nracks = 2\nhierarchical = true",
+            check: |c| {
+                if c.topology.enabled
+                    && c.topology.hierarchical
+                    && !matches!(
+                        c.algorithm,
+                        Algorithm::SyncSgd | Algorithm::DcSyncSgd | Algorithm::HierSsgd
+                    )
+                {
+                    bail!(
+                        "hierarchical aggregation folds at a barrier: it requires a \
+                         barrier-commit algorithm (ssgd/dc-ssgd/hier-ssgd), not {}",
+                        c.algorithm.name()
+                    );
+                }
+                Ok(())
+            },
+        },
+        Rule {
+            id: "topology-racks-fleet",
+            needle: "every rack must hold at least one worker",
+            example: "workers = 2\n[topology]\nracks = 4",
+            check: |c| c.topology.validate(c.workers),
         },
         Rule {
             id: "compress-momentum",

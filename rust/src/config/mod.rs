@@ -34,6 +34,11 @@ pub enum Algorithm {
     /// Delay-compensated SSP (DC-S3GD, Rigazzi et al. 2019): the SSP
     /// schedule with the constant-lambda DC update against w_bak.
     DcS3gd,
+    /// Hierarchical synchronous SGD: the SSGD barrier schedule with
+    /// two-level aggregation — rack reducers fold their residents'
+    /// gradients, the root folds one partial per rack (`[topology]`).
+    /// With one rack it degenerates to plain SSGD bit-for-bit.
+    HierSsgd,
 }
 
 impl Algorithm {
@@ -47,8 +52,9 @@ impl Algorithm {
             "dc-asgd-a" | "dcasgd-a" | "dc-a" => Algorithm::DcAsgdAdaptive,
             "ssp" | "s3gd" => Algorithm::Ssp,
             "dc-s3gd" | "dcs3gd" | "dc-ssp" => Algorithm::DcS3gd,
+            "hier-ssgd" | "hierssgd" | "hier" => Algorithm::HierSsgd,
             other => bail!(
-                "unknown algorithm {other:?} (sgd|ssgd|dc-ssgd|asgd|dc-asgd-c|dc-asgd-a|ssp|dc-s3gd)"
+                "unknown algorithm {other:?} (sgd|ssgd|dc-ssgd|asgd|dc-asgd-c|dc-asgd-a|ssp|dc-s3gd|hier-ssgd)"
             ),
         })
     }
@@ -63,6 +69,7 @@ impl Algorithm {
             Algorithm::DcAsgdAdaptive => "dc-asgd-a",
             Algorithm::Ssp => "ssp",
             Algorithm::DcS3gd => "dc-s3gd",
+            Algorithm::HierSsgd => "hier-ssgd",
         }
     }
 
@@ -321,6 +328,9 @@ pub struct ExperimentConfig {
     pub delay: DelayModel,
     /// Communication-cost model (`[comm]`; off by default).
     pub comm: CommConfig,
+    /// Fleet topology: racks + multi-PS placement with a topology-aware
+    /// comm model (`[topology]`; off by default — bitwise-inert).
+    pub topology: crate::sim::TopologyConfig,
     /// Fault injection & elastic membership (`[faults]`; off by default —
     /// schedules and trajectories are bit-identical with it off).
     pub faults: crate::sim::FaultConfig,
@@ -372,6 +382,7 @@ impl Default for ExperimentConfig {
             exec_mode: ExecMode::SimulatedTime,
             delay: DelayModel::Uniform { mean: 1.0, jitter: 0.3 },
             comm: CommConfig::default(),
+            topology: crate::sim::TopologyConfig::default(),
             faults: crate::sim::FaultConfig::default(),
             compress: crate::compress::CodecConfig::None,
             update_backend: UpdateBackend::Native,
@@ -533,6 +544,10 @@ impl ExperimentConfig {
             ("comm_enabled", self.comm.enabled.into()),
             ("comm_per_push", self.comm.model.per_push.into()),
             ("comm_per_mb", self.comm.model.per_mb.into()),
+            ("topology_enabled", self.topology.enabled.into()),
+            ("topology_ps_nodes", self.topology.ps_nodes.into()),
+            ("topology_racks", self.topology.racks.into()),
+            ("topology_hierarchical", self.topology.hierarchical.into()),
             ("faults_enabled", self.faults.enabled.into()),
             ("fault_crash_rate", self.faults.crash_rate.into()),
             ("fault_restart_mean", self.faults.restart_mean.into()),
@@ -581,6 +596,7 @@ mod tests {
             Algorithm::DcAsgdAdaptive,
             Algorithm::Ssp,
             Algorithm::DcS3gd,
+            Algorithm::HierSsgd,
         ] {
             assert_eq!(Algorithm::parse(a.name()).unwrap(), a);
         }
@@ -602,6 +618,10 @@ mod tests {
         assert!(Algorithm::Ssp.is_staleness_bounded());
         assert!(Algorithm::DcS3gd.is_staleness_bounded());
         assert!(!Algorithm::Asgd.is_staleness_bounded());
+        // hierarchical SSGD is a barrier algorithm, plain fold
+        assert!(!Algorithm::HierSsgd.is_async());
+        assert!(!Algorithm::HierSsgd.is_delay_compensated());
+        assert!(!Algorithm::HierSsgd.is_staleness_bounded());
     }
 
     #[test]
@@ -858,6 +878,71 @@ mod tests {
         let json = cfg.to_json().to_string();
         assert!(json.contains("\"faults_enabled\""));
         assert!(json.contains("\"fault_policy\""));
+    }
+
+    #[test]
+    fn from_toml_topology_section() {
+        // default: off, inert
+        let cfg = ExperimentConfig::from_toml("workers = 2").unwrap();
+        assert!(!cfg.topology.enabled);
+        assert_eq!(cfg.topology, crate::sim::TopologyConfig::default());
+
+        // enable with custom parameters
+        let cfg = ExperimentConfig::from_toml(
+            "workers = 8\n[topology]\nenabled = true\nps_nodes = 4\nracks = 2\n\
+             rack_per_push = 1e-5\nrack_per_mb = 1e-4\ncross_per_push = 3e-4\n\
+             cross_per_mb = 1e-3",
+        )
+        .unwrap();
+        assert!(cfg.topology.enabled);
+        assert_eq!(cfg.topology.ps_nodes, 4);
+        assert_eq!(cfg.topology.racks, 2);
+        assert_eq!(cfg.topology.rack_model.per_push, 1e-5);
+        assert_eq!(cfg.topology.cross_model.per_mb, 1e-3);
+        assert!(!cfg.topology.hierarchical);
+
+        // setting a parameter activates the section (same semantics as
+        // [comm]/[faults]) ...
+        let cfg = ExperimentConfig::from_toml("workers = 8\n[topology]\nracks = 2").unwrap();
+        assert!(cfg.topology.enabled);
+        assert_eq!(cfg.topology.racks, 2);
+        // ... but an explicit `enabled` key always wins
+        let cfg = ExperimentConfig::from_toml(
+            "workers = 8\n[topology]\nracks = 2\nenabled = false",
+        )
+        .unwrap();
+        assert!(!cfg.topology.enabled);
+        assert_eq!(cfg.topology.racks, 2);
+
+        // hierarchical aggregation needs the barrier fold
+        let cfg = ExperimentConfig::from_toml(
+            "algorithm = \"hier-ssgd\"\nworkers = 8\n[topology]\nracks = 2\nhierarchical = true",
+        )
+        .unwrap();
+        assert!(cfg.topology.hierarchical);
+
+        // rejected: bounds, threads-mode topology, topology+comm overlap,
+        // hierarchical under an async fold, racks exceeding the fleet
+        assert!(ExperimentConfig::from_toml("[topology]\nps_nodes = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[topology]\nracks = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[topology]\nrack_per_push = -1.0").is_err());
+        assert!(ExperimentConfig::from_toml(
+            "exec_mode = \"threads\"\n[topology]\nenabled = true"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[comm]\nenabled = true\n[topology]\nenabled = true"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "algorithm = \"asgd\"\nworkers = 4\n[topology]\nracks = 2\nhierarchical = true"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml("workers = 4\n[topology]\nracks = 8").is_err());
+
+        let json = ExperimentConfig::default().to_json().to_string();
+        assert!(json.contains("\"topology_enabled\""));
+        assert!(json.contains("\"topology_ps_nodes\""));
     }
 
     #[test]

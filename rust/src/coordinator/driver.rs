@@ -1,7 +1,8 @@
 //! The unified event-driven training loop.
 //!
-//! Every simulated-time protocol — sequential, SSGD/DC-SSGD barriers,
-//! SSP/DC-S3GD staleness windows, fully-async ASGD/DC-ASGD — runs through
+//! Every simulated-time protocol — sequential, SSGD/DC-SSGD/hier-SSGD
+//! barriers, SSP/DC-S3GD staleness windows, fully-async ASGD/DC-ASGD —
+//! runs through
 //! this single loop: the [`Scheduler`] decides *who computes when* (and who
 //! waits, and — under a `[faults]` plan — who crashes, rejoins, or departs),
 //! this driver turns finish events into real gradient computations and
@@ -92,7 +93,7 @@ type GradResult = Result<(f32, Vec<f32>)>;
 /// Map an algorithm to its synchronization [`Protocol`].
 pub fn protocol_for(algo: Algorithm, staleness_bound: u64) -> Box<dyn Protocol> {
     match algo {
-        Algorithm::SyncSgd | Algorithm::DcSyncSgd => Box::new(BarrierSync),
+        Algorithm::SyncSgd | Algorithm::DcSyncSgd | Algorithm::HierSsgd => Box::new(BarrierSync),
         Algorithm::Ssp | Algorithm::DcS3gd => {
             Box::new(StalenessBounded { bound: staleness_bound })
         }
@@ -172,6 +173,9 @@ struct RoundState {
     loss: Vec<f32>,
     filled: Vec<bool>,
     wait: f64,
+    /// Rack-reducer scratch for the hierarchical fold (hier-ssgd with
+    /// more than one rack); empty otherwise.
+    partial: Vec<f32>,
 }
 
 /// Fold the barrier round into ONE global step if every *live* worker has
@@ -180,6 +184,13 @@ struct RoundState {
 /// last missing worker completes the round. A dead contributor's completed
 /// gradient still folds (its *in-flight* work was already handled by the
 /// crash policy). Returns whether a fold happened.
+///
+/// `racks > 1` selects the hierarchical (hier-ssgd) fold: each rack
+/// reducer sums its residents' contributions in worker order, then the
+/// root folds one partial per rack in rack order. With `racks == 1` the
+/// single "rack" holds the whole fleet and the fold is the plain
+/// worker-order sum — the exact instruction sequence of the flat SSGD
+/// path, so ssgd/dc-ssgd trajectories are bit-identical to before.
 #[allow(clippy::too_many_arguments)]
 fn fold_round_if_complete(
     ctx: &mut RunCtx,
@@ -188,6 +199,7 @@ fn fold_round_if_complete(
     acc: &mut DcSsgdAccumulator,
     avg: &mut [f32],
     dcssgd: bool,
+    racks: usize,
     step: &mut u64,
     samples: &mut u64,
     prev_passes: &mut f64,
@@ -215,22 +227,39 @@ fn fold_round_if_complete(
     } else {
         // Paper §1: each worker *adds* its gradient; the barrier only
         // synchronizes, so one round applies the SUM of the contributed
-        // gradients — folded in worker order straight out of the arenas,
-        // f32-identical to the pre-fault path when the fleet is whole.
-        let mut seen = 0usize;
-        for v in 0..m {
-            if !round.filled[v] {
-                continue;
-            }
-            loss_sum += round.loss[v];
-            if seen == 0 {
-                avg.copy_from_slice(&round.grads[v]);
-            } else {
-                for (a, g) in avg.iter_mut().zip(&round.grads[v]) {
-                    *a += g;
+        // gradients. Rack-major: workers on rack r are {r, r+racks, ...}
+        // (the [topology] striping); each rack's residents fold in worker
+        // order, rack partials fold in rack order. racks == 1 is the
+        // pre-topology flat fold, f32-identical to the pre-fault path
+        // when the fleet is whole.
+        let RoundState { grads, loss, filled, partial, .. } = round;
+        let mut any = false;
+        for r in 0..racks {
+            let first_rack = !any;
+            let mut seen = 0usize;
+            let dst: &mut [f32] = if first_rack { &mut *avg } else { &mut partial[..] };
+            for v in (r..m).step_by(racks) {
+                if !filled[v] {
+                    continue;
                 }
+                loss_sum += loss[v];
+                if seen == 0 {
+                    dst.copy_from_slice(&grads[v]);
+                } else {
+                    for (a, g) in dst.iter_mut().zip(&grads[v]) {
+                        *a += g;
+                    }
+                }
+                seen += 1;
             }
-            seen += 1;
+            if seen > 0 {
+                if !first_rack {
+                    for (a, p) in avg.iter_mut().zip(partial.iter()) {
+                        *a += p;
+                    }
+                }
+                any = true;
+            }
         }
         let inv = 1.0 / contributors as f32;
         for a in avg.iter_mut() {
@@ -372,6 +401,21 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
         comm,
         faults,
     );
+    // fleet topology ([topology]): per-worker transfer charges derived
+    // from rack placement + the two-level link model replace the uniform
+    // comm costs; the PS spreads its shards over the logical node fleet.
+    // Disabled (the default) builds nothing — schedules stay bit-identical.
+    let topo = crate::sim::Topology::from_config(&ctx.cfg.topology, m);
+    if let Some(t) = &topo {
+        sched.set_worker_comm(t.all_worker_costs(push_bytes, dense_bytes));
+        ctx.ps.set_ps_nodes(t.ps_nodes());
+    }
+    // hier-ssgd folds rack-major; every other barrier folds as one rack
+    let racks = if algo == Algorithm::HierSsgd {
+        topo.as_ref().map(|t| t.racks()).unwrap_or(1)
+    } else {
+        1
+    };
     // run tracing ([trace]): the scheduler records lifecycle events into
     // its own buffer, the driver records pulls/commits/pipeline activity
     // and periodic telemetry here. All emission sites observe decisions
@@ -419,6 +463,7 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
         loss: vec![0.0f32; m],
         filled: vec![false; m],
         wait: 0.0,
+        partial: vec![0.0f32; if barrier && racks > 1 { n } else { 0 }],
     };
     let mut step = 0u64;
     let mut samples = 0u64;
@@ -462,6 +507,7 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                         &mut acc,
                         &mut avg,
                         dcssgd,
+                        racks,
                         &mut step,
                         &mut samples,
                         &mut prev_passes,
@@ -577,6 +623,7 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                         &mut acc,
                         &mut avg,
                         dcssgd,
+                        racks,
                         &mut step,
                         &mut samples,
                         &mut prev_passes,

@@ -289,7 +289,7 @@ impl Trainer {
         }
         match (algo, self.ctx.cfg.exec_mode) {
             (Algorithm::SequentialSgd, _) => sequential::run(&mut self.ctx)?,
-            (Algorithm::SyncSgd | Algorithm::DcSyncSgd, mode) => {
+            (Algorithm::SyncSgd | Algorithm::DcSyncSgd | Algorithm::HierSsgd, mode) => {
                 sync::run(&mut self.ctx, mode)?
             }
             (_, ExecMode::SimulatedTime) => async_::run_sim(&mut self.ctx)?,

@@ -1,4 +1,4 @@
-//! Synchronous SGD (barrier) and DC-SSGD (appendix H).
+//! Synchronous SGD (barrier), DC-SSGD (appendix H), and hier-SSGD.
 //!
 //! A thin adapter over the unified event-driven loop ([`super::driver`])
 //! with the [`crate::sim::BarrierSync`] protocol: all M workers compute on
@@ -8,7 +8,11 @@
 //! * **SSGD**: average, one SGD step at `M * lr` (the effective large
 //!   batch is M×B),
 //! * **DC-SSGD**: sequential delay-compensated fold (Eqn. 110/111),
-//!   ordered by ascending gradient norm.
+//!   ordered by ascending gradient norm,
+//! * **hier-SSGD**: the SSGD rule with two-level aggregation over the
+//!   `[topology]` rack layout — rack reducers sum their residents, the
+//!   root folds one partial per rack. One rack degenerates to plain SSGD
+//!   bit-for-bit.
 //!
 //! Under the virtual clock, round time = max over workers of compute time —
 //! which is exactly how the barrier drags SSGD in Fig. 3 when stragglers

@@ -34,6 +34,7 @@
 //! | `sgd` (M=1)      | [`sim::FullyAsync`], one worker | plain SGD                | commits only (ungated)          |
 //! | `ssgd`           | [`sim::BarrierSync`]            | sum of M gradients/round | gate-wait spans + barrier folds |
 //! | `dc-ssgd`        | [`sim::BarrierSync`]            | appendix-H DC fold/round | gate-wait spans + barrier folds |
+//! | `hier-ssgd`      | [`sim::BarrierSync`]            | two-level rack fold (SSGD rule, `[topology]`) | gate-wait spans + barrier folds |
 //! | `ssp` (bound s)  | [`sim::StalenessBounded`]       | plain SGD                | gate-wait spans, commits w/ τ   |
 //! | `dc-s3gd` (s)    | [`sim::StalenessBounded`]       | DC vs `w_bak` (Eqn. 10)  | gate-wait spans, commits w/ τ   |
 //! | `asgd`           | [`sim::FullyAsync`]             | plain SGD                | commits w/ τ (no gate waits)    |
@@ -73,6 +74,46 @@
 //! sync-vs-async wallclock comparison pays for transfers instead of
 //! assuming a free network. With `[comm]` disabled the schedule is
 //! bit-identical to earlier builds (adding 0.0 to a duration is exact).
+//!
+//! ## Fleet topology & scalable scheduler
+//!
+//! The scheduler's release machinery is built for fleets of thousands of
+//! workers. Every protocol declares its gate in incremental form
+//! ([`sim::GateSpec`]): the scheduler maintains a [`sim::FleetIndex`] —
+//! a live-clock multiset (`BTreeMap` counts) plus live/blocked bitsets —
+//! so a membership query is O(1), the live minimum clock is O(log M),
+//! "all live clocks equal" is O(1) (`distinct_clocks`), and a release
+//! cascade touches O(M/64 + released) state instead of re-running an
+//! O(M) `may_start` scan per blocked worker (O(M²) per event). The scan
+//! engine is retained verbatim as the semantic reference
+//! ([`sim::Scheduler::force_scan_gates`]) and the chaos harness pins the
+//! two engines bitwise-identical — same event streams, push traces, and
+//! final model bits — under seeded fault churn; a 10_000-worker churn
+//! smoke holds the whole plan to seconds of host time.
+//!
+//! The `[topology]` config section (off by default; any knob auto-enables
+//! it) places the fleet on a physical layout: shards are striped across
+//! `topology.ps_nodes` logical PS nodes ([`ps::ShardedStore::node_shards`]),
+//! workers and PS nodes stripe over `topology.racks` racks, and each
+//! transfer is charged per **link** — a rack-local model for same-rack
+//! worker↔PS traffic and a cross-rack model for the rest, with the
+//! cross-rack uplink fair-shared among a rack's residents
+//! ([`sim::Topology`]). The per-worker costs install into the scheduler
+//! via [`sim::Scheduler::set_worker_comm`], so rack placement shows up in
+//! the schedule (same-rack workers turn around faster). `[topology]` and
+//! `[comm]` are mutually exclusive (the flat comm model is the 1-node,
+//! 1-rack degenerate case, which is pinned bit-identical), and a
+//! disabled `[topology]` section leaves every schedule untouched.
+//!
+//! `hierarchical = true` additionally switches the barrier protocols to
+//! **two-level aggregation**: rack reducers sum their residents'
+//! gradients, the root folds one partial per rack, and each push pays the
+//! rack link plus a 1/residents share of the cross-rack link — the
+//! classic hierarchical all-reduce cost shape. As a protocol column this
+//! is `algorithm = "hier-ssgd"`: the SSGD update rule under the rack-major
+//! fold, which degenerates bit-for-bit to plain `ssgd` with one rack (and
+//! the rack-major fold order itself is bitwise-inert for the flat
+//! protocols, pinned by `tests/integration.rs`).
 //!
 //! ## Compute runtime & deterministic pipeline
 //!

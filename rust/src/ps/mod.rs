@@ -261,6 +261,13 @@ impl ParamServer {
         &self.store
     }
 
+    /// Place the shard blocks on a logical PS-node fleet (`[topology]`
+    /// `ps_nodes`). Placement metadata only — see
+    /// [`ShardedStore::set_ps_nodes`]; no parameter state moves.
+    pub fn set_ps_nodes(&self, nodes: usize) {
+        self.store.set_ps_nodes(nodes);
+    }
+
     /// Worker pull (Algorithm 2): copy `w_t` out, back it up as w_bak(m),
     /// remember t for staleness accounting.
     pub fn pull(&self, worker: usize, out: &mut [f32]) {
@@ -300,7 +307,11 @@ impl ParamServer {
         assert_eq!(g.len(), self.n());
         let h = self.hyper;
         match self.algo {
-            Algorithm::Asgd | Algorithm::SequentialSgd | Algorithm::SyncSgd | Algorithm::Ssp => {
+            Algorithm::Asgd
+            | Algorithm::SequentialSgd
+            | Algorithm::SyncSgd
+            | Algorithm::HierSsgd
+            | Algorithm::Ssp => {
                 if h.momentum > 0.0 {
                     self.store.for_each_shard(|s, range| {
                         optim::momentum_step(&mut s.w, &mut s.vel, &g[range], lr, h.momentum);
@@ -435,6 +446,7 @@ impl ParamServer {
                 Algorithm::Asgd
                 | Algorithm::SequentialSgd
                 | Algorithm::SyncSgd
+                | Algorithm::HierSsgd
                 | Algorithm::Ssp => {
                     self.store.for_each_shard_sparse(idx, val, |s, range, si, sv| {
                         self.kernel.sgd_sparse(&mut s.w, range.start, si, sv, lr);
@@ -479,7 +491,11 @@ impl ParamServer {
         let _p = crate::trace::profile::span(crate::trace::profile::Subsystem::FusedApply);
         let h = self.hyper;
         match self.algo {
-            Algorithm::Asgd | Algorithm::SequentialSgd | Algorithm::SyncSgd | Algorithm::Ssp => {
+            Algorithm::Asgd
+            | Algorithm::SequentialSgd
+            | Algorithm::SyncSgd
+            | Algorithm::HierSsgd
+            | Algorithm::Ssp => {
                 self.store.for_each_shard(|s, range| {
                     crate::compress::decode_sgd_apply(
                         &mut s.w, range.start, bits, norm, packed, lr,

@@ -45,7 +45,7 @@
 
 use crate::util::pool::{self, ComputePool};
 use std::ops::Range;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, RwLock};
 
 /// Minimum elements of work per pool lane for multi-shard applies
@@ -83,6 +83,12 @@ pub struct ShardedStore {
     workers: usize,
     /// Compute pool serving [`Self::par_for_each_shard`] / [`Self::store_w`].
     pool: Arc<ComputePool>,
+    /// Logical PS-node fleet the shard blocks are placed on (`[topology]`
+    /// `ps_nodes`). Pure placement metadata — which node serves which
+    /// contiguous shard block for reporting and byte accounting; the math
+    /// paths never read it, so installing a fleet cannot move a bit.
+    /// Atomic so the driver can set it through the shared `Arc`.
+    ps_nodes: AtomicUsize,
 }
 
 impl ShardedStore {
@@ -128,7 +134,7 @@ impl ShardedStore {
             })
             .collect();
         let baks = (0..workers).map(|_| Mutex::new(init.to_vec())).collect();
-        Self { ranges, shards, baks, n, workers, pool }
+        Self { ranges, shards, baks, n, workers, pool, ps_nodes: AtomicUsize::new(1) }
     }
 
     pub fn n(&self) -> usize {
@@ -142,6 +148,48 @@ impl ShardedStore {
     }
     pub fn ranges(&self) -> &[Range<usize>] {
         &self.ranges
+    }
+
+    /// Install the logical PS-node count (clamped to `[1, num_shards]` —
+    /// a node with zero shards would serve nothing). Placement only; no
+    /// parameter state moves.
+    pub fn set_ps_nodes(&self, nodes: usize) {
+        let k = nodes.max(1).min(self.shards.len().max(1));
+        self.ps_nodes.store(k, Ordering::Release);
+    }
+
+    /// Logical PS nodes currently serving the store (1 unless a
+    /// `[topology]` fleet was installed).
+    pub fn num_nodes(&self) -> usize {
+        self.ps_nodes.load(Ordering::Acquire)
+    }
+
+    /// The contiguous block of shards node `node` serves. Blocks partition
+    /// `0..num_shards`: the first `num_shards % num_nodes` nodes hold one
+    /// extra shard, mirroring how shards themselves split the vector.
+    pub fn node_shards(&self, node: usize) -> Range<usize> {
+        let k = self.num_nodes();
+        assert!(node < k, "node {node} out of range for {k} PS nodes");
+        let s = self.shards.len();
+        let base = s / k;
+        let rem = s % k;
+        let start = node * base + node.min(rem);
+        start..start + base + usize::from(node < rem)
+    }
+
+    /// The node serving shard `i` — the inverse of [`Self::node_shards`].
+    pub fn node_of_shard(&self, i: usize) -> usize {
+        assert!(i < self.shards.len());
+        let k = self.num_nodes();
+        let s = self.shards.len();
+        let base = s / k;
+        let rem = s % k;
+        let fat = rem * (base + 1); // shards held by the one-extra nodes
+        if i < fat {
+            i / (base + 1)
+        } else {
+            rem + (i - fat) / base
+        }
     }
 
     /// Mutation count of shard `i` (how many write-locked updates it has
@@ -343,6 +391,33 @@ mod tests {
             assert!(covered.iter().all(|&c| c), "n={n} s={s}");
             assert!(store.num_shards() <= s);
         }
+    }
+
+    #[test]
+    fn ps_node_placement_is_contiguous_and_consistent() {
+        let store = ShardedStore::new(&vec![0.0f32; 64], 1, 8);
+        assert_eq!(store.num_nodes(), 1);
+        assert_eq!(store.node_shards(0), 0..8);
+        store.set_ps_nodes(3);
+        assert_eq!(store.num_nodes(), 3);
+        // blocks partition 0..8 front-loaded: [3,3,2]
+        let blocks: Vec<_> = (0..3).map(|k| store.node_shards(k)).collect();
+        assert_eq!(blocks, vec![0..3, 3..6, 6..8]);
+        for s in 0..8 {
+            let k = store.node_of_shard(s);
+            assert!(blocks[k].contains(&s), "shard {s} outside node {k}'s block");
+        }
+        // over-provisioned fleets clamp to one shard per node
+        store.set_ps_nodes(100);
+        assert_eq!(store.num_nodes(), 8);
+        for s in 0..8 {
+            assert_eq!(store.node_of_shard(s), s);
+            assert_eq!(store.node_shards(s), s..s + 1);
+        }
+        // placement is metadata only: the model never moved
+        let mut out = vec![1.0f32; 64];
+        store.snapshot_into(&mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! Fleet-scale membership and gate index: the O(log M)/O(1) structures
+//! that let the [`scheduler`](super::scheduler) stop scanning all M
+//! workers on every event.
+//!
+//! At M ≈ 8 the original O(M) scans (`release_gated` consulting
+//! `Protocol::may_start` per blocked worker → O(M²) per event) were
+//! invisible; at the paper's fleet scale (thousands of workers behind
+//! racks of parameter servers) they dominate the host-time profile. The
+//! [`FleetIndex`] keeps three incremental views the gate fast paths read
+//! instead of the fleet vectors:
+//!
+//! - a **live-clock multiset** (`BTreeMap<u64, u32>`): the SSP minimum is
+//!   the first key (O(log M)), the barrier's all-equal test is
+//!   `len() == 1` (O(1)), and a completed step moves one count between
+//!   adjacent keys (O(log M));
+//! - a **membership bitset**: the live mask as one bit per worker, with
+//!   an O(1) popcount replacing the O(M) `live_workers` scan;
+//! - a **blocked bitset**: the gate-waiting set, iterated in ascending
+//!   worker order with word-skipping, so a release touches
+//!   O(M/64 + released) words instead of all M workers.
+//!
+//! The index is pure bookkeeping over decisions the scheduler already
+//! makes — it never samples, never touches the virtual clock — so the
+//! indexed gate engine is bitwise-identical to the retained O(M) scan
+//! reference (pinned by the scheduler tests and the chaos harness).
+
+use std::collections::BTreeMap;
+
+/// Compact bitset over worker ids with word-skipping ascending iteration.
+#[derive(Clone, Debug)]
+pub struct BitSet {
+    words: Vec<u64>,
+    len: usize,
+    count: usize,
+}
+
+impl BitSet {
+    pub fn new(len: usize) -> Self {
+        Self { words: vec![0; len.div_ceil(64)], len, count: 0 }
+    }
+
+    /// Capacity in bits (worker slots), not the number of set bits.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Number of set bits (maintained incrementally; O(1)).
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn contains(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Set bit `i`; returns whether it was newly set.
+    pub fn insert(&mut self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        let (word, mask) = (&mut self.words[i >> 6], 1u64 << (i & 63));
+        let fresh = *word & mask == 0;
+        *word |= mask;
+        self.count += fresh as usize;
+        fresh
+    }
+
+    /// Clear bit `i`; returns whether it was set.
+    pub fn remove(&mut self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        let (word, mask) = (&mut self.words[i >> 6], 1u64 << (i & 63));
+        let was = *word & mask != 0;
+        *word &= !mask;
+        self.count -= was as usize;
+        was
+    }
+
+    /// Iterate set bits in ascending order, skipping zero words.
+    pub fn ones(&self) -> Ones<'_> {
+        Ones { words: &self.words, word: 0, base: 0 }
+    }
+}
+
+/// Ascending iterator over a [`BitSet`]'s set bits.
+pub struct Ones<'a> {
+    words: &'a [u64],
+    word: u64,
+    /// Bit offset of the word *after* the one currently in `word`.
+    base: usize,
+}
+
+impl Iterator for Ones<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        while self.word == 0 {
+            let (&w, rest) = self.words.split_first()?;
+            self.words = rest;
+            self.word = w;
+            self.base += 64;
+        }
+        let bit = self.word.trailing_zeros() as usize;
+        self.word &= self.word - 1;
+        Some(self.base - 64 + bit)
+    }
+}
+
+/// Incremental index over the live fleet (see the module docs). The
+/// scheduler maintains it at every membership/clock transition and the
+/// indexed gate fast paths read it; the O(M) scan reference ignores it.
+#[derive(Clone, Debug)]
+pub struct FleetIndex {
+    /// Live-clock multiset: clock value → number of live workers at it.
+    clock_counts: BTreeMap<u64, u32>,
+    /// Live membership mask (mirrors the scheduler's `alive` vector).
+    live: BitSet,
+    /// Gate-waiting workers; always a subset of `live`.
+    blocked: BitSet,
+}
+
+impl FleetIndex {
+    /// Build from the t=0 membership; every live worker starts at clock 0.
+    pub fn new(alive: &[bool]) -> Self {
+        let mut live = BitSet::new(alive.len());
+        let mut clock_counts = BTreeMap::new();
+        for (w, &a) in alive.iter().enumerate() {
+            if a {
+                live.insert(w);
+                *clock_counts.entry(0).or_insert(0) += 1;
+            }
+        }
+        Self { clock_counts, live, blocked: BitSet::new(alive.len()) }
+    }
+
+    /// Size of the live fleet (O(1), replaces the membership scan).
+    pub fn live_count(&self) -> usize {
+        self.live.count()
+    }
+
+    pub fn is_live(&self, w: usize) -> bool {
+        self.live.contains(w)
+    }
+
+    /// The gate-waiting set, for word-skipping release iteration.
+    pub fn blocked(&self) -> &BitSet {
+        &self.blocked
+    }
+
+    /// Smallest live clock; `None` for an empty fleet. O(log M).
+    pub fn min_clock(&self) -> Option<u64> {
+        self.clock_counts.first_key_value().map(|(&c, _)| c)
+    }
+
+    /// Number of distinct clock values across the live fleet: `1` means
+    /// the barrier's all-equal condition holds. O(1).
+    pub fn distinct_clocks(&self) -> usize {
+        self.clock_counts.len()
+    }
+
+    pub fn set_blocked(&mut self, w: usize) {
+        self.blocked.insert(w);
+    }
+
+    pub fn clear_blocked(&mut self, w: usize) {
+        self.blocked.remove(w);
+    }
+
+    /// A live worker completed a step: move one count from `old` to
+    /// `old + 1` in the multiset.
+    pub fn advance_clock(&mut self, old: u64) {
+        self.remove_clock(old);
+        *self.clock_counts.entry(old + 1).or_insert(0) += 1;
+    }
+
+    /// Worker `w` (re)enters the live fleet at `clock`.
+    pub fn join(&mut self, w: usize, clock: u64) {
+        if self.live.insert(w) {
+            *self.clock_counts.entry(clock).or_insert(0) += 1;
+        }
+    }
+
+    /// Worker `w` (at `clock`) leaves the live fleet; it can no longer be
+    /// blocked at a gate.
+    pub fn leave(&mut self, w: usize, clock: u64) {
+        if self.live.remove(w) {
+            self.remove_clock(clock);
+        }
+        self.blocked.remove(w);
+    }
+
+    fn remove_clock(&mut self, c: u64) {
+        match self.clock_counts.get_mut(&c) {
+            Some(n) if *n > 1 => *n -= 1,
+            Some(_) => {
+                self.clock_counts.remove(&c);
+            }
+            None => debug_assert!(false, "clock {c} missing from the live multiset"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitset_insert_remove_contains_count() {
+        let mut b = BitSet::new(130);
+        assert_eq!(b.len(), 130);
+        assert!(b.is_empty());
+        assert!(b.insert(0));
+        assert!(b.insert(63));
+        assert!(b.insert(64));
+        assert!(b.insert(129));
+        assert!(!b.insert(64), "double insert must report not-fresh");
+        assert_eq!(b.count(), 4);
+        assert!(b.contains(63) && b.contains(64) && !b.contains(65));
+        assert!(b.remove(63));
+        assert!(!b.remove(63), "double remove must report not-set");
+        assert_eq!(b.count(), 3);
+    }
+
+    #[test]
+    fn bitset_ones_iterates_ascending_and_skips_empty_words() {
+        let mut b = BitSet::new(1000);
+        let set = [0usize, 1, 63, 64, 127, 500, 999];
+        for &i in &set {
+            b.insert(i);
+        }
+        let got: Vec<usize> = b.ones().collect();
+        assert_eq!(got, set);
+        assert_eq!(BitSet::new(0).ones().count(), 0);
+        assert_eq!(BitSet::new(64).ones().count(), 0);
+    }
+
+    #[test]
+    fn clock_multiset_tracks_min_and_distinct() {
+        let mut idx = FleetIndex::new(&[true, true, true, false]);
+        assert_eq!(idx.live_count(), 3);
+        assert_eq!(idx.min_clock(), Some(0));
+        assert_eq!(idx.distinct_clocks(), 1);
+        // two workers advance to clock 1
+        idx.advance_clock(0);
+        idx.advance_clock(0);
+        assert_eq!(idx.min_clock(), Some(0));
+        assert_eq!(idx.distinct_clocks(), 2);
+        // the straggler catches up: all-equal again
+        idx.advance_clock(0);
+        assert_eq!(idx.min_clock(), Some(1));
+        assert_eq!(idx.distinct_clocks(), 1);
+    }
+
+    #[test]
+    fn join_and_leave_maintain_membership_and_clocks() {
+        let mut idx = FleetIndex::new(&[true, true]);
+        idx.advance_clock(0); // one worker at clock 1
+        idx.set_blocked(1);
+        // worker 1 (at clock 0, blocked) crashes
+        idx.leave(1, 0);
+        assert_eq!(idx.live_count(), 1);
+        assert!(!idx.is_live(1));
+        assert_eq!(idx.blocked().count(), 0, "a dead worker cannot stay blocked");
+        assert_eq!(idx.min_clock(), Some(1));
+        // it rejoins adopting the live minimum
+        idx.join(1, 1);
+        assert_eq!(idx.live_count(), 2);
+        assert_eq!(idx.distinct_clocks(), 1);
+        // empty fleet has no minimum
+        idx.leave(0, 1);
+        idx.leave(1, 1);
+        assert_eq!(idx.min_clock(), None);
+        assert_eq!(idx.distinct_clocks(), 0);
+    }
+}

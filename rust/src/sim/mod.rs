@@ -14,13 +14,17 @@
 
 pub mod delay;
 pub mod faults;
+pub mod fleet;
 pub mod scheduler;
+pub mod topology;
 
 pub use delay::{CommCosts, CommModel, DelaySampler};
 pub use faults::{CrashPolicy, FaultConfig, FaultPlan, FaultStats};
+pub use fleet::{BitSet, FleetIndex};
 pub use scheduler::{
-    BarrierSync, CommitMode, FullyAsync, Protocol, Scheduler, SimEvent, StalenessBounded,
+    BarrierSync, CommitMode, FullyAsync, GateSpec, Protocol, Scheduler, SimEvent, StalenessBounded,
 };
+pub use topology::{Topology, TopologyConfig};
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -74,6 +78,14 @@ impl<T> Default for EventQueue<T> {
 impl<T> EventQueue<T> {
     pub fn new() -> Self {
         Self { heap: BinaryHeap::new(), now: 0.0, seq: 0 }
+    }
+
+    /// Pre-size the heap so a fleet's steady-state event population (one
+    /// finish per computing worker plus the fault timeline) never
+    /// reallocates mid-run: schedule/pop churn at 10k+ entries stays
+    /// amortized O(log n) with zero allocation.
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { heap: BinaryHeap::with_capacity(cap), now: 0.0, seq: 0 }
     }
 
     /// Current virtual time (time of the last popped event).
@@ -147,6 +159,28 @@ mod tests {
         q.schedule_in(0.5, ());
         let (t3, _) = q.pop().unwrap();
         assert_eq!(t3, 5.5);
+    }
+
+    #[test]
+    fn churn_at_ten_thousand_entries_stays_ordered_without_realloc() {
+        // fleet-scale churn: keep 10k events in flight, popping one and
+        // scheduling one per step. With the pre-sized heap the capacity
+        // never grows, and time order + tie order survive the churn.
+        let n = 10_000usize;
+        let mut q = EventQueue::with_capacity(n + 1);
+        let cap0 = q.heap.capacity();
+        for i in 0..n {
+            q.schedule_at(i as f64 * 0.5, i);
+        }
+        let mut last_t = -1.0f64;
+        for step in 0..50_000usize {
+            let (t, _) = q.pop().unwrap();
+            assert!(t >= last_t, "time order broke under churn");
+            last_t = t;
+            q.schedule_in(((step % 97) as f64) * 0.25, n + step);
+            assert_eq!(q.len(), n);
+        }
+        assert_eq!(q.heap.capacity(), cap0, "steady-state churn reallocated the heap");
     }
 
     #[test]

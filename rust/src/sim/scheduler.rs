@@ -66,10 +66,24 @@
 //! execute and
 //! the produced schedule is bit-identical to pre-fault builds (pinned by
 //! tests here and in `tests/chaos.rs`).
+//!
+//! ## Gate engines: indexed fast path vs. scan reference
+//!
+//! Each built-in protocol declares a [`GateSpec`] — the incremental form
+//! of its gate — and the scheduler maintains a [`FleetIndex`] (live-clock
+//! multiset + membership/blocked bitsets, see [`crate::sim::fleet`]) so a
+//! release touches O(M/64 + released) state instead of scanning all M
+//! workers per blocked worker (O(M²) per event at fleet scale). Custom
+//! protocols (and [`Scheduler::force_scan_gates`]) fall back to the
+//! original O(M) `may_start` scan, retained verbatim as the semantic
+//! reference: both engines produce bit-identical schedules on every
+//! built-in protocol (pinned here and by the chaos harness).
 
 use super::delay::{CommCosts, DelaySampler};
 use super::faults::{CrashPolicy, FaultPlan, FaultStats};
+use super::fleet::FleetIndex;
 use super::EventQueue;
+use crate::trace::profile::{span, Subsystem};
 use crate::trace::{EventBuf, EventKind, TraceEvent};
 
 /// How finished gradients become global steps.
@@ -80,6 +94,30 @@ pub enum CommitMode {
     /// Finished computes are buffered; the round commits as one step when
     /// the last worker arrives.
     Barrier,
+}
+
+/// The incremental form of a protocol's gate, declared via
+/// [`Protocol::gate_spec`]. Lets the scheduler release blocked workers
+/// from the [`FleetIndex`] in O(log M)/O(1) instead of scanning the
+/// fleet; `Scan` is the always-correct fallback that consults
+/// [`Protocol::may_start`] per worker.
+///
+/// A spec must agree with `may_start` over every reachable state — the
+/// three built-ins are pinned bitwise against the scan reference by the
+/// scheduler tests and the chaos harness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GateSpec {
+    /// The gate never blocks ([`FullyAsync`]): release everything.
+    Always,
+    /// Admit only when all live clocks are equal ([`BarrierSync`]):
+    /// one distinct-count check, then release everything.
+    AllEqual,
+    /// Admit while `clocks[w] <= min_live + bound` saturating
+    /// ([`StalenessBounded`]): one multiset-min lookup, then a
+    /// word-skipping pass over the blocked set.
+    MaxDrift(u64),
+    /// No incremental form: fall back to the O(M) `may_start` scan.
+    Scan,
 }
 
 /// A synchronization protocol: the policy half of the scheduler.
@@ -98,6 +136,11 @@ pub trait Protocol: Send {
         CommitMode::Immediate
     }
     fn may_start(&self, worker: usize, clocks: &[u64], alive: &[bool]) -> bool;
+    /// The gate's incremental form; defaulting to [`GateSpec::Scan`]
+    /// keeps every custom protocol on the reference scan path.
+    fn gate_spec(&self) -> GateSpec {
+        GateSpec::Scan
+    }
 }
 
 /// ASGD-family schedule: nobody ever waits.
@@ -110,6 +153,9 @@ impl Protocol for FullyAsync {
     }
     fn may_start(&self, _worker: usize, _clocks: &[u64], _alive: &[bool]) -> bool {
         true
+    }
+    fn gate_spec(&self) -> GateSpec {
+        GateSpec::Always
     }
 }
 
@@ -129,6 +175,9 @@ impl Protocol for BarrierSync {
     fn may_start(&self, worker: usize, clocks: &[u64], alive: &[bool]) -> bool {
         let c = clocks[worker];
         clocks.iter().zip(alive).all(|(&k, &a)| !a || k == c)
+    }
+    fn gate_spec(&self) -> GateSpec {
+        GateSpec::AllEqual
     }
 }
 
@@ -162,7 +211,13 @@ impl Protocol for StalenessBounded {
             .map(|(&k, _)| k)
             .min()
             .unwrap_or(0);
-        clocks[worker] - min <= self.bound
+        // saturating: the trait contract permits querying a worker whose
+        // clock is below the live minimum (dead, or mid-join before clock
+        // adoption) — such a worker is behind the fleet, never gated
+        clocks[worker].saturating_sub(min) <= self.bound
+    }
+    fn gate_spec(&self) -> GateSpec {
+        GateSpec::MaxDrift(self.bound)
     }
 }
 
@@ -228,6 +283,11 @@ pub struct Scheduler {
     /// Per-transfer communication charges ([`CommCosts`]); zero by default,
     /// in which case the schedule is bit-identical to a free network.
     comm: CommCosts,
+    /// Per-worker charge overrides (topology-aware comm: a worker's costs
+    /// depend on its rack's links to the PS nodes). `None` — the default —
+    /// charges every worker the shared `comm`, bit-identical to
+    /// pre-topology builds.
+    comm_w: Option<Vec<CommCosts>>,
     /// Total communication time charged so far (diagnostic).
     comm_total: f64,
     /// Total bytes shipped over the modelled wire (uploads + downloads);
@@ -236,6 +296,13 @@ pub struct Scheduler {
     comm_bytes: u64,
     workers: usize,
     started: bool,
+    /// The active gate engine: the protocol's declared [`GateSpec`], or
+    /// `Scan` when forced ([`Self::force_scan_gates`]).
+    gate: GateSpec,
+    /// Incremental fleet index (live-clock multiset + membership/blocked
+    /// bitsets); maintained on every transition, read by the indexed gate
+    /// fast paths and the O(1) membership accessors.
+    index: FleetIndex,
     // ---- fault / membership state (inert without a plan) ----------------
     faults: Option<FaultPlan>,
     /// Live-fleet membership; all-true without a fault plan.
@@ -304,9 +371,12 @@ impl Scheduler {
             .map(|w| faults.as_ref().map_or(true, |p| p.join_time(w).is_none()))
             .collect();
         assert!(alive.iter().any(|&a| a), "at least one worker must be present at t = 0");
+        let gate = protocol.gate_spec();
+        let index = FleetIndex::new(&alive);
         Self {
             protocol,
-            queue: EventQueue::new(),
+            // steady state holds ≤ 1 finish + crash + straggle per worker
+            queue: EventQueue::with_capacity(workers.saturating_mul(3).saturating_add(1)),
             delays,
             clocks: vec![0; workers],
             state: vec![WorkerState::Dead; workers],
@@ -315,10 +385,13 @@ impl Scheduler {
             wait_total: vec![0.0; workers],
             server_cost,
             comm,
+            comm_w: None,
             comm_total: 0.0,
             comm_bytes: 0,
             workers,
             started: false,
+            gate,
+            index,
             faults,
             alive,
             epoch: vec![0; workers],
@@ -386,9 +459,36 @@ impl Scheduler {
     pub fn computing_workers(&self) -> Vec<usize> {
         (0..self.workers).filter(|&w| self.state[w] == WorkerState::Computing).collect()
     }
-    /// Size of the live fleet right now.
+    /// Size of the live fleet right now (O(1): bitset popcount, not a
+    /// membership scan).
     pub fn live_workers(&self) -> usize {
-        self.alive.iter().filter(|&&a| a).count()
+        self.index.live_count()
+    }
+    /// Route every gate decision through the reference O(M)
+    /// [`Protocol::may_start`] scan instead of the incremental
+    /// [`FleetIndex`] fast paths. The two engines are bitwise-equivalent
+    /// on the built-in protocols (pinned by the chaos harness); the scan
+    /// is retained as the semantic reference and for custom protocols.
+    pub fn force_scan_gates(&mut self) {
+        self.gate = GateSpec::Scan;
+    }
+    /// Whether gate decisions currently go through the O(M) scan (a
+    /// custom protocol, or [`Self::force_scan_gates`]).
+    pub fn uses_scan_gates(&self) -> bool {
+        self.gate == GateSpec::Scan
+    }
+    /// Install per-worker communication charges (topology-aware comm,
+    /// [`crate::sim::Topology`]): worker `w`'s transfers are charged
+    /// `comm[w]` instead of the shared costs. Must be called before
+    /// [`Self::start`]. Passing the shared costs for every worker is
+    /// bit-identical to not calling this at all.
+    pub fn set_worker_comm(&mut self, comm: Vec<CommCosts>) {
+        assert!(!self.started, "set_worker_comm after start");
+        assert_eq!(comm.len(), self.workers, "per-worker comm sized for a different fleet");
+        for c in &comm {
+            assert!(c.push >= 0.0 && c.pull >= 0.0, "comm costs must be non-negative");
+        }
+        self.comm_w = Some(comm);
     }
     /// Whether a fault plan is installed.
     pub fn has_faults(&self) -> bool {
@@ -446,10 +546,11 @@ impl Scheduler {
             }
             self.state[w] = WorkerState::Computing;
             let d = self.sample_delay(w);
+            let comm = self.comm_of(w);
             // initial model download precedes the first compute
-            self.queue.schedule_in(self.comm.pull + d, Ev::Finish { worker: w, epoch: self.epoch[w] });
-            self.comm_total += self.comm.pull;
-            self.comm_bytes += self.comm.pull_bytes as u64;
+            self.queue.schedule_in(comm.pull + d, Ev::Finish { worker: w, epoch: self.epoch[w] });
+            self.comm_total += comm.pull;
+            self.comm_bytes += comm.pull_bytes as u64;
             if let Some(tc) = self.faults.as_mut().and_then(|p| p.next_crash_in(w)) {
                 self.queue.schedule_in(tc, Ev::Crash { worker: w });
             }
@@ -523,7 +624,8 @@ impl Scheduler {
         // count the upload bytes here so the counter is exact even for
         // workers still blocked when the run ends. The TIME charge stays
         // on the restart path (it delays the *next* turnaround).
-        self.comm_bytes += self.comm.push_bytes as u64;
+        self.comm_bytes += self.comm_of(worker).push_bytes as u64;
+        self.index.advance_clock(self.clocks[worker]);
         self.clocks[worker] += 1;
         if self.dying[worker] {
             self.stats.salvaged_inflight += 1;
@@ -533,6 +635,7 @@ impl Scheduler {
         }
         self.state[worker] = WorkerState::Blocked;
         self.blocked_since[worker] = now;
+        self.index.set_blocked(worker);
         self.release_gated()
     }
 
@@ -553,6 +656,16 @@ impl Scheduler {
 
     // ---- internal lifecycle mechanics -----------------------------------
 
+    /// Worker `w`'s per-transfer charges: its topology-derived override
+    /// when installed, the shared costs otherwise.
+    #[inline]
+    fn comm_of(&self, worker: usize) -> CommCosts {
+        match &self.comm_w {
+            Some(v) => v[worker],
+            None => self.comm,
+        }
+    }
+
     /// Sample worker `w`'s next compute duration, stretched by an open
     /// straggle window. Outside a window no arithmetic touches the sample,
     /// so fault-free schedules stay bit-identical.
@@ -568,54 +681,98 @@ impl Scheduler {
 
     /// Restart every blocked live worker the protocol now admits (called
     /// after any clock or membership change). Returns them in worker order.
+    ///
+    /// The admissible set is decided up front from the pre-release state —
+    /// sound because restarting a worker changes neither clocks nor
+    /// membership, the only inputs a gate may read — then each admitted
+    /// worker restarts in ascending worker order, reproducing the scan
+    /// loop's sampling and event-sequence order exactly.
     fn release_gated(&mut self) -> Vec<usize> {
-        let now = self.queue.now();
-        let mut restarted = Vec::new();
-        for v in 0..self.workers {
-            if self.state[v] == WorkerState::Blocked
-                && self.alive[v]
-                && self.protocol.may_start(v, &self.clocks, &self.alive)
-            {
-                let waited = now - self.blocked_since[v];
-                self.step_wait[v] = waited;
-                self.wait_total[v] += waited;
-                // emit the gate-wait span only once its extent is known:
-                // a zero wait (e.g. FullyAsync) produces no span at all,
-                // and Begin/End always pair up (merge_events re-sorts the
-                // back-dated Begin into virtual-time order)
-                if waited > 0.0 {
-                    let epoch = Some(self.epoch[v] as u64);
-                    if let Some(buf) = &mut self.trace {
-                        buf.emit(
-                            EventKind::GateWaitBegin,
-                            now - waited,
-                            Some(v),
-                            epoch,
-                            None,
-                            None,
-                        );
-                        buf.emit(EventKind::GateWaitEnd, now, Some(v), epoch, None, Some(waited));
-                    }
+        let _p = span(Subsystem::GateRelease);
+        let admitted = match self.gate {
+            GateSpec::Scan => self.admitted_scan(),
+            // nothing gates: every blocked worker (blocked ⊆ live) goes
+            GateSpec::Always => self.index.blocked().ones().collect(),
+            // all-equal holds iff the live multiset has one distinct
+            // clock; a blocked worker is live, so its clock is that one
+            GateSpec::AllEqual => {
+                if self.index.distinct_clocks() > 1 {
+                    Vec::new()
+                } else {
+                    self.index.blocked().ones().collect()
                 }
-                self.state[v] = WorkerState::Computing;
-                let d = self.sample_delay(v);
-                // turnaround = server update cost + gradient upload for the
-                // push that just committed + fresh model download
-                self.queue.schedule_in(
-                    self.server_cost + self.comm.push + self.comm.pull + d,
-                    Ev::Finish { worker: v, epoch: self.epoch[v] },
-                );
-                self.comm_total += self.comm.push + self.comm.pull;
-                self.comm_bytes += self.comm.pull_bytes as u64;
-                restarted.push(v);
+            }
+            // `clocks[v].saturating_sub(min) <= s  ⟺  clocks[v] <= min ⊕ s`
+            // (⊕ saturating): one multiset-min lookup, then a word-skip
+            // pass over the blocked set
+            GateSpec::MaxDrift(bound) => match self.index.min_clock() {
+                None => Vec::new(),
+                Some(min) => {
+                    let cap = min.saturating_add(bound);
+                    let clocks = &self.clocks;
+                    self.index.blocked().ones().filter(|&v| clocks[v] <= cap).collect()
+                }
+            },
+        };
+        for &v in &admitted {
+            self.restart_worker(v);
+        }
+        admitted
+    }
+
+    /// The reference gate engine: the original O(M) scan consulting
+    /// [`Protocol::may_start`] per blocked worker. Kept verbatim as the
+    /// semantics the indexed fast paths are equivalence-pinned against,
+    /// and as the fallback for custom protocols ([`GateSpec::Scan`]).
+    fn admitted_scan(&self) -> Vec<usize> {
+        (0..self.workers)
+            .filter(|&v| {
+                self.state[v] == WorkerState::Blocked
+                    && self.alive[v]
+                    && self.protocol.may_start(v, &self.clocks, &self.alive)
+            })
+            .collect()
+    }
+
+    /// Admit blocked worker `v`: account its gate wait, emit the wait
+    /// span, and schedule its next compute. One body shared by the
+    /// indexed fast paths and the scan reference, so both engines produce
+    /// identical sample/event/trace streams.
+    fn restart_worker(&mut self, v: usize) {
+        let now = self.queue.now();
+        let waited = now - self.blocked_since[v];
+        self.step_wait[v] = waited;
+        self.wait_total[v] += waited;
+        // emit the gate-wait span only once its extent is known:
+        // a zero wait (e.g. FullyAsync) produces no span at all,
+        // and Begin/End always pair up (merge_events re-sorts the
+        // back-dated Begin into virtual-time order)
+        if waited > 0.0 {
+            let epoch = Some(self.epoch[v] as u64);
+            if let Some(buf) = &mut self.trace {
+                buf.emit(EventKind::GateWaitBegin, now - waited, Some(v), epoch, None, None);
+                buf.emit(EventKind::GateWaitEnd, now, Some(v), epoch, None, Some(waited));
             }
         }
-        restarted
+        self.state[v] = WorkerState::Computing;
+        self.index.clear_blocked(v);
+        let d = self.sample_delay(v);
+        let comm = self.comm_of(v);
+        // turnaround = server update cost + gradient upload for the
+        // push that just committed + fresh model download
+        self.queue.schedule_in(
+            self.server_cost + comm.push + comm.pull + d,
+            Ev::Finish { worker: v, epoch: self.epoch[v] },
+        );
+        self.comm_total += comm.push + comm.pull;
+        self.comm_bytes += comm.pull_bytes as u64;
     }
 
     /// Take `worker` out of the fleet; schedule its rejoin (or record the
     /// departure) and recompute the gates over the survivors.
     fn kill(&mut self, worker: usize, restart: Option<f64>) -> Vec<usize> {
+        let _p = span(Subsystem::Membership);
+        self.index.leave(worker, self.clocks[worker]);
         self.alive[worker] = false;
         self.state[worker] = WorkerState::Dead;
         self.dying[worker] = false;
@@ -659,6 +816,7 @@ impl Scheduler {
     }
 
     fn process_join(&mut self, time: f64, worker: usize) -> SimEvent {
+        let _p = span(Subsystem::Membership);
         if self.late_join_pending[worker] {
             self.late_join_pending[worker] = false;
             self.stats.late_joins += 1;
@@ -673,10 +831,11 @@ impl Scheduler {
         self.epoch[worker] = self.epoch[worker].wrapping_add(1);
         self.blocked_since[worker] = time;
         self.step_wait[worker] = 0.0;
-        let min_live = (0..self.workers)
-            .filter(|&v| v != worker && self.alive[v])
-            .map(|v| self.clocks[v])
-            .min();
+        // slowest live peer, from the clock multiset (O(log M)). The
+        // joiner is not in the index yet (removed at `kill`, or never
+        // inserted for a late joiner), so this is the min over its peers —
+        // exactly the scan `filter(v != worker && alive[v])` computed.
+        let min_live = self.index.min_clock();
         // Clocks never regress. A fresh or lagging joiner adopts the
         // slowest live peer's clock and starts computing the fleet's
         // current round immediately (the SSP gate would admit the minimum
@@ -694,14 +853,18 @@ impl Scheduler {
                 self.clocks[worker] = m0;
             }
             self.state[worker] = WorkerState::Computing;
+            self.index.join(worker, self.clocks[worker]);
             // fresh model download precedes the first compute of the epoch
             let d = self.sample_delay(worker);
+            let comm = self.comm_of(worker);
             self.queue
-                .schedule_in(self.comm.pull + d, Ev::Finish { worker, epoch: self.epoch[worker] });
-            self.comm_total += self.comm.pull;
-            self.comm_bytes += self.comm.pull_bytes as u64;
+                .schedule_in(comm.pull + d, Ev::Finish { worker, epoch: self.epoch[worker] });
+            self.comm_total += comm.pull;
+            self.comm_bytes += comm.pull_bytes as u64;
         } else {
             self.state[worker] = WorkerState::Blocked;
+            self.index.join(worker, self.clocks[worker]);
+            self.index.set_blocked(worker);
         }
         // re-arm the crash stream for the reborn worker
         if let Some(tc) = self.faults.as_mut().and_then(|p| p.next_crash_in(worker)) {
@@ -1374,6 +1537,120 @@ mod tests {
         assert!(folds >= 5, "barrier wedged after an ahead-of-fleet rejoin: {folds} folds");
         assert_eq!(sched.fault_stats().restarts, 1);
         assert_eq!(sched.live_workers(), 3);
+    }
+
+    #[test]
+    fn ssp_gate_tolerates_below_min_clock_queries() {
+        // Regression (u64 underflow): the Protocol contract permits
+        // querying a worker whose clock is below the live minimum — a
+        // dead straggler, or a joiner mid-adoption. `clocks[w] - min`
+        // panicked in debug and admitted ~u64::MAX drift in release;
+        // saturating_sub makes the behind-the-fleet query admit.
+        let gate = StalenessBounded { bound: 2 };
+        let clocks = [7u64, 0, 10];
+        let alive = [true, false, true];
+        // worker 1 is dead at clock 0, live min is 7: 0 - 7 underflows
+        assert!(gate.may_start(1, &clocks, &alive), "behind-the-fleet query must admit");
+        assert!(gate.may_start(0, &clocks, &alive));
+        assert!(!gate.may_start(2, &clocks, &alive), "drift 3 exceeds bound 2");
+    }
+
+    #[test]
+    fn indexed_and_scan_gate_engines_are_bitwise_identical() {
+        // Drive the indexed fast path and the forced O(M) scan reference
+        // through an eventful lifecycle (crashes, rejoins, gated releases)
+        // and require identical event streams to the bit.
+        let protos: Vec<fn() -> Box<dyn Protocol>> = vec![
+            || Box::new(FullyAsync),
+            || Box::new(BarrierSync),
+            || Box::new(StalenessBounded { bound: 0 }),
+            || Box::new(StalenessBounded { bound: 2 }),
+        ];
+        for mk in protos {
+            for seed in [3u64, 41, 97] {
+                let build = |scan: bool| {
+                    let mut s = Scheduler::new(mk(), sampler(5, seed), 0.01);
+                    if scan {
+                        s.force_scan_gates();
+                    }
+                    s.inject_crash_at(2.5, 1);
+                    s.inject_join_at(6.0, 1);
+                    s.inject_crash_at(9.0, 3);
+                    s.inject_join_at(12.5, 3);
+                    s
+                };
+                let mut fast = build(false);
+                let mut scan = build(true);
+                assert!(!fast.uses_scan_gates() && scan.uses_scan_gates());
+                assert_eq!(fast.start(), scan.start());
+                for _ in 0..200 {
+                    let (ea, eb) = (fast.next_event(), scan.next_event());
+                    match (&ea, &eb) {
+                        (
+                            Some(SimEvent::Finish { time: ta, worker: wa }),
+                            Some(SimEvent::Finish { time: tb, worker: wb }),
+                        ) => {
+                            assert_eq!(wa, wb);
+                            assert_eq!(ta.to_bits(), tb.to_bits(), "schedule diverged");
+                            assert_eq!(fast.complete(*wa), scan.complete(*wb));
+                        }
+                        _ => assert_eq!(ea, eb, "event streams diverged"),
+                    }
+                    if ea.is_none() {
+                        break;
+                    }
+                }
+                assert_eq!(fast.clocks(), scan.clocks());
+                assert_eq!(fast.fault_stats(), scan.fault_stats());
+                assert_eq!(fast.live_workers(), scan.live_workers());
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_per_worker_comm_is_bitwise_identical_to_shared_comm() {
+        use crate::sim::CommCosts;
+        let comm = CommCosts { push: 0.05, pull: 0.1, push_bytes: 64, pull_bytes: 256 };
+        let mut shared = Scheduler::with_comm(Box::new(StalenessBounded { bound: 1 }), sampler(4, 19), 0.01, comm);
+        let mut per_worker =
+            Scheduler::with_comm(Box::new(StalenessBounded { bound: 1 }), sampler(4, 19), 0.01, comm);
+        per_worker.set_worker_comm(vec![comm; 4]);
+        assert_eq!(shared.start(), per_worker.start());
+        for _ in 0..120 {
+            let (ta, wa) = shared.next().unwrap();
+            let (tb, wb) = per_worker.next().unwrap();
+            assert_eq!(wa, wb);
+            assert_eq!(ta.to_bits(), tb.to_bits(), "uniform override perturbed the schedule");
+            assert_eq!(shared.complete(wa), per_worker.complete(wb));
+        }
+        assert_eq!(shared.comm_bytes_total(), per_worker.comm_bytes_total());
+        assert_eq!(shared.comm_time_total().to_bits(), per_worker.comm_time_total().to_bits());
+    }
+
+    #[test]
+    fn per_worker_comm_charges_each_worker_its_own_link() {
+        use crate::sim::CommCosts;
+        // two workers, constant 1s computes; worker 1 sits behind a 10x
+        // more expensive (cross-rack) link, so its finishes lag worker 0's
+        let delays = DelaySampler::new(DelayModel::Constant { mean: 1.0 }, 2, 5);
+        let mut sched = Scheduler::new(Box::new(FullyAsync), delays, 0.0);
+        sched.set_worker_comm(vec![
+            CommCosts { push: 0.01, pull: 0.02, push_bytes: 10, pull_bytes: 20 },
+            CommCosts { push: 0.1, pull: 0.2, push_bytes: 10, pull_bytes: 20 },
+        ]);
+        sched.start();
+        // first finishes: pull + compute
+        let (t0, w0) = sched.next().unwrap();
+        assert_eq!(w0, 0);
+        assert!((t0 - 1.02).abs() < 1e-12);
+        sched.complete(0);
+        let (t1, w1) = sched.next().unwrap();
+        assert_eq!(w1, 1);
+        assert!((t1 - 1.2).abs() < 1e-12);
+        sched.complete(1);
+        // per-worker time accounting: w0 pull + turnaround, w1 pull + turnaround
+        let expect = 0.02 + (0.01 + 0.02) + 0.2 + (0.1 + 0.2);
+        assert!((sched.comm_time_total() - expect).abs() < 1e-12);
     }
 
     #[test]

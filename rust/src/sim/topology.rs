@@ -1,0 +1,357 @@
+//! Fleet topology: racks, logical PS nodes, and the topology-aware comm
+//! model.
+//!
+//! The flat [`CommModel`](super::delay::CommModel) charges every worker
+//! the same per-transfer cost — fine for one logical PS, wrong for the
+//! paper's regime of thousands of workers behind racks of parameter
+//! servers, where a worker's cost depends on *which links* its bytes
+//! cross. This module adds that structure:
+//!
+//! * workers and PS nodes are striped over `racks` racks (`id % racks`,
+//!   matching the shard striping in [`crate::ps::shard`]);
+//! * the model's shards are placed across `ps_nodes` logical PS nodes,
+//!   so a push fans out `1/ps_nodes` of its bytes to each node — over
+//!   the **rack-local** link when the node shares the worker's rack, the
+//!   **cross-rack** link otherwise;
+//! * each rack's cross-rack uplink is a shared resource: its per-byte
+//!   cost is scaled by the number of workers resident in the rack
+//!   (static fair-share bandwidth sharing);
+//! * with `hierarchical` two-level aggregation, workers push whole
+//!   gradients rack-locally to their rack reducer, which ships **one**
+//!   combined gradient across the uplink — so the cross-rack cost is
+//!   amortized `1/workers_in_rack` per worker instead of multiplied.
+//!
+//! All of it compiles down to one static [`CommCosts`] per worker,
+//! installed via [`Scheduler::set_worker_comm`](super::Scheduler::set_worker_comm):
+//! the schedule stays a deterministic function of `(config, seed)`, and
+//! with the section disabled no per-worker costs are installed at all —
+//! bit-identical to pre-topology builds.
+//!
+//! With the defaults (`ps_nodes = 1`, `racks = 1`, flat) every transfer
+//! is rack-local and the per-worker costs collapse to exactly
+//! `CommCosts::from_model(rack_model, ..)` — the `[comm]` section's
+//! single-PS math.
+
+use super::delay::{CommCosts, CommModel};
+use anyhow::bail;
+
+/// The `[topology]` config section. Off by default; following the
+/// `[comm]`/`[faults]` convention, setting any parameter auto-enables it
+/// while an explicit `enabled = false` always wins.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopologyConfig {
+    pub enabled: bool,
+    /// Logical PS nodes the model's shards are placed across.
+    pub ps_nodes: usize,
+    /// Racks the workers and PS nodes are striped over (`id % racks`).
+    pub racks: usize,
+    /// Rack-local link (worker ↔ same-rack PS node / rack reducer).
+    pub rack_model: CommModel,
+    /// Cross-rack link (worker ↔ other-rack PS node, reducer ↔ root).
+    pub cross_model: CommModel,
+    /// Two-level aggregation: rack reducers fold locally, one combined
+    /// gradient crosses the uplink per rack per round.
+    pub hierarchical: bool,
+}
+
+impl Default for TopologyConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            ps_nodes: 1,
+            racks: 1,
+            rack_model: CommModel::infiniband_like(),
+            cross_model: CommModel::ethernet_like(),
+            hierarchical: false,
+        }
+    }
+}
+
+impl TopologyConfig {
+    /// Validate the knobs against a fleet of `workers` workers.
+    pub fn validate(&self, workers: usize) -> anyhow::Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        if self.ps_nodes == 0 {
+            bail!("topology.ps_nodes must be >= 1");
+        }
+        if self.racks == 0 {
+            bail!("topology.racks must be >= 1");
+        }
+        if self.racks > workers {
+            bail!(
+                "topology.racks = {} exceeds the {} workers: every rack must hold \
+                 at least one worker",
+                self.racks,
+                workers
+            );
+        }
+        for (name, m) in [("rack", &self.rack_model), ("cross", &self.cross_model)] {
+            if !(m.per_push >= 0.0 && m.per_push.is_finite()) {
+                bail!("topology.{name}_per_push must be finite and >= 0");
+            }
+            if !(m.per_mb >= 0.0 && m.per_mb.is_finite()) {
+                bail!("topology.{name}_per_mb must be finite and >= 0");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The placed topology: static rack/node layout plus the per-worker cost
+/// derivation. Built once per run; `None` when the section is disabled,
+/// so callers wire it straight through (mirroring [`super::FaultPlan`]).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    workers: usize,
+    ps_nodes: usize,
+    racks: usize,
+    rack: CommModel,
+    cross: CommModel,
+    hierarchical: bool,
+}
+
+impl Topology {
+    pub fn from_config(cfg: &TopologyConfig, workers: usize) -> Option<Topology> {
+        if !cfg.enabled {
+            return None;
+        }
+        Some(Topology {
+            workers,
+            ps_nodes: cfg.ps_nodes.max(1),
+            racks: cfg.racks.max(1).min(workers.max(1)),
+            rack: cfg.rack_model,
+            cross: cfg.cross_model,
+            hierarchical: cfg.hierarchical,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+    pub fn ps_nodes(&self) -> usize {
+        self.ps_nodes
+    }
+    pub fn racks(&self) -> usize {
+        self.racks
+    }
+    pub fn hierarchical(&self) -> bool {
+        self.hierarchical
+    }
+
+    /// The rack worker `w` lives in (striped).
+    pub fn worker_rack(&self, worker: usize) -> usize {
+        worker % self.racks
+    }
+
+    /// The rack PS node `node` lives in (striped, same rule as workers).
+    pub fn node_rack(&self, node: usize) -> usize {
+        node % self.racks
+    }
+
+    /// Workers resident in rack `r` (the uplink fair-share divisor);
+    /// >= 1 for every rack because `racks <= workers`.
+    pub fn workers_in_rack(&self, r: usize) -> usize {
+        debug_assert!(r < self.racks);
+        self.workers / self.racks + usize::from(r < self.workers % self.racks)
+    }
+
+    /// One directed transfer of `bytes` from worker `w`'s rack to the PS
+    /// nodes under the flat (direct fan-out) model: `1/ps_nodes` of the
+    /// bytes to each node, rack-local or shared-uplink cross-rack.
+    fn flat_cost(&self, worker: usize, bytes: usize) -> f64 {
+        let wr = self.worker_rack(worker);
+        let share = self.workers_in_rack(wr) as f64;
+        // same multiply/divide association as CommModel::cost so the
+        // single-node single-rack case is bitwise the flat [comm] charge
+        let per_node_bytes = bytes as f64 / self.ps_nodes as f64;
+        let mut t = 0.0;
+        // node ranks repeat rack assignments with period `racks`: group
+        // the fan-out by rack residency instead of iterating every node
+        let local_nodes = {
+            let full = self.ps_nodes / self.racks;
+            full + usize::from(wr < self.ps_nodes % self.racks)
+        };
+        let cross_nodes = self.ps_nodes - local_nodes;
+        t += local_nodes as f64 * (self.rack.per_push + self.rack.per_mb * per_node_bytes / 1e6);
+        t += cross_nodes as f64
+            * (self.cross.per_push + self.cross.per_mb * share * per_node_bytes / 1e6);
+        t
+    }
+
+    /// One directed transfer of `bytes` under hierarchical two-level
+    /// aggregation: whole gradient rack-locally to the reducer, plus the
+    /// rack's single cross-uplink transfer amortized over its workers.
+    fn hier_cost(&self, worker: usize, bytes: usize) -> f64 {
+        let wr = self.worker_rack(worker);
+        let pop = self.workers_in_rack(wr) as f64;
+        let local = self.rack.cost(bytes);
+        // a single-rack fleet IS the root's rack: no uplink at all
+        let uplink = if self.racks > 1 { self.cross.cost(bytes) / pop } else { 0.0 };
+        local + uplink
+    }
+
+    /// Worker `w`'s per-transfer charges for `push_bytes`-sized uploads
+    /// and `pull_bytes`-sized downloads. Uploads and downloads cross the
+    /// same links, so both directions use the same per-byte math.
+    pub fn worker_costs(&self, worker: usize, push_bytes: usize, pull_bytes: usize) -> CommCosts {
+        let (push, pull) = if self.hierarchical {
+            (self.hier_cost(worker, push_bytes), self.hier_cost(worker, pull_bytes))
+        } else {
+            (self.flat_cost(worker, push_bytes), self.flat_cost(worker, pull_bytes))
+        };
+        CommCosts { push, pull, push_bytes, pull_bytes }
+    }
+
+    /// The whole fleet's charges, in worker order — the vector handed to
+    /// [`Scheduler::set_worker_comm`](super::Scheduler::set_worker_comm).
+    pub fn all_worker_costs(&self, push_bytes: usize, pull_bytes: usize) -> Vec<CommCosts> {
+        (0..self.workers).map(|w| self.worker_costs(w, push_bytes, pull_bytes)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enabled() -> TopologyConfig {
+        TopologyConfig { enabled: true, ..TopologyConfig::default() }
+    }
+
+    #[test]
+    fn disabled_config_builds_no_topology() {
+        assert!(Topology::from_config(&TopologyConfig::default(), 4).is_none());
+        assert!(Topology::from_config(&enabled(), 4).is_some());
+    }
+
+    #[test]
+    fn validation_rejects_bad_knobs() {
+        enabled().validate(4).unwrap();
+        // disabled sections validate regardless of garbage values
+        TopologyConfig { ps_nodes: 0, ..TopologyConfig::default() }.validate(4).unwrap();
+        assert!(TopologyConfig { ps_nodes: 0, ..enabled() }.validate(4).is_err());
+        assert!(TopologyConfig { racks: 0, ..enabled() }.validate(4).is_err());
+        assert!(TopologyConfig { racks: 5, ..enabled() }.validate(4).is_err());
+        let bad_model = CommModel { per_push: -1.0, per_mb: 0.1 };
+        assert!(TopologyConfig { rack_model: bad_model, ..enabled() }.validate(4).is_err());
+        assert!(TopologyConfig { cross_model: bad_model, ..enabled() }.validate(4).is_err());
+        let nan = CommModel { per_push: 0.0, per_mb: f64::NAN };
+        assert!(TopologyConfig { rack_model: nan, ..enabled() }.validate(4).is_err());
+    }
+
+    #[test]
+    fn default_single_node_single_rack_matches_flat_comm_model() {
+        // ps_nodes = 1, racks = 1: the per-worker costs must collapse to
+        // the [comm] section's CommCosts::from_model with the rack link.
+        let topo = Topology::from_config(&enabled(), 4).unwrap();
+        let (pb, db) = (123_456, 4_000_000);
+        let flat = CommCosts::from_model(&CommModel::infiniband_like(), pb, db);
+        for w in 0..4 {
+            let c = topo.worker_costs(w, pb, db);
+            assert_eq!(c.push.to_bits(), flat.push.to_bits());
+            assert_eq!(c.pull.to_bits(), flat.pull.to_bits());
+            assert_eq!((c.push_bytes, c.pull_bytes), (pb, db));
+        }
+    }
+
+    #[test]
+    fn rack_striping_and_population() {
+        let cfg = TopologyConfig { racks: 3, ps_nodes: 4, ..enabled() };
+        let topo = Topology::from_config(&cfg, 8).unwrap();
+        assert_eq!(topo.worker_rack(0), 0);
+        assert_eq!(topo.worker_rack(5), 2);
+        assert_eq!(topo.node_rack(3), 0);
+        // 8 workers over 3 racks: populations 3, 3, 2
+        assert_eq!(
+            (0..3).map(|r| topo.workers_in_rack(r)).collect::<Vec<_>>(),
+            vec![3, 3, 2]
+        );
+        assert_eq!((0..3).map(|r| topo.workers_in_rack(r)).sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn cross_rack_workers_pay_more_than_rack_local_ones() {
+        // 2 racks, 1 PS node (lives in rack 0): even-indexed workers are
+        // rack-local, odd ones cross the (shared, slower) uplink.
+        let cfg = TopologyConfig { racks: 2, ps_nodes: 1, ..enabled() };
+        let topo = Topology::from_config(&cfg, 4).unwrap();
+        let local = topo.worker_costs(0, 1 << 20, 1 << 22);
+        let cross = topo.worker_costs(1, 1 << 20, 1 << 22);
+        assert!(cross.push > local.push, "cross-rack push must cost more");
+        assert!(cross.pull > local.pull, "cross-rack pull must cost more");
+        // the uplink is shared by the rack's 2 residents: the cross cost
+        // exceeds even the unshared cross-link price
+        let unshared = CommModel::ethernet_like().cost(1 << 20);
+        assert!(cross.push > unshared);
+    }
+
+    #[test]
+    fn more_ps_nodes_spread_bytes_but_add_latency() {
+        // single rack: every node is rack-local. Doubling nodes halves
+        // per-node bytes but doubles the per_push latency terms.
+        let one = Topology::from_config(&TopologyConfig { ps_nodes: 1, ..enabled() }, 4).unwrap();
+        let four = Topology::from_config(&TopologyConfig { ps_nodes: 4, ..enabled() }, 4).unwrap();
+        let c1 = one.worker_costs(0, 8_000_000, 0);
+        let c4 = four.worker_costs(0, 8_000_000, 0);
+        let m = CommModel::infiniband_like();
+        // same total bytes over the same link class: byte cost identical,
+        // latency term scales with the fan-out
+        let expect4 = 4.0 * m.per_push + m.per_mb * 8.0;
+        assert!((c4.push - expect4).abs() < 1e-12);
+        assert!((c1.push - (m.per_push + m.per_mb * 8.0)).abs() < 1e-12);
+        assert!(c4.push > c1.push);
+    }
+
+    #[test]
+    fn hierarchical_amortizes_the_uplink_across_the_rack() {
+        // 2 racks × 8 workers each, big gradients: flat fan-out makes every
+        // cross-rack worker pay the shared uplink in full (scaled by the 8
+        // residents), while hierarchical ships ONE combined gradient per
+        // rack — per-worker cross cost divided by 8, not multiplied.
+        let flat_cfg = TopologyConfig { racks: 2, ps_nodes: 2, ..enabled() };
+        let hier_cfg = TopologyConfig { hierarchical: true, ..flat_cfg.clone() };
+        let flat = Topology::from_config(&flat_cfg, 16).unwrap();
+        let hier = Topology::from_config(&hier_cfg, 16).unwrap();
+        let bytes = 16_000_000;
+        for w in 0..16 {
+            let f = flat.worker_costs(w, bytes, bytes);
+            let h = hier.worker_costs(w, bytes, bytes);
+            assert!(
+                h.push < f.push,
+                "worker {w}: hierarchical push {} not under flat {}",
+                h.push,
+                f.push
+            );
+        }
+        // single rack: no uplink at all, pure rack-local cost
+        let single = Topology::from_config(
+            &TopologyConfig { hierarchical: true, ..enabled() },
+            4,
+        )
+        .unwrap();
+        let c = single.worker_costs(0, bytes, bytes);
+        assert_eq!(c.push.to_bits(), CommModel::infiniband_like().cost(bytes).to_bits());
+    }
+
+    #[test]
+    fn all_worker_costs_is_worker_ordered_and_deterministic() {
+        let cfg = TopologyConfig { racks: 3, ps_nodes: 5, hierarchical: false, ..enabled() };
+        let topo = Topology::from_config(&cfg, 9).unwrap();
+        let all = topo.all_worker_costs(1000, 2000);
+        assert_eq!(all.len(), 9);
+        for (w, c) in all.iter().enumerate() {
+            let again = topo.worker_costs(w, 1000, 2000);
+            assert_eq!(c.push.to_bits(), again.push.to_bits());
+            assert_eq!(c.pull.to_bits(), again.pull.to_bits());
+            // same-rack workers see identical costs (striping symmetry)
+            let peer = topo.worker_costs((w + 3) % 9, 1000, 2000);
+            if topo.worker_rack(w) == topo.worker_rack((w + 3) % 9)
+                && topo.workers_in_rack(topo.worker_rack(w))
+                    == topo.workers_in_rack(topo.worker_rack((w + 3) % 9))
+            {
+                assert_eq!(c.push.to_bits(), peer.push.to_bits());
+            }
+        }
+    }
+}

@@ -29,14 +29,22 @@ pub enum Subsystem {
     CodecDecode,
     /// Fused decode→compensate→apply shard slice (`ps`).
     FusedApply,
+    /// One protocol-gate release pass (`sim::scheduler::release_gated`):
+    /// the indexed fast path or the O(M) scan reference.
+    GateRelease,
+    /// One fleet-membership transition (crash kill / rejoin), including
+    /// the live-clock multiset and bitset maintenance (`sim::fleet`).
+    Membership,
 }
 
-pub const SUBSYSTEMS: [Subsystem; 5] = [
+pub const SUBSYSTEMS: [Subsystem; 7] = [
     Subsystem::ShardLock,
     Subsystem::PoolJob,
     Subsystem::CodecEncode,
     Subsystem::CodecDecode,
     Subsystem::FusedApply,
+    Subsystem::GateRelease,
+    Subsystem::Membership,
 ];
 
 impl Subsystem {
@@ -47,6 +55,8 @@ impl Subsystem {
             Subsystem::CodecEncode => "codec_encode",
             Subsystem::CodecDecode => "codec_decode",
             Subsystem::FusedApply => "fused_apply",
+            Subsystem::GateRelease => "gate_release",
+            Subsystem::Membership => "membership",
         }
     }
 
@@ -75,8 +85,15 @@ impl Cell {
 }
 
 static ENABLED: AtomicBool = AtomicBool::new(false);
-static CELLS: [Cell; SUBSYSTEMS.len()] =
-    [Cell::new(), Cell::new(), Cell::new(), Cell::new(), Cell::new()];
+static CELLS: [Cell; SUBSYSTEMS.len()] = [
+    Cell::new(),
+    Cell::new(),
+    Cell::new(),
+    Cell::new(),
+    Cell::new(),
+    Cell::new(),
+    Cell::new(),
+];
 
 /// Turn span collection on/off (per run; the trainer resets + enables).
 pub fn set_enabled(on: bool) {

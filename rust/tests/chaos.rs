@@ -30,7 +30,14 @@
 //! * the pipelined gradient stage (batches drawn at pull, gradients
 //!   evaluated in pool bursts, dropped epochs discarded with their batch
 //!   retained) reproduces the at-finish serial loop bit-for-bit at every
-//!   pool lane count — the "runtime.threads is a pure wallclock knob" pin.
+//!   pool lane count — the "runtime.threads is a pure wallclock knob" pin;
+//! * the indexed gate engine (live-clock multiset + bitset membership) is
+//!   bitwise-indistinguishable from the retained O(M) `may_start` scan
+//!   reference under fault churn: same event stream, push trace, and final
+//!   model bits for every built-in protocol;
+//! * a 10_000-worker fleet under a churn-heavy plan completes multiple
+//!   full SSP rounds in seconds of host time — the fleet-scale smoke that
+//!   the O(M²) release cascades of the scan engine could not pass.
 
 use dc_asgd::config::{Algorithm, DelayModel};
 use dc_asgd::ps::{Hyper, NativeKernel, ParamServer};
@@ -688,6 +695,191 @@ fn pipelined_gradients_are_bitwise_identical_to_serial() {
     }
     // a fleet can die out on an unlucky seed, but not on every one
     assert!(total_pushes > 0, "no chaos case ever pushed a gradient");
+}
+
+/// The gate-engine equivalence pin (tentpole of the fleet-scale PR): the
+/// indexed release paths (live-clock multiset, bitset membership, O(1)
+/// drift checks) must be bitwise-indistinguishable from the retained O(M)
+/// [`Protocol::may_start`] scan they replaced. For seeded random fault
+/// plans across all three built-in protocols, drive one scheduler per
+/// engine against its own real parameter server and require the full event
+/// stream (time bits, kind, worker, release lists), the push trace
+/// (worker/version/staleness), and the final model bits to agree exactly.
+#[test]
+fn chaos_indexed_gates_match_scan_reference_bitwise() {
+    type Drive = (Vec<(u64, u8, usize, Vec<usize>)>, Vec<(usize, u64, u64)>, Vec<u32>);
+    let cases = (total_seeds() / 4).max(2);
+    let mut total_pushes = 0usize;
+    for case in 0..cases {
+        let seed = 0x6A7E_9000 + case;
+        let drive = |force_scan: bool| -> Drive {
+            let mut rng = Pcg64::new(seed);
+            let m = 2 + rng.below(6) as usize; // 2..=7 workers
+            let proto: Box<dyn Protocol> = match rng.below(3) {
+                0 => Box::new(FullyAsync),
+                1 => Box::new(StalenessBounded { bound: rng.below(4) }),
+                _ => Box::new(BarrierSync),
+            };
+            let fcfg = random_fault_config(&mut rng, m);
+            let plan = FaultPlan::from_config(&fcfg, m, seed).unwrap();
+            let delays = DelaySampler::new(random_delay_model(&mut rng), m, seed ^ 0xF1);
+            let mut sched =
+                Scheduler::with_faults(proto, delays, 0.01, CommCosts::default(), Some(plan));
+            if force_scan {
+                sched.force_scan_gates();
+            }
+            assert_eq!(sched.uses_scan_gates(), force_scan);
+
+            let n = 32;
+            let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).cos()).collect();
+            let hyper = Hyper { lambda0: 0.5, ms_momentum: 0.9, momentum: 0.0, eps: 1e-7 };
+            let ps = ParamServer::new(
+                &init,
+                m,
+                3,
+                Algorithm::DcAsgdConst,
+                hyper,
+                Box::new(NativeKernel),
+            )
+            .unwrap();
+            let g: Vec<f32> = (0..n).map(|i| ((i * 5 + 1) as f32 * 0.02).sin() * 0.1).collect();
+            let mut buf = vec![0.0f32; n];
+
+            let mut events_out = Vec::new();
+            let mut pushes = Vec::new();
+            for w in sched.start() {
+                ps.pull(w, &mut buf);
+            }
+            for _ in 0..800 {
+                match sched.next_event() {
+                    None => break,
+                    Some(SimEvent::Finish { time, worker }) => {
+                        let out = ps.push(worker, &g, 0.05);
+                        pushes.push((worker, out.version, out.staleness));
+                        let released = sched.complete(worker);
+                        for &v in &released {
+                            ps.pull(v, &mut buf);
+                        }
+                        events_out.push((time.to_bits(), 0u8, worker, released));
+                    }
+                    Some(SimEvent::Crash { time, worker, released, .. }) => {
+                        for &v in &released {
+                            ps.pull(v, &mut buf);
+                        }
+                        events_out.push((time.to_bits(), 1u8, worker, released));
+                    }
+                    Some(SimEvent::Join { time, worker, computing, released }) => {
+                        ps.reset_worker(worker);
+                        if computing {
+                            ps.pull(worker, &mut buf);
+                        }
+                        for &v in &released {
+                            ps.pull(v, &mut buf);
+                        }
+                        events_out.push((time.to_bits(), 2u8, worker, released));
+                    }
+                }
+            }
+            let mut model = vec![0.0f32; n];
+            ps.snapshot(&mut model);
+            (events_out, pushes, model.iter().map(|x| x.to_bits()).collect())
+        };
+        let fast = drive(false);
+        let scan = drive(true);
+        assert_eq!(fast.0, scan.0, "seed {seed}: event stream diverged between gate engines");
+        assert_eq!(fast.1, scan.1, "seed {seed}: push trace diverged between gate engines");
+        assert_eq!(fast.2, scan.2, "seed {seed}: final model bits diverged between gate engines");
+        total_pushes += fast.1.len();
+    }
+    assert!(total_pushes > 0, "no equivalence case ever pushed a gradient");
+}
+
+/// Fleet-scale smoke (the ISSUE's acceptance bar): 10_000 workers under a
+/// churn-heavy fault plan complete multiple full SSP rounds in seconds of
+/// host time. This makes the O(log M)/O(1) gate engine load-bearing: the
+/// retained O(M) scan reference turns every release cascade at this scale
+/// into an O(M²) sweep and cannot stay inside the bound.
+#[test]
+fn fleet_scale_10k_workers_complete_churn_plan_fast() {
+    let m = 10_000usize;
+    let seed = 0xF1EE_7u64;
+    let fcfg = FaultConfig {
+        enabled: true,
+        crash_rate: 0.02,
+        restart_mean: 2.0,
+        departure_prob: 0.05,
+        straggler_rate: 0.01,
+        straggler_factor: 3.0,
+        straggler_duration: 4.0,
+        late_join: 50,
+        late_join_by: 6.0,
+        policy: CrashPolicy::Salvage,
+        seed: 0,
+    };
+    let plan = FaultPlan::from_config(&fcfg, m, seed).unwrap();
+    let delays =
+        DelaySampler::new(DelayModel::Uniform { mean: 1.0, jitter: 0.3 }, m, seed ^ 0x2C);
+    let mut sched = Scheduler::with_faults(
+        Box::new(StalenessBounded { bound: 2 }),
+        delays,
+        0.0,
+        CommCosts::default(),
+        Some(plan),
+    );
+    assert!(!sched.uses_scan_gates(), "built-in SSP must ride the indexed gate engine");
+
+    let t0 = std::time::Instant::now();
+    assert_eq!(sched.start().len(), m, "whole fleet must start computing");
+    let target = 60_000u64; // ~6 full-fleet rounds of finishes
+    let mut finishes = 0u64;
+    let mut crashes = 0u64;
+    let mut last_t = 0.0f64;
+    let mut events = 0u64;
+    while finishes < target && events < target * 2 {
+        events += 1;
+        match sched.next_event() {
+            None => break,
+            Some(SimEvent::Finish { time, worker }) => {
+                assert!(time >= last_t, "clock regressed at fleet scale");
+                last_t = time;
+                finishes += 1;
+                sched.complete(worker);
+            }
+            Some(SimEvent::Crash { time, .. }) => {
+                assert!(time >= last_t);
+                last_t = time;
+                crashes += 1;
+            }
+            Some(SimEvent::Join { time, .. }) => {
+                assert!(time >= last_t);
+                last_t = time;
+            }
+        }
+        if events % 10_000 == 0 {
+            // the SSP drift invariant over live membership is an O(M) scan,
+            // so spot-check it at intervals rather than per event
+            let live: Vec<u64> =
+                (0..m).filter(|&v| sched.is_live(v)).map(|v| sched.clocks()[v]).collect();
+            if let (Some(&max), Some(&min)) = (live.iter().max(), live.iter().min()) {
+                assert!(max - min <= 3, "live clock drift {} > s+1=3 at fleet scale", max - min);
+            }
+        }
+    }
+    let elapsed = t0.elapsed();
+    assert!(finishes >= m as u64, "10k fleet stalled: only {finishes} finishes");
+    assert!(crashes > 0, "churn plan produced no crashes at fleet scale");
+    let st = sched.fault_stats();
+    assert!(st.crashes > 0, "fault stats missed the churn");
+    assert!(st.restarts + st.departures <= st.crashes, "lifecycle counters inconsistent");
+    assert!(st.late_joins <= fcfg.late_join as u64, "late-join overcount at fleet scale");
+    // generous even for debug builds on a loaded host; the O(M) scan engine
+    // fails it by orders of magnitude at M = 10_000
+    assert!(
+        elapsed.as_secs_f64() < 30.0,
+        "10k-worker churn smoke took {:.1}s (>= 30s): gate engine has regressed \
+         toward the O(M) scan",
+        elapsed.as_secs_f64()
+    );
 }
 
 /// Scripted churn through the public injection hooks: a crash mid-round

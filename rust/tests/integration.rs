@@ -160,6 +160,7 @@ fn all_algorithms_run_in_sim_mode() {
     for algo in [
         Algorithm::SyncSgd,
         Algorithm::DcSyncSgd,
+        Algorithm::HierSsgd,
         Algorithm::Asgd,
         Algorithm::DcAsgdConst,
         Algorithm::DcAsgdAdaptive,
@@ -391,6 +392,7 @@ fn protocol_matrix_is_deterministic_bitwise() {
         Algorithm::SequentialSgd,
         Algorithm::SyncSgd,
         Algorithm::DcSyncSgd,
+        Algorithm::HierSsgd,
         Algorithm::Asgd,
         Algorithm::DcAsgdConst,
         Algorithm::DcAsgdAdaptive,
@@ -575,6 +577,74 @@ fn dcssgd_differs_from_ssgd_trajectory() {
     let dc = mk(Algorithm::DcSyncSgd);
     // same schedule, different update rule: losses must differ
     assert_ne!(ssgd.final_train_loss, dc.final_train_loss);
+}
+
+#[test]
+fn hier_ssgd_degenerates_to_ssgd_and_topology_charges_time() {
+    // The [topology] column end-to-end: (1) hier-ssgd with one (implicit)
+    // rack IS plain ssgd, bit for bit; (2) a multi-rack fleet pays its
+    // transfer charges without moving the step budget; (3) the schedule
+    // depends on the link charges, not the fold shape; (4) hierarchical
+    // aggregation amortizes the cross-rack uplink vs the flat fan-out.
+    let _dir = require_artifacts!();
+    let mk = |algo: Algorithm, topo: Option<(usize, usize, bool)>| {
+        let mut cfg = tiny_cfg();
+        cfg.algorithm = algo;
+        cfg.workers = 4;
+        if let Some((ps_nodes, racks, hier)) = topo {
+            cfg.topology.enabled = true;
+            cfg.topology.ps_nodes = ps_nodes;
+            cfg.topology.racks = racks;
+            cfg.topology.hierarchical = hier;
+            cfg.topology.rack_model.per_push = 0.01;
+            cfg.topology.rack_model.per_mb = 1e-3;
+            cfg.topology.cross_model.per_push = 0.05; // sizeable vs compute ~1.0
+            cfg.topology.cross_model.per_mb = 1e-2;
+        }
+        Trainer::new(cfg).unwrap().run_logged().unwrap()
+    };
+
+    // (1) no [topology] => one rack: the hierarchical fold collapses to the
+    // flat worker-order sum and the trajectory is bitwise ssgd
+    let (ssgd_r, ssgd_log) = mk(Algorithm::SyncSgd, None);
+    let (hier_r, hier_log) = mk(Algorithm::HierSsgd, None);
+    assert_eq!(ssgd_r.total_steps, hier_r.total_steps);
+    assert_eq!(ssgd_r.final_train_loss, hier_r.final_train_loss);
+    assert_eq!(ssgd_r.total_time.to_bits(), hier_r.total_time.to_bits());
+    assert_eq!(ssgd_log.steps.len(), hier_log.steps.len());
+    for (a, b) in ssgd_log.steps.iter().zip(&hier_log.steps) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "fold diverged at step {}", a.step);
+        assert_eq!(a.time.to_bits(), b.time.to_bits(), "schedule diverged at step {}", a.step);
+    }
+
+    // (2) 2 racks x 2 PS nodes: wallclock extends, step budget unchanged
+    let (topo_r, _) = mk(Algorithm::HierSsgd, Some((2, 2, true)));
+    assert_eq!(topo_r.total_steps, ssgd_r.total_steps, "topology must not change step budget");
+    assert!(
+        topo_r.total_time > ssgd_r.total_time,
+        "topology charges did not extend wallclock: {} vs {}",
+        topo_r.total_time,
+        ssgd_r.total_time
+    );
+    assert!(topo_r.final_train_loss.is_finite());
+
+    // (3) ssgd under the same flat topology shares hier-ssgd's exact event
+    // times — only the fold order differs between the two columns
+    let (_, flat_ssgd_log) = mk(Algorithm::SyncSgd, Some((2, 2, false)));
+    let (flat_hier_r, flat_hier_log) = mk(Algorithm::HierSsgd, Some((2, 2, false)));
+    assert_eq!(flat_ssgd_log.steps.len(), flat_hier_log.steps.len());
+    for (a, b) in flat_ssgd_log.steps.iter().zip(&flat_hier_log.steps) {
+        assert_eq!(a.time.to_bits(), b.time.to_bits(), "schedule diverged at step {}", a.step);
+    }
+
+    // (4) two-level aggregation beats the flat fan-out on the same fleet
+    let (hier2_r, _) = mk(Algorithm::HierSsgd, Some((2, 2, true)));
+    assert!(
+        hier2_r.total_time < flat_hier_r.total_time,
+        "hierarchical aggregation did not amortize the uplink: {} vs {}",
+        hier2_r.total_time,
+        flat_hier_r.total_time
+    );
 }
 
 #[test]

@@ -582,6 +582,52 @@ fn prop_ssp_scheduler_staleness_bounded() {
 }
 
 #[test]
+fn prop_ssp_gate_admits_behind_fleet_queries_without_underflow() {
+    // Regression property for the u64-underflow latent bug: the Protocol
+    // contract permits querying a worker whose clock is BELOW the live
+    // minimum — a dead straggler, or a joiner before clock adoption.
+    // `clocks[w] - min` panicked in debug builds and admitted ~u64::MAX
+    // drift in release; the saturating form must (a) never panic, (b)
+    // admit every behind-the-fleet query, and (c) agree with the clamped
+    // drift predicate `clocks[w] <= min ⊕ s` (⊕ saturating) everywhere —
+    // including clocks pinned against u64::MAX.
+    check("ssp may_start == clamped-drift predicate on arbitrary fleets", 60, |g| {
+        let m = g.usize_in(2, 10).max(2);
+        let s = g.usize_in(0, 6) as u64;
+        let gate = StalenessBounded { bound: s };
+        // draw clocks near 0 or near u64::MAX to exercise both saturation ends
+        let base = if g.bool() { 0u64 } else { u64::MAX - 4096 };
+        let mut clocks: Vec<u64> =
+            (0..m).map(|_| base.saturating_add(g.usize_in(0, 2048) as u64)).collect();
+        let mut alive: Vec<bool> = (0..m).map(|_| g.bool()).collect();
+        let keep = g.usize_in(0, m - 1);
+        alive[keep] = true; // at least one live worker defines the minimum
+        // plant a guaranteed behind-the-fleet query: kill a worker first
+        // (so it cannot define the minimum), then park its clock below the
+        // live minimum — the underflow trigger
+        let dead = (keep + 1 + g.usize_in(0, m - 2)) % m;
+        alive[dead] = false;
+        let min =
+            clocks.iter().zip(&alive).filter(|&(_, &a)| a).map(|(&c, _)| c).min().unwrap();
+        clocks[dead] = min.saturating_sub(1 + g.usize_in(0, 500) as u64);
+        for w in 0..m {
+            let admit = gate.may_start(w, &clocks, &alive);
+            let expect = clocks[w] <= min.saturating_add(s);
+            prop_assert!(
+                admit == expect,
+                "worker {w}: may_start {admit} != predicate {expect} \
+                 (clock {}, live min {min}, s {s})",
+                clocks[w]
+            );
+            if clocks[w] <= min {
+                prop_assert!(admit, "behind-the-fleet worker {w} was gated (underflow)");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_dcssgd_fold_is_norm_ordered() {
     check("dcssgd accumulator result independent of push order", 20, |g| {
         // the fold sorts by gradient norm, so pushing in any order must
