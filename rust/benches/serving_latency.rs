@@ -1,0 +1,334 @@
+//! Training-vs-serving tail latency: the contention-free serving plane.
+//!
+//! Two parts, mirroring the two layers of the claim:
+//!
+//! A) **Host-thread contention gate** (artifact-free, always runs): M = 8
+//!    pusher threads hammer the live store while S = 8 reader threads issue
+//!    batched pulls, once through the per-shard read locks (`locked`) and
+//!    once through the epoch-published snapshot plane (`snapshot`), with a
+//!    publisher republishing throughout. Measured wall-clock per-pull
+//!    latency percentiles land in runs/bench/serving_latency.jsonl.
+//!    Acceptance (asserted when `DCASGD_SERVING_GATE=1`, best of 3 trials —
+//!    shared CI hosts jitter): snapshot p99 strictly below locked p99, and
+//!    push throughput within 2x of the locked-read run (the plane must not
+//!    tax training).
+//! B) **Virtual-time sweep** (needs compiled PJRT artifacts; skips loudly
+//!    without): scenarios/serving_latency.toml sweeps arrival rate x
+//!    publish cadence x {locked, snapshot} through `run_grid`. Gates: for
+//!    every (rate, cadence) cell the snapshot p99 must not exceed the
+//!    locked p99, staleness stays within the publish cadence, and training
+//!    `total_time` is bitwise identical across read modes (the serving
+//!    plane observes the schedule, never perturbs it).
+
+mod common;
+
+#[allow(unused_imports)]
+use common::*;
+use dc_asgd::bench::Table;
+use dc_asgd::config::Algorithm;
+use dc_asgd::ps::{Hyper, NativeKernel, ParamServer};
+use dc_asgd::scenario::run_grid;
+use dc_asgd::sim::serving::{percentile, QUERY_LEN};
+use dc_asgd::util::json::Json;
+use dc_asgd::util::rng::Pcg64;
+use std::io::Write;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// mlp_cifar padded size — contention measured on the real vector.
+const N: usize = 860_160;
+/// Pusher (training) and reader (serving) thread counts for the gate cell.
+const PUSHERS: usize = 8;
+const READERS: usize = 8;
+const SHARDS: usize = 8;
+/// Measurement window per mode.
+const WINDOW_MS: u64 = 300;
+/// Queries per batched pull (matches the ServingConfig default).
+const BATCH: usize = 8;
+
+fn randn(seed: u64, n: usize, scale: f64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    (0..n).map(|_| rng.normal(0.0, scale) as f32).collect()
+}
+
+/// One contention trial: latency percentiles (ns) + total push count.
+struct Trial {
+    p50: f64,
+    p99: f64,
+    p999: f64,
+    pulls: u64,
+    pushes: u64,
+}
+
+/// Run PUSHERS training threads against READERS serving threads for
+/// WINDOW_MS, reading through `snapshot` (epoch plane) or the locked
+/// baseline, and collect per-pull wall latencies.
+fn contention_trial(snapshot: bool) -> Trial {
+    let init = randn(5, N, 1.0);
+    let ps = Arc::new(
+        ParamServer::new(
+            &init,
+            PUSHERS,
+            SHARDS,
+            Algorithm::Asgd,
+            Hyper { lambda0: 0.04, ms_momentum: 0.95, momentum: 0.0, eps: 1e-7 },
+            Box::new(NativeKernel),
+        )
+        .unwrap(),
+    );
+    if snapshot {
+        ps.enable_serving();
+        ps.publish_snapshot(0, 0.0);
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let pushes = Arc::new(AtomicU64::new(0));
+
+    let mut push_handles = Vec::new();
+    for m in 0..PUSHERS {
+        let (ps, stop, pushes) = (Arc::clone(&ps), Arc::clone(&stop), Arc::clone(&pushes));
+        push_handles.push(std::thread::spawn(move || {
+            let g = randn(11 + m as u64, N, 0.01);
+            let mut buf = vec![0.0f32; N];
+            while !stop.load(Ordering::Relaxed) {
+                ps.pull(m, &mut buf);
+                ps.push(m, &g, 1e-6);
+                pushes.fetch_add(1, Ordering::Relaxed);
+            }
+        }));
+    }
+    // snapshot mode keeps a live publisher in the loop, so readers race
+    // real epoch flips (the regime the torn-read test pins)
+    let publisher = snapshot.then(|| {
+        let (ps, stop) = (Arc::clone(&ps), Arc::clone(&stop));
+        std::thread::spawn(move || {
+            let mut epoch = 1u64;
+            while !stop.load(Ordering::Relaxed) {
+                epoch = ps.publish_snapshot(epoch, 0.0);
+                std::thread::sleep(std::time::Duration::from_micros(500));
+            }
+        })
+    });
+
+    let mut read_handles = Vec::new();
+    for s in 0..READERS {
+        let (ps, stop) = (Arc::clone(&ps), Arc::clone(&stop));
+        read_handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::new(0xbe7c ^ s as u64);
+            let mut lat_ns: Vec<f64> = Vec::with_capacity(1 << 16);
+            let mut queries: Vec<Range<usize>> = Vec::with_capacity(BATCH);
+            let mut out = vec![0.0f32; BATCH * QUERY_LEN];
+            while !stop.load(Ordering::Relaxed) {
+                queries.clear();
+                for _ in 0..BATCH {
+                    let start = rng.below((N - QUERY_LEN) as u64) as usize;
+                    queries.push(start..start + QUERY_LEN);
+                }
+                let t0 = std::time::Instant::now();
+                if snapshot {
+                    ps.serving_pull_batch(&queries, &mut out)
+                        .expect("published before readers started");
+                } else {
+                    ps.locked_pull_batch(&queries, &mut out);
+                }
+                lat_ns.push(t0.elapsed().as_nanos() as f64);
+            }
+            lat_ns
+        }));
+    }
+
+    std::thread::sleep(std::time::Duration::from_millis(WINDOW_MS));
+    stop.store(true, Ordering::Relaxed);
+    let mut lat: Vec<f64> = Vec::new();
+    for h in read_handles {
+        lat.extend(h.join().unwrap());
+    }
+    for h in push_handles {
+        h.join().unwrap();
+    }
+    if let Some(h) = publisher {
+        h.join().unwrap();
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Trial {
+        p50: percentile(&lat, 0.50),
+        p99: percentile(&lat, 0.99),
+        p999: percentile(&lat, 0.999),
+        pulls: lat.len() as u64,
+        pushes: pushes.load(Ordering::Relaxed),
+    }
+}
+
+fn main() {
+    banner(
+        "serving tail latency: epoch snapshots vs locked reads under training",
+        "wait-free snapshot reads cut the p99/p999 pull tail while pushes stream in",
+    );
+
+    // ---- A) host-thread contention gate (artifact-free) -----------------
+    println!("# A) contention cell: M={PUSHERS} pushers x S={READERS} readers, shards={SHARDS}, n={N}");
+    let gate_on = std::env::var("DCASGD_SERVING_GATE").map(|v| v == "1").unwrap_or(false);
+    let trials = if gate_on { 3 } else { 1 };
+    let mut rows: Vec<Json> = Vec::new();
+    let mut best: Option<(Trial, Trial)> = None; // (locked, snapshot) by p99 gap
+    let mut table =
+        Table::new(&["trial", "mode", "p50(us)", "p99(us)", "p999(us)", "pulls", "pushes"]);
+    for trial in 0..trials {
+        let locked = contention_trial(false);
+        let snap = contention_trial(true);
+        for (mode, t) in [("locked", &locked), ("snapshot", &snap)] {
+            table.row(&[
+                trial.to_string(),
+                mode.into(),
+                format!("{:.1}", t.p50 / 1e3),
+                format!("{:.1}", t.p99 / 1e3),
+                format!("{:.1}", t.p999 / 1e3),
+                t.pulls.to_string(),
+                t.pushes.to_string(),
+            ]);
+            rows.push(Json::obj(vec![
+                ("bench", "serving_contention".into()),
+                ("trial", (trial as i64).into()),
+                ("mode", mode.into()),
+                ("pushers", (PUSHERS as i64).into()),
+                ("readers", (READERS as i64).into()),
+                ("shards", (SHARDS as i64).into()),
+                ("n", (N as i64).into()),
+                ("lat_p50_ns", t.p50.into()),
+                ("lat_p99_ns", t.p99.into()),
+                ("lat_p999_ns", t.p999.into()),
+                ("pulls", (t.pulls as i64).into()),
+                ("pushes", (t.pushes as i64).into()),
+            ]));
+        }
+        let better = match &best {
+            None => true,
+            Some((l, s)) => snap.p99 / locked.p99 < s.p99 / l.p99,
+        };
+        if better {
+            best = Some((locked, snap));
+        }
+    }
+    table.print();
+    let (locked, snap) = best.expect("at least one trial ran");
+    println!(
+        "acceptance (M={PUSHERS}, S={READERS}): snapshot p99 {:.1}us vs locked p99 {:.1}us \
+         [target: strictly lower]; pushes {} vs {} [target: >= 0.5x]",
+        snap.p99 / 1e3,
+        locked.p99 / 1e3,
+        snap.pushes,
+        locked.pushes
+    );
+    if gate_on {
+        assert!(
+            snap.p99 < locked.p99,
+            "snapshot p99 ({:.0}ns) did not beat locked p99 ({:.0}ns) in {trials} trials",
+            snap.p99,
+            locked.p99
+        );
+        assert!(
+            snap.pushes as f64 >= 0.5 * locked.pushes as f64,
+            "serving plane taxed training: {} pushes vs {} locked-baseline pushes",
+            snap.pushes,
+            locked.pushes
+        );
+        println!("gate: PASS");
+    } else {
+        println!("gate: measured only (set DCASGD_SERVING_GATE=1 to assert)");
+    }
+
+    let path = dc_asgd::bench::bench_out_dir().join("serving_latency.jsonl");
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path).expect("jsonl out"));
+    for row in &rows {
+        writeln!(f, "{row}").expect("jsonl write");
+    }
+    drop(f);
+    println!("rows: {}", path.display());
+
+    // ---- B) virtual-time sweep (needs compiled PJRT artifacts) ----------
+    println!("\n# B) arrival rate x publish cadence x read mode (virtual clock)");
+    let Some(engine) = engine_or_skip("mlp_tiny", false) else {
+        return; // no artifacts: part A already ran and gated
+    };
+    let sc = load_scenario("serving_latency");
+    let runs = run_grid(
+        &sc,
+        &engine,
+        &artifacts_dir(),
+        |cfg, _case| {
+            apply_scale(cfg);
+            Ok(())
+        },
+        |_case, _cfg, report| {
+            let s = report.serving.expect("sweep cell ran without serving");
+            vec![("serving_pull_count".into(), (s.pulls as i64).into())]
+        },
+    )
+    .unwrap_or_else(|e| panic!("scenario serving_latency failed: {e:#}"));
+
+    let mut table = Table::new(&[
+        "rate",
+        "publish_every",
+        "mode",
+        "pulls",
+        "p50(vs)",
+        "p99(vs)",
+        "stale(steps mean/max)",
+        "time(s)",
+    ]);
+    for r in &runs {
+        let s = r.report.serving.expect("serving summary missing");
+        table.row(&[
+            format!("{}", r.config.serving.rate),
+            r.config.serving.publish_every.to_string(),
+            r.config.serving.read_mode.name().into(),
+            s.pulls.to_string(),
+            format!("{:.6}", s.lat_p50),
+            format!("{:.6}", s.lat_p99),
+            format!("{:.2}/{}", s.stale_steps_mean, s.stale_steps_max),
+            format!("{:.1}", r.report.total_time),
+        ]);
+    }
+    println!();
+    table.print();
+
+    // gates: pair each snapshot cell with its locked twin
+    use dc_asgd::sim::ReadMode;
+    for r in runs.iter().filter(|r| r.config.serving.read_mode == ReadMode::Snapshot) {
+        let twin = runs
+            .iter()
+            .find(|t| {
+                t.config.serving.read_mode == ReadMode::Locked
+                    && t.config.serving.rate == r.config.serving.rate
+                    && t.config.serving.publish_every == r.config.serving.publish_every
+            })
+            .expect("locked twin missing from the grid");
+        let (s, l) = (r.report.serving.unwrap(), twin.report.serving.unwrap());
+        assert!(s.pulls > 0, "{}: no pulls served", r.label);
+        assert!(
+            s.lat_p99 <= l.lat_p99,
+            "{}: snapshot p99 {:.6} exceeds locked p99 {:.6}",
+            r.label,
+            s.lat_p99,
+            l.lat_p99
+        );
+        assert!(
+            s.stale_steps_max <= r.config.serving.publish_every as u64,
+            "{}: staleness {} exceeds publish cadence {}",
+            r.label,
+            s.stale_steps_max,
+            r.config.serving.publish_every
+        );
+        // the serving plane observes the schedule; it must not move it
+        assert_eq!(
+            r.report.total_time, twin.report.total_time,
+            "{}: read mode changed the training schedule",
+            r.label
+        );
+    }
+    println!(
+        "acceptance: snapshot p99 <= locked p99 and staleness <= cadence for all {} cells",
+        runs.len() / 2
+    );
+    engine.shutdown();
+}

@@ -167,6 +167,8 @@ pub const PARSE_CASES: &[(&str, &str)] = &[
     ("[sim.delay]\nmodel = \"uniform\"\nspeeds = [1.0, 2.0]", "applies to the heterogeneous delay model"),
     ("[compress]\nratio = 0.5", "requires a topk/randk codec"),
     ("[compress]\nbits = 4", "requires the qsgd codec"),
+    ("[serving]\narrival = \"warp\"", "unknown arrival process"),
+    ("[serving]\nread_mode = \"warp\"", "unknown serving read_mode"),
 ];
 
 // ------------------------------------------------------------ typed helpers
@@ -1300,6 +1302,156 @@ fn build_knobs() -> Vec<Knob> {
                 Ok(())
             },
         },
+        // [serving]: parameter knobs auto-enable the section; the explicit
+        // `enabled` knob is declared last so it always has the final word
+        Knob {
+            id: "/serving/publish_every",
+            toml_key: "serving.publish_every",
+            cli: Some("serving-publish-every"),
+            ty: Ty::USize,
+            bounds: bounds(1.0, false, UNBOUNDED, false, "serving.publish_every must be >= 1"),
+            default: "4",
+            help: "snapshot publication cadence in global steps (enables [serving])",
+            ctx: "",
+            get: |c| Some(Value::Int(c.serving.publish_every as i64)),
+            set: |c, v| {
+                c.serving.publish_every = want_usize("serving.publish_every", v)?;
+                c.serving.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/serving/rate",
+            toml_key: "serving.rate",
+            cli: Some("serving-rate"),
+            ty: Ty::F64,
+            bounds: bounds(0.0, true, 1e9, false, "serving.rate must be finite and > 0"),
+            default: "2.0",
+            help: "base arrival rate, pulls per virtual second (enables [serving])",
+            ctx: "",
+            get: |c| Some(Value::Float(c.serving.rate)),
+            set: |c, v| {
+                c.serving.rate = want_f64("serving.rate", v)?;
+                c.serving.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/serving/arrival",
+            toml_key: "serving.arrival",
+            cli: Some("serving-arrival"),
+            ty: Ty::Enum(&["poisson", "bursty", "diurnal"]),
+            bounds: None,
+            default: "poisson",
+            help: "arrival process shape (enables [serving])",
+            ctx: "",
+            get: |c| Some(Value::Str(c.serving.arrival.name().to_string())),
+            set: |c, v| {
+                c.serving.arrival =
+                    crate::sim::ArrivalKind::parse(want_str("serving.arrival", v)?)?;
+                c.serving.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/serving/burst",
+            toml_key: "serving.burst",
+            cli: Some("serving-burst"),
+            ty: Ty::F64,
+            bounds: bounds(1.0, false, 1e6, false, "serving.burst must be in [1, 1e6]"),
+            default: "4.0",
+            help: "peak rate multiplier for bursty/diurnal shapes (enables [serving])",
+            ctx: "",
+            get: |c| Some(Value::Float(c.serving.burst)),
+            set: |c, v| {
+                c.serving.burst = want_f64("serving.burst", v)?;
+                c.serving.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/serving/period",
+            toml_key: "serving.period",
+            cli: Some("serving-period"),
+            ty: Ty::F64,
+            bounds: bounds(0.0, true, UNBOUNDED, false, "serving.period must be finite and > 0"),
+            default: "8.0",
+            help: "bursty/diurnal cycle length, virtual seconds (enables [serving])",
+            ctx: "",
+            get: |c| Some(Value::Float(c.serving.period)),
+            set: |c, v| {
+                c.serving.period = want_f64("serving.period", v)?;
+                c.serving.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/serving/batch",
+            toml_key: "serving.batch",
+            cli: Some("serving-batch"),
+            ty: Ty::USize,
+            bounds: bounds(1.0, false, 4096.0, false, "serving.batch must be in [1, 4096]"),
+            default: "8",
+            help: "queries per batched pull (enables [serving])",
+            ctx: "",
+            get: |c| Some(Value::Int(c.serving.batch as i64)),
+            set: |c, v| {
+                c.serving.batch = want_usize("serving.batch", v)?;
+                c.serving.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/serving/read_mode",
+            toml_key: "serving.read_mode",
+            cli: Some("serving-read-mode"),
+            ty: Ty::Enum(&["snapshot", "locked"]),
+            bounds: None,
+            default: "snapshot",
+            help: "epoch-snapshot reads vs locked-read baseline (enables [serving])",
+            ctx: "",
+            get: |c| Some(Value::Str(c.serving.read_mode.name().to_string())),
+            set: |c, v| {
+                c.serving.read_mode =
+                    crate::sim::ReadMode::parse(want_str("serving.read_mode", v)?)?;
+                c.serving.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/serving/seed",
+            toml_key: "serving.seed",
+            cli: Some("serving-seed"),
+            ty: Ty::U64,
+            bounds: None,
+            default: "77",
+            help: "arrival/query stream seed, independent of /seed (enables [serving])",
+            ctx: "",
+            get: |c| Some(Value::Int(c.serving.seed as i64)),
+            set: |c, v| {
+                c.serving.seed = v
+                    .as_i64()
+                    .ok_or_else(|| anyhow::anyhow!("serving.seed must be an integer"))?
+                    as u64;
+                c.serving.enabled = true;
+                Ok(())
+            },
+        },
+        Knob {
+            id: "/serving/enabled",
+            toml_key: "serving.enabled",
+            cli: None,
+            ty: Ty::Bool,
+            bounds: None,
+            default: "false",
+            help: "serving workload against the live PS (explicit key wins)",
+            ctx: "",
+            get: |c| Some(Value::Bool(c.serving.enabled)),
+            set: |c, v| {
+                c.serving.enabled = want_bool("serving.enabled", v)?;
+                Ok(())
+            },
+        },
         Knob {
             id: "/eval/every",
             toml_key: "eval.every",
@@ -1532,6 +1684,35 @@ fn build_rules() -> Vec<Rule> {
                     bail!(
                         "run tracing records virtual time under the event-driven \
                          scheduler: set exec_mode = sim"
+                    );
+                }
+                Ok(())
+            },
+        },
+        Rule {
+            id: "serving-threads",
+            needle: "serving workload runs under the event-driven scheduler",
+            example: "exec_mode = \"threads\"\n[serving]\nenabled = true",
+            check: |c| {
+                if c.serving.enabled && c.exec_mode == ExecMode::Threads {
+                    bail!(
+                        "serving workload runs under the event-driven scheduler: \
+                         set exec_mode = sim"
+                    );
+                }
+                Ok(())
+            },
+        },
+        Rule {
+            id: "serving-sequential",
+            needle: "serving workload rides the event-driven cluster loop",
+            example: "algorithm = \"sgd\"\nworkers = 1\n[serving]\nenabled = true",
+            check: |c| {
+                if c.serving.enabled && c.algorithm == Algorithm::SequentialSgd {
+                    bail!(
+                        "serving workload rides the event-driven cluster loop: \
+                         sequential SGD runs outside it — use a cluster \
+                         algorithm (asgd, dc-asgd-*, ssp, dc-s3gd, ssgd)"
                     );
                 }
                 Ok(())

@@ -342,6 +342,9 @@ pub struct ExperimentConfig {
     pub runtime: RuntimeConfig,
     /// Run-trace observability (`[trace]`; off by default — bitwise-inert).
     pub trace: TraceConfig,
+    /// Serving workload: inference pulls against the live PS (`[serving]`;
+    /// off by default — the training schedule is bitwise-inert to it).
+    pub serving: crate::sim::ServingConfig,
     /// Parameter-store lock shards.
     pub shards: usize,
     /// Evaluate on the test set every `eval_every` effective epochs.
@@ -388,6 +391,7 @@ impl Default for ExperimentConfig {
             update_backend: UpdateBackend::Native,
             runtime: RuntimeConfig::default(),
             trace: TraceConfig::default(),
+            serving: crate::sim::ServingConfig::default(),
             shards: 1,
             eval_every: 1,
             eval_every_steps: 0,
@@ -576,6 +580,12 @@ impl ExperimentConfig {
             ("runtime_simd", self.runtime.simd.into()),
             ("trace_enabled", self.trace.enabled.into()),
             ("trace_sample_every", self.trace.sample_every.into()),
+            ("serving_enabled", self.serving.enabled.into()),
+            ("serving_publish_every", self.serving.publish_every.into()),
+            ("serving_rate", self.serving.rate.into()),
+            ("serving_arrival", self.serving.arrival.name().into()),
+            ("serving_batch", self.serving.batch.into()),
+            ("serving_read_mode", self.serving.read_mode.name().into()),
             ("tag", self.tag.as_str().into()),
         ])
     }
@@ -987,6 +997,62 @@ mod tests {
         assert!(json.contains("\"trace_sample_every\""));
     }
 
+    #[test]
+    fn from_toml_serving_section() {
+        use crate::sim::{ArrivalKind, ReadMode, ServingConfig};
+        // default: off, inert
+        let cfg = ExperimentConfig::from_toml("workers = 2").unwrap();
+        assert!(!cfg.serving.enabled);
+        assert_eq!(cfg.serving, ServingConfig::default());
+
+        // enable with custom parameters
+        let cfg = ExperimentConfig::from_toml(
+            "[serving]\nenabled = true\npublish_every = 2\nrate = 16.0\n\
+             arrival = \"bursty\"\nburst = 8.0\nperiod = 4.0\nbatch = 32\n\
+             read_mode = \"locked\"\nseed = 5",
+        )
+        .unwrap();
+        assert!(cfg.serving.enabled);
+        assert_eq!(cfg.serving.publish_every, 2);
+        assert_eq!(cfg.serving.rate, 16.0);
+        assert_eq!(cfg.serving.arrival, ArrivalKind::Bursty);
+        assert_eq!(cfg.serving.burst, 8.0);
+        assert_eq!(cfg.serving.period, 4.0);
+        assert_eq!(cfg.serving.batch, 32);
+        assert_eq!(cfg.serving.read_mode, ReadMode::Locked);
+        assert_eq!(cfg.serving.seed, 5);
+
+        // setting a parameter activates the section (same semantics as the
+        // [comm]/[faults]/[trace] sections) ...
+        let cfg = ExperimentConfig::from_toml("[serving]\nrate = 4.0").unwrap();
+        assert!(cfg.serving.enabled);
+        assert_eq!(cfg.serving.rate, 4.0);
+        // ... but an explicit `enabled` key always wins
+        let cfg =
+            ExperimentConfig::from_toml("[serving]\nrate = 4.0\nenabled = false").unwrap();
+        assert!(!cfg.serving.enabled);
+        assert_eq!(cfg.serving.rate, 4.0);
+
+        // rejected: bounds, bad enums, threads-mode serving (arrivals live
+        // on the virtual clock)
+        assert!(ExperimentConfig::from_toml("[serving]\npublish_every = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[serving]\nrate = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml("[serving]\nburst = 0.5").is_err());
+        assert!(ExperimentConfig::from_toml("[serving]\nperiod = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml("[serving]\nbatch = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[serving]\narrival = \"warp\"").is_err());
+        assert!(ExperimentConfig::from_toml("[serving]\nread_mode = \"warp\"").is_err());
+        assert!(ExperimentConfig::from_toml(
+            "exec_mode = \"threads\"\n[serving]\nenabled = true"
+        )
+        .is_err());
+
+        let json = cfg.to_json().to_string();
+        assert!(json.contains("\"serving_enabled\""));
+        assert!(json.contains("\"serving_publish_every\""));
+        assert!(json.contains("\"serving_read_mode\""));
+    }
+
     /// Exhaustive rejected-combination matrix: every illegal combination
     /// must fail with its *specific* message, so a refactor can't silently
     /// swap one rejection for another (or let a combination slip through).
@@ -1037,6 +1103,7 @@ mod tests {
             "shards must be >= 1",
             "jitter must be in [0, 1)",
             "comm per_push/per_mb must be finite",
+            "serving workload runs under the event-driven scheduler",
         ] {
             assert!(
                 cases.iter().any(|c| c.needle.contains(needle) || needle.contains(c.needle)),

@@ -71,8 +71,9 @@ use crate::metrics::StepRecord;
 use crate::optim::DcSsgdAccumulator;
 use crate::runtime::EngineHandle;
 use crate::sim::{
-    BarrierSync, CommCosts, CommitMode, DelaySampler, FaultPlan, FullyAsync, Protocol, Scheduler,
-    SimEvent, StalenessBounded,
+    ArrivalProcess, BarrierSync, CommCosts, CommitMode, DelaySampler, FaultPlan, FullyAsync,
+    Protocol, ReadMode, Scheduler, ServingClock, ServingConfig, ServingRecorder, SimEvent,
+    StalenessBounded, UplinkMeter,
 };
 use crate::trace::{EventKind, RunTrace, TraceOut};
 use crate::util::pool::{ComputePool, GradPipeline};
@@ -162,6 +163,90 @@ impl ComputeStage {
             engines[v].lock().unwrap().train(&snapshots[snap], batch)
         })
     }
+}
+
+/// Driver-side serving-plane state ([`crate::sim::serving`]): the seeded
+/// arrival stream, the deterministic latency clock, the sample recorder,
+/// and reusable query/output buffers. Arrivals are processed *between*
+/// scheduler events and never enter the scheduler's queue, so the serving
+/// workload observes training without perturbing a single schedule bit
+/// (pinned by `tests/serving.rs`).
+struct ServingState {
+    cfg: ServingConfig,
+    arr: ArrivalProcess,
+    clock: ServingClock,
+    rec: ServingRecorder,
+    /// Absolute virtual time of the next pending arrival.
+    next: f64,
+    /// Virtual seconds one training push occupies the apply path for
+    /// (what locked reads queue behind).
+    push_window: f64,
+    queries: Vec<std::ops::Range<usize>>,
+    out: Vec<f32>,
+}
+
+impl ServingState {
+    fn new(cfg: ServingConfig, push_window: f64) -> Self {
+        let mut arr = ArrivalProcess::new(cfg);
+        let next = arr.next_arrival();
+        Self {
+            cfg,
+            arr,
+            clock: ServingClock::default(),
+            rec: ServingRecorder::new(),
+            next,
+            push_window,
+            queries: Vec::new(),
+            out: Vec::new(),
+        }
+    }
+
+    /// Serve every arrival at or before virtual time `t`. `step` is the
+    /// training frontier (commits so far) the snapshot staleness is
+    /// measured against.
+    fn drain_until(&mut self, t: f64, ps: &crate::ps::ParamServer, n: usize, step: u64) {
+        while self.next <= t {
+            let at = self.next;
+            let qlen = self.arr.draw_queries(n, &mut self.queries);
+            self.out.resize(qlen, 0.0);
+            let lat = self.clock.pull_latency(at, self.cfg.read_mode, self.cfg.batch);
+            match self.cfg.read_mode {
+                ReadMode::Snapshot => {
+                    let meta = ps
+                        .serving_pull_batch(&self.queries, &mut self.out)
+                        .expect("serving enabled: the plane publishes before arrivals");
+                    let stale_steps = step.saturating_sub(meta.step);
+                    self.rec.on_pull(lat, stale_steps, (at - meta.time).max(0.0));
+                }
+                ReadMode::Locked => {
+                    ps.locked_pull_batch(&self.queries, &mut self.out);
+                    // live reads: no snapshot lag by definition
+                    self.rec.on_pull(lat, 0, 0.0);
+                }
+            }
+            self.next = self.arr.next_arrival();
+        }
+    }
+
+    /// A commit produced global step `step` at event time `t`: charge the
+    /// push-apply window and publish a fresh snapshot on the cadence.
+    fn on_commit(&mut self, ps: &crate::ps::ParamServer, step: u64, t: f64) {
+        self.clock.on_push(t, self.push_window);
+        if step % self.cfg.publish_every as u64 == 0 {
+            ps.publish_snapshot(step, t);
+            self.rec.on_publish();
+        }
+    }
+}
+
+/// Inter-sample accumulator for the per-rack `uplink_util_r<i>`
+/// time-series columns (bytes crossing each rack uplink per virtual
+/// second over the sampling window). `racks == 0` when `[topology]` is
+/// off: no columns, CSV byte-identical to pre-uplink builds.
+struct UplinkWindow {
+    racks: usize,
+    last_bytes: Vec<f64>,
+    last_t: f64,
 }
 
 /// Barrier-round arenas: per-worker gradient slots (each takes ownership of
@@ -328,17 +413,53 @@ fn pull_and_stage(
 
 /// Close a telemetry window at a `/trace/sample_every` step boundary: one
 /// time-series row plus one `ShardVersion` counter event per PS shard.
-fn sample_point(tr: &mut RunTrace, ctx: &RunCtx, sched: &Scheduler, step: u64, t: f64) {
+/// Appends the declared extension values (per-rack uplink utilization,
+/// serving window stats) — both vectors are empty when their sections are
+/// off, keeping the CSV byte-identical to pre-extension builds.
+fn sample_point(
+    tr: &mut RunTrace,
+    ctx: &RunCtx,
+    sched: &Scheduler,
+    serving: Option<&mut ServingState>,
+    uw: &mut UplinkWindow,
+    step: u64,
+    t: f64,
+) {
     if step == 0 || step % tr.sample_every as u64 != 0 {
         return;
     }
-    tr.sample(
+    let mut extra = Vec::with_capacity(tr.extra_cols.len());
+    if uw.racks > 0 {
+        let bytes = sched.uplink_bytes().expect("topology installs the uplink meter");
+        let dt = t - uw.last_t;
+        for r in 0..uw.racks {
+            let delta = bytes[r] - uw.last_bytes[r];
+            extra.push(if dt > 0.0 { delta / dt } else { 0.0 });
+        }
+        uw.last_bytes.copy_from_slice(bytes);
+        uw.last_t = t;
+    }
+    if let Some(sv) = serving {
+        let (pulls, lat_mean) = sv.rec.take_window();
+        let lag = ctx
+            .ps
+            .store()
+            .serving()
+            .and_then(|p| p.meta())
+            .map(|m| step.saturating_sub(m.step))
+            .unwrap_or(0);
+        extra.push(pulls as f64);
+        extra.push(lat_mean);
+        extra.push(lag as f64);
+    }
+    tr.sample_with(
         step,
         t,
         ctx.metrics.loss_ema().unwrap_or(f64::NAN),
         sched.live_workers(),
         sched.comm_bytes_total(),
         sched.queue_depth(),
+        extra,
     );
     let store = ctx.ps.store();
     for s in 0..store.num_shards() {
@@ -409,6 +530,9 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
     if let Some(t) = &topo {
         sched.set_worker_comm(t.all_worker_costs(push_bytes, dense_bytes));
         ctx.ps.set_ps_nodes(t.ps_nodes());
+        // per-rack uplink byte meter: pure accounting at the comm_bytes
+        // sites, surfaced as uplink_util_r<i> time-series columns
+        sched.set_uplink_meter(UplinkMeter::new(t, push_bytes, dense_bytes));
     }
     // hier-ssgd folds rack-major; every other barrier folds as one rack
     let racks = if algo == Algorithm::HierSsgd {
@@ -427,6 +551,39 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
     } else {
         None
     };
+    // serving plane ([serving]): wait-free epoch snapshots published on
+    // the commit path + a seeded inference workload drained between
+    // scheduler events. Strictly an observer — arrivals never enter the
+    // event queue, so training schedules, push traces, and model bits are
+    // bitwise identical serving-on vs serving-off (tests/serving.rs).
+    let mut serving: Option<ServingState> = if ctx.cfg.serving.enabled {
+        ctx.ps.enable_serving();
+        // epoch 1 covers the initial model: queries are answerable from t=0
+        ctx.ps.publish_snapshot(0, 0.0);
+        let push_window =
+            if server_cost > 0.0 { server_cost } else { SERVER_COST_FRAC * ctx.cfg.delay.mean() };
+        let mut sv = ServingState::new(ctx.cfg.serving, push_window);
+        sv.rec.on_publish();
+        Some(sv)
+    } else {
+        None
+    };
+    // declare the appended time-series columns (none ⇒ CSV unchanged)
+    let mut uplink_win = UplinkWindow {
+        racks: topo.as_ref().map(|t| t.racks()).unwrap_or(0),
+        last_bytes: vec![0.0; topo.as_ref().map(|t| t.racks()).unwrap_or(0)],
+        last_t: 0.0,
+    };
+    if let Some(tr) = trace.as_mut() {
+        let mut cols: Vec<String> = Vec::new();
+        cols.extend((0..uplink_win.racks).map(|r| format!("uplink_util_r{r}")));
+        if serving.is_some() {
+            cols.extend(
+                ["serving_pulls", "serving_lat_mean", "serving_epoch_lag"].map(String::from),
+            );
+        }
+        tr.set_extra_cols(cols);
+    }
     let barrier = sched.commit_mode() == CommitMode::Barrier;
     debug_assert!(
         !barrier || !compressed,
@@ -470,6 +627,17 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
     let mut prev_passes = 0.0f64;
 
     while let Some(event) = sched.next_event() {
+        // serve every inference arrival up to this event's virtual time —
+        // an observer pass over immutable training state, before the event
+        // itself mutates the model
+        if let Some(sv) = serving.as_mut() {
+            let now = match &event {
+                SimEvent::Finish { time, .. }
+                | SimEvent::Crash { time, .. }
+                | SimEvent::Join { time, .. } => *time,
+            };
+            sv.drain_until(now, &ctx.ps, n, step);
+        }
         match event {
             SimEvent::Finish { time: t, worker: w } => {
                 let passes = samples as f64 / train_len;
@@ -516,6 +684,9 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                         rec_time,
                     )?;
                     if folded {
+                        if let Some(sv) = serving.as_mut() {
+                            sv.on_commit(&ctx.ps, step, t);
+                        }
                         if let Some(tr) = trace.as_mut() {
                             tr.observe_commit(0);
                             tr.buf.emit(
@@ -526,7 +697,7 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                                 None,
                                 Some(n_fill as f64),
                             );
-                            sample_point(tr, ctx, &sched, step, t);
+                            sample_point(tr, ctx, &sched, serving.as_mut(), &mut uplink_win, step, t);
                         }
                     }
                     // one shared pull for the whole round (restarted is
@@ -577,6 +748,9 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                         wait: sched.step_wait(w),
                     });
                     step += 1;
+                    if let Some(sv) = serving.as_mut() {
+                        sv.on_commit(&ctx.ps, step, t);
+                    }
                     if ctx.should_eval(prev_passes, passes_now, step) {
                         // tag the eval row with the push that triggered it —
                         // the same index its StepRecord carries
@@ -584,7 +758,7 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                     }
                     prev_passes = passes_now;
                     if let Some(tr) = trace.as_mut() {
-                        sample_point(tr, ctx, &sched, step, t);
+                        sample_point(tr, ctx, &sched, serving.as_mut(), &mut uplink_win, step, t);
                     }
                     // the protocol decides who re-pulls: always `w` itself
                     // when ungated, plus any peers its completion (or, on a
@@ -632,6 +806,9 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                         rec_time,
                     )?;
                     if folded {
+                        if let Some(sv) = serving.as_mut() {
+                            sv.on_commit(&ctx.ps, step, t);
+                        }
                         if let Some(tr) = trace.as_mut() {
                             tr.observe_commit(0);
                             tr.buf.emit(
@@ -642,7 +819,7 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
                                 None,
                                 Some(n_fill as f64),
                             );
-                            sample_point(tr, ctx, &sched, step, t);
+                            sample_point(tr, ctx, &sched, serving.as_mut(), &mut uplink_win, step, t);
                         }
                     }
                 }
@@ -694,11 +871,19 @@ pub fn run(ctx: &mut RunCtx, wall: bool) -> Result<()> {
     }
     ctx.metrics.set_comm_bytes(sched.comm_bytes_total());
     ctx.metrics.set_fault_stats(sched.fault_stats());
+    if let Some(sv) = &serving {
+        ctx.metrics.set_serving(sv.rec.summary());
+    }
     // hand the merged event stream + telemetry rows to the trainer for
     // artifact writing (the scheduler's buffer drains here)
     if let Some(mut tr) = trace {
         let events = crate::trace::merge_events(vec![tr.buf.drain(), sched.drain_trace()]);
-        ctx.trace_out = Some(TraceOut { events, rows: std::mem::take(&mut tr.rows) });
+        ctx.trace_out = Some(TraceOut {
+            events,
+            rows: std::mem::take(&mut tr.rows),
+            extra_cols: std::mem::take(&mut tr.extra_cols),
+            extra_rows: std::mem::take(&mut tr.extra_rows),
+        });
     }
     Ok(())
 }

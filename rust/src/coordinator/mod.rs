@@ -368,7 +368,7 @@ impl Trainer {
                 }
                 std::fs::write(
                     dir.join(format!("{name}.timeseries.csv")),
-                    crate::trace::rows_to_csv(&out.rows),
+                    crate::trace::rows_to_csv_with(&out.rows, &out.extra_cols, &out.extra_rows),
                 )?;
             }
         }

@@ -322,7 +322,13 @@
 //! * **Time series** (`<tag>.timeseries.csv`): every
 //!   `trace.sample_every` steps the driver snapshots loss EMA, live
 //!   workers, windowed staleness (n/mean/max), comm-bytes delta, and
-//!   event-queue depth.
+//!   event-queue depth. Optional subsystems append *extension columns*
+//!   after the fixed header ([`trace::rows_to_csv_with`]): per-rack
+//!   cross-rack uplink utilization under `[topology]` (derived by
+//!   [`sim::UplinkMeter`] from the same per-event byte accounting as
+//!   `comm_bytes`), and windowed pull count / mean latency / epoch lag
+//!   under `[serving]`. With no extras the CSV is byte-identical to the
+//!   fixed-header format.
 //!
 //! `dcasgd report <run-dir>` digests the written artifacts (phase
 //! breakdown, slowest spans, staleness/loss sparklines) with no model or
@@ -339,6 +345,43 @@
 //! identical `TrainReport`s and checkpoint bytes — pinned by
 //! `tests/trace.rs` at both the scheduler level and the full-run level,
 //! and the disabled-span cost is pinned unmeasurable by bench `hotpath`.
+//!
+//! ## Serving plane & snapshot publication
+//!
+//! The `[serving]` config section (off by default; any parameter knob
+//! auto-enables it, an explicit `enabled = false` wins) layers an
+//! inference read workload over a live training run. The data plane is
+//! [`ps::SnapshotPlane`]: a double-buffered, epoch-published snapshot of
+//! the whole model inside the sharded store. Every
+//! `serving.publish_every` global steps the driver copies the live
+//! shards into the spare buffer — under the same read locks as a
+//! training pull, so publication never blocks training — and flips an
+//! atomic epoch pointer. Batched serving reads
+//! ([`ps::ShardedStore::serving_pull_batch`]) resolve every query range
+//! in one epoch acquisition, **wait-free**: no locks, no waiting on
+//! pushes, and torn reads are impossible by protocol (a publisher only
+//! overwrites the buffer no live reader holds; pinned by a threaded race
+//! test in `tests/serving.rs`). `serving.read_mode = "locked"` routes
+//! the same queries through the per-shard read locks instead
+//! ([`ps::ShardedStore::locked_pull_batch`]) — the contention baseline
+//! the snapshot plane exists to beat, gated by bench `serving_latency`.
+//!
+//! The workload ([`sim::serving`]) is a pure *observer* of the training
+//! schedule: a seeded arrival process (Poisson / bursty / diurnal via
+//! thinning) is drained between scheduler events on the virtual clock
+//! and never enters the event queue, so serving-on runs are bitwise
+//! identical to serving-off (reports and checkpoint bytes; pinned in
+//! `tests/serving.rs`). Pull latency is modeled deterministically
+//! ([`sim::ServingClock`]): snapshot reads cost pure service time,
+//! locked reads also wait out the push-apply window they arrive into.
+//! Per-pull p50/p99/p999 and snapshot staleness (epoch lag in steps and
+//! virtual seconds, bounded by the publish cadence) summarize into a
+//! `serving` block of `summary.json` ([`sim::ServingSummary`]). Serving
+//! rides the event-driven cluster loop, so async *and* barrier
+//! protocols serve (snapshots publish on pushes or round folds
+//! respectively); sequential SGD runs outside that loop and
+//! `exec_mode = threads` has no virtual clock — both are rejected at
+//! validation.
 //!
 //! ## Quickstart
 //!

@@ -80,6 +80,10 @@ pub struct MetricsLog {
     /// reported by the scheduler at end of run; all zero without a
     /// `[faults]` section.
     fault_stats: FaultStats,
+    /// Serving-plane summary (pull latency percentiles + snapshot
+    /// staleness), set once by the driver; `None` without a `[serving]`
+    /// section, in which case no serving keys appear in the summary JSON.
+    serving: Option<crate::sim::ServingSummary>,
 }
 
 impl Default for MetricsLog {
@@ -102,6 +106,7 @@ impl MetricsLog {
             loss_ema: f64::NAN,
             comm_bytes: 0,
             fault_stats: FaultStats::default(),
+            serving: None,
         }
     }
 
@@ -123,6 +128,17 @@ impl MetricsLog {
 
     pub fn fault_stats(&self) -> FaultStats {
         self.fault_stats
+    }
+
+    /// Record the run's serving-plane summary (set once by the driver from
+    /// [`crate::sim::ServingRecorder::summary`]; never set with `[serving]`
+    /// off).
+    pub fn set_serving(&mut self, s: crate::sim::ServingSummary) {
+        self.serving = Some(s);
+    }
+
+    pub fn serving(&self) -> Option<crate::sim::ServingSummary> {
+        self.serving
     }
 
     pub fn record_step(&mut self, r: StepRecord) {
@@ -286,6 +302,7 @@ impl MetricsLog {
             comm_bytes: self.comm_bytes,
             faults: self.fault_stats,
             staleness_hist: self.staleness_histogram(64),
+            serving: self.serving,
         }
     }
 }
@@ -323,11 +340,15 @@ pub struct TrainReport {
     /// `staleness_hist[tau]` = steps that observed delay tau (tail folded
     /// into the last bucket).
     pub staleness_hist: Vec<u64>,
+    /// Serving-plane summary; `None` (no serving keys in the JSON) with
+    /// `[serving]` off, so serving-disabled summaries stay byte-identical
+    /// to pre-serving builds.
+    pub serving: Option<crate::sim::ServingSummary>,
 }
 
 impl TrainReport {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("total_steps", (self.total_steps as i64).into()),
             ("final_test_error", (self.final_test_error as f64).into()),
             ("final_test_loss", (self.final_test_loss as f64).into()),
@@ -352,7 +373,24 @@ impl TrainReport {
                 "staleness_hist",
                 Json::arr(self.staleness_hist.iter().map(|&c| Json::from(c as i64))),
             ),
-        ])
+        ];
+        if let Some(s) = &self.serving {
+            fields.push((
+                "serving",
+                Json::obj(vec![
+                    ("pulls", (s.pulls as i64).into()),
+                    ("published", (s.published as i64).into()),
+                    ("lat_p50", s.lat_p50.into()),
+                    ("lat_p99", s.lat_p99.into()),
+                    ("lat_p999", s.lat_p999.into()),
+                    ("stale_steps_mean", s.stale_steps_mean.into()),
+                    ("stale_steps_max", (s.stale_steps_max as i64).into()),
+                    ("stale_time_mean", s.stale_time_mean.into()),
+                    ("stale_time_max", s.stale_time_max.into()),
+                ]),
+            ));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -586,6 +624,36 @@ mod tests {
         let parsed = Json::parse(&json).unwrap();
         assert_eq!(parsed.get("crashes").as_i64(), Some(3));
         assert_eq!(parsed.get("dropped_inflight").as_i64(), Some(2));
+    }
+
+    #[test]
+    fn serving_summary_is_additive_and_absent_by_default() {
+        // without set_serving the JSON has no serving key at all, so
+        // serving-off summaries stay byte-identical to pre-serving builds
+        let log = sample_log();
+        let json = log.report().to_json().to_string();
+        assert!(!json.contains("\"serving\""), "{json}");
+
+        let mut log = sample_log();
+        log.set_serving(crate::sim::ServingSummary {
+            pulls: 40,
+            published: 5,
+            lat_p50: 1e-4,
+            lat_p99: 2e-4,
+            lat_p999: 3e-4,
+            stale_steps_mean: 1.5,
+            stale_steps_max: 4,
+            stale_time_mean: 0.01,
+            stale_time_max: 0.05,
+        });
+        let r = log.report();
+        assert_eq!(r.serving.unwrap().pulls, 40);
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        let s = parsed.get("serving");
+        assert_eq!(s.get("pulls").as_i64(), Some(40));
+        assert_eq!(s.get("published").as_i64(), Some(5));
+        assert_eq!(s.get("stale_steps_max").as_i64(), Some(4));
+        assert!(s.get("lat_p99").as_f64().is_some());
     }
 
     #[test]

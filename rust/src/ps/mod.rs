@@ -9,7 +9,7 @@ pub mod checkpoint;
 pub mod shard;
 
 pub use checkpoint::{check_ef_compat, Checkpoint};
-pub use shard::{ShardData, ShardedStore};
+pub use shard::{ShardData, ShardedStore, SnapshotMeta, SnapshotPlane};
 
 use crate::config::{Algorithm, UpdateBackend};
 use crate::optim;
@@ -299,6 +299,37 @@ impl ParamServer {
     /// Model snapshot without backup side-effects (evaluation).
     pub fn snapshot(&self, out: &mut [f32]) {
         self.store.snapshot_into(out);
+    }
+
+    /// Build the serving snapshot plane (idempotent; `[serving]` enabled).
+    /// See [`ShardedStore::enable_serving`].
+    pub fn enable_serving(&self) {
+        self.store.enable_serving();
+    }
+
+    /// Publish the current model to the serving plane as the next epoch,
+    /// stamped with training step / virtual time
+    /// ([`ShardedStore::publish_snapshot`]).
+    pub fn publish_snapshot(&self, step: u64, time: f64) -> u64 {
+        self.store.publish_snapshot(step, time)
+    }
+
+    /// Wait-free batched serving read against the latest published epoch
+    /// ([`ShardedStore::serving_pull_batch`]); `None` when serving is
+    /// disabled or nothing is published yet.
+    pub fn serving_pull_batch(
+        &self,
+        queries: &[std::ops::Range<usize>],
+        out: &mut [f32],
+    ) -> Option<crate::ps::shard::SnapshotMeta> {
+        self.store.serving_pull_batch(queries, out)
+    }
+
+    /// Locked-read serving baseline ([`ShardedStore::locked_pull_batch`]):
+    /// copies from the live shards under their read locks, contending with
+    /// pushes the way a training pull does.
+    pub fn locked_pull_batch(&self, queries: &[std::ops::Range<usize>], out: &mut [f32]) {
+        self.store.locked_pull_batch(queries, out);
     }
 
     /// Worker push (Algorithm 2): apply gradient `g` with the configured

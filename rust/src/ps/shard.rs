@@ -42,17 +42,174 @@
 //! `range.start` and the fused `decode_*_apply` kernels stream levels into
 //! the update rule in one pass over the shard's `w`/`ms` under its write
 //! lock, never materializing a dense gradient.
+//!
+//! # Serving plane
+//!
+//! Inference traffic reads through a separate, optional [`SnapshotPlane`]:
+//! two whole-vector buffers published alternately at a configurable
+//! cadence and swapped via an atomic epoch counter, so serving reads are
+//! **wait-free** — they never touch the per-shard `RwLock`s the push path
+//! writes through, and a publish never blocks on the push path either
+//! (it copies under the same read locks a pull uses). The plane is built
+//! lazily by [`ShardedStore::enable_serving`]; stores that never enable it
+//! carry one dormant `OnceLock` and are bit-identical to the pre-serving
+//! layout. See the torn-read protocol notes on [`SnapshotPlane`].
 
 use crate::util::pool::{self, ComputePool};
+use std::cell::UnsafeCell;
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard, RwLock};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, RwLock};
 
 /// Minimum elements of work per pool lane for multi-shard applies
 /// (~512 KB of f32). Below this, even the pool's handoff latency dwarfs
 /// the memory-bound loop, so the apply stays sequential — the lane count
 /// is sized from per-lane work, not total n.
 const PAR_APPLY_MIN_PER_THREAD: usize = 1 << 17;
+
+/// Metadata captured with each published serving snapshot: the 1-based
+/// publication counter plus the training step and virtual time the model
+/// was copied at. Serving-side staleness is `current - meta` in whichever
+/// unit (epochs, steps, virtual seconds) the caller cares about.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SnapshotMeta {
+    /// Publication number (1-based; epoch 0 means "never published").
+    pub epoch: u64,
+    /// Training step the snapshot was captured at.
+    pub step: u64,
+    /// Virtual time the snapshot was captured at.
+    pub time: f64,
+}
+
+/// One of the two publication buffers: the snapshot vector plus its meta
+/// and an active-reader count. The vector lives in an `UnsafeCell` because
+/// the epoch protocol — not a lock — is what excludes writers from live
+/// readers (see [`SnapshotPlane`]).
+#[derive(Debug)]
+struct SnapBuf {
+    data: UnsafeCell<Vec<f32>>,
+    /// Readers currently inside `data`. A publisher spins to zero before
+    /// overwriting; readers that lost the epoch race decrement and retry.
+    readers: AtomicUsize,
+    step: AtomicU64,
+    /// Virtual time as `f64::to_bits` (atomics carry no floats).
+    time_bits: AtomicU64,
+}
+
+// SAFETY: `data` is only written by a publisher that (a) holds the
+// publisher mutex and (b) observed `readers == 0` *after* the epoch counter
+// stopped pointing at this buffer; readers only dereference it after
+// incrementing `readers` and re-validating the epoch (protocol below). The
+// remaining fields are atomics.
+unsafe impl Sync for SnapBuf {}
+
+/// Double-buffered, epoch-published read snapshot of the model.
+///
+/// Epoch `e > 0` lives in buffer `e & 1`; epoch 0 means nothing has been
+/// published yet. **Reader protocol** (wait-free — a bounded number of
+/// retries only when a publish lands mid-read, never blocking):
+///
+/// 1. load `e = epoch`; if 0, there is no snapshot;
+/// 2. increment `readers` of buffer `e & 1`;
+/// 3. re-load the epoch — if it still equals `e`, the buffer is pinned:
+///    the *next* publish into it (epoch `e + 2`) spins on `readers`, and
+///    the in-flight one (epoch `e + 1`) targets the *other* buffer;
+/// 4. otherwise decrement and retry from 1.
+///
+/// **Publisher protocol** (serialized by `publish_lock`): compute
+/// `next = epoch + 1`, spin until `readers` of buffer `next & 1` drains
+/// (only stragglers from epoch `next - 2` can hold it), overwrite the
+/// buffer + meta, then store `epoch = next`. All control atomics are
+/// `SeqCst`; the torn-read impossibility is pinned by a threaded test in
+/// `tests/serving.rs`.
+#[derive(Debug)]
+pub struct SnapshotPlane {
+    epoch: AtomicU64,
+    bufs: [SnapBuf; 2],
+    publish_lock: Mutex<()>,
+}
+
+impl SnapshotPlane {
+    fn new(n: usize) -> Self {
+        let buf = || SnapBuf {
+            data: UnsafeCell::new(vec![0.0; n]),
+            readers: AtomicUsize::new(0),
+            step: AtomicU64::new(0),
+            time_bits: AtomicU64::new(0),
+        };
+        Self { epoch: AtomicU64::new(0), bufs: [buf(), buf()], publish_lock: Mutex::new(()) }
+    }
+
+    /// Latest published epoch (0 = nothing published yet).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Run `f` against the latest published snapshot and its meta, or
+    /// return `None` if nothing has been published. `f` must not block
+    /// indefinitely: it pins one buffer against republication (epoch lag 2)
+    /// for its duration.
+    pub fn read_with<R>(&self, f: impl FnOnce(&[f32], SnapshotMeta) -> R) -> Option<R> {
+        loop {
+            let e = self.epoch.load(Ordering::SeqCst);
+            if e == 0 {
+                return None;
+            }
+            let b = &self.bufs[(e & 1) as usize];
+            b.readers.fetch_add(1, Ordering::SeqCst);
+            // decrement even if `f` panics, so a publisher can't spin forever
+            let _guard = ReaderGuard(&b.readers);
+            if self.epoch.load(Ordering::SeqCst) == e {
+                let meta = SnapshotMeta {
+                    epoch: e,
+                    step: b.step.load(Ordering::SeqCst),
+                    time: f64::from_bits(b.time_bits.load(Ordering::SeqCst)),
+                };
+                // SAFETY: validated `epoch == e` after incrementing
+                // `readers`, so no publisher writes this buffer until the
+                // guard drops (protocol in the type-level docs).
+                let data = unsafe { &*b.data.get() };
+                return Some(f(data, meta));
+            }
+            // a publish landed between the two epoch loads — retry
+        }
+    }
+
+    /// Latest snapshot meta without copying any data.
+    pub fn meta(&self) -> Option<SnapshotMeta> {
+        self.read_with(|_, m| m)
+    }
+
+    /// Publish the next epoch: `fill` overwrites the spare buffer, then the
+    /// epoch pointer flips. Callers race-free via the internal publisher
+    /// lock; readers are never blocked.
+    pub fn publish_with(&self, step: u64, time: f64, fill: impl FnOnce(&mut [f32])) -> u64 {
+        let _g = self.publish_lock.lock().unwrap();
+        let next = self.epoch.load(Ordering::SeqCst) + 1;
+        let b = &self.bufs[(next & 1) as usize];
+        // only stragglers from epoch `next - 2` can still hold this buffer
+        while b.readers.load(Ordering::SeqCst) != 0 {
+            std::hint::spin_loop();
+        }
+        // SAFETY: publisher lock held and `readers == 0` observed after the
+        // epoch stopped pointing here — no reader can re-enter until the
+        // epoch store below.
+        fill(unsafe { &mut *b.data.get() });
+        b.step.store(step, Ordering::SeqCst);
+        b.time_bits.store(time.to_bits(), Ordering::SeqCst);
+        self.epoch.store(next, Ordering::SeqCst);
+        next
+    }
+}
+
+/// Decrements a [`SnapBuf`] reader count on drop (panic-safe).
+struct ReaderGuard<'a>(&'a AtomicUsize);
+
+impl Drop for ReaderGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
 
 /// State of one shard: the parameter slice plus the per-slice optimizer
 /// state and a reusable compensation scratch (transient — not persisted).
@@ -89,6 +246,10 @@ pub struct ShardedStore {
     /// paths never read it, so installing a fleet cannot move a bit.
     /// Atomic so the driver can set it through the shared `Arc`.
     ps_nodes: AtomicUsize,
+    /// Optional serving snapshot plane ([`Self::enable_serving`]). Dormant
+    /// (never initialized) unless `[serving]` is enabled — training-only
+    /// stores pay one pointer of space and nothing else.
+    serving: OnceLock<SnapshotPlane>,
 }
 
 impl ShardedStore {
@@ -134,7 +295,16 @@ impl ShardedStore {
             })
             .collect();
         let baks = (0..workers).map(|_| Mutex::new(init.to_vec())).collect();
-        Self { ranges, shards, baks, n, workers, pool, ps_nodes: AtomicUsize::new(1) }
+        Self {
+            ranges,
+            shards,
+            baks,
+            n,
+            workers,
+            pool,
+            ps_nodes: AtomicUsize::new(1),
+            serving: OnceLock::new(),
+        }
     }
 
     pub fn n(&self) -> usize {
@@ -368,6 +538,83 @@ impl ShardedStore {
         for (range, shard) in self.ranges.iter().zip(&self.shards) {
             let s = shard.data.read().unwrap();
             ms[range.clone()].copy_from_slice(&s.ms);
+        }
+    }
+
+    // ---- serving plane -------------------------------------------------
+
+    /// Build the serving snapshot plane (idempotent). Until the first
+    /// [`Self::publish_snapshot`], serving reads return `None`.
+    pub fn enable_serving(&self) {
+        self.serving.get_or_init(|| SnapshotPlane::new(self.n));
+    }
+
+    /// The serving plane, if [`Self::enable_serving`] was called.
+    pub fn serving(&self) -> Option<&SnapshotPlane> {
+        self.serving.get()
+    }
+
+    /// Publish the current model into the serving plane as the next epoch,
+    /// stamped with the training step / virtual time. Copies each shard
+    /// under its **read** lock (same locks as a pull — publication never
+    /// excludes training readers and only waits on in-flight pushes the
+    /// way any read does). Panics if serving was never enabled.
+    pub fn publish_snapshot(&self, step: u64, time: f64) -> u64 {
+        let plane = self.serving.get().expect("publish_snapshot: serving not enabled");
+        plane.publish_with(step, time, |buf| {
+            for (range, shard) in self.ranges.iter().zip(&self.shards) {
+                let s = shard.data.read().unwrap();
+                buf[range.clone()].copy_from_slice(&s.w);
+            }
+        })
+    }
+
+    /// Wait-free batched serving read: resolve every query range against
+    /// the latest published snapshot in **one** epoch acquisition (the
+    /// amortization `pull_batch` exists for), packing results contiguously
+    /// into `out` in query order. Returns the snapshot meta, or `None` if
+    /// serving is disabled or nothing has been published yet (callers fall
+    /// back to [`Self::locked_pull_batch`]).
+    pub fn serving_pull_batch(
+        &self,
+        queries: &[Range<usize>],
+        out: &mut [f32],
+    ) -> Option<SnapshotMeta> {
+        debug_assert_eq!(out.len(), queries.iter().map(|q| q.len()).sum::<usize>());
+        let plane = self.serving.get()?;
+        plane.read_with(|snap, meta| {
+            let mut off = 0;
+            for q in queries {
+                out[off..off + q.len()].copy_from_slice(&snap[q.clone()]);
+                off += q.len();
+            }
+            meta
+        })
+    }
+
+    /// Locked-read serving baseline: resolve each query by copying from the
+    /// live shards under their read locks — shard-atomic like a training
+    /// pull, and contending with the push write path the same way. Used by
+    /// `read_mode = "locked"` and as the fallback before the first publish.
+    pub fn locked_pull_batch(&self, queries: &[Range<usize>], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), queries.iter().map(|q| q.len()).sum::<usize>());
+        let mut off = 0;
+        for q in queries {
+            assert!(q.end <= self.n && q.start <= q.end);
+            // shards are sorted contiguous ranges: seek to the first overlap
+            let first = self.ranges.partition_point(|r| r.end <= q.start);
+            for i in first..self.ranges.len() {
+                let range = &self.ranges[i];
+                if range.start >= q.end {
+                    break;
+                }
+                let lo = q.start.max(range.start);
+                let hi = q.end.min(range.end);
+                let s = self.shards[i].data.read().unwrap();
+                out[off + (lo - q.start)..off + (hi - q.start)]
+                    .copy_from_slice(&s.w[lo - range.start..hi - range.start]);
+            }
+            off += q.len();
         }
     }
 }
@@ -628,6 +875,58 @@ mod tests {
         for w in out {
             assert!((w - expect).abs() < 1e-4, "{w} vs {expect}");
         }
+    }
+
+    #[test]
+    fn serving_plane_publishes_and_reads_back() {
+        let init: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let store = ShardedStore::new(&init, 1, 4);
+        // disabled / unpublished: batch reads report no snapshot
+        let mut out = vec![0.0f32; 10];
+        assert!(store.serving_pull_batch(&[0..10], &mut out).is_none());
+        store.enable_serving();
+        store.enable_serving(); // idempotent
+        assert!(store.serving_pull_batch(&[0..10], &mut out).is_none(), "nothing published");
+        assert_eq!(store.serving().unwrap().epoch(), 0);
+
+        let e = store.publish_snapshot(7, 1.5);
+        assert_eq!(e, 1);
+        let meta = store.serving_pull_batch(&[0..10], &mut out).unwrap();
+        assert_eq!(meta, SnapshotMeta { epoch: 1, step: 7, time: 1.5 });
+        assert_eq!(out, init[0..10]);
+
+        // mutate the live model: serving still reads the published epoch
+        store.for_each_shard(|s, _| {
+            for w in s.w.iter_mut() {
+                *w += 100.0;
+            }
+        });
+        store.serving_pull_batch(&[0..10], &mut out).unwrap();
+        assert_eq!(out, init[0..10], "snapshot must be isolated from pushes");
+        // ... until the next publication flips the epoch
+        assert_eq!(store.publish_snapshot(9, 2.5), 2);
+        let meta = store.serving_pull_batch(&[0..10], &mut out).unwrap();
+        assert_eq!((meta.epoch, meta.step, meta.time), (2, 9, 2.5));
+        assert!(out.iter().zip(&init[0..10]).all(|(a, b)| *a == b + 100.0));
+    }
+
+    #[test]
+    fn batched_pulls_pack_queries_in_order() {
+        let init: Vec<f32> = (0..97).map(|i| i as f32 * 0.5).collect();
+        let store = ShardedStore::new(&init, 1, 4); // uneven shards: 25,24,24,24
+        store.enable_serving();
+        store.publish_snapshot(0, 0.0);
+        // queries straddle shard boundaries and arrive out of order
+        let queries = [10..30, 0..5, 90..97, 24..26];
+        let len: usize = queries.iter().map(|q| q.len()).sum();
+        let expect: Vec<f32> =
+            queries.iter().flat_map(|q| init[q.clone()].iter().copied()).collect();
+        let mut snap = vec![0.0f32; len];
+        let mut locked = vec![0.0f32; len];
+        store.serving_pull_batch(&queries, &mut snap).unwrap();
+        store.locked_pull_batch(&queries, &mut locked);
+        assert_eq!(snap, expect);
+        assert_eq!(locked, expect, "locked baseline must agree bitwise");
     }
 
     #[test]

@@ -10,12 +10,15 @@
 //! adds the unhealthy-fleet regime — seeded crashes, restarts, permanent
 //! departures, late joins, and transient straggler slowdowns — driven by
 //! the same scheduler with first-class worker lifecycle (off by default;
-//! bit-identical schedules when off).
+//! bit-identical schedules when off). The [`serving`] module layers a
+//! read-only inference workload (seeded arrival process + virtual-time
+//! latency model) over the training schedule without perturbing it.
 
 pub mod delay;
 pub mod faults;
 pub mod fleet;
 pub mod scheduler;
+pub mod serving;
 pub mod topology;
 
 pub use delay::{CommCosts, CommModel, DelaySampler};
@@ -24,7 +27,11 @@ pub use fleet::{BitSet, FleetIndex};
 pub use scheduler::{
     BarrierSync, CommitMode, FullyAsync, GateSpec, Protocol, Scheduler, SimEvent, StalenessBounded,
 };
-pub use topology::{Topology, TopologyConfig};
+pub use serving::{
+    ArrivalKind, ArrivalProcess, ReadMode, ServingClock, ServingConfig, ServingRecorder,
+    ServingSummary,
+};
+pub use topology::{Topology, TopologyConfig, UplinkMeter};
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;

@@ -82,6 +82,7 @@
 use super::delay::{CommCosts, DelaySampler};
 use super::faults::{CrashPolicy, FaultPlan, FaultStats};
 use super::fleet::FleetIndex;
+use super::topology::UplinkMeter;
 use super::EventQueue;
 use crate::trace::profile::{span, Subsystem};
 use crate::trace::{EventBuf, EventKind, TraceEvent};
@@ -294,6 +295,11 @@ pub struct Scheduler {
     /// tracked even when the time charges are zero so compression sweeps
     /// can report bytes-on-wire without enabling `[comm]`.
     comm_bytes: u64,
+    /// Per-rack uplink byte meter ([`UplinkMeter`]); `None` — the default —
+    /// skips the accounting entirely. Pure observability: the meter is
+    /// charged at exactly the `comm_bytes` sites and never reads back into
+    /// the schedule.
+    uplink: Option<UplinkMeter>,
     workers: usize,
     started: bool,
     /// The active gate engine: the protocol's declared [`GateSpec`], or
@@ -388,6 +394,7 @@ impl Scheduler {
             comm_w: None,
             comm_total: 0.0,
             comm_bytes: 0,
+            uplink: None,
             workers,
             started: false,
             gate,
@@ -490,6 +497,18 @@ impl Scheduler {
         }
         self.comm_w = Some(comm);
     }
+    /// Install a per-rack uplink byte meter ([`crate::sim::Topology`]
+    /// observability). Must be called before [`Self::start`]. Never
+    /// perturbs the schedule: the meter is write-only accounting.
+    pub fn set_uplink_meter(&mut self, meter: UplinkMeter) {
+        assert!(!self.started, "set_uplink_meter after start");
+        assert_eq!(meter.workers(), self.workers, "uplink meter sized for a different fleet");
+        self.uplink = Some(meter);
+    }
+    /// Cumulative uplink bytes per rack (`None` without a meter).
+    pub fn uplink_bytes(&self) -> Option<&[f64]> {
+        self.uplink.as_ref().map(UplinkMeter::bytes)
+    }
     /// Whether a fault plan is installed.
     pub fn has_faults(&self) -> bool {
         self.faults.is_some()
@@ -551,6 +570,9 @@ impl Scheduler {
             self.queue.schedule_in(comm.pull + d, Ev::Finish { worker: w, epoch: self.epoch[w] });
             self.comm_total += comm.pull;
             self.comm_bytes += comm.pull_bytes as u64;
+            if let Some(m) = &mut self.uplink {
+                m.on_pull(w);
+            }
             if let Some(tc) = self.faults.as_mut().and_then(|p| p.next_crash_in(w)) {
                 self.queue.schedule_in(tc, Ev::Crash { worker: w });
             }
@@ -625,6 +647,9 @@ impl Scheduler {
         // workers still blocked when the run ends. The TIME charge stays
         // on the restart path (it delays the *next* turnaround).
         self.comm_bytes += self.comm_of(worker).push_bytes as u64;
+        if let Some(m) = &mut self.uplink {
+            m.on_push(worker);
+        }
         self.index.advance_clock(self.clocks[worker]);
         self.clocks[worker] += 1;
         if self.dying[worker] {
@@ -766,6 +791,9 @@ impl Scheduler {
         );
         self.comm_total += comm.push + comm.pull;
         self.comm_bytes += comm.pull_bytes as u64;
+        if let Some(m) = &mut self.uplink {
+            m.on_pull(v);
+        }
     }
 
     /// Take `worker` out of the fleet; schedule its rejoin (or record the
@@ -861,6 +889,9 @@ impl Scheduler {
                 .schedule_in(comm.pull + d, Ev::Finish { worker, epoch: self.epoch[worker] });
             self.comm_total += comm.pull;
             self.comm_bytes += comm.pull_bytes as u64;
+            if let Some(m) = &mut self.uplink {
+                m.on_pull(worker);
+            }
         } else {
             self.state[worker] = WorkerState::Blocked;
             self.index.join(worker, self.clocks[worker]);
@@ -1151,6 +1182,59 @@ mod tests {
             sized.comm_bytes_total(),
             (workers as u64 + restarts) * 1000 + completes * 100
         );
+    }
+
+    #[test]
+    fn uplink_meter_reconciles_with_comm_bytes_and_never_perturbs() {
+        use crate::sim::topology::{Topology, TopologyConfig, UplinkMeter};
+        use crate::sim::CommCosts;
+        // 2 racks × 4 PS nodes, 4 workers: every rack hosts half the
+        // shards, so exactly half of every transfer crosses an uplink.
+        let (workers, seed, pb, db) = (4usize, 63u64, 1000usize, 4000usize);
+        let cfg = TopologyConfig {
+            enabled: true,
+            racks: 2,
+            ps_nodes: 4,
+            ..TopologyConfig::default()
+        };
+        let topo = Topology::from_config(&cfg, workers).unwrap();
+        let mut plain = Scheduler::with_comm(
+            Box::new(FullyAsync),
+            sampler(workers, seed),
+            0.01,
+            CommCosts::sized(pb, db),
+        );
+        let mut metered = Scheduler::with_comm(
+            Box::new(FullyAsync),
+            sampler(workers, seed),
+            0.01,
+            CommCosts::sized(pb, db),
+        );
+        metered.set_uplink_meter(UplinkMeter::new(&topo, pb, db));
+        plain.start();
+        metered.start();
+        for _ in 0..60 {
+            let (ta, wa) = plain.next().unwrap();
+            let (tb, wb) = metered.next().unwrap();
+            assert_eq!(wa, wb);
+            assert_eq!(ta.to_bits(), tb.to_bits(), "uplink meter perturbed the schedule");
+            plain.complete(wa);
+            metered.complete(wb);
+        }
+        let per_rack = metered.uplink_bytes().expect("meter installed");
+        assert_eq!(per_rack.len(), 2);
+        assert!(per_rack.iter().all(|&b| b > 0.0));
+        // half of every counted byte crosses an uplink in this layout, and
+        // the two counters are charged at the same sites — exact agreement
+        let uplink_total: f64 = per_rack.iter().sum();
+        let comm_total = metered.comm_bytes_total() as f64;
+        assert_eq!(comm_total, plain.comm_bytes_total() as f64);
+        assert!(
+            (uplink_total - comm_total / 2.0).abs() < 1e-6,
+            "uplink {uplink_total} vs comm/2 {}",
+            comm_total / 2.0
+        );
+        assert!(plain.uplink_bytes().is_none());
     }
 
     #[test]

@@ -1,0 +1,474 @@
+//! Serving workload: inference pulls against a live training PS.
+//!
+//! The north star is a store that serves read traffic *while* training
+//! pushes land. This module provides the workload half of that story for
+//! the discrete-event simulator:
+//!
+//! * [`ServingConfig`] — the `[serving]` section: publish cadence for the
+//!   epoch snapshot plane ([`crate::ps::SnapshotPlane`]), arrival process
+//!   shape, batch size, and which read path queries use;
+//! * [`ArrivalProcess`] — a seeded arrival-time generator on the virtual
+//!   clock (homogeneous Poisson, bursty square-wave, or diurnal sinusoid,
+//!   all via Lewis–Shedler thinning against the peak rate), plus the query
+//!   ranges each arrival asks for;
+//! * [`ServingClock`] — the deterministic virtual-time latency model:
+//!   snapshot reads cost pure service time; locked reads additionally
+//!   queue behind the store's push-apply windows (each training push
+//!   occupies the store for the driver's `server_cost`, and a locked read
+//!   arriving inside a busy window waits it out);
+//! * [`ServingRecorder`] — per-pull latency + snapshot staleness samples
+//!   folded into a [`ServingSummary`] (nearest-rank p50/p99/p999, epoch
+//!   lag in steps and virtual seconds) for `TrainReport`/`summary.json`.
+//!
+//! The workload is strictly an *observer* of training: arrivals are
+//! processed between scheduler events and never enter the scheduler's
+//! queue, so a serving-enabled run replays the exact training schedule —
+//! push traces and final model bits bitwise-identical to serving-off
+//! (pinned in `tests/serving.rs`).
+
+use crate::util::rng::Pcg64;
+use std::ops::Range;
+
+/// How serving queries read the store.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadMode {
+    /// Wait-free reads from the epoch-published snapshot plane.
+    Snapshot,
+    /// Per-shard read locks against the live model (the contention
+    /// baseline the snapshot plane exists to beat).
+    Locked,
+}
+
+impl ReadMode {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "snapshot" | "epoch" => ReadMode::Snapshot,
+            "locked" | "lock" => ReadMode::Locked,
+            other => anyhow::bail!("unknown serving read_mode {other:?} (snapshot|locked)"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReadMode::Snapshot => "snapshot",
+            ReadMode::Locked => "locked",
+        }
+    }
+}
+
+/// Shape of the arrival process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Homogeneous Poisson at `rate` arrivals per virtual second.
+    Poisson,
+    /// Square wave: `rate * burst` inside the first quarter of each
+    /// `period`, `rate` otherwise.
+    Bursty,
+    /// Sinusoid sweeping [rate, rate * burst] once per `period`.
+    Diurnal,
+}
+
+impl ArrivalKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "poisson" => ArrivalKind::Poisson,
+            "bursty" | "burst" => ArrivalKind::Bursty,
+            "diurnal" => ArrivalKind::Diurnal,
+            other => anyhow::bail!("unknown arrival process {other:?} (poisson|bursty|diurnal)"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Bursty => "bursty",
+            ArrivalKind::Diurnal => "diurnal",
+        }
+    }
+}
+
+/// The `[serving]` section. Off by default and bitwise-inert: with
+/// `enabled = false` no snapshot plane is built, no arrivals are drawn,
+/// and every existing run is bit-identical to pre-serving builds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServingConfig {
+    pub enabled: bool,
+    /// Publish a fresh serving snapshot every this many global training
+    /// steps (virtual steps — publication rides the commit path).
+    pub publish_every: usize,
+    /// Base arrival rate in pulls per virtual second.
+    pub rate: f64,
+    pub arrival: ArrivalKind,
+    /// Peak multiplier for bursty/diurnal shapes (ignored by poisson).
+    pub burst: f64,
+    /// Cycle length of the bursty/diurnal shapes, virtual seconds.
+    pub period: f64,
+    /// Queries per arrival (each arrival is one batched pull).
+    pub batch: usize,
+    pub read_mode: ReadMode,
+    /// Seed of the arrival/query stream (independent of the train seed).
+    pub seed: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            publish_every: 4,
+            rate: 2.0,
+            arrival: ArrivalKind::Poisson,
+            burst: 4.0,
+            period: 8.0,
+            batch: 8,
+            read_mode: ReadMode::Snapshot,
+            seed: 77,
+        }
+    }
+}
+
+/// Elements per query range (clamped to the model size). Fixed so the
+/// byte volume per pull is a constant of the config, not of the RNG.
+pub const QUERY_LEN: usize = 256;
+
+/// Virtual service time charged per batched pull (amortized batch setup:
+/// one epoch acquisition / one lock walk).
+pub const SERVE_PER_BATCH: f64 = 1e-4;
+/// Additional virtual service time per query inside the batch.
+pub const SERVE_PER_QUERY: f64 = 1e-5;
+
+/// Seeded arrival-time + query generator on the virtual clock.
+///
+/// Non-homogeneous shapes use Lewis–Shedler thinning against the peak
+/// rate, so every shape consumes the RNG identically per *candidate* and
+/// the stream is a pure function of (config, seed).
+#[derive(Clone, Debug)]
+pub struct ArrivalProcess {
+    cfg: ServingConfig,
+    rng: Pcg64,
+    /// Absolute virtual time of the last generated arrival.
+    t: f64,
+}
+
+impl ArrivalProcess {
+    pub fn new(cfg: ServingConfig) -> Self {
+        Self { cfg, rng: Pcg64::new(cfg.seed ^ 0x5e41_71f6_1e55), t: 0.0 }
+    }
+
+    /// Instantaneous rate λ(t) of the configured shape.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let c = &self.cfg;
+        match c.arrival {
+            ArrivalKind::Poisson => c.rate,
+            ArrivalKind::Bursty => {
+                let phase = t.rem_euclid(c.period);
+                if phase < c.period * 0.25 {
+                    c.rate * c.burst
+                } else {
+                    c.rate
+                }
+            }
+            ArrivalKind::Diurnal => {
+                let s = (2.0 * std::f64::consts::PI * t / c.period).sin();
+                c.rate * (1.0 + (c.burst - 1.0) * 0.5 * (1.0 + s))
+            }
+        }
+    }
+
+    /// Peak rate the thinning loop proposes at.
+    fn peak_rate(&self) -> f64 {
+        match self.cfg.arrival {
+            ArrivalKind::Poisson => self.cfg.rate,
+            ArrivalKind::Bursty | ArrivalKind::Diurnal => self.cfg.rate * self.cfg.burst.max(1.0),
+        }
+    }
+
+    /// Absolute virtual time of the next arrival (strictly increasing).
+    pub fn next_arrival(&mut self) -> f64 {
+        let peak = self.peak_rate();
+        loop {
+            self.t += self.rng.exponential(1.0 / peak);
+            let accept = self.rate_at(self.t) / peak;
+            if self.rng.next_f64() < accept {
+                return self.t;
+            }
+        }
+    }
+
+    /// Draw this arrival's query ranges: `batch` contiguous windows of
+    /// [`QUERY_LEN`] (clamped to `n`) at seeded offsets. Appends to `out`
+    /// after clearing it; returns the packed output length.
+    pub fn draw_queries(&mut self, n: usize, out: &mut Vec<Range<usize>>) -> usize {
+        out.clear();
+        let len = QUERY_LEN.min(n.max(1));
+        for _ in 0..self.cfg.batch {
+            let start = self.rng.below((n.saturating_sub(len) + 1) as u64) as usize;
+            out.push(start..start + len);
+        }
+        self.cfg.batch * len
+    }
+}
+
+/// Deterministic virtual-time latency model for serving pulls.
+///
+/// Training pushes serialize on the store: push `k` finishing at event
+/// time `t` occupies the apply path for `server_cost`, starting no earlier
+/// than the previous push's window end. Locked reads arriving inside a
+/// busy window wait for it to drain (that queueing is exactly the
+/// contention the snapshot plane removes); snapshot reads never wait.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServingClock {
+    /// Virtual time until which the push-apply path is busy.
+    busy_until: f64,
+}
+
+impl ServingClock {
+    /// Record a training push applying at event time `t` for `cost`.
+    pub fn on_push(&mut self, t: f64, cost: f64) {
+        let start = self.busy_until.max(t);
+        self.busy_until = start + cost;
+    }
+
+    /// Latency of a batched pull arriving at `t`: service time plus (in
+    /// locked mode only) the wait behind the current push-apply window.
+    pub fn pull_latency(&self, t: f64, mode: ReadMode, batch: usize) -> f64 {
+        let service = SERVE_PER_BATCH + batch as f64 * SERVE_PER_QUERY;
+        match mode {
+            ReadMode::Snapshot => service,
+            ReadMode::Locked => (self.busy_until - t).max(0.0) + service,
+        }
+    }
+}
+
+/// Summary statistics of a serving run, destined for `TrainReport`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ServingSummary {
+    /// Batched pulls served.
+    pub pulls: u64,
+    /// Snapshot publications (epochs) over the run.
+    pub published: u64,
+    pub lat_p50: f64,
+    pub lat_p99: f64,
+    pub lat_p999: f64,
+    /// Mean / max snapshot staleness in training steps at pull time.
+    pub stale_steps_mean: f64,
+    pub stale_steps_max: u64,
+    /// Mean / max snapshot staleness in virtual seconds at pull time.
+    pub stale_time_mean: f64,
+    pub stale_time_max: f64,
+}
+
+/// Accumulates per-pull samples and folds them into a [`ServingSummary`].
+#[derive(Clone, Debug, Default)]
+pub struct ServingRecorder {
+    latencies: Vec<f64>,
+    published: u64,
+    stale_steps_sum: f64,
+    stale_steps_max: u64,
+    stale_time_sum: f64,
+    stale_time_max: f64,
+    stale_n: u64,
+    /// Pulls and latency-sum inside the current timeseries window.
+    win_pulls: u64,
+    win_lat_sum: f64,
+}
+
+impl ServingRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_publish(&mut self) {
+        self.published += 1;
+    }
+
+    /// Record one served batched pull. `stale_steps`/`stale_time` are the
+    /// snapshot's lag behind the training frontier at pull time (both 0
+    /// for locked reads, which see the live model).
+    pub fn on_pull(&mut self, latency: f64, stale_steps: u64, stale_time: f64) {
+        self.latencies.push(latency);
+        self.stale_steps_sum += stale_steps as f64;
+        self.stale_steps_max = self.stale_steps_max.max(stale_steps);
+        self.stale_time_sum += stale_time;
+        if stale_time > self.stale_time_max {
+            self.stale_time_max = stale_time;
+        }
+        self.stale_n += 1;
+        self.win_pulls += 1;
+        self.win_lat_sum += latency;
+    }
+
+    pub fn pulls(&self) -> u64 {
+        self.latencies.len() as u64
+    }
+
+    /// Drain the current timeseries window: (pulls, mean latency).
+    pub fn take_window(&mut self) -> (u64, f64) {
+        let out = (
+            self.win_pulls,
+            if self.win_pulls > 0 { self.win_lat_sum / self.win_pulls as f64 } else { 0.0 },
+        );
+        self.win_pulls = 0;
+        self.win_lat_sum = 0.0;
+        out
+    }
+
+    pub fn summary(&self) -> ServingSummary {
+        let mut lat = self.latencies.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = self.stale_n.max(1) as f64;
+        ServingSummary {
+            pulls: self.latencies.len() as u64,
+            published: self.published,
+            lat_p50: percentile(&lat, 0.50),
+            lat_p99: percentile(&lat, 0.99),
+            lat_p999: percentile(&lat, 0.999),
+            stale_steps_mean: self.stale_steps_sum / n,
+            stale_steps_max: self.stale_steps_max,
+            stale_time_mean: self.stale_time_sum / n,
+            stale_time_max: self.stale_time_max,
+        }
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (the same
+/// convention as `metrics::staleness_summary`): rank `ceil(n * q)`,
+/// clamped to at least 1. Empty input yields 0.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((sorted.len() as f64 * q).ceil() as usize).max(1);
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(kind: ArrivalKind) -> ServingConfig {
+        ServingConfig { enabled: true, arrival: kind, ..ServingConfig::default() }
+    }
+
+    #[test]
+    fn arrivals_are_seeded_and_strictly_increasing() {
+        for kind in [ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Diurnal] {
+            let mut a = ArrivalProcess::new(cfg(kind));
+            let mut b = ArrivalProcess::new(cfg(kind));
+            let xs: Vec<f64> = (0..200).map(|_| a.next_arrival()).collect();
+            let ys: Vec<f64> = (0..200).map(|_| b.next_arrival()).collect();
+            assert_eq!(xs, ys, "{kind:?} not deterministic");
+            assert!(xs.windows(2).all(|w| w[1] > w[0]), "{kind:?} not increasing");
+            let mut c = ArrivalProcess::new(ServingConfig { seed: 1234, ..cfg(kind) });
+            assert_ne!(xs[0], c.next_arrival(), "{kind:?} ignores the seed");
+        }
+    }
+
+    #[test]
+    fn poisson_rate_is_roughly_honored() {
+        let mut p =
+            ArrivalProcess::new(ServingConfig { rate: 50.0, ..cfg(ArrivalKind::Poisson) });
+        let mut count = 0usize;
+        loop {
+            if p.next_arrival() > 100.0 {
+                break;
+            }
+            count += 1;
+        }
+        // ~5000 expected; Poisson sd ~71
+        assert!((4500..5500).contains(&count), "count={count}");
+    }
+
+    #[test]
+    fn shaped_rates_stay_inside_their_envelope() {
+        let c = ServingConfig { rate: 10.0, burst: 4.0, period: 8.0, ..cfg(ArrivalKind::Diurnal) };
+        let p = ArrivalProcess::new(c);
+        for i in 0..800 {
+            let r = p.rate_at(i as f64 * 0.1);
+            assert!((10.0 - 1e-9..=40.0 + 1e-9).contains(&r), "diurnal rate {r}");
+        }
+        let c = ServingConfig { rate: 10.0, burst: 4.0, period: 8.0, ..cfg(ArrivalKind::Bursty) };
+        let p = ArrivalProcess::new(c);
+        // burst quarter at the head of each period
+        assert_eq!(p.rate_at(0.5), 40.0);
+        assert_eq!(p.rate_at(1.99), 40.0);
+        assert_eq!(p.rate_at(2.0), 10.0);
+        assert_eq!(p.rate_at(7.9), 10.0);
+        assert_eq!(p.rate_at(8.3), 40.0);
+    }
+
+    #[test]
+    fn queries_are_in_bounds_and_deterministic() {
+        let mut a = ArrivalProcess::new(cfg(ArrivalKind::Poisson));
+        let mut b = ArrivalProcess::new(cfg(ArrivalKind::Poisson));
+        let mut qa = Vec::new();
+        let mut qb = Vec::new();
+        for n in [10_000usize, 300, 17, 1] {
+            let len_a = a.draw_queries(n, &mut qa);
+            let len_b = b.draw_queries(n, &mut qb);
+            assert_eq!(qa, qb);
+            assert_eq!(len_a, len_b);
+            assert_eq!(qa.len(), 8, "batch default");
+            assert_eq!(len_a, qa.iter().map(|q| q.len()).sum::<usize>());
+            for q in &qa {
+                assert!(q.end <= n && q.len() == QUERY_LEN.min(n));
+            }
+        }
+    }
+
+    #[test]
+    fn locked_reads_wait_behind_push_windows_and_snapshot_reads_do_not() {
+        let mut clk = ServingClock::default();
+        let service = SERVE_PER_BATCH + 8.0 * SERVE_PER_QUERY;
+        // idle store: both modes cost pure service time
+        assert_eq!(clk.pull_latency(1.0, ReadMode::Locked, 8), service);
+        assert_eq!(clk.pull_latency(1.0, ReadMode::Snapshot, 8), service);
+        // two pushes land back to back: windows chain serially
+        clk.on_push(2.0, 0.5);
+        clk.on_push(2.1, 0.5); // starts at 2.5, ends 3.0
+        let lat = clk.pull_latency(2.2, ReadMode::Locked, 8);
+        assert!((lat - (0.8 + service)).abs() < 1e-12, "lat={lat}");
+        assert_eq!(clk.pull_latency(2.2, ReadMode::Snapshot, 8), service);
+        // after the windows drain, locked waits vanish
+        assert_eq!(clk.pull_latency(3.5, ReadMode::Locked, 8), service);
+    }
+
+    #[test]
+    fn recorder_percentiles_use_nearest_rank() {
+        let sorted: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        assert_eq!(percentile(&sorted, 0.50), 500.0);
+        assert_eq!(percentile(&sorted, 0.99), 990.0);
+        assert_eq!(percentile(&sorted, 0.999), 999.0);
+        assert_eq!(percentile(&[], 0.99), 0.0);
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+
+        let mut rec = ServingRecorder::new();
+        for i in 1..=100 {
+            rec.on_pull(i as f64, (i % 5) as u64, i as f64 * 0.01);
+        }
+        rec.on_publish();
+        rec.on_publish();
+        let s = rec.summary();
+        assert_eq!(s.pulls, 100);
+        assert_eq!(s.published, 2);
+        assert_eq!(s.lat_p50, 50.0);
+        assert_eq!(s.lat_p99, 99.0);
+        assert_eq!(s.lat_p999, 100.0);
+        assert_eq!(s.stale_steps_max, 4);
+        assert!((s.stale_time_max - 1.0).abs() < 1e-12);
+        // timeseries window drains and resets
+        let (n, mean) = rec.take_window();
+        assert_eq!(n, 100);
+        assert!((mean - 50.5).abs() < 1e-9);
+        assert_eq!(rec.take_window(), (0, 0.0));
+    }
+
+    #[test]
+    fn parse_roundtrips() {
+        for k in [ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Diurnal] {
+            assert_eq!(ArrivalKind::parse(k.name()).unwrap(), k);
+        }
+        for m in [ReadMode::Snapshot, ReadMode::Locked] {
+            assert_eq!(ReadMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(ArrivalKind::parse("warp").is_err());
+        assert!(ReadMode::parse("warp").is_err());
+    }
+}

@@ -192,6 +192,26 @@ impl Topology {
         local + uplink
     }
 
+    /// Bytes of one `bytes`-sized transfer from worker `w` that cross its
+    /// rack's uplink. Under flat fan-out that is the fraction of shards
+    /// hosted on other-rack PS nodes; under hierarchical aggregation the
+    /// rack ships one combined gradient, amortized `1/workers_in_rack`
+    /// per contributing worker. A single-rack fleet has no uplink.
+    pub fn uplink_bytes(&self, worker: usize, bytes: usize) -> f64 {
+        if self.racks <= 1 {
+            return 0.0;
+        }
+        let wr = self.worker_rack(worker);
+        if self.hierarchical {
+            bytes as f64 / self.workers_in_rack(wr) as f64
+        } else {
+            let local_nodes =
+                self.ps_nodes / self.racks + usize::from(wr < self.ps_nodes % self.racks);
+            let cross_nodes = self.ps_nodes - local_nodes;
+            bytes as f64 * cross_nodes as f64 / self.ps_nodes as f64
+        }
+    }
+
     /// Worker `w`'s per-transfer charges for `push_bytes`-sized uploads
     /// and `pull_bytes`-sized downloads. Uploads and downloads cross the
     /// same links, so both directions use the same per-byte math.
@@ -208,6 +228,58 @@ impl Topology {
     /// [`Scheduler::set_worker_comm`](super::Scheduler::set_worker_comm).
     pub fn all_worker_costs(&self, push_bytes: usize, pull_bytes: usize) -> Vec<CommCosts> {
         (0..self.workers).map(|w| self.worker_costs(w, push_bytes, pull_bytes)).collect()
+    }
+}
+
+/// Per-rack uplink byte meter: the static per-worker uplink charges
+/// ([`Topology::uplink_bytes`]) accumulated per rack by the scheduler at
+/// the same four sites as `comm_bytes_total` (initial pull, per-push
+/// upload, per-turnaround pull, rejoin pull). Pure accounting — installing
+/// one never touches the schedule, mirroring the byte counter itself.
+#[derive(Clone, Debug)]
+pub struct UplinkMeter {
+    /// Worker → rack (striped, frozen at build).
+    rack_of: Vec<usize>,
+    /// Worker → uplink bytes charged per push / per pull.
+    push_uplink: Vec<f64>,
+    pull_uplink: Vec<f64>,
+    /// Cumulative uplink bytes per rack.
+    bytes: Vec<f64>,
+}
+
+impl UplinkMeter {
+    pub fn new(topo: &Topology, push_bytes: usize, pull_bytes: usize) -> Self {
+        let workers = topo.workers();
+        Self {
+            rack_of: (0..workers).map(|w| topo.worker_rack(w)).collect(),
+            push_uplink: (0..workers).map(|w| topo.uplink_bytes(w, push_bytes)).collect(),
+            pull_uplink: (0..workers).map(|w| topo.uplink_bytes(w, pull_bytes)).collect(),
+            bytes: vec![0.0; topo.racks()],
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.rack_of.len()
+    }
+    pub fn racks(&self) -> usize {
+        self.bytes.len()
+    }
+    /// Charge one gradient upload from `worker` to its rack's uplink.
+    pub fn on_push(&mut self, worker: usize) {
+        self.bytes[self.rack_of[worker]] += self.push_uplink[worker];
+    }
+    /// Charge one model download to `worker` to its rack's uplink.
+    pub fn on_pull(&mut self, worker: usize) {
+        self.bytes[self.rack_of[worker]] += self.pull_uplink[worker];
+    }
+    /// Cumulative uplink bytes per rack.
+    pub fn bytes(&self) -> &[f64] {
+        &self.bytes
+    }
+    /// Cumulative uplink bytes fleet-wide (≤ `comm_bytes_total`: the
+    /// uplink share of each transfer never exceeds the transfer).
+    pub fn total(&self) -> f64 {
+        self.bytes.iter().sum()
     }
 }
 
@@ -332,6 +404,46 @@ mod tests {
         .unwrap();
         let c = single.worker_costs(0, bytes, bytes);
         assert_eq!(c.push.to_bits(), CommModel::infiniband_like().cost(bytes).to_bits());
+    }
+
+    #[test]
+    fn uplink_bytes_partition_the_transfer() {
+        // single rack: no uplink, whatever the node count.
+        let one = Topology::from_config(&TopologyConfig { ps_nodes: 4, ..enabled() }, 4).unwrap();
+        assert_eq!(one.uplink_bytes(0, 1 << 20), 0.0);
+
+        // flat, 2 racks × 4 nodes: every rack hosts 2 of the 4 nodes, so
+        // exactly half of each worker's bytes cross its uplink.
+        let cfg = TopologyConfig { racks: 2, ps_nodes: 4, ..enabled() };
+        let flat = Topology::from_config(&cfg, 8).unwrap();
+        for w in 0..8 {
+            assert_eq!(flat.uplink_bytes(w, 1_000_000), 500_000.0);
+        }
+
+        // flat, 2 racks × 1 node (rack 0): rack-0 workers are all-local,
+        // rack-1 workers cross in full.
+        let lone = Topology::from_config(
+            &TopologyConfig { racks: 2, ps_nodes: 1, ..enabled() },
+            4,
+        )
+        .unwrap();
+        assert_eq!(lone.uplink_bytes(0, 1_000_000), 0.0);
+        assert_eq!(lone.uplink_bytes(1, 1_000_000), 1_000_000.0);
+
+        // hierarchical: one combined gradient per rack, amortized over the
+        // residents — per-rack totals sum back to exactly `bytes`.
+        let hier = Topology::from_config(
+            &TopologyConfig { hierarchical: true, racks: 3, ps_nodes: 3, ..enabled() },
+            8,
+        )
+        .unwrap();
+        for r in 0..3 {
+            let rack_total: f64 = (0..8)
+                .filter(|&w| hier.worker_rack(w) == r)
+                .map(|w| hier.uplink_bytes(w, 700_000))
+                .sum();
+            assert!((rack_total - 700_000.0).abs() < 1e-6, "rack {r}: {rack_total}");
+        }
     }
 
     #[test]

@@ -245,6 +245,11 @@ impl TimeseriesRow {
 
 /// Driver-side trace state for one run: the driver's own event buffer,
 /// the collected time-series rows, and the inter-sample accumulators.
+///
+/// Optional subsystems (topology uplink meters, the serving plane) append
+/// extra CSV columns via [`Self::set_extra_cols`] +
+/// [`Self::sample_with`]; with none declared the emitted CSV is
+/// byte-identical to pre-extension builds.
 #[derive(Debug)]
 pub struct RunTrace {
     pub events: bool,
@@ -252,6 +257,10 @@ pub struct RunTrace {
     pub sample_every: usize,
     pub buf: EventBuf,
     pub rows: Vec<TimeseriesRow>,
+    /// Names of appended telemetry columns (empty = base schema only).
+    pub extra_cols: Vec<String>,
+    /// One appended-value vector per row, `extra_cols.len()` wide.
+    pub extra_rows: Vec<Vec<f64>>,
     // window accumulators (reset at each sample)
     win_stale_n: u64,
     win_stale_sum: u64,
@@ -267,11 +276,21 @@ impl RunTrace {
             sample_every: cfg.sample_every.max(1),
             buf: EventBuf::new(),
             rows: Vec::new(),
+            extra_cols: Vec::new(),
+            extra_rows: Vec::new(),
             win_stale_n: 0,
             win_stale_sum: 0,
             win_stale_max: 0,
             last_comm_bytes: 0,
         }
+    }
+
+    /// Declare appended telemetry columns. Call once, before the first
+    /// sample; every subsequent [`Self::sample_with`] must supply exactly
+    /// one value per declared column.
+    pub fn set_extra_cols(&mut self, cols: Vec<String>) {
+        debug_assert!(self.rows.is_empty(), "extra columns declared after sampling began");
+        self.extra_cols = cols;
     }
 
     /// Fold one committed step's τ into the current sampling window.
@@ -281,7 +300,7 @@ impl RunTrace {
         self.win_stale_max = self.win_stale_max.max(tau);
     }
 
-    /// Close the current window into a row.
+    /// Close the current window into a row (base schema only).
     #[allow(clippy::too_many_arguments)]
     pub fn sample(
         &mut self,
@@ -292,6 +311,24 @@ impl RunTrace {
         comm_bytes_total: u64,
         queue_depth: usize,
     ) {
+        self.sample_with(step, t, loss_ema, live_workers, comm_bytes_total, queue_depth, Vec::new());
+    }
+
+    /// Close the current window into a row, appending `extra` values for
+    /// the declared extension columns (pass an empty vec with none).
+    #[allow(clippy::too_many_arguments)]
+    pub fn sample_with(
+        &mut self,
+        step: u64,
+        t: f64,
+        loss_ema: f64,
+        live_workers: usize,
+        comm_bytes_total: u64,
+        queue_depth: usize,
+        extra: Vec<f64>,
+    ) {
+        debug_assert_eq!(extra.len(), self.extra_cols.len(), "extra values vs declared columns");
+        self.extra_rows.push(extra);
         let stale_mean = if self.win_stale_n > 0 {
             self.win_stale_sum as f64 / self.win_stale_n as f64
         } else {
@@ -317,11 +354,14 @@ impl RunTrace {
 }
 
 /// What a traced run hands back to the trainer for artifact writing: the
-/// merged (driver + scheduler) event stream and the time-series rows.
+/// merged (driver + scheduler) event stream, the time-series rows, and
+/// any appended extension columns.
 #[derive(Debug, Default)]
 pub struct TraceOut {
     pub events: Vec<TraceEvent>,
     pub rows: Vec<TimeseriesRow>,
+    pub extra_cols: Vec<String>,
+    pub extra_rows: Vec<Vec<f64>>,
 }
 
 /// Merge event streams (driver + scheduler) into virtual-time order.
@@ -344,11 +384,32 @@ pub fn events_to_jsonl(events: &[TraceEvent]) -> String {
 
 /// Serialize time-series rows as CSV (header + one row per sample).
 pub fn rows_to_csv(rows: &[TimeseriesRow]) -> String {
-    let mut out = String::with_capacity(rows.len() * 64 + 96);
+    rows_to_csv_with(rows, &[], &[])
+}
+
+/// Serialize time-series rows as CSV with appended extension columns.
+/// With `extra_cols` empty the output is byte-identical to
+/// [`rows_to_csv`], so runs without extensions keep their pinned CSVs.
+pub fn rows_to_csv_with(
+    rows: &[TimeseriesRow],
+    extra_cols: &[String],
+    extra_rows: &[Vec<f64>],
+) -> String {
+    debug_assert!(extra_cols.is_empty() || extra_rows.len() == rows.len());
+    let mut out = String::with_capacity(rows.len() * (64 + extra_cols.len() * 12) + 96);
     out.push_str(TIMESERIES_HEADER);
+    for c in extra_cols {
+        out.push(',');
+        out.push_str(c);
+    }
     out.push('\n');
-    for r in rows {
+    for (i, r) in rows.iter().enumerate() {
         out.push_str(&r.to_csv());
+        if !extra_cols.is_empty() {
+            for v in &extra_rows[i] {
+                out.push_str(&format!(",{v:.6}"));
+            }
+        }
         out.push('\n');
     }
     out
@@ -409,5 +470,30 @@ mod tests {
         let csv = rows_to_csv(&rt.rows);
         assert!(csv.starts_with(TIMESERIES_HEADER));
         assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn extension_columns_append_and_absence_is_byte_identical() {
+        let cfg = crate::config::TraceConfig { enabled: true, ..Default::default() };
+        let mut rt = RunTrace::new(&cfg);
+        rt.set_extra_cols(vec!["uplink_util_r0".into(), "serving_pulls".into()]);
+        rt.sample_with(10, 1.0, 0.5, 4, 1000, 3, vec![0.25, 7.0]);
+        rt.sample_with(20, 2.0, 0.4, 4, 1500, 2, vec![0.5, 0.0]);
+        let csv = rows_to_csv_with(&rt.rows, &rt.extra_cols, &rt.extra_rows);
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        assert!(header.ends_with(",uplink_util_r0,serving_pulls"), "{header}");
+        assert!(header.starts_with(TIMESERIES_HEADER));
+        let row0 = lines.next().unwrap();
+        assert!(row0.ends_with(",0.250000,7.000000"), "{row0}");
+
+        // no extensions declared: the CSV must be byte-identical to the
+        // base serializer (existing runs keep their pinned artifacts)
+        let mut base = RunTrace::new(&cfg);
+        base.sample(10, 1.0, 0.5, 4, 1000, 3);
+        assert_eq!(
+            rows_to_csv_with(&base.rows, &base.extra_cols, &base.extra_rows),
+            rows_to_csv(&base.rows)
+        );
     }
 }

@@ -1,0 +1,229 @@
+//! Serving-plane pins (`[serving]`, the epoch-published snapshot layer).
+//!
+//! Three layers of guarantees:
+//!
+//! * **Torn-read impossibility** — real reader threads racing a publisher
+//!   through live epoch flips must only ever observe uniform snapshots
+//!   whose payload matches the stamped meta (the RCU protocol's whole
+//!   claim, pinned under actual concurrency, not unit-test interleaving).
+//! * **Publish-cadence staleness bound** — publishing every `k` commits
+//!   bounds snapshot staleness by `k - 1` steps at any read point, for any
+//!   cadence; the meta stamps round-trip exactly.
+//! * **Bitwise inertness** — the serving workload is an observer: runs
+//!   with serving off / snapshot reads / locked reads produce
+//!   field-identical `TrainReport`s and byte-identical checkpoints (skips
+//!   without compiled PJRT artifacts, like `integration.rs`).
+
+use dc_asgd::config::{Algorithm, ExperimentConfig};
+use dc_asgd::coordinator::Trainer;
+use dc_asgd::ps::ShardedStore;
+use dc_asgd::sim::serving::QUERY_LEN;
+use dc_asgd::sim::{ArrivalKind, ArrivalProcess, ReadMode, ServingConfig};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Readers racing live publications never see a torn snapshot: every
+/// batched pull returns a uniform vector equal to the stamped step, and
+/// epochs never run backwards within a reader.
+#[test]
+fn snapshot_reads_are_never_torn_under_publish_race() {
+    let n = 4096usize;
+    let store = Arc::new(ShardedStore::new(&vec![0.0f32; n], 2, 7));
+    store.enable_serving();
+    store.publish_snapshot(0, 0.0);
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let mut readers = Vec::new();
+    for r in 0..4 {
+        let (store, stop) = (Arc::clone(&store), Arc::clone(&stop));
+        readers.push(std::thread::spawn(move || {
+            // queries straddle shard boundaries (n=4096 over 7 shards)
+            let queries = [0..QUERY_LEN, 570..570 + QUERY_LEN, n - QUERY_LEN..n];
+            let mut out = vec![0.0f32; 3 * QUERY_LEN];
+            let mut last_epoch = 0u64;
+            let mut reads = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let meta = store
+                    .serving_pull_batch(&queries, &mut out)
+                    .expect("published before readers started");
+                assert!(
+                    meta.epoch >= last_epoch,
+                    "reader {r}: epoch ran backwards {last_epoch} -> {}",
+                    meta.epoch
+                );
+                last_epoch = meta.epoch;
+                let want = meta.step as f32;
+                for (i, v) in out.iter().enumerate() {
+                    assert_eq!(
+                        *v, want,
+                        "reader {r}: torn read at {i}: {v} in a step-{} snapshot",
+                        meta.step
+                    );
+                }
+                reads += 1;
+            }
+            reads
+        }));
+    }
+
+    // the publisher overwrites the live model, then publishes — readers
+    // must never observe the half-copied state
+    for step in 1..=400u64 {
+        store.store_w(&vec![step as f32; n]);
+        let epoch = store.publish_snapshot(step, step as f64 * 0.5);
+        assert_eq!(epoch, step + 1, "one publication per step (+1 for the initial)");
+    }
+    stop.store(true, Ordering::Relaxed);
+    let total: u64 = readers.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(total > 0, "readers never got a read in");
+}
+
+/// Publishing every `k` commits bounds staleness by `k - 1` steps at every
+/// read point, and the meta stamps (step, time, epoch) round-trip exactly.
+#[test]
+fn publish_cadence_bounds_snapshot_staleness() {
+    for cadence in [1usize, 2, 4, 7, 16] {
+        let n = 128usize;
+        let store = ShardedStore::new(&vec![0.0f32; n], 1, 3);
+        store.enable_serving();
+        store.publish_snapshot(0, 0.0);
+        let mut published = 1u64;
+        for step in 1..=100u64 {
+            if step % cadence as u64 == 0 {
+                store.publish_snapshot(step, step as f64 * 0.25);
+                published += 1;
+            }
+            let meta = store.serving().unwrap().meta().expect("published");
+            let stale = step - meta.step;
+            assert!(
+                stale < cadence as u64,
+                "cadence {cadence}: staleness {stale} at step {step}"
+            );
+            assert_eq!(meta.time, meta.step as f64 * 0.25, "time stamp drifted");
+            assert_eq!(meta.epoch, published, "epoch != publication count");
+        }
+        assert_eq!(store.serving().unwrap().epoch(), published);
+    }
+}
+
+/// The arrival/query stream is a pure function of (config, seed) for every
+/// shape — and actually moves when the seed does.
+#[test]
+fn arrival_stream_is_a_pure_function_of_config() {
+    for arrival in [ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Diurnal] {
+        let cfg = ServingConfig { enabled: true, arrival, ..Default::default() };
+        let mut a = ArrivalProcess::new(cfg);
+        let mut b = ArrivalProcess::new(cfg);
+        let (mut qa, mut qb) = (Vec::new(), Vec::new());
+        for _ in 0..200 {
+            assert_eq!(a.next_arrival().to_bits(), b.next_arrival().to_bits(), "{arrival:?}");
+            a.draw_queries(4096, &mut qa);
+            b.draw_queries(4096, &mut qb);
+            assert_eq!(qa, qb, "{arrival:?}");
+        }
+        let mut c = ArrivalProcess::new(ServingConfig { seed: cfg.seed + 1, ..cfg });
+        assert_ne!(
+            a.next_arrival().to_bits(),
+            c.next_arrival().to_bits(),
+            "{arrival:?}: seed is inert"
+        );
+    }
+}
+
+// ---- full-run inertness (needs compiled PJRT artifacts) -----------------
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = dc_asgd::find_artifacts_dir();
+    if dir.is_none() {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+    }
+    dir
+}
+
+fn base_cfg(algo: Algorithm) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset_quickstart();
+    cfg.algorithm = algo;
+    cfg.workers = 4;
+    cfg.epochs = 2;
+    cfg.train_size = 512;
+    cfg.test_size = 256;
+    cfg.eval_every = 1;
+    cfg.seed = 4242;
+    cfg
+}
+
+fn with_serving(mut cfg: ExperimentConfig, read_mode: ReadMode) -> ExperimentConfig {
+    cfg.serving.enabled = true;
+    cfg.serving.read_mode = read_mode;
+    cfg.serving.rate = 24.0;
+    cfg.serving.publish_every = 2;
+    cfg
+}
+
+/// Serving off / snapshot reads / locked reads: field-identical reports
+/// (modulo the serving block itself) and byte-identical checkpoints — the
+/// workload observes the training schedule without perturbing one bit.
+#[test]
+fn serving_runs_leave_training_bitwise_identical() {
+    if artifacts().is_none() {
+        return;
+    }
+    let tmp = std::env::temp_dir().join(format!("dcasgd_serving_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    for algo in [Algorithm::Asgd, Algorithm::DcAsgdConst] {
+        let tag = format!("{algo:?}").to_lowercase();
+        let run = |name: &str, cfg: ExperimentConfig| {
+            let mut cfg = cfg;
+            cfg.checkpoint_out =
+                tmp.join(format!("{tag}_{name}.ck")).to_string_lossy().into_owned();
+            let report = Trainer::new(cfg).unwrap().run().unwrap();
+            let ck = std::fs::read(tmp.join(format!("{tag}_{name}.ck"))).unwrap();
+            (report, ck)
+        };
+        let (off, ck_off) = run("off", base_cfg(algo));
+        let (snap, ck_snap) = run("snap", with_serving(base_cfg(algo), ReadMode::Snapshot));
+        let (lock, ck_lock) = run("lock", with_serving(base_cfg(algo), ReadMode::Locked));
+
+        for (name, on) in [("snapshot", &snap), ("locked", &lock)] {
+            let ctx = format!("{tag}/{name}");
+            assert_eq!(off.total_steps, on.total_steps, "{ctx}");
+            assert_eq!(off.final_train_loss, on.final_train_loss, "{ctx}");
+            assert_eq!(off.final_test_loss, on.final_test_loss, "{ctx}");
+            assert_eq!(off.final_test_error, on.final_test_error, "{ctx}");
+            assert_eq!(off.best_test_error, on.best_test_error, "{ctx}");
+            assert_eq!(off.total_time, on.total_time, "{ctx}");
+            assert_eq!(off.passes, on.passes, "{ctx}");
+            assert_eq!(off.staleness_mean, on.staleness_mean, "{ctx}");
+            assert_eq!(off.staleness_p99, on.staleness_p99, "{ctx}");
+            assert_eq!(off.staleness_max, on.staleness_max, "{ctx}");
+            assert_eq!(off.wait_total, on.wait_total, "{ctx}");
+            assert_eq!(off.comm_bytes, on.comm_bytes, "{ctx}");
+            assert_eq!(off.faults, on.faults, "{ctx}");
+            assert_eq!(off.staleness_hist, on.staleness_hist, "{ctx}");
+        }
+        assert_eq!(ck_off, ck_snap, "{tag}: snapshot serving changed model bits");
+        assert_eq!(ck_off, ck_lock, "{tag}: locked serving changed model bits");
+
+        // the serving block itself: present exactly when enabled, active,
+        // and within the cadence bound
+        assert!(off.serving.is_none(), "{tag}: serving block on a disabled run");
+        for (name, on) in [("snapshot", &snap), ("locked", &lock)] {
+            let s = on.serving.unwrap_or_else(|| panic!("{tag}/{name}: no serving block"));
+            assert!(s.pulls > 0, "{tag}/{name}: workload never pulled");
+            assert!(s.published > 0, "{tag}/{name}: never published");
+            assert!(s.lat_p99 >= s.lat_p50, "{tag}/{name}: percentiles inverted");
+        }
+        let s = snap.serving.unwrap();
+        assert!(
+            s.stale_steps_max < 2,
+            "{tag}: staleness {} >= publish_every 2",
+            s.stale_steps_max
+        );
+        // locked reads wait behind push windows; snapshots never do
+        assert!(
+            snap.serving.unwrap().lat_p99 <= lock.serving.unwrap().lat_p99,
+            "{tag}: snapshot p99 above locked p99"
+        );
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}
